@@ -1,0 +1,46 @@
+//! Theorem 4 live: build the adversarial instance and watch the
+//! t-threshold algorithm hit its cap exactly — then watch sequential
+//! greedy sail past it, showing the gap is about *thresholding*, not the
+//! instance being hard per se.
+//!
+//! ```bash
+//! cargo run --release --example adversarial_tightness
+//! ```
+
+use mrsub::algorithms::greedy::lazy_greedy;
+use mrsub::algorithms::multi_round::MultiRound;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::core::threshold_bound;
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::workload::adversarial::AdversarialGen;
+use mrsub::workload::WorkloadGen;
+
+fn main() -> anyhow::Result<()> {
+    let k = 120;
+    println!("Theorem 4: no t-threshold algorithm beats 1 − (1 − 1/(t+1))^t");
+    println!(
+        "{:>3} {:>8} {:>12} {:>12} {:>12} {:>10}",
+        "t", "n", "thresh-alg", "cap", "greedy", "cap hit?"
+    );
+    for t in 1..=6 {
+        let inst = AdversarialGen::new(t, k).generate(0);
+        let opt = inst.known_opt.unwrap();
+        let cfg = ClusterConfig { seed: 3, ..ClusterConfig::default() };
+        let res = MultiRound::known(t, opt).run(&inst.oracle, k, &cfg)?;
+        let ratio = res.solution.value / opt;
+        let cap = threshold_bound(t);
+        let greedy_ratio = lazy_greedy(&inst.oracle, k).value / opt;
+        println!(
+            "{:>3} {:>8} {:>12.4} {:>12.4} {:>12.4} {:>10}",
+            t,
+            inst.n,
+            ratio,
+            cap,
+            greedy_ratio,
+            if (ratio - cap).abs() < 0.02 { "yes" } else { "NO" }
+        );
+        anyhow::ensure!((ratio - cap).abs() < 0.02, "t={t}: tightness violated");
+    }
+    println!("\nEvery row pins its cap: the thresholds, not the instance, are the bottleneck.");
+    Ok(())
+}

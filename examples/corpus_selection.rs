@@ -1,0 +1,56 @@
+//! Document selection over a Zipf corpus — the max-coverage application
+//! that motivates the paper's line of work (McGregor–Vu, Assadi–Khanna
+//! study exactly distributed max-coverage).
+//!
+//! Selects k documents maximizing IDF-weighted word coverage from a
+//! 60k-document synthetic corpus, comparing the paper's 2-round algorithm
+//! against the prior-art baselines at equal round budgets.
+//!
+//! ```bash
+//! cargo run --release --example corpus_selection
+//! ```
+
+use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::mz_coreset::MzCoreset;
+use mrsub::algorithms::randgreedi::RandGreeDi;
+use mrsub::algorithms::sample_prune::SamplePrune;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::config::GreedyAlg;
+use mrsub::coordinator::{render_table, run_experiment};
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::workload::corpus::ZipfCorpusGen;
+use mrsub::workload::WorkloadGen;
+
+fn main() -> anyhow::Result<()> {
+    let inst = ZipfCorpusGen::idf(60_000, 30_000, 40).generate(2024);
+    let k = 50;
+    let cfg = ClusterConfig { seed: 2024, ..ClusterConfig::default() };
+
+    let algs: Vec<Box<dyn MrAlgorithm>> = vec![
+        Box::new(GreedyAlg),
+        Box::new(CombinedTwoRound::new(0.1)),
+        Box::new(RandGreeDi),
+        Box::new(MzCoreset),
+        Box::new(SamplePrune::new(0.2)),
+    ];
+    let mut records = Vec::new();
+    for alg in &algs {
+        println!("running {} …", alg.name());
+        records.push(run_experiment(&inst, alg.as_ref(), k, &cfg)?);
+    }
+    println!(
+        "{}",
+        render_table("corpus selection: 60k docs, 30k vocab, IDF-weighted (ref = greedy)", &records)
+    );
+
+    // The paper's claim in this regime: 2 rounds, ≥ 1/2−ε of greedy.
+    let combined = &records[1];
+    anyhow::ensure!(combined.rounds == 2, "combined must run in 2 rounds");
+    anyhow::ensure!(
+        combined.ratio >= 0.5 - 0.1,
+        "combined ratio {} below guarantee",
+        combined.ratio
+    );
+    println!("OK: 2 rounds, ratio {:.4} ≥ 1/2 − ε", combined.ratio);
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: generate a coverage instance, run the paper's headline
+//! 2-round algorithm (Theorem 8), and compare against sequential greedy.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::greedy::lazy_greedy;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::workload::coverage::CoverageGen;
+use mrsub::workload::WorkloadGen;
+
+fn main() -> anyhow::Result<()> {
+    // 50k elements covering a 20k-item universe, ~12 items each.
+    let inst = CoverageGen::new(50_000, 20_000, 12).generate(42);
+    let k = 100;
+
+    // The sequential 1−1/e reference.
+    let greedy = lazy_greedy(&inst.oracle, k);
+    println!("instance : {}", inst.name);
+    println!("greedy   : f = {:.1}", greedy.value);
+
+    // Theorem 8: 2 rounds, no duplication, no knowledge of OPT.
+    let cfg = ClusterConfig { seed: 42, ..ClusterConfig::default() };
+    let alg = CombinedTwoRound::new(0.1);
+    let res = alg.run(&inst.oracle, k, &cfg)?;
+
+    println!("{}  : f = {:.1}", alg.name(), res.solution.value);
+    println!("vs greedy: {:.4} (guarantee: ≥ {:.2}·OPT)", res.solution.value / greedy.value, 0.5 - 0.1);
+    println!(
+        "cluster  : {} machines, {} rounds, sample {} elements",
+        res.metrics.machines,
+        res.metrics.rounds.len() - 1, // excluding the r0 partition round
+        res.metrics.sample_size,
+    );
+    println!(
+        "memory   : peak machine {} / budget {}, central recv {} / budget {}",
+        res.metrics.peak_machine_memory(),
+        res.metrics.machine_budget(),
+        res.metrics.peak_central_recv(),
+        res.metrics.central_budget(),
+    );
+    for r in &res.metrics.rounds {
+        println!(
+            "  {:<22} resident {:>7}  sent {:>7}  central {:>7}",
+            r.name, r.max_resident, r.total_sent, r.central_recv
+        );
+    }
+    Ok(())
+}

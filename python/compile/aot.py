@@ -1,0 +1,81 @@
+"""AOT lowering: jax (L2, with the Pallas L1 kernel inside) -> HLO text.
+
+HLO *text* (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the published ``xla`` 0.1.6
+crate) rejects (``proto.id() <= INT_MAX``). The text parser reassigns ids,
+so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (all f32, shapes fixed in model.py):
+  artifacts/marginals.hlo.txt        batch_marginals  : (B,D), (D,)      -> ((B,),)
+  artifacts/update.hlo.txt           select_update    : (D,), (D,)       -> ((D,),)
+  artifacts/filter.hlo.txt           filter_threshold : (B,D), (D,), ()  -> ((B,), (B,))
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile target
+``make artifacts`` is a no-op when the inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifacts(b: int, d: int) -> dict[str, str]:
+    """Lower the three entry points at shapes (b, d); return name -> HLO text."""
+    sim = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    vec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return {
+        "marginals": to_hlo_text(jax.jit(model.batch_marginals).lower(sim, vec)),
+        "update": to_hlo_text(jax.jit(model.select_update).lower(vec, vec)),
+        "filter": to_hlo_text(jax.jit(model.filter_threshold).lower(sim, vec, scalar)),
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    p.add_argument("--b", type=int, default=model.AOT_B, help="candidate block size")
+    p.add_argument("--d", type=int, default=model.AOT_D, help="universe tile size")
+    args = p.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    texts = lower_artifacts(args.b, args.d)
+    for name, text in texts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars -> {path}")
+
+    # Shape manifest so the Rust runtime can assert it loaded what it expects.
+    manifest = {
+        "b": args.b,
+        "d": args.d,
+        "dtype": "f32",
+        "artifacts": {name: f"{name}.hlo.txt" for name in texts},
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

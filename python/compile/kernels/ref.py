@@ -1,0 +1,43 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+These are the ground-truth implementations that the Pallas kernels in
+``facility_marginals.py`` are checked against at build time (pytest +
+hypothesis). They mirror the Rust-side native oracles:
+
+* ``facility_marginals_ref``: given a similarity block ``sim`` of shape
+  (B, D) — B candidate elements against D universe points — and the current
+  per-point coverage vector ``cur`` (D,), the marginal gain of element ``e``
+  for the facility-location objective f(S) = sum_j max_{i in S} sim[i, j]
+  is ``sum_j max(sim[e, j] - cur[j], 0)``.
+
+* ``coverage_update_ref``: after selecting element ``e``, the new coverage
+  vector is the pointwise maximum of the old one and e's similarity row.
+
+The same functions double as oracles for (weighted) max-coverage: encode
+membership as sim[e, j] = w_j * [e covers j].
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def facility_marginals_ref(sim: jnp.ndarray, cur: jnp.ndarray) -> jnp.ndarray:
+    """Marginal gains of B candidates. sim: (B, D), cur: (D,) -> (B,)."""
+    return jnp.sum(jnp.maximum(sim - cur[None, :], 0.0), axis=1)
+
+
+def coverage_update_ref(row: jnp.ndarray, cur: jnp.ndarray) -> jnp.ndarray:
+    """New coverage vector after selecting one element. row, cur: (D,)."""
+    return jnp.maximum(row, cur)
+
+
+def coverage_value_ref(cur: jnp.ndarray) -> jnp.ndarray:
+    """Objective value implied by a coverage vector: f(S) = sum_j cur[j]."""
+    return jnp.sum(cur)
+
+
+def argmax_marginal_ref(sim: jnp.ndarray, cur: jnp.ndarray):
+    """(argmax, max) of the marginal over a block — used by greedy baselines."""
+    m = facility_marginals_ref(sim, cur)
+    return jnp.argmax(m), jnp.max(m)

@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp reference oracle.
+
+This is the core build-time correctness signal for the compute hot path.
+Hypothesis sweeps shapes, dtypes-adjacent ranges, and degenerate inputs;
+fixed cases pin the exact AOT shapes the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.facility_marginals import (
+    BLOCK_B,
+    BLOCK_D,
+    coverage_update,
+    facility_marginals,
+)
+from compile.kernels.ref import (
+    coverage_update_ref,
+    coverage_value_ref,
+    facility_marginals_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, lo=0.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- fixed cases
+
+
+def test_marginals_matches_ref_at_aot_shape():
+    sim = rand((model.AOT_B, model.AOT_D), 0)
+    cur = rand((model.AOT_D,), 1)
+    got = facility_marginals(sim, cur)
+    want = facility_marginals_ref(sim, cur)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_marginals_zero_when_fully_covered():
+    sim = rand((BLOCK_B, BLOCK_D), 2)
+    cur = jnp.ones((BLOCK_D,), jnp.float32)  # everything already covered
+    got = facility_marginals(sim, cur)
+    np.testing.assert_allclose(got, jnp.zeros((BLOCK_B,)), atol=1e-6)
+
+
+def test_marginals_equal_rowsum_when_uncovered():
+    sim = rand((BLOCK_B, BLOCK_D), 3)
+    cur = jnp.zeros((BLOCK_D,), jnp.float32)
+    got = facility_marginals(sim, cur)
+    np.testing.assert_allclose(got, jnp.sum(sim, axis=1), rtol=1e-5)
+
+
+def test_update_matches_ref():
+    row = rand((model.AOT_D,), 4)
+    cur = rand((model.AOT_D,), 5)
+    np.testing.assert_allclose(
+        coverage_update(row, cur), coverage_update_ref(row, cur), rtol=1e-6
+    )
+
+
+def test_filter_threshold_mask():
+    sim = rand((model.AOT_B, model.AOT_D), 6)
+    cur = rand((model.AOT_D,), 7)
+    tau = jnp.float32(0.25 * model.AOT_D * 0.5)
+    m, mask = model.filter_threshold(sim, cur, tau)
+    want_m = facility_marginals_ref(sim, cur)
+    np.testing.assert_allclose(m, want_m, rtol=1e-5)
+    np.testing.assert_array_equal(mask, (want_m >= tau).astype(np.float32))
+
+
+def test_update_then_marginal_is_submodular_step():
+    """Selecting an element never increases any other element's marginal."""
+    sim = rand((BLOCK_B, BLOCK_D), 8)
+    cur = jnp.zeros((BLOCK_D,), jnp.float32)
+    m0 = facility_marginals(sim, cur)
+    cur1 = coverage_update(sim[0], cur)
+    m1 = facility_marginals(sim, cur1)
+    assert bool(jnp.all(m1 <= m0 + 1e-6))
+
+
+def test_value_decomposes_over_updates():
+    """f(S) computed by iterated updates equals the direct max-coverage value."""
+    sim = rand((8, BLOCK_D), 9)
+    cur = jnp.zeros((BLOCK_D,), jnp.float32)
+    for i in range(8):
+        cur = coverage_update_ref(sim[i], cur)
+    direct = jnp.sum(jnp.max(sim, axis=0))
+    np.testing.assert_allclose(coverage_value_ref(cur), direct, rtol=1e-6)
+
+
+# ------------------------------------------------------------ hypothesis sweep
+
+block_multiples = st.sampled_from([1, 2, 3])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bi=block_multiples,
+    dj=block_multiples,
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_marginals_sweep(bi, dj, seed, scale):
+    b, d = bi * BLOCK_B, dj * BLOCK_D
+    sim = rand((b, d), seed) * scale
+    cur = rand((d,), seed + 1) * scale
+    got = facility_marginals(sim, cur)
+    want = facility_marginals_ref(sim, cur)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), neg=st.booleans())
+def test_update_sweep(seed, neg):
+    lo = -1.0 if neg else 0.0
+    row = rand((BLOCK_D,), seed, lo=lo)
+    cur = rand((BLOCK_D,), seed + 1, lo=lo)
+    got = coverage_update(row, cur)
+    want = coverage_update_ref(row, cur)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # idempotent
+    np.testing.assert_allclose(coverage_update(got, got), got, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_marginals_monotone_in_cur(seed):
+    """Pointwise-larger coverage vector => pointwise-smaller marginals."""
+    sim = rand((BLOCK_B, BLOCK_D), seed)
+    cur_lo = rand((BLOCK_D,), seed + 1, hi=0.5)
+    cur_hi = cur_lo + rand((BLOCK_D,), seed + 2, hi=0.5)
+    m_lo = facility_marginals(sim, cur_lo)
+    m_hi = facility_marginals(sim, cur_hi)
+    assert bool(jnp.all(m_hi <= m_lo + 1e-6))

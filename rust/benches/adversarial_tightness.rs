@@ -1,0 +1,43 @@
+//! E3 ("Figure 2") — Theorem 4 tightness: on the adversarial instance the
+//! t-threshold algorithm achieves *exactly* `1 − (1 − 1/(t+1))^t` (up to
+//! the δ tie-break slack and n_ℓ rounding), while sequential greedy —
+//! which is not threshold-bucketed — exceeds the cap. Sweeps t and k to
+//! show rounding effects vanish as k grows.
+
+use mrsub::algorithms::greedy::lazy_greedy;
+use mrsub::algorithms::multi_round::MultiRound;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::core::threshold_bound;
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::workload::adversarial::AdversarialGen;
+use mrsub::workload::WorkloadGen;
+
+fn main() {
+    println!("== E3: Theorem 4 tightness on the adversarial instance ==\n");
+    println!(
+        "{:>3} {:>6} {:>7} {:>12} {:>12} {:>10} {:>12}",
+        "t", "k", "n", "measured", "cap", "|gap|", "greedy"
+    );
+    let mut max_gap = 0.0f64;
+    for t in 1..=6 {
+        for k in [24, 60, 120] {
+            let inst = AdversarialGen::new(t, k).generate(0);
+            let opt = inst.known_opt.unwrap();
+            let cfg = ClusterConfig { seed: 1, ..ClusterConfig::default() };
+            let res = MultiRound::known(t, opt).run(&inst.oracle, k, &cfg).unwrap();
+            let measured = res.solution.value / opt;
+            let cap = threshold_bound(t);
+            let gap = (measured - cap).abs();
+            max_gap = max_gap.max(gap);
+            let greedy_ratio = lazy_greedy(&inst.oracle, k).value / opt;
+            println!(
+                "{:>3} {:>6} {:>7} {:>12.4} {:>12.4} {:>10.1e} {:>12.4}",
+                t, k, inst.n, measured, cap, gap, greedy_ratio
+            );
+        }
+    }
+    println!("\nmax |measured − cap| = {max_gap:.2e}");
+    println!("expected shape: measured pins the cap for every (t, k) — the adversary");
+    println!("forces the thresholding algorithm to its theoretical worst case — while");
+    println!("greedy (no threshold bucketing) lands above the cap on the same instance.");
+}

@@ -1,0 +1,77 @@
+//! E1 ("Table 1") — approximation ratios of the paper's 2-round
+//! algorithms across workload families, plus the E5 ("Table 2")
+//! dense/sparse regime split.
+//!
+//! Paper claims reproduced: Theorem 8 (combined ≥ 1/2 − ε in 2 rounds, no
+//! duplication, OPT unknown); Lemma 1 (Algorithm 4 ≥ 1/2 with OPT);
+//! Lemmas 5/7 (dense/sparse sub-algorithms on their regimes).
+//! Ratios are vs the planted OPT where known (marked *), else vs lazy
+//! greedy (conservative: greedy ≤ OPT).
+
+use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::dense::DenseTwoRound;
+use mrsub::algorithms::sparse::SparseTwoRound;
+use mrsub::algorithms::two_round::TwoRoundKnownOpt;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::coordinator::run_experiment;
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::workload::corpus::ZipfCorpusGen;
+use mrsub::workload::coverage::CoverageGen;
+use mrsub::workload::facility::FacilityGen;
+use mrsub::workload::graph::GraphGen;
+use mrsub::workload::planted::PlantedCoverageGen;
+use mrsub::workload::{Instance, WorkloadGen};
+
+fn main() {
+    let k = 40;
+    let eps = 0.1;
+    let seeds = [1u64, 2, 3];
+    let workloads: Vec<(&str, Box<dyn Fn(u64) -> Instance>)> = vec![
+        ("coverage(20k)", Box::new(|s| CoverageGen::new(20_000, 8_000, 10).generate(s))),
+        ("wcoverage(20k)", Box::new(|s| CoverageGen::weighted(20_000, 8_000, 10).generate(s))),
+        ("zipf(15k docs)", Box::new(|s| ZipfCorpusGen::new(15_000, 10_000, 30).generate(s))),
+        ("facility(4k x 1k)", Box::new(|s| FacilityGen::clustered(4_000, 1_000, 12).generate(s))),
+        ("ba-graph(10k)", Box::new(|s| GraphGen::barabasi_albert(10_000, 3).generate(s))),
+        ("planted-dense*", Box::new(|s| PlantedCoverageGen::dense(40, 8_000, 20_000).generate(s))),
+        ("planted-sparse*", Box::new(|s| PlantedCoverageGen::sparse(40, 8_000, 20_000).generate(s))),
+    ];
+
+    println!("== E1/E5: 2-round approximation ratios (k={k}, eps={eps}, {} seeds) ==", seeds.len());
+    println!("(ratio vs planted OPT where marked *, else vs lazy greedy)");
+    println!(
+        "{:<18} {:>10} {:>10} {:>10} {:>10} {:>8} {:>10}",
+        "workload", "combined", "dense", "sparse", "alg4-opt", "rounds", "central"
+    );
+    for (name, gen) in &workloads {
+        let mut ratios = [0.0f64; 4];
+        let mut rounds = 0;
+        let mut central = 0usize;
+        for &seed in &seeds {
+            let inst = gen(seed);
+            let cfg = ClusterConfig { seed, ..ClusterConfig::default() };
+            let algs: Vec<Box<dyn MrAlgorithm>> = vec![
+                Box::new(CombinedTwoRound::new(eps)),
+                Box::new(DenseTwoRound::new(eps)),
+                Box::new(SparseTwoRound::new(eps)),
+                Box::new(TwoRoundKnownOpt::new(inst.known_opt.unwrap_or_else(|| {
+                    mrsub::algorithms::greedy::lazy_greedy(&inst.oracle, k).value
+                }))),
+            ];
+            for (i, alg) in algs.iter().enumerate() {
+                let rec = run_experiment(&inst, alg.as_ref(), k, &cfg).expect("run");
+                ratios[i] += rec.ratio / seeds.len() as f64;
+                if i == 0 {
+                    rounds = rec.rounds;
+                    central = central.max(rec.peak_central_recv);
+                }
+            }
+        }
+        println!(
+            "{:<18} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>8} {:>10}",
+            name, ratios[0], ratios[1], ratios[2], ratios[3], rounds, central
+        );
+    }
+    println!("\npaper bound: combined ≥ 1/2 − ε = {:.2} in exactly 2 rounds (Theorem 8);", 0.5 - eps);
+    println!("expected shape: combined ≥ bound everywhere; dense weak on planted-sparse,");
+    println!("sparse weak on dense families — their max is not (that is Theorem 8's point).");
+}

@@ -1,0 +1,84 @@
+//! E6 ("Table 3") — the paper's position against prior art at equal or
+//! better round budgets: Mirrokni–Zadimoghaddam core-sets (0.27 bound,
+//! 2 rounds), Barbosa et al. RandGreeDi (2 rounds), Kumar et al.
+//! Sample&Prune (multi-round), stochastic greedy (sequential), and lazy
+//! greedy (sequential 1−1/e reference).
+//!
+//! The shape that must hold (paper §1, "Our contribution"): the combined
+//! 2-round thresholding algorithm matches or beats every 2-round baseline's
+//! *guarantee* while using comparable communication — and Sample&Prune
+//! needs several times more rounds to do as well.
+
+use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::mz_coreset::MzCoreset;
+use mrsub::algorithms::randgreedi::RandGreeDi;
+use mrsub::algorithms::sample_prune::SamplePrune;
+use mrsub::algorithms::stochastic::StochasticGreedy;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::config::GreedyAlg;
+use mrsub::coordinator::run_experiment;
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::workload::corpus::ZipfCorpusGen;
+use mrsub::workload::coverage::CoverageGen;
+use mrsub::workload::facility::FacilityGen;
+use mrsub::workload::planted::PlantedCoverageGen;
+use mrsub::workload::{Instance, WorkloadGen};
+
+fn main() {
+    let k = 40;
+    let seeds = [1u64, 2, 3];
+    let workloads: Vec<(&str, Box<dyn Fn(u64) -> Instance>)> = vec![
+        ("coverage(20k)", Box::new(|s| CoverageGen::new(20_000, 8_000, 10).generate(s))),
+        ("zipf(15k)", Box::new(|s| ZipfCorpusGen::idf(15_000, 10_000, 30).generate(s))),
+        ("facility(4k)", Box::new(|s| FacilityGen::clustered(4_000, 1_000, 12).generate(s))),
+        ("planted-sparse*", Box::new(|s| PlantedCoverageGen::sparse(40, 8_000, 20_000).generate(s))),
+    ];
+    let algs: Vec<(Box<dyn MrAlgorithm>, &str)> = vec![
+        (Box::new(GreedyAlg), "1-1/e"),
+        (Box::new(CombinedTwoRound::new(0.1)), "1/2-eps"),
+        (Box::new(RandGreeDi), "1/2 (dup)"),
+        (Box::new(MzCoreset), "0.27"),
+        (Box::new(SamplePrune::new(0.2)), "1/2-eps"),
+        (Box::new(StochasticGreedy::new(0.1)), "1-1/e-d"),
+    ];
+
+    println!("== E6: vs baselines (k={k}, mean over {} seeds; * = ratio vs exact OPT) ==\n", seeds.len());
+    for (wname, gen) in &workloads {
+        println!("--- {wname} ---");
+        println!(
+            "{:<28} {:>10} {:>8} {:>7} {:>12} {:>12} {:>9}",
+            "algorithm", "guarantee", "ratio", "rounds", "comm", "oracle", "wall-ms"
+        );
+        for (alg, guarantee) in &algs {
+            let mut ratio = 0.0;
+            let mut rounds = 0;
+            let mut comm = 0usize;
+            let mut calls = 0u64;
+            let mut wall = 0.0;
+            for &seed in &seeds {
+                let inst = gen(seed);
+                let cfg = ClusterConfig { seed, ..ClusterConfig::default() };
+                let rec = run_experiment(&inst, alg.as_ref(), k, &cfg).expect("run");
+                ratio += rec.ratio / seeds.len() as f64;
+                rounds = rounds.max(rec.rounds);
+                comm += rec.communication / seeds.len();
+                calls += rec.oracle_calls / seeds.len() as u64;
+                wall += rec.wall_ms / seeds.len() as f64;
+            }
+            println!(
+                "{:<28} {:>10} {:>8.4} {:>7} {:>12} {:>12} {:>9.1}",
+                alg.name(),
+                guarantee,
+                ratio,
+                rounds,
+                comm,
+                calls,
+                wall
+            );
+        }
+        println!();
+    }
+    println!("expected shape: combined ≈ randgreedi ≥ mz-coreset in ratio at the same");
+    println!("2 rounds; sample-prune comparable in ratio but at >2 rounds; all distributed");
+    println!("methods within a few percent of sequential greedy on these families.");
+}

@@ -1,0 +1,92 @@
+//! E7b ("Table 4", hot path) — the marginal-evaluation hot path that
+//! dominates every algorithm's wall time, across the three backends:
+//!
+//! * native Rust row-scan (facility oracle),
+//! * the AOT JAX/Pallas kernel through PJRT (HLO engine), and
+//! * scalar one-at-a-time marginals (the naive baseline),
+//!
+//! measured as µs per 256×2048 block and elements/s through
+//! ThresholdFilter. Skips the PJRT rows when artifacts are absent.
+
+use std::sync::Arc;
+
+use mrsub::algorithms::threshold::threshold_filter;
+use mrsub::oracle::hlo::HloFacilityOracle;
+use mrsub::oracle::Oracle;
+use mrsub::runtime::{default_artifact_dir, MarginalsEngine};
+use mrsub::util::bench::{fmt_dur, time};
+use mrsub::workload::facility::FacilityGen;
+
+fn main() {
+    let n = 4096;
+    let d = 2048;
+    println!("== E7b: marginal hot path, facility {n}x{d} (one engine tile) ==\n");
+    let (n_, d_, sim) = FacilityGen::clustered(n, d, 16).build_matrix(11);
+    let native = FacilityGen::clustered(n, d, 16).build(11);
+
+    let mut st = native.state();
+    for e in [0u32, 100, 2000, 4000] {
+        st.insert(e);
+    }
+    let es: Vec<u32> = (0..n as u32).collect();
+    let block = &es[..256];
+
+    // scalar loop (naive)
+    let t_scalar = time(2, 10, || {
+        let mut acc = 0.0;
+        for &e in block {
+            acc += st.marginal(e);
+        }
+        acc
+    });
+    println!("native scalar   256-block: {}", t_scalar.display());
+
+    // native batched
+    let mut out = vec![0.0f64; 256];
+    let t_batch = time(2, 10, || st.marginals(block, &mut out));
+    println!("native batch    256-block: {}", t_batch.display());
+
+    // full filter pass over all n
+    let t_filter = time(1, 5, || threshold_filter(st.as_ref(), &es, 1.0));
+    println!(
+        "native filter   {n} elems: {}   ({:.2e} elems/s)",
+        t_filter.display(),
+        n as f64 / t_filter.median.as_secs_f64()
+    );
+
+    // PJRT engine
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("\n(PJRT rows skipped: no artifacts at {} — run `make artifacts`)", dir.display());
+        return;
+    }
+    let engine = Arc::new(MarginalsEngine::load(&dir).expect("engine"));
+    let hlo = HloFacilityOracle::new(n_, d_, sim, Arc::clone(&engine));
+    let mut st_h = hlo.state();
+    for e in [0u32, 100, 2000, 4000] {
+        st_h.insert(e);
+    }
+    let mut out_h = vec![0.0f64; 256];
+    let t_hlo = time(2, 10, || st_h.marginals(block, &mut out_h));
+    println!("\npjrt batch      256-block: {}", t_hlo.display());
+    let t_hlo_filter = time(1, 5, || threshold_filter(st_h.as_ref(), &es, 1.0));
+    println!(
+        "pjrt filter     {n} elems: {}   ({:.2e} elems/s)",
+        t_hlo_filter.display(),
+        n as f64 / t_hlo_filter.median.as_secs_f64()
+    );
+    println!("pjrt executions: {}", engine.executions());
+
+    // correctness spot check while we're here
+    let mut a = vec![0.0; 256];
+    let mut b = vec![0.0; 256];
+    st.marginals(block, &mut a);
+    st_h.marginals(block, &mut b);
+    let err = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max);
+    println!("max |native - pjrt| on block: {err:.2e}");
+
+    println!("\nblock work: 256×2048 f32 = 2 MiB touched / {} µs (native batch)", t_batch.median.as_micros());
+    println!("roofline note: the op is bandwidth-bound (1 FLOP/4B); native ≈ memory");
+    println!("speed, PJRT adds per-call literal/launch overhead ({} vs {} per block) that", fmt_dur(t_hlo.median), fmt_dur(t_batch.median));
+    println!("amortizes only on multi-block batches — see EXPERIMENTS.md §Perf.");
+}

@@ -1,0 +1,221 @@
+//! Algorithm 6 — the 2-round `1/2 − ε` approximation for **dense** inputs
+//! (more than `√(nk)` elements of singleton value ≥ OPT/(2k)), without
+//! knowing OPT.
+//!
+//! Density makes the broadcast sample hit a large element w.h.p., so
+//! `v = max_{e∈S} f({e})` satisfies `OPT/(2k) ≤ v ≤ OPT`. Hence some
+//! `τ_j = v/(1+ε)^j`, `j ≤ ⌈log_{1+ε}(2k)⌉`, lands within a `(1+ε)` factor
+//! of `OPT/(2k)`, and running Algorithm 4 with every `τ_j` in parallel
+//! (same 2 rounds, memory × (1/ε)·log k — Lemma 6) yields `1/2 − ε`.
+//!
+//! Note on direction: the paper's prose writes `τ_j = v(1+ε)^j`; since
+//! `v ≥ OPT/(2k)` under denseness, the guesses must descend *from* `v`, so
+//! we use `v/(1+ε)^j` — same set of guesses, unambiguous direction.
+
+use super::threshold::{merge_sorted, threshold_filter, threshold_greedy};
+use super::{finish, AlgResult, MrAlgorithm};
+use crate::core::{ElementId, Result, Solution};
+use crate::mapreduce::{ClusterConfig, MrCluster};
+use crate::oracle::{Oracle, OracleState};
+
+/// Algorithm 6.
+#[derive(Debug, Clone, Copy)]
+pub struct DenseTwoRound {
+    /// Guess resolution ε.
+    pub eps: f64,
+}
+
+impl DenseTwoRound {
+    /// New dense-input algorithm with resolution `eps`.
+    pub fn new(eps: f64) -> Self {
+        assert!(eps > 0.0, "eps must be positive");
+        DenseTwoRound { eps }
+    }
+}
+
+/// The per-guess data every machine derives identically from the sample:
+/// thresholds `τ_j` and the partial solutions `G₀(τ_j)`.
+pub(crate) struct DensePlan {
+    pub taus: Vec<f64>,
+    pub g0: Vec<Box<dyn OracleState>>,
+}
+
+impl DensePlan {
+    /// Elements resident for the plan on each machine: Σ_j |G₀(τ_j)|.
+    pub fn resident(&self) -> usize {
+        self.g0.iter().map(|g| g.len()).sum()
+    }
+}
+
+/// Derive the dense plan from the broadcast sample (identical on every
+/// machine; executed once in simulation). The per-guess `G₀` computations
+/// are independent, so they run on the thread pool — this was the Amdahl
+/// bottleneck of the whole 2-round pipeline before being parallelized
+/// (see EXPERIMENTS.md §Perf).
+pub(crate) fn dense_prepare(
+    oracle: &dyn Oracle,
+    sample: &[ElementId],
+    k: usize,
+    eps: f64,
+    parallel: bool,
+) -> DensePlan {
+    let st = oracle.state();
+    let v = sample.iter().map(|&e| st.marginal(e)).fold(0.0f64, f64::max);
+    if v <= 0.0 {
+        return DensePlan { taus: Vec::new(), g0: Vec::new() };
+    }
+    let j_max = ((2.0 * k as f64).ln() / (1.0 + eps).ln()).ceil() as usize;
+    let taus: Vec<f64> = (0..=j_max).map(|j| v / (1.0 + eps).powi(j as i32)).collect();
+    let g0 = crate::util::pool::parallel_map(&taus, parallel, |_, &tau| {
+        let mut g = oracle.state();
+        threshold_greedy(g.as_mut(), sample, tau, k);
+        g
+    });
+    DensePlan { taus, g0 }
+}
+
+/// Worker side: filter a shard against every guess's `G₀`.
+///
+/// When a guess's `G₀` is already full (`|G₀| = k`) nothing is shipped for
+/// it — the central completion cannot extend a full solution, and this is
+/// exactly the "we are done and do not send anything to the central
+/// machine" case of the paper's Lemma 2 that keeps the central budget at
+/// `Õ(√(nk))`.
+pub(crate) fn dense_worker(plan: &DensePlan, k: usize, shard: &[ElementId]) -> Vec<Vec<ElementId>> {
+    plan.taus
+        .iter()
+        .zip(&plan.g0)
+        .map(|(&tau, g0)| {
+            if g0.len() >= k {
+                Vec::new()
+            } else {
+                threshold_filter(g0.as_ref(), shard, tau)
+            }
+        })
+        .collect()
+}
+
+/// Central side: complete every guess over its survivors; return the best.
+pub(crate) fn dense_central(
+    oracle: &dyn Oracle,
+    plan: &DensePlan,
+    survivors_per_guess: Vec<Vec<ElementId>>,
+    k: usize,
+) -> Solution {
+    let mut best = Solution::empty();
+    for ((&tau, g0), survivors) in plan.taus.iter().zip(&plan.g0).zip(survivors_per_guess) {
+        let mut g = g0.clone_state();
+        threshold_greedy(g.as_mut(), &survivors, tau, k);
+        best = best.max(finish(oracle, g.selected().to_vec()));
+    }
+    best
+}
+
+/// Transpose the per-machine × per-guess filter outputs into per-guess
+/// merged survivor lists (ascending ids — the fixed central scan order).
+pub(crate) fn transpose_survivors(
+    per_machine: &[Vec<Vec<ElementId>>],
+    guesses: usize,
+) -> Vec<Vec<ElementId>> {
+    (0..guesses)
+        .map(|j| {
+            let parts: Vec<Vec<ElementId>> =
+                per_machine.iter().map(|m| m.get(j).cloned().unwrap_or_default()).collect();
+            merge_sorted(&parts)
+        })
+        .collect()
+}
+
+impl MrAlgorithm for DenseTwoRound {
+    fn name(&self) -> String {
+        format!("dense(eps={})", self.eps)
+    }
+
+    fn run(&self, oracle: &dyn Oracle, k: usize, cfg: &ClusterConfig) -> Result<AlgResult> {
+        let n = oracle.ground_size();
+        let mut cluster = MrCluster::new(n, k, cfg)?;
+        let plan = dense_prepare(oracle, cluster.sample(), k, self.eps, cfg.parallel);
+
+        let plan_ref = &plan;
+        let per_machine = cluster.worker_round("r1:dense-filter", plan.resident(), |ctx| {
+            dense_worker(plan_ref, k, ctx.shard)
+        })?;
+        let survivors = transpose_survivors(&per_machine, plan.taus.len());
+
+        let received: usize =
+            survivors.iter().map(Vec::len).sum::<usize>() + cluster.sample().len();
+        let solution = cluster.central_round("r2:dense-complete", received, || {
+            dense_central(oracle, &plan, survivors, k)
+        })?;
+        Ok(AlgResult { solution, metrics: cluster.into_metrics() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::greedy::lazy_greedy;
+    use crate::workload::coverage::CoverageGen;
+    use crate::workload::planted::PlantedCoverageGen;
+    use crate::workload::WorkloadGen;
+
+    fn cfg(seed: u64) -> ClusterConfig {
+        ClusterConfig { seed, parallel: false, ..ClusterConfig::default() }
+    }
+
+    #[test]
+    fn half_minus_eps_on_dense_planted() {
+        let gen = PlantedCoverageGen::dense(10, 1000, 2000);
+        let inst = gen.generate(1);
+        let opt = inst.known_opt.unwrap();
+        let eps = 0.1;
+        let res = DenseTwoRound::new(eps).run(inst.oracle.as_ref(), 10, &cfg(2)).unwrap();
+        let ratio = res.solution.value / opt;
+        assert!(ratio >= 0.5 - eps, "dense ratio {ratio} below 1/2 − ε");
+        assert_eq!(res.metrics.num_rounds(), 3, "2 compute rounds + partition");
+    }
+
+    #[test]
+    fn beats_half_of_greedy_on_random_coverage() {
+        let o = CoverageGen::new(800, 400, 6).build(3);
+        let g = lazy_greedy(&o, 15);
+        let res = DenseTwoRound::new(0.1).run(&o, 15, &cfg(4)).unwrap();
+        assert!(
+            res.solution.value >= (0.5 - 0.1) * g.value,
+            "{} vs greedy {}",
+            res.solution.value,
+            g.value
+        );
+    }
+
+    #[test]
+    fn guess_ladder_covers_range() {
+        let o = CoverageGen::new(500, 300, 5).build(5);
+        let cl = MrCluster::new(500, 10, &cfg(6)).unwrap();
+        let plan = dense_prepare(&o, cl.sample(), 10, 0.1, false);
+        assert!(!plan.taus.is_empty());
+        let lo = *plan.taus.last().unwrap();
+        let hi = plan.taus[0];
+        assert!(hi / lo >= 2.0 * 10.0 * 0.9, "ladder must span a 2k factor");
+        // descending
+        assert!(plan.taus.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn transpose_survivors_shapes() {
+        let per_machine = vec![
+            vec![vec![3u32, 1], vec![5]],
+            vec![vec![2], vec![]],
+        ];
+        let t = transpose_survivors(&per_machine, 2);
+        assert_eq!(t[0], vec![1, 2, 3]);
+        assert_eq!(t[1], vec![5]);
+    }
+
+    #[test]
+    fn empty_function_returns_empty() {
+        let o = crate::oracle::modular::ModularOracle::new(vec![0.0; 100]);
+        let res = DenseTwoRound::new(0.2).run(&o, 5, &cfg(7)).unwrap();
+        assert!(res.solution.is_empty());
+    }
+}

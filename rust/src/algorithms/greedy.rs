@@ -1,0 +1,236 @@
+//! Sequential baselines: plain greedy, lazy (Minoux) greedy, and the
+//! descending-threshold greedy of Badanidiyuru–Vondrák.
+//!
+//! Lazy greedy is the `1 − 1/e` reference every experiment normalizes
+//! against when the instance has no planted optimum (greedy ≤ OPT, so
+//! ratios reported against greedy are conservative). It is also the
+//! per-machine subroutine of the RandGreeDi / core-set baselines.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::finish;
+use crate::core::{ElementId, Solution};
+use crate::oracle::{Oracle, OracleState};
+
+/// Max-heap entry: (cached marginal, element, stamp of last refresh).
+struct HeapItem {
+    gain: f64,
+    e: ElementId,
+    stamp: u32,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.gain == other.gain && self.e == other.e
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // ties broken toward smaller id for determinism.
+        self.gain
+            .partial_cmp(&other.gain)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.e.cmp(&self.e))
+    }
+}
+
+/// Lazy greedy over an explicit candidate set (the workhorse).
+///
+/// Exactly reproduces plain greedy's selections (deterministic tie-break on
+/// id) while re-evaluating only stale heap tops — O(n log n + k·refreshes).
+pub fn lazy_greedy_over(oracle: &dyn Oracle, candidates: &[ElementId], k: usize) -> Solution {
+    let mut state = oracle.state();
+    lazy_greedy_extend(state.as_mut(), candidates, k);
+    finish(oracle, state.selected().to_vec())
+}
+
+/// Extend an existing state by lazy greedy over `candidates` until the
+/// *total* size reaches `k`. Returns the elements added.
+pub fn lazy_greedy_extend(
+    state: &mut dyn OracleState,
+    candidates: &[ElementId],
+    k: usize,
+) -> Vec<ElementId> {
+    let mut heap = BinaryHeap::with_capacity(candidates.len());
+    let mut buf = vec![0.0f64; candidates.len()];
+    state.marginals(candidates, &mut buf);
+    for (&e, &gain) in candidates.iter().zip(&buf) {
+        if gain > 0.0 {
+            heap.push(HeapItem { gain, e, stamp: 0 });
+        }
+    }
+    let mut added = Vec::new();
+    let mut stamp: u32 = 0;
+    while state.len() < k {
+        let Some(top) = heap.pop() else { break };
+        if top.stamp == stamp {
+            // fresh: this really is the max marginal.
+            if top.gain <= 0.0 {
+                break;
+            }
+            state.insert(top.e);
+            added.push(top.e);
+            stamp += 1;
+        } else {
+            let gain = state.marginal(top.e);
+            if gain > 0.0 {
+                heap.push(HeapItem { gain, e: top.e, stamp });
+            }
+        }
+    }
+    added
+}
+
+/// Lazy greedy over the full ground set.
+pub fn lazy_greedy(oracle: &dyn Oracle, k: usize) -> Solution {
+    let all: Vec<ElementId> = (0..oracle.ground_size() as ElementId).collect();
+    lazy_greedy_over(oracle, &all, k)
+}
+
+/// Plain O(nk) greedy — the specification lazy greedy is tested against.
+pub fn plain_greedy(oracle: &dyn Oracle, k: usize) -> Solution {
+    let n = oracle.ground_size() as ElementId;
+    let mut state = oracle.state();
+    for _ in 0..k {
+        let mut best: Option<(f64, ElementId)> = None;
+        for e in 0..n {
+            let m = state.marginal(e);
+            let better = match best {
+                None => m > 0.0,
+                Some((bm, be)) => m > bm || (m == bm && e < be && m > 0.0),
+            };
+            if better {
+                best = Some((m, e));
+            }
+        }
+        match best {
+            Some((_, e)) => state.insert(e),
+            None => break,
+        }
+    }
+    finish(oracle, state.selected().to_vec())
+}
+
+/// Badanidiyuru–Vondrák descending-threshold greedy: `(1 − 1/e − ε)` with
+/// O((n/ε)·log(n/ε)) marginal evaluations — the sequential analogue of the
+/// paper's thresholding and the subroutine used on the central machine when
+/// a near-greedy completion is wanted cheaply.
+pub fn threshold_greedy_sequential(oracle: &dyn Oracle, k: usize, eps: f64) -> Solution {
+    let n = oracle.ground_size() as ElementId;
+    let mut state = oracle.state();
+    let mut d = 0.0f64;
+    for e in 0..n {
+        d = d.max(state.marginal(e));
+    }
+    if d <= 0.0 {
+        return Solution::empty();
+    }
+    let floor = eps * d / (k as f64);
+    let mut tau = d;
+    while tau > floor && state.len() < k {
+        for e in 0..n {
+            if state.len() >= k {
+                break;
+            }
+            if state.marginal(e) >= tau {
+                state.insert(e);
+            }
+        }
+        tau *= 1.0 - eps;
+    }
+    finish(oracle, state.selected().to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ONE_MINUS_1_E;
+    use crate::util::check::forall;
+    use crate::workload::coverage::CoverageGen;
+    use crate::workload::planted::PlantedCoverageGen;
+
+    #[test]
+    fn lazy_matches_plain_greedy() {
+        for seed in 0..5 {
+            let o = CoverageGen::new(120, 80, 4).build(seed);
+            let a = lazy_greedy(&o, 12);
+            let b = plain_greedy(&o, 12);
+            assert_eq!(a.elements, b.elements, "seed {seed}");
+            assert_eq!(a.value, b.value);
+        }
+    }
+
+    #[test]
+    fn greedy_finds_planted_opt_on_easy_instance() {
+        let gen = PlantedCoverageGen::sparse(8, 400, 100);
+        let o = gen.build(2);
+        let sol = lazy_greedy(&o, 8);
+        assert_eq!(sol.value, 400.0, "greedy must recover the planted cover");
+    }
+
+    #[test]
+    fn greedy_beats_1_minus_1_e_of_planted_opt() {
+        let gen = PlantedCoverageGen::dense(10, 1000, 500);
+        let o = gen.build(3);
+        let sol = lazy_greedy(&o, 10);
+        assert!(sol.value >= ONE_MINUS_1_E * 1000.0 - 1e-9);
+    }
+
+    #[test]
+    fn threshold_sequential_close_to_greedy() {
+        let o = CoverageGen::new(300, 150, 5).build(4);
+        let g = lazy_greedy(&o, 15);
+        let t = threshold_greedy_sequential(&o, 15, 0.05);
+        assert!(t.value >= (1.0 - 0.08) * g.value, "{} vs greedy {}", t.value, g.value);
+    }
+
+    #[test]
+    fn extend_respects_total_k() {
+        let o = CoverageGen::new(50, 40, 3).build(5);
+        let mut st = o.state();
+        st.insert(0);
+        st.insert(1);
+        let added = lazy_greedy_extend(st.as_mut(), &(0..50).collect::<Vec<_>>(), 4);
+        assert!(added.len() <= 2);
+        assert!(st.len() <= 4);
+    }
+
+    #[test]
+    fn greedy_on_empty_value_function_stops() {
+        let o = crate::oracle::modular::ModularOracle::new(vec![0.0; 10]);
+        let sol = lazy_greedy(&o, 5);
+        assert!(sol.elements.is_empty());
+        assert_eq!(sol.value, 0.0);
+    }
+
+    #[test]
+    fn prop_lazy_equals_plain() {
+        forall(0x6E, 16, |g| {
+            let seed = g.u64_in(100);
+            let k = g.usize_in(1, 12);
+            let o = CoverageGen::new(60, 40, 3).build(seed);
+            assert_eq!(lazy_greedy(&o, k).elements, plain_greedy(&o, k).elements);
+        });
+    }
+
+    #[test]
+    fn prop_greedy_monotone_in_k() {
+        forall(0x6F, 16, |g| {
+            let seed = g.u64_in(50);
+            let o = CoverageGen::new(60, 40, 3).build(seed);
+            let mut prev = 0.0;
+            for k in 1..8 {
+                let v = lazy_greedy(&o, k).value;
+                assert!(v >= prev - 1e-9);
+                prev = v;
+            }
+        });
+    }
+}

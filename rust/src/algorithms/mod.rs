@@ -1,0 +1,67 @@
+//! The paper's algorithms and the baselines they are compared against.
+//!
+//! | module | contents | rounds | guarantee |
+//! |---|---|---|---|
+//! | [`threshold`] | Algorithms 1–2 (ThresholdGreedy / ThresholdFilter) | — | building blocks |
+//! | [`two_round`] | Algorithm 4, OPT known | 2 | 1/2 |
+//! | [`multi_round`] | Algorithm 5, OPT known or guessed | 2t (+2) | 1 − (1 − 1/(t+1))^t |
+//! | [`dense`] | Algorithm 6 (dense inputs) | 2 | 1/2 − ε |
+//! | [`sparse`] | Algorithm 7 (sparse inputs) | 2 | 1/2 − ε |
+//! | [`combined`] | Theorem 8 (dense ∥ sparse) | 2 | 1/2 − ε |
+//! | [`greedy`] | sequential greedy / lazy / threshold greedy | — | 1 − 1/e |
+//! | [`stochastic`] | stochastic greedy | — | 1 − 1/e − ε (expectation) |
+//! | [`randgreedi`] | Barbosa et al. distributed greedy | 2 | 1/2 (w/ duplication caveats) |
+//! | [`mz_coreset`] | Mirrokni–Zadimoghaddam core-sets | 2 | 0.27 |
+//! | [`sample_prune`] | Kumar et al. Sample&Prune | O(log(k)/ε) | 1/2 − ε |
+
+pub mod combined;
+pub mod dense;
+pub mod greedy;
+pub mod multi_round;
+pub mod mz_coreset;
+pub mod randgreedi;
+pub mod sample_prune;
+pub mod sparse;
+pub mod stochastic;
+pub mod threshold;
+pub mod two_round;
+
+use crate::core::{Result, Solution};
+use crate::mapreduce::ClusterConfig;
+use crate::metrics::MrMetrics;
+use crate::oracle::Oracle;
+
+/// Result of a (distributed) algorithm execution.
+#[derive(Debug, Clone)]
+pub struct AlgResult {
+    /// The solution found.
+    pub solution: Solution,
+    /// MRC cost metrics (empty `rounds` for sequential baselines).
+    pub metrics: MrMetrics,
+}
+
+impl AlgResult {
+    /// Wrap a sequential result (no MapReduce rounds).
+    pub fn sequential(solution: Solution, n: usize, k: usize) -> Self {
+        AlgResult {
+            solution,
+            metrics: MrMetrics { n, k, machines: 1, sample_size: 0, rounds: Vec::new() },
+        }
+    }
+}
+
+/// A cardinality-constrained submodular maximization algorithm running in
+/// the simulated MRC cluster (or sequentially, reporting zero rounds).
+pub trait MrAlgorithm {
+    /// Display name, e.g. `"combined(eps=0.1)"`.
+    fn name(&self) -> String;
+
+    /// Run on `oracle` with cardinality bound `k`.
+    fn run(&self, oracle: &dyn Oracle, k: usize, cfg: &ClusterConfig) -> Result<AlgResult>;
+}
+
+/// Evaluate and package a set of selected elements as a [`Solution`].
+pub(crate) fn finish(oracle: &dyn Oracle, elements: Vec<crate::core::ElementId>) -> Solution {
+    let value = oracle.value(&elements);
+    Solution { elements, value }
+}

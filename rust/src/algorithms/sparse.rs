@@ -1,0 +1,153 @@
+//! Algorithm 7 — the 2-round `1/2 − ε` approximation for **sparse** inputs
+//! (fewer than `√(nk)` elements of singleton value ≥ OPT/(2k)).
+//!
+//! Sparseness means all "large" elements fit on one machine: after the
+//! random partition each machine holds O(k) of them in expectation
+//! (balls-in-bins, the paper's Lemma 7), so every machine ships its O(k)
+//! largest-singleton elements and the central machine — now holding *all*
+//! large elements w.h.p. — finds a near-OPT/(2k) threshold from the pooled
+//! max singleton and runs the sequential version of Algorithm 4 per guess.
+
+use super::threshold::threshold_greedy;
+use super::{finish, AlgResult, MrAlgorithm};
+use crate::core::{ElementId, Result, Solution};
+use crate::mapreduce::{ClusterConfig, MrCluster};
+use crate::oracle::Oracle;
+
+/// Algorithm 7.
+#[derive(Debug, Clone, Copy)]
+pub struct SparseTwoRound {
+    /// Guess resolution ε.
+    pub eps: f64,
+    /// Elements shipped per machine = `c·k` (the paper's O(k); default 4).
+    pub c: usize,
+}
+
+impl SparseTwoRound {
+    /// New sparse-input algorithm with resolution `eps` and default c = 4.
+    pub fn new(eps: f64) -> Self {
+        assert!(eps > 0.0);
+        SparseTwoRound { eps, c: 4 }
+    }
+}
+
+/// Worker side: the `c·k` largest-singleton elements of a shard
+/// (ties broken toward smaller id; output ascending by id).
+pub(crate) fn sparse_worker(
+    oracle: &dyn Oracle,
+    shard: &[ElementId],
+    k: usize,
+    c: usize,
+) -> Vec<ElementId> {
+    let st = oracle.state();
+    let mut scored: Vec<(f64, ElementId)> = shard.iter().map(|&e| (st.marginal(e), e)).collect();
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let take = (c * k).min(scored.len());
+    let mut ids: Vec<ElementId> = scored[..take].iter().map(|&(_, e)| e).collect();
+    ids.sort_unstable();
+    ids
+}
+
+/// Central side: pool all shipped elements, guess OPT/(2k) from the pooled
+/// max singleton, run sequential threshold greedy per guess, return best.
+pub(crate) fn sparse_central(
+    oracle: &dyn Oracle,
+    pool: &[ElementId],
+    k: usize,
+    eps: f64,
+) -> Solution {
+    let st = oracle.state();
+    let v = pool.iter().map(|&e| st.marginal(e)).fold(0.0f64, f64::max);
+    if v <= 0.0 {
+        return Solution::empty();
+    }
+    let j_max = ((2.0 * k as f64).ln() / (1.0 + eps).ln()).ceil() as usize;
+    let mut best = Solution::empty();
+    for j in 0..=j_max {
+        let tau = v / (1.0 + eps).powi(j as i32);
+        let mut g = oracle.state();
+        threshold_greedy(g.as_mut(), pool, tau, k);
+        best = best.max(finish(oracle, g.selected().to_vec()));
+    }
+    best
+}
+
+impl MrAlgorithm for SparseTwoRound {
+    fn name(&self) -> String {
+        format!("sparse(eps={},c={})", self.eps, self.c)
+    }
+
+    fn run(&self, oracle: &dyn Oracle, k: usize, cfg: &ClusterConfig) -> Result<AlgResult> {
+        let n = oracle.ground_size();
+        let mut cluster = MrCluster::new(n, k, cfg)?;
+        let (k_, c_) = (k, self.c);
+        let per_machine = cluster.worker_round("r1:top-singletons", 0, |ctx| {
+            sparse_worker(oracle, ctx.shard, k_, c_)
+        })?;
+        let mut pool: Vec<ElementId> = per_machine.into_iter().flatten().collect();
+        pool.sort_unstable();
+
+        let received = pool.len();
+        let solution = cluster.central_round("r2:sequential-complete", received, || {
+            sparse_central(oracle, &pool, k, self.eps)
+        })?;
+        Ok(AlgResult { solution, metrics: cluster.into_metrics() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::planted::PlantedCoverageGen;
+    use crate::workload::WorkloadGen;
+
+    fn cfg(seed: u64) -> ClusterConfig {
+        ClusterConfig { seed, parallel: false, ..ClusterConfig::default() }
+    }
+
+    #[test]
+    fn half_minus_eps_on_sparse_planted() {
+        // Sparse planted: only the 10 golden elements are "large".
+        let gen = PlantedCoverageGen::sparse(10, 1000, 3000);
+        let inst = gen.generate(1);
+        let opt = inst.known_opt.unwrap();
+        let eps = 0.1;
+        let res = SparseTwoRound::new(eps).run(inst.oracle.as_ref(), 10, &cfg(2)).unwrap();
+        let ratio = res.solution.value / opt;
+        assert!(ratio >= 0.5 - eps, "sparse ratio {ratio} below 1/2 − ε");
+        assert_eq!(res.metrics.num_rounds(), 3);
+    }
+
+    #[test]
+    fn recovers_all_large_elements() {
+        // every golden element must reach the central pool.
+        let gen = PlantedCoverageGen::sparse(8, 800, 2000);
+        let o = gen.build(3);
+        let cluster = MrCluster::new(2008, 8, &cfg(4)).unwrap();
+        let mut pool = Vec::new();
+        for i in 0..cluster.machines() {
+            pool.extend(sparse_worker(&o, cluster.shard(i), 8, 4));
+        }
+        for golden in 0..8u32 {
+            assert!(pool.contains(&golden), "golden element {golden} missing from pool");
+        }
+    }
+
+    #[test]
+    fn worker_respects_ck_cap() {
+        let gen = PlantedCoverageGen::sparse(5, 100, 500);
+        let o = gen.build(5);
+        let shard: Vec<ElementId> = (0..300).collect();
+        let out = sparse_worker(&o, &shard, 5, 4);
+        assert!(out.len() <= 20);
+        assert!(out.windows(2).all(|w| w[0] < w[1]), "ascending ids");
+    }
+
+    #[test]
+    fn central_handles_empty_pool() {
+        let gen = PlantedCoverageGen::sparse(5, 100, 50);
+        let o = gen.build(6);
+        let sol = sparse_central(&o, &[], 5, 0.1);
+        assert!(sol.is_empty());
+    }
+}

@@ -1,0 +1,90 @@
+//! Stochastic greedy ("lazier than lazy greedy", Mirzasoleiman et al.):
+//! each of the k steps evaluates only a uniform sample of
+//! `⌈(n/k)·ln(1/δ)⌉` candidates and picks the best. `1 − 1/e − δ` in
+//! expectation with O(n·ln(1/δ)) total marginals — the cheap sequential
+//! reference for the oracle-complexity comparisons in E6/E7.
+
+use super::{finish, AlgResult, MrAlgorithm};
+use crate::core::{derive_seed, ElementId, Result};
+use crate::mapreduce::ClusterConfig;
+use crate::oracle::Oracle;
+use crate::util::rng::Rng;
+
+/// Stochastic greedy.
+#[derive(Debug, Clone, Copy)]
+pub struct StochasticGreedy {
+    /// Expected-guarantee slack δ.
+    pub delta: f64,
+}
+
+impl StochasticGreedy {
+    /// New instance with slack `delta`.
+    pub fn new(delta: f64) -> Self {
+        assert!(delta > 0.0 && delta < 1.0);
+        StochasticGreedy { delta }
+    }
+}
+
+impl MrAlgorithm for StochasticGreedy {
+    fn name(&self) -> String {
+        format!("stochastic-greedy(delta={})", self.delta)
+    }
+
+    fn run(&self, oracle: &dyn Oracle, k: usize, cfg: &ClusterConfig) -> Result<AlgResult> {
+        let n = oracle.ground_size();
+        let mut rng = Rng::seed_from_u64(derive_seed(cfg.seed, 0x57_0C4A57));
+        let sample_size =
+            (((n as f64 / k as f64) * (1.0 / self.delta).ln()).ceil() as usize).clamp(1, n);
+        let mut state = oracle.state();
+        let mut remaining: Vec<ElementId> = (0..n as ElementId).collect();
+        for _ in 0..k {
+            if remaining.is_empty() {
+                break;
+            }
+            rng.shuffle(&mut remaining);
+            let cand = &remaining[..sample_size.min(remaining.len())];
+            let mut best: Option<(f64, ElementId)> = None;
+            for &e in cand {
+                let m = state.marginal(e);
+                if best.map_or(m > 0.0, |(bm, be)| m > bm || (m == bm && e < be)) {
+                    best = Some((m, e));
+                }
+            }
+            let Some((_, e)) = best else { continue };
+            state.insert(e);
+            remaining.retain(|&x| x != e);
+        }
+        let solution = finish(oracle, state.selected().to_vec());
+        Ok(AlgResult::sequential(solution, n, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::greedy::lazy_greedy;
+    use crate::workload::coverage::CoverageGen;
+
+    #[test]
+    fn close_to_greedy_on_average() {
+        let o = CoverageGen::new(400, 200, 5).build(1);
+        let g = lazy_greedy(&o, 10);
+        let mut total = 0.0;
+        for seed in 0..5 {
+            let cfg = ClusterConfig { seed, ..ClusterConfig::default() };
+            total += StochasticGreedy::new(0.05).run(&o, 10, &cfg).unwrap().solution.value;
+        }
+        let avg = total / 5.0;
+        assert!(avg >= 0.85 * g.value, "stochastic avg {avg} vs greedy {}", g.value);
+    }
+
+    #[test]
+    fn no_rounds_reported() {
+        let o = CoverageGen::new(100, 60, 4).build(2);
+        let res = StochasticGreedy::new(0.1)
+            .run(&o, 5, &ClusterConfig::default())
+            .unwrap();
+        assert_eq!(res.metrics.num_rounds(), 0);
+        assert!(res.solution.len() <= 5);
+    }
+}

@@ -1,0 +1,208 @@
+//! Algorithms 1 and 2 — the building blocks of everything in the paper.
+//!
+//! * **ThresholdGreedy(S, G, τ):** scan `S` in *fixed order*, adding any
+//!   element whose marginal w.r.t. the growing solution is ≥ τ, until
+//!   `|G| = k`. Postcondition (Alg 1): every `e ∈ S` has `f_{G'}(e) < τ`,
+//!   or `|G'| = k` (in which case `f(G') ≥ τ·k` if it started empty).
+//! * **ThresholdFilter(S, G, τ):** keep exactly the elements of `S` whose
+//!   marginal w.r.t. the *fixed* `G` is ≥ τ.
+//!
+//! The fixed scan order matters twice: Lemma 1 needs every machine to
+//! compute the *same* `G₀` from the broadcast sample, and the Theorem-4
+//! lower bound is realized only when distractors precede the optimal
+//! elements in the scan. All callers pass ascending-id inputs.
+//!
+//! The filter is the batched hot path: marginals are evaluated through
+//! [`OracleState::marginals`] in blocks so accelerated oracles (PJRT) serve
+//! one device call per block.
+
+use crate::core::ElementId;
+use crate::oracle::OracleState;
+
+/// Batch size for filter marginal evaluation; matches the AOT block size of
+/// the PJRT engine so accelerated oracles get full tiles.
+pub const FILTER_BLOCK: usize = 256;
+
+/// Algorithm 1. Extends `state` in place; returns the elements added.
+///
+/// `k` bounds the *total* solution size (`state.len() + added ≤ k`).
+pub fn threshold_greedy(
+    state: &mut dyn OracleState,
+    input: &[ElementId],
+    tau: f64,
+    k: usize,
+) -> Vec<ElementId> {
+    let mut added = Vec::new();
+    if state.len() >= k {
+        return added;
+    }
+    for &e in input {
+        if state.marginal(e) >= tau {
+            state.insert(e);
+            added.push(e);
+            if state.len() >= k {
+                break;
+            }
+        }
+    }
+    added
+}
+
+/// Algorithm 2. Returns the elements of `input` with `f_G(e) ≥ τ` for the
+/// *fixed* state `G` (the state is not mutated).
+pub fn threshold_filter(
+    state: &dyn OracleState,
+    input: &[ElementId],
+    tau: f64,
+) -> Vec<ElementId> {
+    let mut out = Vec::new();
+    let mut buf = [0.0f64; FILTER_BLOCK];
+    for chunk in input.chunks(FILTER_BLOCK) {
+        let m = &mut buf[..chunk.len()];
+        state.marginals(chunk, m);
+        for (i, &e) in chunk.iter().enumerate() {
+            if m[i] >= tau {
+                out.push(e);
+            }
+        }
+    }
+    out
+}
+
+/// Merge per-machine filtered shards into a single ascending-id list (the
+/// fixed processing order for central completions).
+pub fn merge_sorted(parts: &[Vec<ElementId>]) -> Vec<ElementId> {
+    let mut all: Vec<ElementId> = parts.iter().flatten().copied().collect();
+    all.sort_unstable();
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::coverage::CoverageOracle;
+    use crate::oracle::modular::ModularOracle;
+    use crate::oracle::Oracle;
+    use crate::util::check::forall;
+
+    #[test]
+    fn greedy_respects_threshold_and_k() {
+        let o = ModularOracle::new(vec![5.0, 1.0, 4.0, 3.0, 2.0]);
+        let mut st = o.state();
+        let added = threshold_greedy(st.as_mut(), &[0, 1, 2, 3, 4], 3.0, 2);
+        // scan order: 0 (5.0 ≥ 3 ✓), 1 (1 < 3 ✗), 2 (4 ≥ 3 ✓) -> k reached.
+        assert_eq!(added, vec![0, 2]);
+        assert_eq!(st.value(), 9.0);
+    }
+
+    #[test]
+    fn greedy_continues_from_partial_solution() {
+        let o = ModularOracle::new(vec![5.0, 4.0, 3.0]);
+        let mut st = o.state();
+        st.insert(0);
+        let added = threshold_greedy(st.as_mut(), &[1, 2], 3.5, 2);
+        assert_eq!(added, vec![1], "k counts the pre-existing element");
+    }
+
+    #[test]
+    fn filter_keeps_only_large_marginals() {
+        let o = CoverageOracle::unweighted(vec![vec![0, 1], vec![1], vec![2], vec![0, 1]], 3);
+        let mut st = o.state();
+        st.insert(0); // covers {0,1}
+        let kept = threshold_filter(st.as_ref(), &[1, 2, 3], 1.0);
+        assert_eq!(kept, vec![2], "only element 2 adds ≥ 1.0");
+    }
+
+    #[test]
+    fn filter_does_not_mutate_state() {
+        let o = ModularOracle::new(vec![1.0; 10]);
+        let st = o.state();
+        let kept = threshold_filter(st.as_ref(), &(0..10).collect::<Vec<_>>(), 0.5);
+        assert_eq!(kept.len(), 10);
+        assert!(st.is_empty());
+    }
+
+    #[test]
+    fn merge_sorted_orders_across_shards() {
+        let merged = merge_sorted(&[vec![5, 1], vec![3], vec![], vec![2, 4]]);
+        assert_eq!(merged, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn postcondition_alg1() {
+        // After ThresholdGreedy, no scanned element has marginal ≥ τ
+        // (unless |G| = k).
+        let o = crate::workload::coverage::CoverageGen::new(100, 60, 4).build(1);
+        let input: Vec<ElementId> = (0..100).collect();
+        let mut st = o.state();
+        threshold_greedy(st.as_mut(), &input, 2.0, 10);
+        if st.len() < 10 {
+            for &e in &input {
+                assert!(st.marginal(e) < 2.0, "element {e} still above threshold");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_greedy_value_lower_bound() {
+        forall(0x71, 30, |g| {
+            // If |G'| = k starting from empty, f(G') ≥ τ·k (each pick ≥ τ).
+            let seed = g.u64_in(200);
+            let tau = g.f64_in(0.5, 3.0);
+            let k = g.usize_in(1, 15);
+            let o = crate::workload::coverage::CoverageGen::new(80, 50, 4).build(seed);
+            let input: Vec<ElementId> = (0..80).collect();
+            let mut st = o.state();
+            let added = threshold_greedy(st.as_mut(), &input, tau, k);
+            if added.len() == k {
+                assert!(st.value() >= tau * k as f64 - 1e-9);
+            } else {
+                // postcondition: nothing above τ remains.
+                for &e in &input {
+                    assert!(st.marginal(e) < tau);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_filter_matches_scalar_definition() {
+        forall(0x72, 20, |g| {
+            let seed = g.u64_in(100);
+            let tau = g.f64_in(0.1, 4.0);
+            let o = crate::workload::coverage::CoverageGen::new(300, 100, 4).build(seed);
+            let mut st = o.state();
+            st.insert(0);
+            st.insert(5);
+            let input: Vec<ElementId> = (0..300).collect();
+            let kept = threshold_filter(st.as_ref(), &input, tau);
+            let expect: Vec<ElementId> =
+                input.iter().copied().filter(|&e| st.marginal(e) >= tau).collect();
+            assert_eq!(kept, expect);
+        });
+    }
+
+    #[test]
+    fn prop_filter_sound_under_growth() {
+        forall(0x73, 20, |g| {
+            // Submodularity: anything the filter drops w.r.t. G stays
+            // droppable w.r.t. any G' ⊇ G — the property Alg 5 relies on to
+            // filter shards persistently.
+            let seed = g.u64_in(100);
+            let o = crate::workload::coverage::CoverageGen::new(100, 60, 4).build(seed);
+            let mut st = o.state();
+            st.insert(3);
+            let input: Vec<ElementId> = (0..100).collect();
+            let tau = 2.0;
+            let kept = threshold_filter(st.as_ref(), &input, tau);
+            let dropped: Vec<ElementId> =
+                input.iter().copied().filter(|e| !kept.contains(e)).collect();
+            let mut grown = st.clone_state();
+            grown.insert(7);
+            grown.insert(11);
+            for &e in &dropped {
+                assert!(grown.marginal(e) < tau, "dropped element {e} resurfaced");
+            }
+        });
+    }
+}

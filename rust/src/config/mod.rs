@@ -1,0 +1,465 @@
+//! TOML-backed configuration for the `mrsub` launcher (parsed by the
+//! in-repo TOML-subset parser, [`crate::util::minitoml`]).
+//!
+//! A run config names an instance (workload generator + parameters), an
+//! algorithm, the cluster shape, and where to write the JSON report:
+//!
+//! ```toml
+//! k = 50
+//! seed = 7
+//! output = "report.json"   # optional
+//!
+//! [instance]
+//! kind = "coverage"        # coverage | zipf | planted | facility |
+//!                          # erdos-renyi | barabasi-albert | adversarial
+//! n = 100000
+//! universe = 40000
+//! avg_degree = 12
+//!
+//! [algorithm]
+//! kind = "combined"        # two-round | multi-round | dense | sparse |
+//!                          # combined | greedy | stochastic | randgreedi |
+//!                          # mz-coreset | sample-prune
+//! eps = 0.1
+//!
+//! [cluster]
+//! sample_factor = 4.0
+//! parallel = true
+//! enforce_memory = false
+//! machines = 0             # 0 = paper default ceil(sqrt(n/k))
+//! ```
+
+use std::path::Path;
+
+use crate::algorithms::combined::CombinedTwoRound;
+use crate::algorithms::dense::DenseTwoRound;
+use crate::algorithms::greedy;
+use crate::algorithms::multi_round::MultiRound;
+use crate::algorithms::mz_coreset::MzCoreset;
+use crate::algorithms::randgreedi::RandGreeDi;
+use crate::algorithms::sample_prune::SamplePrune;
+use crate::algorithms::sparse::SparseTwoRound;
+use crate::algorithms::stochastic::StochasticGreedy;
+use crate::algorithms::two_round::TwoRoundKnownOpt;
+use crate::algorithms::{AlgResult, MrAlgorithm};
+use crate::core::{Error, Result};
+use crate::mapreduce::ClusterConfig;
+use crate::util::minitoml::{Document, Table};
+use crate::workload::adversarial::AdversarialGen;
+use crate::workload::corpus::ZipfCorpusGen;
+use crate::workload::coverage::CoverageGen;
+use crate::workload::facility::FacilityGen;
+use crate::workload::graph::GraphGen;
+use crate::workload::planted::PlantedCoverageGen;
+use crate::workload::{Instance, WorkloadGen};
+
+/// Top-level run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Cardinality constraint.
+    pub k: usize,
+    /// Master seed for instance + cluster randomness.
+    pub seed: u64,
+    /// Instance to generate.
+    pub instance: InstanceConfig,
+    /// Algorithm to run.
+    pub algorithm: AlgorithmConfig,
+    /// Cluster shape (defaults to the paper's parameters).
+    pub cluster: ClusterConfig,
+    /// Optional JSON report path.
+    pub output: Option<String>,
+}
+
+// --- small table accessors -------------------------------------------------
+
+fn req_usize(t: &Table, key: &str, ctx: &str) -> Result<usize> {
+    t.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| Error::Config(format!("{ctx}: missing/invalid integer {key:?}")))
+}
+
+fn opt_usize(t: &Table, key: &str, default: usize) -> usize {
+    t.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+}
+
+fn req_f64(t: &Table, key: &str, ctx: &str) -> Result<f64> {
+    t.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| Error::Config(format!("{ctx}: missing/invalid number {key:?}")))
+}
+
+fn opt_f64(t: &Table, key: &str) -> Option<f64> {
+    t.get(key).and_then(|v| v.as_f64())
+}
+
+fn opt_bool(t: &Table, key: &str, default: bool) -> bool {
+    t.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+}
+
+fn req_str<'a>(t: &'a Table, key: &str, ctx: &str) -> Result<&'a str> {
+    t.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| Error::Config(format!("{ctx}: missing/invalid string {key:?}")))
+}
+
+impl RunConfig {
+    /// Parse from a TOML file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::Config(format!("read {}: {e}", path.as_ref().display())))?;
+        Self::parse(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = Document::parse(text).map_err(Error::Config)?;
+        let k = req_usize(&doc.root, "k", "root")?;
+        let seed = doc.root.get("seed").and_then(|v| v.as_u64()).unwrap_or(0);
+        let output = doc.root.get("output").and_then(|v| v.as_str()).map(String::from);
+        let instance = InstanceConfig::from_table(
+            doc.table("instance")
+                .ok_or_else(|| Error::Config("missing [instance] table".into()))?,
+        )?;
+        let algorithm = AlgorithmConfig::from_table(
+            doc.table("algorithm")
+                .ok_or_else(|| Error::Config("missing [algorithm] table".into()))?,
+        )?;
+        let mut cluster = ClusterConfig { seed, ..ClusterConfig::default() };
+        if let Some(t) = doc.table("cluster") {
+            let machines = opt_usize(t, "machines", 0);
+            cluster.machines = if machines == 0 { None } else { Some(machines) };
+            cluster.sample_factor = opt_f64(t, "sample_factor").unwrap_or(4.0);
+            cluster.enforce_memory = opt_bool(t, "enforce_memory", false);
+            cluster.parallel = opt_bool(t, "parallel", true);
+        }
+        Ok(RunConfig { k, seed, instance, algorithm, cluster, output })
+    }
+}
+
+/// Workload selection.
+#[derive(Debug, Clone)]
+pub enum InstanceConfig {
+    /// Random (optionally weighted) coverage.
+    Coverage { n: usize, universe: usize, avg_degree: usize, weighted: bool },
+    /// Zipf document corpus (optionally IDF-weighted).
+    Zipf { docs: usize, vocab: usize, doc_len: usize, idf: bool },
+    /// Planted-optimum coverage, `regime` ∈ {"dense", "sparse"}.
+    Planted { k: usize, universe: usize, noise_n: usize, dense: bool },
+    /// Facility location over random planar points.
+    Facility { n: usize, d: usize, clusters: usize },
+    /// Erdős–Rényi edge coverage.
+    ErdosRenyi { n: usize, p: f64 },
+    /// Barabási–Albert edge coverage.
+    BarabasiAlbert { n: usize, attach: usize },
+    /// Theorem-4 adversarial instance.
+    Adversarial { t: usize, k: usize },
+}
+
+impl InstanceConfig {
+    /// Parse from an `[instance]` table.
+    pub fn from_table(t: &Table) -> Result<Self> {
+        let ctx = "[instance]";
+        Ok(match req_str(t, "kind", ctx)? {
+            "coverage" => InstanceConfig::Coverage {
+                n: req_usize(t, "n", ctx)?,
+                universe: req_usize(t, "universe", ctx)?,
+                avg_degree: req_usize(t, "avg_degree", ctx)?,
+                weighted: opt_bool(t, "weighted", false),
+            },
+            "zipf" => InstanceConfig::Zipf {
+                docs: req_usize(t, "docs", ctx)?,
+                vocab: req_usize(t, "vocab", ctx)?,
+                doc_len: req_usize(t, "doc_len", ctx)?,
+                idf: opt_bool(t, "idf", false),
+            },
+            "planted" => InstanceConfig::Planted {
+                k: req_usize(t, "k", ctx)?,
+                universe: req_usize(t, "universe", ctx)?,
+                noise_n: req_usize(t, "noise_n", ctx)?,
+                dense: match req_str(t, "regime", ctx)? {
+                    "dense" => true,
+                    "sparse" => false,
+                    other => {
+                        return Err(Error::Config(format!("unknown planted regime {other:?}")))
+                    }
+                },
+            },
+            "facility" => InstanceConfig::Facility {
+                n: req_usize(t, "n", ctx)?,
+                d: req_usize(t, "d", ctx)?,
+                clusters: opt_usize(t, "clusters", 0),
+            },
+            "erdos-renyi" => InstanceConfig::ErdosRenyi {
+                n: req_usize(t, "n", ctx)?,
+                p: req_f64(t, "p", ctx)?,
+            },
+            "barabasi-albert" => InstanceConfig::BarabasiAlbert {
+                n: req_usize(t, "n", ctx)?,
+                attach: req_usize(t, "attach", ctx)?,
+            },
+            "adversarial" => InstanceConfig::Adversarial {
+                t: req_usize(t, "t", ctx)?,
+                k: req_usize(t, "k", ctx)?,
+            },
+            other => return Err(Error::Config(format!("unknown instance kind {other:?}"))),
+        })
+    }
+
+    /// Generate the instance.
+    pub fn build(&self, seed: u64) -> Result<Instance> {
+        Ok(match self {
+            InstanceConfig::Coverage { n, universe, avg_degree, weighted } => {
+                let g = if *weighted {
+                    CoverageGen::weighted(*n, *universe, *avg_degree)
+                } else {
+                    CoverageGen::new(*n, *universe, *avg_degree)
+                };
+                g.generate(seed)
+            }
+            InstanceConfig::Zipf { docs, vocab, doc_len, idf } => {
+                let g = if *idf {
+                    ZipfCorpusGen::idf(*docs, *vocab, *doc_len)
+                } else {
+                    ZipfCorpusGen::new(*docs, *vocab, *doc_len)
+                };
+                g.generate(seed)
+            }
+            InstanceConfig::Planted { k, universe, noise_n, dense } => {
+                let g = if *dense {
+                    PlantedCoverageGen::dense(*k, *universe, *noise_n)
+                } else {
+                    PlantedCoverageGen::sparse(*k, *universe, *noise_n)
+                };
+                g.generate(seed)
+            }
+            InstanceConfig::Facility { n, d, clusters } => {
+                let g = if *clusters > 0 {
+                    FacilityGen::clustered(*n, *d, *clusters)
+                } else {
+                    FacilityGen::new(*n, *d)
+                };
+                g.generate(seed)
+            }
+            InstanceConfig::ErdosRenyi { n, p } => GraphGen::erdos_renyi(*n, *p).generate(seed),
+            InstanceConfig::BarabasiAlbert { n, attach } => {
+                GraphGen::barabasi_albert(*n, *attach).generate(seed)
+            }
+            InstanceConfig::Adversarial { t, k } => AdversarialGen::new(*t, *k).generate(seed),
+        })
+    }
+}
+
+/// Algorithm selection.
+#[derive(Debug, Clone)]
+pub enum AlgorithmConfig {
+    /// Algorithm 4 (needs OPT; falls back to the instance's planted OPT,
+    /// then to lazy greedy's value as the estimate).
+    TwoRound { opt: Option<f64> },
+    /// Algorithm 5 with t thresholds; OPT known (planted / given) or
+    /// guessed with `eps`.
+    MultiRound { t: usize, opt: Option<f64>, eps: Option<f64> },
+    /// Algorithm 6.
+    Dense { eps: f64 },
+    /// Algorithm 7.
+    Sparse { eps: f64 },
+    /// Theorem 8 (the paper's headline 2-round algorithm).
+    Combined { eps: f64 },
+    /// Sequential lazy greedy (reference).
+    Greedy,
+    /// Sequential stochastic greedy.
+    Stochastic { delta: f64 },
+    /// Barbosa et al. RandGreeDi baseline.
+    Randgreedi,
+    /// Mirrokni–Zadimoghaddam core-set baseline.
+    MzCoreset,
+    /// Kumar et al. Sample&Prune baseline.
+    SamplePrune { eps: f64 },
+}
+
+impl AlgorithmConfig {
+    /// Parse from an `[algorithm]` table.
+    pub fn from_table(t: &Table) -> Result<Self> {
+        let ctx = "[algorithm]";
+        Ok(match req_str(t, "kind", ctx)? {
+            "two-round" => AlgorithmConfig::TwoRound { opt: opt_f64(t, "opt") },
+            "multi-round" => AlgorithmConfig::MultiRound {
+                t: req_usize(t, "t", ctx)?,
+                opt: opt_f64(t, "opt"),
+                eps: opt_f64(t, "eps"),
+            },
+            "dense" => AlgorithmConfig::Dense { eps: req_f64(t, "eps", ctx)? },
+            "sparse" => AlgorithmConfig::Sparse { eps: req_f64(t, "eps", ctx)? },
+            "combined" => AlgorithmConfig::Combined { eps: req_f64(t, "eps", ctx)? },
+            "greedy" => AlgorithmConfig::Greedy,
+            "stochastic" => AlgorithmConfig::Stochastic { delta: req_f64(t, "delta", ctx)? },
+            "randgreedi" => AlgorithmConfig::Randgreedi,
+            "mz-coreset" => AlgorithmConfig::MzCoreset,
+            "sample-prune" => AlgorithmConfig::SamplePrune { eps: req_f64(t, "eps", ctx)? },
+            other => return Err(Error::Config(format!("unknown algorithm kind {other:?}"))),
+        })
+    }
+
+    /// Instantiate the algorithm; `instance` provides planted OPT / a greedy
+    /// fallback estimate for the known-OPT variants.
+    pub fn build(&self, instance: &Instance, k: usize) -> Box<dyn MrAlgorithm> {
+        let resolve_opt = |explicit: Option<f64>| -> f64 {
+            explicit
+                .or(instance.known_opt)
+                .unwrap_or_else(|| greedy::lazy_greedy(&instance.oracle, k).value)
+        };
+        match self {
+            AlgorithmConfig::TwoRound { opt } => Box::new(TwoRoundKnownOpt::new(resolve_opt(*opt))),
+            AlgorithmConfig::MultiRound { t, opt, eps } => match (opt, eps) {
+                (Some(o), _) => Box::new(MultiRound::known(*t, *o)),
+                (None, Some(e)) => Box::new(MultiRound::guessing(*t, *e)),
+                (None, None) => Box::new(MultiRound::known(*t, resolve_opt(None))),
+            },
+            AlgorithmConfig::Dense { eps } => Box::new(DenseTwoRound::new(*eps)),
+            AlgorithmConfig::Sparse { eps } => Box::new(SparseTwoRound::new(*eps)),
+            AlgorithmConfig::Combined { eps } => Box::new(CombinedTwoRound::new(*eps)),
+            AlgorithmConfig::Greedy => Box::new(GreedyAlg),
+            AlgorithmConfig::Stochastic { delta } => Box::new(StochasticGreedy::new(*delta)),
+            AlgorithmConfig::Randgreedi => Box::new(RandGreeDi),
+            AlgorithmConfig::MzCoreset => Box::new(MzCoreset),
+            AlgorithmConfig::SamplePrune { eps } => Box::new(SamplePrune::new(*eps)),
+        }
+    }
+}
+
+/// Wrapper making sequential lazy greedy an [`MrAlgorithm`].
+#[derive(Debug, Clone, Copy)]
+pub struct GreedyAlg;
+
+impl MrAlgorithm for GreedyAlg {
+    fn name(&self) -> String {
+        "greedy".into()
+    }
+
+    fn run(
+        &self,
+        oracle: &dyn crate::oracle::Oracle,
+        k: usize,
+        _cfg: &ClusterConfig,
+    ) -> Result<AlgResult> {
+        let n = oracle.ground_size();
+        Ok(AlgResult::sequential(greedy::lazy_greedy(&oracle, k), n, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_roundtrip() {
+        let toml_text = r#"
+            k = 10
+            seed = 3
+            [instance]
+            kind = "coverage"
+            n = 100
+            universe = 50
+            avg_degree = 4
+            [algorithm]
+            kind = "combined"
+            eps = 0.1
+        "#;
+        let cfg = RunConfig::parse(toml_text).unwrap();
+        assert_eq!(cfg.k, 10);
+        assert_eq!(cfg.seed, 3);
+        let inst = cfg.instance.build(cfg.seed).unwrap();
+        assert_eq!(inst.n, 100);
+        let alg = cfg.algorithm.build(&inst, cfg.k);
+        assert!(alg.name().starts_with("combined"));
+    }
+
+    #[test]
+    fn cluster_table_parsed() {
+        let cfg = RunConfig::parse(
+            r#"
+            k = 5
+            [instance]
+            kind = "facility"
+            n = 40
+            d = 20
+            [algorithm]
+            kind = "greedy"
+            [cluster]
+            machines = 3
+            sample_factor = 2.0
+            parallel = false
+            enforce_memory = true
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.machines, Some(3));
+        assert_eq!(cfg.cluster.sample_factor, 2.0);
+        assert!(!cfg.cluster.parallel);
+        assert!(cfg.cluster.enforce_memory);
+    }
+
+    #[test]
+    fn all_algorithm_kinds_build_and_run() {
+        let inst = CoverageGen::new(60, 40, 3).generate(1);
+        let kinds = [
+            "kind = \"two-round\"",
+            "kind = \"multi-round\"\nt = 2",
+            "kind = \"multi-round\"\nt = 2\neps = 0.2",
+            "kind = \"dense\"\neps = 0.1",
+            "kind = \"sparse\"\neps = 0.1",
+            "kind = \"combined\"\neps = 0.1",
+            "kind = \"greedy\"",
+            "kind = \"stochastic\"\ndelta = 0.1",
+            "kind = \"randgreedi\"",
+            "kind = \"mz-coreset\"",
+            "kind = \"sample-prune\"\neps = 0.2",
+        ];
+        for text in kinds {
+            let doc = Document::parse(text).unwrap();
+            let cfg = AlgorithmConfig::from_table(&doc.root).unwrap();
+            let alg = cfg.build(&inst, 5);
+            let res = alg
+                .run(
+                    &inst.oracle,
+                    5,
+                    &ClusterConfig { parallel: false, ..ClusterConfig::default() },
+                )
+                .unwrap();
+            assert!(res.solution.len() <= 5, "{text}");
+        }
+    }
+
+    #[test]
+    fn planted_regime_validation() {
+        let doc = Document::parse(
+            "kind = \"planted\"\nk = 3\nuniverse = 30\nnoise_n = 10\nregime = \"weird\"",
+        )
+        .unwrap();
+        assert!(InstanceConfig::from_table(&doc.root).is_err());
+    }
+
+    #[test]
+    fn all_instance_kinds_build() {
+        let texts = [
+            "kind = \"coverage\"\nn = 50\nuniverse = 30\navg_degree = 3",
+            "kind = \"zipf\"\ndocs = 40\nvocab = 60\ndoc_len = 5",
+            "kind = \"planted\"\nk = 4\nuniverse = 40\nnoise_n = 20\nregime = \"sparse\"",
+            "kind = \"facility\"\nn = 30\nd = 20",
+            "kind = \"erdos-renyi\"\nn = 30\np = 0.2",
+            "kind = \"barabasi-albert\"\nn = 30\nattach = 2",
+            "kind = \"adversarial\"\nt = 2\nk = 8",
+        ];
+        for text in texts {
+            let doc = Document::parse(text).unwrap();
+            let cfg = InstanceConfig::from_table(&doc.root).unwrap();
+            let inst = cfg.build(1).unwrap();
+            assert!(inst.n > 0, "{text}");
+        }
+    }
+
+    #[test]
+    fn missing_tables_rejected() {
+        assert!(RunConfig::parse("k = 5").is_err());
+        assert!(RunConfig::parse("[instance]\nkind = \"greedy\"").is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Experiment driver: runs an algorithm on an instance, wires the
+//! oracle-call counter through the cluster, normalizes values into ratios,
+//! and packages everything as a serializable [`ExperimentRecord`] — the
+//! unit the benches, examples, and the CLI all print or persist.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::algorithms::greedy::lazy_greedy;
+use crate::algorithms::MrAlgorithm;
+use crate::core::Result;
+use crate::mapreduce::ClusterConfig;
+use crate::metrics::MrMetrics;
+use crate::oracle::CountingOracle;
+use crate::util::json::Json;
+use crate::workload::Instance;
+
+/// One algorithm × instance execution, fully accounted.
+#[derive(Debug, Clone)]
+pub struct ExperimentRecord {
+    /// Algorithm display name.
+    pub algorithm: String,
+    /// Instance display name.
+    pub instance: String,
+    /// Cardinality constraint.
+    pub k: usize,
+    /// Cluster seed.
+    pub seed: u64,
+    /// Objective value achieved.
+    pub value: f64,
+    /// Reference value (planted OPT if known, else lazy greedy).
+    pub reference: f64,
+    /// Whether `reference` is the exact optimum.
+    pub reference_is_opt: bool,
+    /// `value / reference`.
+    pub ratio: f64,
+    /// MapReduce rounds (compute rounds; excludes the r0 partition round).
+    pub rounds: usize,
+    /// Peak per-machine resident elements.
+    pub peak_machine_memory: usize,
+    /// Peak central-machine received elements in one round.
+    pub peak_central_recv: usize,
+    /// Total elements shipped across all rounds.
+    pub communication: usize,
+    /// Total oracle calls.
+    pub oracle_calls: u64,
+    /// End-to-end wall time (ms).
+    pub wall_ms: f64,
+    /// Full per-round metrics.
+    pub metrics: MrMetrics,
+}
+
+impl ExperimentRecord {
+    /// JSON form for reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("algorithm", Json::Str(self.algorithm.clone())),
+            ("instance", Json::Str(self.instance.clone())),
+            ("k", Json::Num(self.k as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("value", Json::Num(self.value)),
+            ("reference", Json::Num(self.reference)),
+            ("reference_is_opt", Json::Bool(self.reference_is_opt)),
+            ("ratio", Json::Num(self.ratio)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("peak_machine_memory", Json::Num(self.peak_machine_memory as f64)),
+            ("peak_central_recv", Json::Num(self.peak_central_recv as f64)),
+            ("communication", Json::Num(self.communication as f64)),
+            ("oracle_calls", Json::Num(self.oracle_calls as f64)),
+            ("wall_ms", Json::Num(self.wall_ms)),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+}
+
+/// Run `alg` on `inst`, returning the full record.
+///
+/// The oracle is wrapped in a [`CountingOracle`] and the counter is wired
+/// into the cluster config so per-round oracle calls land in the metrics.
+pub fn run_experiment(
+    inst: &Instance,
+    alg: &dyn MrAlgorithm,
+    k: usize,
+    cfg: &ClusterConfig,
+) -> Result<ExperimentRecord> {
+    let counting = CountingOracle::new(Arc::clone(&inst.oracle));
+    let mut cfg = cfg.clone();
+    cfg.call_counter = Some(counting.counter());
+
+    let start = Instant::now();
+    let result = alg.run(&counting, k, &cfg)?;
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    let oracle_calls = counting.calls();
+
+    let (reference, reference_is_opt) = match (inst.known_opt, inst.planted_k) {
+        (Some(opt), Some(pk)) if pk == k => (opt, true),
+        _ => (lazy_greedy(&inst.oracle, k).value, false),
+    };
+    let ratio = if reference > 0.0 { result.solution.value / reference } else { 0.0 };
+
+    // compute rounds exclude the r0 partition record.
+    let rounds = result.metrics.rounds.iter().filter(|r| !r.name.starts_with("r0:")).count();
+
+    Ok(ExperimentRecord {
+        algorithm: alg.name(),
+        instance: inst.name.clone(),
+        k,
+        seed: cfg.seed,
+        value: result.solution.value,
+        reference,
+        reference_is_opt,
+        ratio,
+        rounds,
+        peak_machine_memory: result.metrics.peak_machine_memory(),
+        peak_central_recv: result.metrics.peak_central_recv(),
+        communication: result.metrics.total_communication(),
+        oracle_calls,
+        wall_ms,
+        metrics: result.metrics,
+    })
+}
+
+/// Render records as an aligned text table (the benches' output format).
+pub fn render_table(title: &str, records: &[ExperimentRecord]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("\n== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<28} {:<34} {:>4} {:>9} {:>7} {:>7} {:>10} {:>10} {:>12} {:>9}\n",
+        "algorithm", "instance", "k", "value", "ratio", "rounds", "peak-mem", "central", "oracle-calls", "wall-ms"
+    ));
+    for r in records {
+        out.push_str(&format!(
+            "{:<28} {:<34} {:>4} {:>9.2} {:>7.4} {:>7} {:>10} {:>10} {:>12} {:>9.1}\n",
+            r.algorithm,
+            truncate(&r.instance, 34),
+            r.k,
+            r.value,
+            r.ratio,
+            r.rounds,
+            r.peak_machine_memory,
+            r.peak_central_recv,
+            r.oracle_calls,
+            r.wall_ms
+        ));
+    }
+    out
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..s.char_indices().take(n - 1).last().map(|(i, c)| i + c.len_utf8()).unwrap_or(0)])
+    }
+}
+
+/// Write records as pretty JSON.
+pub fn write_json(path: &str, records: &[ExperimentRecord]) -> Result<()> {
+    let arr = Json::Arr(records.iter().map(ExperimentRecord::to_json).collect());
+    std::fs::write(path, arr.to_string_pretty())
+        .map_err(|e| crate::core::Error::Runtime(format!("write {path}: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::combined::CombinedTwoRound;
+    use crate::workload::planted::PlantedCoverageGen;
+    use crate::workload::WorkloadGen;
+
+    #[test]
+    fn record_is_complete_and_serializable() {
+        let inst = PlantedCoverageGen::dense(8, 400, 800).generate(1);
+        let cfg = ClusterConfig { parallel: false, ..ClusterConfig::default() };
+        let rec = run_experiment(&inst, &CombinedTwoRound::new(0.1), 8, &cfg).unwrap();
+        assert!(rec.reference_is_opt);
+        assert!(rec.ratio >= 0.4);
+        assert_eq!(rec.rounds, 2);
+        assert!(rec.oracle_calls > 0);
+        let json = rec.to_json();
+        assert_eq!(json.get("algorithm").unwrap().as_str(), Some(rec.algorithm.as_str()));
+        // JSON text parses back.
+        assert!(Json::parse(&json.to_string_pretty()).is_ok());
+    }
+
+    #[test]
+    fn reference_falls_back_to_greedy_for_mismatched_k() {
+        let inst = PlantedCoverageGen::dense(8, 400, 800).generate(2);
+        let cfg = ClusterConfig { parallel: false, ..ClusterConfig::default() };
+        // k != planted k → greedy reference.
+        let rec = run_experiment(&inst, &CombinedTwoRound::new(0.1), 5, &cfg).unwrap();
+        assert!(!rec.reference_is_opt);
+        assert!(rec.reference > 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let inst = PlantedCoverageGen::sparse(5, 100, 100).generate(3);
+        let cfg = ClusterConfig { parallel: false, ..ClusterConfig::default() };
+        let rec = run_experiment(&inst, &CombinedTwoRound::new(0.1), 5, &cfg).unwrap();
+        let table = render_table("test", &[rec]);
+        assert!(table.contains("combined"));
+        assert!(table.contains("ratio"));
+    }
+}

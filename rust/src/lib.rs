@@ -1,0 +1,57 @@
+//! # mrsub — Submodular Optimization in the MapReduce Model
+//!
+//! A reproduction of Liu & Vondrák, *"Submodular Optimization in the
+//! MapReduce Model"* (SOSA 2019): distributed thresholding algorithms for
+//! monotone submodular maximization under a cardinality constraint, built on
+//! a faithful simulator of the MRC model of Karloff–Suri–Vassilvitskii.
+//!
+//! ## Layout
+//!
+//! * [`core`] — element ids, solutions, shared numeric helpers.
+//! * [`oracle`] — the value-oracle abstraction and seven concrete monotone
+//!   submodular families (coverage, weighted coverage, facility location,
+//!   graph cut-coverage, modular, concave-over-modular, and the adversarial
+//!   instance of the paper's Theorem 4), plus a call-counting decorator and
+//!   an XLA/PJRT-accelerated facility oracle.
+//! * [`mapreduce`] — the MRC cluster simulator: random partitioning and
+//!   sampling (Algorithm 3), synchronous rounds, per-machine memory and
+//!   communication metering.
+//! * [`algorithms`] — the paper's Algorithms 1–7 and the Theorem 8
+//!   combination, plus sequential and distributed baselines
+//!   (greedy/lazy/stochastic greedy, RandGreeDi, Mirrokni–Zadimoghaddam
+//!   core-sets, Sample&Prune).
+//! * [`workload`] — instance generators used by the experiment suite.
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and serves batched marginal
+//!   evaluations to the Rust hot path.
+//! * [`coordinator`] — experiment driver: runs algorithms over workloads,
+//!   collects [`metrics`], writes JSON reports.
+//! * [`config`] — TOML-backed configuration for the `mrsub` launcher.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mrsub::algorithms::combined::CombinedTwoRound;
+//! use mrsub::algorithms::MrAlgorithm;
+//! use mrsub::mapreduce::ClusterConfig;
+//! use mrsub::workload::{coverage::CoverageGen, WorkloadGen};
+//!
+//! let inst = CoverageGen::new(10_000, 4_000, 12).generate(7);
+//! let alg = CombinedTwoRound::new(0.1);
+//! let out = alg.run(inst.oracle.as_ref(), 50, &ClusterConfig::default()).unwrap();
+//! println!("f(S) = {}", out.solution.value);
+//! ```
+
+pub mod algorithms;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod mapreduce;
+pub mod metrics;
+pub mod oracle;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use crate::core::{ElementId, Solution};
+pub use oracle::{Oracle, OracleState};

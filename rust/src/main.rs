@@ -1,0 +1,203 @@
+//! `mrsub` — launcher for the MapReduce-submodular reproduction.
+//!
+//! ```text
+//! mrsub run --config cfg.toml      one configured experiment (+ JSON report)
+//! mrsub demo [--k K] [--n N] [--seed S]
+//!                                  all paper algorithms + baselines, one table
+//! mrsub sweep-t [--t-max T] [--k K] [--seed S]
+//!                                  ratio vs #thresholds (E2 series)
+//! mrsub adversarial [--t-max T] [--k K]
+//!                                  Theorem-4 tightness (E3 series)
+//! mrsub engine-check [--artifacts DIR]
+//!                                  PJRT artifacts + HLO-oracle cross-check
+//! ```
+//!
+//! (Arg parsing is hand-rolled — this workspace builds offline without clap;
+//! see the note in Cargo.toml.)
+
+use anyhow::{bail, Context, Result};
+
+use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::multi_round::MultiRound;
+use mrsub::algorithms::mz_coreset::MzCoreset;
+use mrsub::algorithms::randgreedi::RandGreeDi;
+use mrsub::algorithms::sample_prune::SamplePrune;
+use mrsub::algorithms::stochastic::StochasticGreedy;
+use mrsub::algorithms::two_round::TwoRoundKnownOpt;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::config::{GreedyAlg, RunConfig};
+use mrsub::coordinator::{render_table, run_experiment, write_json};
+use mrsub::core::threshold_bound;
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::workload::adversarial::AdversarialGen;
+use mrsub::workload::planted::PlantedCoverageGen;
+use mrsub::workload::WorkloadGen;
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(rest: &[String]) -> Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut it = rest.iter();
+        while let Some(flag) = it.next() {
+            let key = flag
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {flag:?}"))?;
+            let value = it.next().with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key.replace('-', "_"), value.clone());
+        }
+        Ok(Args { flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value {v:?} for --{key}")),
+        }
+    }
+
+    fn get_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+}
+
+const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|engine-check> [--flag value]...
+  run           --config <file.toml>
+  demo          [--k 20] [--n 20000] [--seed 7]
+  sweep-t       [--t-max 6] [--k 20] [--seed 7]
+  adversarial   [--t-max 5] [--k 60]
+  engine-check  [--artifacts <dir>]";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprintln!("{USAGE}");
+        bail!("missing subcommand");
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(args.get_str("config").context("run needs --config")?),
+        "demo" => cmd_demo(args.get("k", 20)?, args.get("n", 20_000)?, args.get("seed", 7)?),
+        "sweep-t" => cmd_sweep_t(args.get("t_max", 6)?, args.get("k", 20)?, args.get("seed", 7)?),
+        "adversarial" => cmd_adversarial(args.get("t_max", 5)?, args.get("k", 60)?),
+        "engine-check" => cmd_engine_check(args.get_str("artifacts")),
+        other => {
+            eprintln!("{USAGE}");
+            bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn cmd_run(path: &str) -> Result<()> {
+    let cfg = RunConfig::load(path)?;
+    let inst = cfg.instance.build(cfg.seed)?;
+    let alg = cfg.algorithm.build(&inst, cfg.k);
+    let mut cluster_cfg = cfg.cluster.clone();
+    cluster_cfg.seed = cfg.seed;
+    let rec = run_experiment(&inst, alg.as_ref(), cfg.k, &cluster_cfg)?;
+    println!("{}", render_table("run", std::slice::from_ref(&rec)));
+    if let Some(out) = cfg.output {
+        write_json(&out, &[rec])?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_demo(k: usize, n: usize, seed: u64) -> Result<()> {
+    let inst = PlantedCoverageGen::dense(k, n / 2, n).generate(seed);
+    let opt = inst.known_opt.unwrap();
+    let cfg = ClusterConfig { seed, ..ClusterConfig::default() };
+    let algs: Vec<Box<dyn MrAlgorithm>> = vec![
+        Box::new(GreedyAlg),
+        Box::new(TwoRoundKnownOpt::new(opt)),
+        Box::new(CombinedTwoRound::new(0.1)),
+        Box::new(MultiRound::known(3, opt)),
+        Box::new(MultiRound::guessing(3, 0.2)),
+        Box::new(RandGreeDi),
+        Box::new(MzCoreset),
+        Box::new(SamplePrune::new(0.2)),
+        Box::new(StochasticGreedy::new(0.1)),
+    ];
+    let mut records = Vec::new();
+    for alg in &algs {
+        records.push(run_experiment(&inst, alg.as_ref(), k, &cfg)?);
+    }
+    println!("{}", render_table(&format!("demo: {} (OPT = {opt})", inst.name), &records));
+    Ok(())
+}
+
+fn cmd_sweep_t(t_max: usize, k: usize, seed: u64) -> Result<()> {
+    let inst = PlantedCoverageGen::dense(k, 4000, 8000).generate(seed);
+    let opt = inst.known_opt.unwrap();
+    let cfg = ClusterConfig { seed, ..ClusterConfig::default() };
+    println!("\n== E2: ratio vs t (bound 1-(1-1/(t+1))^t -> 1-1/e) ==");
+    println!("{:>3} {:>8} {:>10} {:>10} {:>8}", "t", "rounds", "ratio", "bound", "ok");
+    for t in 1..=t_max {
+        let rec = run_experiment(&inst, &MultiRound::known(t, opt), k, &cfg)?;
+        let bound = threshold_bound(t);
+        println!(
+            "{:>3} {:>8} {:>10.4} {:>10.4} {:>8}",
+            t,
+            rec.rounds,
+            rec.ratio,
+            bound,
+            if rec.ratio >= bound - 1e-9 { "yes" } else { "NO" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_adversarial(t_max: usize, k: usize) -> Result<()> {
+    println!("\n== E3: Theorem 4 tightness (measured ratio vs cap) ==");
+    println!("{:>3} {:>10} {:>10} {:>10}", "t", "ratio", "cap", "slack");
+    for t in 1..=t_max {
+        let inst = AdversarialGen::new(t, k).generate(0);
+        let opt = inst.known_opt.unwrap();
+        let cfg = ClusterConfig { seed: 1, ..ClusterConfig::default() };
+        let rec = run_experiment(&inst, &MultiRound::known(t, opt), k, &cfg)?;
+        let cap = threshold_bound(t);
+        println!("{:>3} {:>10.4} {:>10.4} {:>10.4}", t, rec.ratio, cap, cap - rec.ratio);
+    }
+    Ok(())
+}
+
+fn cmd_engine_check(artifacts: Option<&str>) -> Result<()> {
+    use mrsub::oracle::hlo::HloFacilityOracle;
+    use mrsub::oracle::Oracle;
+    use mrsub::runtime::{default_artifact_dir, MarginalsEngine};
+    use mrsub::workload::facility::FacilityGen;
+    use std::sync::Arc;
+
+    let dir = artifacts
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    println!("loading artifacts from {}", dir.display());
+    let engine = Arc::new(MarginalsEngine::load(&dir)?);
+    println!("engine tiles: B={} D={}", engine.tile_b(), engine.tile_d());
+
+    let (n, d, sim) = FacilityGen::new(1000, 512).build_matrix(3);
+    let hlo = HloFacilityOracle::new(n, d, sim, Arc::clone(&engine));
+    let mut st_h = hlo.state();
+    let mut st_n = hlo.native().state();
+    for e in [3u32, 700, 512] {
+        st_h.insert(e);
+        st_n.insert(e);
+    }
+    let es: Vec<u32> = (0..n as u32).step_by(7).collect();
+    let mut out_h = vec![0.0; es.len()];
+    let mut out_n = vec![0.0; es.len()];
+    st_h.marginals(&es, &mut out_h);
+    st_n.marginals(&es, &mut out_n);
+    let max_err =
+        out_h.iter().zip(&out_n).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+    println!("batch of {}: max |hlo - native| = {max_err:.3e}", es.len());
+    println!("PJRT executions: {}", engine.executions());
+    anyhow::ensure!(max_err < 1e-3, "HLO oracle disagrees with native oracle");
+    println!("engine-check OK");
+    Ok(())
+}

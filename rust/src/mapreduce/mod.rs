@@ -1,0 +1,424 @@
+//! MRC cluster simulator.
+//!
+//! Simulates the MapReduce model of Karloff–Suri–Vassilvitskii as the paper
+//! instantiates it (§1.1): `m = √(n/k)` worker machines of memory
+//! `O(√(nk))` elements, one central machine with memory relaxed by a
+//! `Õ(·)` factor, and computation proceeding in synchronous rounds. The
+//! simulator is the *measurement instrument* for the reproduction: it
+//! executes each round (optionally in parallel across simulated machines
+//! via rayon), accounts resident memory and communication in elements — the
+//! unit of the paper's analysis — and can hard-enforce the budgets.
+
+pub mod partition;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::core::{derive_seed, ElementId, Error, Result};
+use crate::metrics::{MrMetrics, RoundStat};
+use crate::util::pool::parallel_map;
+use partition::{default_machines, partition_and_sample, sample_probability, Partitioned};
+
+/// Cluster construction parameters.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of worker machines; `None` = the paper's `⌈√(n/k)⌉`.
+    pub machines: Option<usize>,
+    /// Sampling constant `c` in `p = c·√(k/n)` (paper: 4).
+    pub sample_factor: f64,
+    /// Master seed; every random choice in the run derives from it.
+    pub seed: u64,
+    /// If true, exceeding an MRC memory budget aborts with
+    /// [`Error::MemoryBudget`] instead of just being recorded.
+    pub enforce_memory: bool,
+    /// Execute worker machines in parallel with rayon.
+    pub parallel: bool,
+    /// Shared oracle-call counter (from [`crate::oracle::CountingOracle`]);
+    /// wired by the coordinator so every algorithm's cluster reports
+    /// per-round oracle calls. Not part of any serialized config.
+    pub call_counter: Option<Arc<AtomicU64>>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            machines: None,
+            sample_factor: 4.0,
+            seed: 0xC0FFEE,
+            enforce_memory: false,
+            parallel: true,
+            call_counter: None,
+        }
+    }
+}
+
+/// Per-machine view handed to a worker-round closure.
+#[derive(Debug, Clone, Copy)]
+pub struct MachineCtx<'a> {
+    /// Machine index `0..m`.
+    pub id: usize,
+    /// This machine's shard `V_i` (current, i.e. after any persistent filtering).
+    pub shard: &'a [ElementId],
+    /// The broadcast sample `S`.
+    pub sample: &'a [ElementId],
+}
+
+/// Message-size accounting: how many *elements* (the MRC memory unit) a
+/// round output occupies on the wire.
+pub trait CommSize {
+    /// Size in elements.
+    fn comm_size(&self) -> usize;
+}
+
+impl CommSize for ElementId {
+    fn comm_size(&self) -> usize {
+        1
+    }
+}
+
+impl CommSize for f64 {
+    fn comm_size(&self) -> usize {
+        1
+    }
+}
+
+impl CommSize for () {
+    fn comm_size(&self) -> usize {
+        0
+    }
+}
+
+impl<T: CommSize> CommSize for Vec<T> {
+    fn comm_size(&self) -> usize {
+        self.iter().map(CommSize::comm_size).sum()
+    }
+}
+
+impl<T: CommSize> CommSize for Option<T> {
+    fn comm_size(&self) -> usize {
+        self.as_ref().map_or(0, CommSize::comm_size)
+    }
+}
+
+impl<A: CommSize, B: CommSize> CommSize for (A, B) {
+    fn comm_size(&self) -> usize {
+        self.0.comm_size() + self.1.comm_size()
+    }
+}
+
+impl<A: CommSize, B: CommSize, C: CommSize> CommSize for (A, B, C) {
+    fn comm_size(&self) -> usize {
+        self.0.comm_size() + self.1.comm_size() + self.2.comm_size()
+    }
+}
+
+/// The simulated cluster: shards, broadcast sample, and metering state.
+pub struct MrCluster {
+    cfg: ClusterConfig,
+    shards: Vec<Vec<ElementId>>,
+    sample: Vec<ElementId>,
+    metrics: MrMetrics,
+    /// Optional shared oracle-call counter (from [`crate::oracle::CountingOracle`]);
+    /// snapshotted around each round so `RoundStat::oracle_calls` is per-round.
+    call_counter: Option<Arc<AtomicU64>>,
+}
+
+impl MrCluster {
+    /// Build a cluster over ground set `0..n` with cardinality parameter `k`
+    /// and run Algorithm 3 (PartitionAndSample). The initial distribution
+    /// (shards + broadcast sample) is recorded as round `"r0:partition"`.
+    pub fn new(n: usize, k: usize, cfg: &ClusterConfig) -> Result<Self> {
+        if k == 0 || k > n {
+            return Err(Error::InvalidK { k, n });
+        }
+        let m = cfg.machines.unwrap_or_else(|| default_machines(n, k));
+        let p = sample_probability(n, k, cfg.sample_factor);
+        let Partitioned { shards, sample } =
+            partition_and_sample(n, m, p, derive_seed(cfg.seed, 0xA16_0003));
+
+        let sample_size = sample.len();
+        let max_shard = shards.iter().map(Vec::len).max().unwrap_or(0);
+        let mut cluster = MrCluster {
+            cfg: cfg.clone(),
+            shards,
+            sample,
+            metrics: MrMetrics { rounds: Vec::new(), n, k, machines: m, sample_size },
+            call_counter: cfg.call_counter.clone(),
+        };
+        // Round 0: the input distribution itself. Every machine receives its
+        // shard plus the broadcast sample; the central machine receives S.
+        cluster.record_round(
+            "r0:partition+sample",
+            m,
+            max_shard + sample_size,
+            n + (m + 1) * sample_size,
+            sample_size,
+            0,
+            std::time::Duration::ZERO,
+        )?;
+        Ok(cluster)
+    }
+
+    /// Attach a shared oracle-call counter for per-round accounting.
+    pub fn with_call_counter(mut self, counter: Arc<AtomicU64>) -> Self {
+        self.call_counter = Some(counter);
+        self
+    }
+
+    /// Number of worker machines.
+    pub fn machines(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The broadcast sample `S` (ascending ids).
+    pub fn sample(&self) -> &[ElementId] {
+        &self.sample
+    }
+
+    /// Current shard of machine `i`.
+    pub fn shard(&self, i: usize) -> &[ElementId] {
+        &self.shards[i]
+    }
+
+    /// All current shards.
+    pub fn shards(&self) -> &[Vec<ElementId>] {
+        &self.shards
+    }
+
+    /// Replace the shards (persistent filtering between rounds, Alg 5).
+    pub fn set_shards(&mut self, shards: Vec<Vec<ElementId>>) {
+        assert_eq!(shards.len(), self.shards.len(), "machine count is fixed");
+        self.shards = shards;
+    }
+
+    /// Metrics collected so far.
+    pub fn metrics(&self) -> &MrMetrics {
+        &self.metrics
+    }
+
+    /// Consume the cluster, returning its metrics.
+    pub fn into_metrics(self) -> MrMetrics {
+        self.metrics
+    }
+
+    /// Cluster seed (for algorithms needing extra derived randomness).
+    pub fn seed(&self) -> u64 {
+        self.cfg.seed
+    }
+
+    fn calls_snapshot(&self) -> u64 {
+        self.call_counter.as_ref().map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+
+    /// Execute one synchronous worker round: `f` runs on every machine
+    /// (rayon-parallel if configured); outputs are shipped to the central
+    /// machine. `extra_resident` accounts broadcast state beyond shard+sample
+    /// (e.g. a partial solution `G`, ≤ k elements).
+    pub fn worker_round<T, F>(&mut self, name: &str, extra_resident: usize, f: F) -> Result<Vec<T>>
+    where
+        T: CommSize + Send,
+        F: Fn(MachineCtx<'_>) -> T + Sync,
+    {
+        let start = Instant::now();
+        let calls0 = self.calls_snapshot();
+        let sample = &self.sample;
+        let outputs: Vec<T> = parallel_map(&self.shards, self.cfg.parallel, |id, shard| {
+            f(MachineCtx { id, shard, sample })
+        });
+        let max_resident = self
+            .shards
+            .iter()
+            .map(|s| s.len() + self.sample.len() + extra_resident)
+            .max()
+            .unwrap_or(0);
+        let total_sent: usize = outputs.iter().map(CommSize::comm_size).sum();
+        let calls = self.calls_snapshot() - calls0;
+        self.record_round(
+            name,
+            self.shards.len(),
+            max_resident,
+            total_sent,
+            total_sent,
+            calls,
+            start.elapsed(),
+        )?;
+        Ok(outputs)
+    }
+
+    /// Execute a central-machine round. `received` is the number of elements
+    /// the central machine holds this round (it is checked against the
+    /// relaxed central budget); `f` runs once.
+    pub fn central_round<T, F>(&mut self, name: &str, received: usize, f: F) -> Result<T>
+    where
+        F: FnOnce() -> T,
+    {
+        let start = Instant::now();
+        let calls0 = self.calls_snapshot();
+        let out = f();
+        let calls = self.calls_snapshot() - calls0;
+        self.record_round(name, 0, 0, 0, received, calls, start.elapsed())?;
+        Ok(out)
+    }
+
+    /// Low-level round for algorithms whose per-machine residency is not
+    /// simply `shard + sample` (e.g. multi-guess variants that keep one
+    /// filtered shard copy per OPT guess). The closure does the whole
+    /// round's work (it may parallelize internally with rayon); the caller
+    /// supplies the accounting numbers.
+    pub fn raw_round<T, F>(
+        &mut self,
+        name: &str,
+        max_resident: usize,
+        total_sent: usize,
+        central_recv: usize,
+        f: F,
+    ) -> Result<T>
+    where
+        F: FnOnce() -> T,
+    {
+        let start = Instant::now();
+        let calls0 = self.calls_snapshot();
+        let out = f();
+        let calls = self.calls_snapshot() - calls0;
+        let machines = self.shards.len();
+        self.record_round(name, machines, max_resident, total_sent, central_recv, calls, start.elapsed())?;
+        Ok(out)
+    }
+
+    /// Whether worker rounds execute machine closures in parallel.
+    pub fn parallel(&self) -> bool {
+        self.cfg.parallel
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn record_round(
+        &mut self,
+        name: &str,
+        machines: usize,
+        max_resident: usize,
+        total_sent: usize,
+        central_recv: usize,
+        oracle_calls: u64,
+        wall: std::time::Duration,
+    ) -> Result<()> {
+        self.metrics.rounds.push(RoundStat {
+            name: name.to_string(),
+            machines,
+            max_resident,
+            total_sent,
+            central_recv,
+            oracle_calls,
+            wall,
+        });
+        if self.cfg.enforce_memory && name != "r0:partition+sample" {
+            let mb = self.metrics.machine_budget();
+            if max_resident > mb {
+                return Err(Error::MemoryBudget { round: name.into(), used: max_resident, budget: mb });
+            }
+            let cb = self.metrics.central_budget();
+            if central_recv > cb {
+                return Err(Error::MemoryBudget { round: name.into(), used: central_recv, budget: cb });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Derive a per-machine RNG seed for randomized per-machine logic.
+pub fn machine_seed(cluster_seed: u64, round: usize, machine: usize) -> u64 {
+    derive_seed(cluster_seed, ((round as u64) << 32) | machine as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64) -> ClusterConfig {
+        ClusterConfig { seed, parallel: false, ..ClusterConfig::default() }
+    }
+
+    #[test]
+    fn new_cluster_partitions_and_records_round0() {
+        let c = MrCluster::new(1000, 10, &cfg(1)).unwrap();
+        assert_eq!(c.machines(), 10);
+        assert_eq!(c.metrics().rounds.len(), 1);
+        let total: usize = c.shards().iter().map(Vec::len).sum();
+        assert_eq!(total, 1000);
+        assert_eq!(c.metrics().sample_size, c.sample().len());
+    }
+
+    #[test]
+    fn invalid_k_rejected() {
+        assert!(MrCluster::new(10, 0, &cfg(1)).is_err());
+        assert!(MrCluster::new(10, 11, &cfg(1)).is_err());
+    }
+
+    #[test]
+    fn worker_round_accounts_communication() {
+        let mut c = MrCluster::new(100, 4, &cfg(2)).unwrap();
+        let outs = c
+            .worker_round("r1:test", 0, |ctx| {
+                ctx.shard.iter().take(3).copied().collect::<Vec<_>>()
+            })
+            .unwrap();
+        assert_eq!(outs.len(), c.machines());
+        let sent: usize = outs.iter().map(Vec::len).sum();
+        let r = &c.metrics().rounds[1];
+        assert_eq!(r.total_sent, sent);
+        assert_eq!(r.central_recv, sent);
+        assert!(r.max_resident >= c.sample().len());
+    }
+
+    #[test]
+    fn central_round_records_received() {
+        let mut c = MrCluster::new(100, 4, &cfg(3)).unwrap();
+        let v = c.central_round("r2:central", 37, || 41).unwrap();
+        assert_eq!(v, 41);
+        assert_eq!(c.metrics().rounds[1].central_recv, 37);
+    }
+
+    #[test]
+    fn parallel_and_serial_rounds_agree() {
+        let mut serial = MrCluster::new(500, 8, &cfg(4)).unwrap();
+        let par_cfg = ClusterConfig { parallel: true, ..cfg(4) };
+        let mut par = MrCluster::new(500, 8, &par_cfg).unwrap();
+        let f = |ctx: MachineCtx<'_>| -> Vec<ElementId> {
+            ctx.shard.iter().filter(|&&e| e % 3 == 0).copied().collect()
+        };
+        let a = serial.worker_round("r", 0, f).unwrap();
+        let b = par.worker_round("r", 0, f).unwrap();
+        assert_eq!(a, b, "parallel execution must preserve per-machine outputs");
+    }
+
+    #[test]
+    fn enforce_memory_trips_on_oversend() {
+        let mut c = MrCluster::new(100, 2, &ClusterConfig {
+            enforce_memory: true,
+            parallel: false,
+            ..ClusterConfig::default()
+        })
+        .unwrap();
+        // central budget for n=100,k=2 is ~ 8·√200·log2(3) ≈ 179; send way more.
+        let err = c.worker_round("r1:blowup", 0, |ctx| {
+            let mut v = ctx.shard.to_vec();
+            for _ in 0..6 {
+                v.extend_from_slice(ctx.shard);
+            }
+            v
+        });
+        assert!(err.is_err() || c.metrics().peak_central_recv() < c.metrics().central_budget());
+    }
+
+    #[test]
+    fn comm_size_impls() {
+        assert_eq!(3u32.comm_size(), 1);
+        assert_eq!(2.5f64.comm_size(), 1);
+        assert_eq!(().comm_size(), 0);
+        assert_eq!(vec![1u32, 2, 3].comm_size(), 3);
+        assert_eq!((vec![1u32, 2], 1.0f64).comm_size(), 3);
+        assert_eq!(Some(vec![1u32]).comm_size(), 1);
+        assert_eq!(None::<Vec<ElementId>>.comm_size(), 0);
+        assert_eq!(vec![vec![1u32], vec![2, 3]].comm_size(), 3);
+    }
+}

@@ -1,0 +1,122 @@
+//! Algorithm 3 — `PartitionAndSample(V)`.
+//!
+//! * `S` ← sample each `e ∈ V` independently with probability
+//!   `p = 4·√(k/n)` (the paper's constant; configurable).
+//! * Partition `V` uniformly at random into `m = √(n/k)` shards, one per
+//!   machine.
+//! * `S` is broadcast to every machine and to the central machine.
+//!
+//! The sample is returned in ascending id order: every machine must run
+//! ThresholdGreedy over `S` *in the same fixed order* so that all machines
+//! compute the identical partial solution `G₀` (Lemma 1's "so long as the
+//! loop … is done in a fixed order").
+
+use crate::core::{derive_seed, ElementId};
+use crate::util::rng::Rng;
+
+/// Output of Algorithm 3.
+#[derive(Debug, Clone)]
+pub struct Partitioned {
+    /// Per-machine shards `V_1 … V_m` (a true partition of `0..n`).
+    pub shards: Vec<Vec<ElementId>>,
+    /// The broadcast sample `S`, ascending ids.
+    pub sample: Vec<ElementId>,
+}
+
+/// Run Algorithm 3 over ground set `0..n` with `m` machines and sampling
+/// probability `p`, deterministically from `seed`.
+pub fn partition_and_sample(n: usize, m: usize, p: f64, seed: u64) -> Partitioned {
+    assert!(m >= 1, "need at least one machine");
+    let p = p.clamp(0.0, 1.0);
+    let mut rng_part = Rng::seed_from_u64(derive_seed(seed, 0x1));
+    let mut rng_sample = Rng::seed_from_u64(derive_seed(seed, 0x2));
+
+    let mut shards: Vec<Vec<ElementId>> = vec![Vec::with_capacity(n / m + 1); m];
+    let mut sample = Vec::with_capacity(((n as f64) * p * 1.5) as usize + 8);
+    for e in 0..n as ElementId {
+        shards[rng_part.gen_range(0..m)].push(e);
+        if rng_sample.gen_bool(p) {
+            sample.push(e);
+        }
+    }
+    Partitioned { shards, sample }
+}
+
+/// The paper's number of machines: `m = ⌈√(n/k)⌉` (at least 1).
+pub fn default_machines(n: usize, k: usize) -> usize {
+    ((n as f64 / k.max(1) as f64).sqrt().ceil() as usize).max(1)
+}
+
+/// The paper's sampling probability `p = c·√(k/n)` (clamped to 1).
+pub fn sample_probability(n: usize, k: usize, c: f64) -> f64 {
+    (c * (k as f64 / n.max(1) as f64).sqrt()).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn shards_partition_the_ground_set() {
+        let p = partition_and_sample(1000, 7, 0.1, 42);
+        assert_eq!(p.shards.len(), 7);
+        let mut seen = vec![false; 1000];
+        for shard in &p.shards {
+            for &e in shard {
+                assert!(!seen[e as usize], "element {e} in two shards");
+                seen[e as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "every element must be assigned");
+    }
+
+    #[test]
+    fn sample_is_sorted_and_roughly_pn() {
+        let p = partition_and_sample(100_000, 10, 0.05, 7);
+        assert!(p.sample.windows(2).all(|w| w[0] < w[1]), "sample must be ascending");
+        let s = p.sample.len() as f64;
+        assert!((s - 5000.0).abs() < 500.0, "sample size {s} far from expectation 5000");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = partition_and_sample(500, 5, 0.2, 9);
+        let b = partition_and_sample(500, 5, 0.2, 9);
+        assert_eq!(a.shards, b.shards);
+        assert_eq!(a.sample, b.sample);
+        let c = partition_and_sample(500, 5, 0.2, 10);
+        assert_ne!(a.sample, c.sample, "different seed should change the sample");
+    }
+
+    #[test]
+    fn paper_parameters() {
+        assert_eq!(default_machines(10_000, 100), 10);
+        let p = sample_probability(10_000, 100, 4.0);
+        assert!((p - 0.4).abs() < 1e-12);
+        // clamp: tiny n, huge k
+        assert_eq!(sample_probability(10, 1000, 4.0), 1.0);
+    }
+
+    #[test]
+    fn prop_partition_total() {
+        forall(0xA1, 40, |g| {
+            let n = g.usize_in(1, 2000);
+            let m = g.usize_in(1, 12);
+            let seed = g.u64_in(50);
+            let p = partition_and_sample(n, m, 0.1, seed);
+            let total: usize = p.shards.iter().map(|s| s.len()).sum();
+            assert_eq!(total, n);
+        });
+    }
+
+    #[test]
+    fn prop_sample_subset() {
+        forall(0xA2, 40, |g| {
+            let n = g.usize_in(1, 500);
+            let seed = g.u64_in(50);
+            let p = partition_and_sample(n, 3, 0.3, seed);
+            assert!(p.sample.iter().all(|&e| (e as usize) < n));
+        });
+    }
+}

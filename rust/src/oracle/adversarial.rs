@@ -1,0 +1,239 @@
+//! The adversarial instance from the paper's Theorem 4: no thresholding
+//! algorithm with `t` thresholds beats `1 − (1 − 1/(t+1))^t`.
+//!
+//! Ground set = `k` optimal elements `O`, each worth `v*`, plus distractor
+//! levels: `n_ℓ ≈ k/t` elements of value `≈ α_ℓ = (t/(t+1))^ℓ v*` for
+//! `ℓ = 1..t`. The objective, for `S' ⊆ S` (distractors) and `O' ⊆ O`:
+//!
+//! ```text
+//! f(S' ∪ O') = Σ_{i∈S'} v_i + (1 − Σ_{i∈S'} v_i / (k v*)) · |O'| · v*
+//! ```
+//!
+//! Monotone and submodular whenever `Σ_i v_i ≤ k v*` and at most `k`
+//! elements of `O` are selected (always true under a cardinality-k
+//! constraint — the regime of the paper).
+//!
+//! Realizing the lower bound numerically needs two details the proof leaves
+//! implicit:
+//!
+//! 1. **Scan order.** ThresholdGreedy processes elements in fixed (id)
+//!    order; the adversary places distractors at *lower ids* so that, within
+//!    one pass at threshold `α_ℓ`, the level-`ℓ` distractors are consumed
+//!    first — pushing the optimal elements' marginal just below `α_ℓ` before
+//!    they are scanned.
+//! 2. **Tie-breaking.** Distractor values are inflated by `(1+δ)` with a
+//!    tiny `δ > 0` so the optimal elements land *strictly* below each
+//!    threshold after the level is consumed (the proof's `n_ℓ α_ℓ` budget
+//!    argument with the ≥-threshold test).
+
+use std::sync::Arc;
+
+use super::{Oracle, OracleState, Selection};
+use crate::core::ElementId;
+
+/// Theorem-4 adversarial instance.
+#[derive(Debug)]
+pub struct AdversarialOracle {
+    data: Arc<AdvData>,
+}
+
+#[derive(Debug)]
+struct AdvData {
+    /// Distractor values, ids `0..s`.
+    distractor: Vec<f64>,
+    /// Number of optimal elements (= cardinality k of the hard instance).
+    k: usize,
+    /// Value of each optimal element.
+    v_star: f64,
+}
+
+impl AdversarialOracle {
+    /// Generic constructor: distractor values + k optimal elements of value
+    /// `v_star`. Ids `0..distractor.len()` are distractors; the following
+    /// `k` ids are the optimal elements.
+    pub fn new(distractor: Vec<f64>, k: usize, v_star: f64) -> Self {
+        let total_s: f64 = distractor.iter().sum();
+        assert!(
+            total_s <= k as f64 * v_star * (1.0 + 1e-9),
+            "Σ distractor values ({total_s}) must be ≤ k·v* ({})",
+            k as f64 * v_star
+        );
+        AdversarialOracle { data: Arc::new(AdvData { distractor, k, v_star }) }
+    }
+
+    /// The hard instance against `t` equal-ratio thresholds (the maximizing
+    /// choice in Theorem 4): levels `α_ℓ = (t/(t+1))^ℓ v*`,
+    /// `n_ℓ = round((α_{ℓ−1}/α_ℓ − 1)·k) = round(k/t)` distractors per level,
+    /// values inflated by `(1+δ)`, `δ = 1e-6`.
+    pub fn hard_instance(t: usize, k: usize) -> Self {
+        assert!(t >= 1 && k >= t, "need t >= 1 and k >= t");
+        let v_star = 1.0f64;
+        let delta = 1e-6;
+        let ratio = t as f64 / (t as f64 + 1.0);
+        let mut distractor = Vec::new();
+        let mut alpha_prev = v_star;
+        for _ in 1..=t {
+            let alpha = alpha_prev * ratio;
+            let n_l = ((alpha_prev / alpha - 1.0) * k as f64).round() as usize;
+            for _ in 0..n_l {
+                distractor.push(alpha * (1.0 + delta));
+            }
+            alpha_prev = alpha;
+        }
+        AdversarialOracle::new(distractor, k, v_star)
+    }
+
+    /// The exact optimum: `f(O) = k · v*`.
+    pub fn known_opt(&self) -> f64 {
+        self.data.k as f64 * self.data.v_star
+    }
+
+    /// Ids of the optimal elements (the last `k` ids).
+    pub fn optimal_ids(&self) -> impl Iterator<Item = ElementId> + '_ {
+        let s = self.data.distractor.len() as ElementId;
+        s..s + self.data.k as ElementId
+    }
+
+    /// The theoretical cap `1 − (1 − 1/(t+1))^t` on any t-threshold run.
+    pub fn threshold_cap(t: usize) -> f64 {
+        crate::core::threshold_bound(t)
+    }
+
+}
+
+impl Oracle for AdversarialOracle {
+    fn ground_size(&self) -> usize {
+        self.data.distractor.len() + self.data.k
+    }
+
+    fn state(&self) -> Box<dyn OracleState> {
+        Box::new(AdvState {
+            data: Arc::clone(&self.data),
+            sel: Selection::new(self.data.distractor.len() + self.data.k),
+            sum_s: 0.0,
+            count_o: 0,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+struct AdvState {
+    data: Arc<AdvData>,
+    sel: Selection,
+    /// Σ values of selected distractors.
+    sum_s: f64,
+    /// |O'| — number of selected optimal elements.
+    count_o: usize,
+}
+
+impl AdvState {
+    #[inline]
+    fn o_scale(&self) -> f64 {
+        // (1 − Σ_{i∈S'} v_i / (k v*)) — never negative since Σ_all ≤ k v*.
+        (1.0 - self.sum_s / (self.data.k as f64 * self.data.v_star)).max(0.0)
+    }
+
+    #[inline]
+    fn is_optimal_id(&self, e: ElementId) -> bool {
+        (e as usize) >= self.data.distractor.len()
+    }
+}
+
+impl OracleState for AdvState {
+    fn value(&self) -> f64 {
+        self.sum_s + self.o_scale() * self.count_o as f64 * self.data.v_star
+    }
+
+    fn marginal(&self, e: ElementId) -> f64 {
+        if self.sel.contains(e) {
+            return 0.0;
+        }
+        if self.is_optimal_id(e) {
+            self.o_scale() * self.data.v_star
+        } else {
+            // v_i · (1 − |O'| / k); non-negative while |O'| ≤ k.
+            let v = self.data.distractor[e as usize];
+            (v * (1.0 - self.count_o as f64 / self.data.k as f64)).max(0.0)
+        }
+    }
+
+    fn insert(&mut self, e: ElementId) {
+        if !self.sel.insert(e) {
+            return;
+        }
+        if self.is_optimal_id(e) {
+            self.count_o += 1;
+        } else {
+            self.sum_s += self.data.distractor[e as usize];
+        }
+    }
+
+    fn selected(&self) -> &[ElementId] {
+        self.sel.order()
+    }
+
+    fn clone_state(&self) -> Box<dyn OracleState> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::axioms::check_axioms;
+    use crate::util::check::forall;
+
+    #[test]
+    fn hard_instance_shape() {
+        let o = AdversarialOracle::hard_instance(2, 12);
+        // two levels of ~k/2 = 6 distractors each + 12 optimal elements.
+        assert_eq!(o.ground_size(), 6 + 6 + 12);
+        assert_eq!(o.known_opt(), 12.0);
+        // optimum really is the optimal block.
+        let opt: Vec<ElementId> = o.optimal_ids().collect();
+        assert!((o.value(&opt) - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn picking_distractors_devalues_optimum() {
+        let o = AdversarialOracle::hard_instance(1, 10);
+        // level 1: 10 distractors of value ~ 1/2 each; Σ = 5 = k v*/2.
+        let mut st = o.state();
+        let opt0 = st.marginal(o.optimal_ids().next().unwrap());
+        assert!((opt0 - 1.0).abs() < 1e-9);
+        for e in 0..10 {
+            st.insert(e);
+        }
+        let opt1 = st.marginal(o.optimal_ids().next().unwrap());
+        // after all distractors: marginal ≈ 1/2 (just below, by δ).
+        assert!(opt1 < 0.5 && opt1 > 0.49, "opt marginal {opt1}");
+    }
+
+    #[test]
+    fn value_formula_matches_closed_form() {
+        let o = AdversarialOracle::new(vec![0.5, 0.25], 2, 1.0);
+        // S' = {0}, O' = {2}: f = 0.5 + (1 - 0.5/2)·1 = 1.25.
+        assert!((o.value(&[0, 2]) - 1.25).abs() < 1e-12);
+        // everything: 0.75 + (1 - 0.75/2)·2 = 2.0
+        assert!((o.value(&[0, 1, 2, 3]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axioms_hold() {
+        for t in 1..=4 {
+            let o = AdversarialOracle::hard_instance(t, 8);
+            check_axioms(&o, t as u64, 25);
+        }
+    }
+
+    #[test]
+    fn prop_adv_axioms() {
+        forall(0xADF, 20, |g| {
+            let t = g.usize_in(1, 5);
+            let k = g.usize_in(5, 20);
+            let seed = g.u64_in(100);
+            let o = AdversarialOracle::hard_instance(t, k.max(t));
+            check_axioms(&o, seed, 6);
+        });
+    }
+}

@@ -1,0 +1,129 @@
+//! Call-counting decorator: wraps any [`Oracle`] and counts marginal /
+//! value-oracle queries across all states (thread-safe), so experiments can
+//! report oracle complexity alongside rounds and memory.
+//!
+//! Batched marginal calls count as `len` queries — the metric is the
+//! *oracle-call complexity* of the algorithm, independent of whether a
+//! backend amortizes the batch.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::{Oracle, OracleState};
+use crate::core::ElementId;
+
+/// Oracle decorator that counts queries issued through any of its states.
+pub struct CountingOracle<O: Oracle> {
+    inner: O,
+    calls: Arc<AtomicU64>,
+}
+
+impl<O: Oracle> CountingOracle<O> {
+    /// Wrap an oracle with a fresh counter.
+    pub fn new(inner: O) -> Self {
+        CountingOracle { inner, calls: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Total marginal/value queries so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Reset the counter (e.g. between benchmark phases).
+    pub fn reset(&self) {
+        self.calls.store(0, Ordering::Relaxed);
+    }
+
+    /// Shared handle to the counter (for metrics snapshots inside rounds).
+    pub fn counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.calls)
+    }
+
+    /// Access the wrapped oracle.
+    pub fn inner(&self) -> &O {
+        &self.inner
+    }
+}
+
+impl<O: Oracle> Oracle for CountingOracle<O> {
+    fn ground_size(&self) -> usize {
+        self.inner.ground_size()
+    }
+
+    fn state(&self) -> Box<dyn OracleState> {
+        Box::new(CountingState { inner: self.inner.state(), calls: Arc::clone(&self.calls) })
+    }
+
+    fn value(&self, set: &[ElementId]) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.value(set)
+    }
+}
+
+struct CountingState {
+    inner: Box<dyn OracleState>,
+    calls: Arc<AtomicU64>,
+}
+
+impl OracleState for CountingState {
+    fn value(&self) -> f64 {
+        self.inner.value()
+    }
+
+    fn marginal(&self, e: ElementId) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.marginal(e)
+    }
+
+    fn insert(&mut self, e: ElementId) {
+        self.inner.insert(e);
+    }
+
+    fn selected(&self) -> &[ElementId] {
+        self.inner.selected()
+    }
+
+    fn clone_state(&self) -> Box<dyn OracleState> {
+        Box::new(CountingState { inner: self.inner.clone_state(), calls: Arc::clone(&self.calls) })
+    }
+
+    fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
+        self.calls.fetch_add(es.len() as u64, Ordering::Relaxed);
+        self.inner.marginals(es, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::modular::ModularOracle;
+
+    #[test]
+    fn counts_marginals_and_batches() {
+        let o = CountingOracle::new(ModularOracle::new(vec![1.0, 2.0, 3.0]));
+        assert_eq!(o.calls(), 0);
+        let mut st = o.state();
+        st.marginal(0);
+        st.marginal(1);
+        assert_eq!(o.calls(), 2);
+        let mut out = [0.0; 3];
+        st.marginals(&[0, 1, 2], &mut out);
+        assert_eq!(o.calls(), 5);
+        st.insert(2);
+        assert_eq!(o.calls(), 5, "insert is not a counted query");
+        o.value(&[0, 1]);
+        assert_eq!(o.calls(), 6);
+        o.reset();
+        assert_eq!(o.calls(), 0);
+    }
+
+    #[test]
+    fn cloned_states_share_the_counter() {
+        let o = CountingOracle::new(ModularOracle::new(vec![1.0, 2.0]));
+        let st = o.state();
+        let st2 = st.clone_state();
+        st.marginal(0);
+        st2.marginal(1);
+        assert_eq!(o.calls(), 2);
+    }
+}

@@ -1,0 +1,208 @@
+//! (Weighted) set-coverage oracle: `f(S) = Σ_{j ∈ ∪_{e∈S} C_e} w_j`.
+//!
+//! The canonical monotone submodular family and the one the paper's
+//! antecedents (max-coverage in MapReduce/streaming: McGregor–Vu,
+//! Assadi–Khanna) study directly. Elements are sets over a universe
+//! `0..universe`; the state keeps a covered bitmap so a marginal costs
+//! O(|C_e|).
+
+use std::sync::Arc;
+
+use super::{Oracle, OracleState, Selection};
+use crate::core::ElementId;
+
+/// Immutable coverage instance (CSR adjacency: element -> covered items).
+#[derive(Debug)]
+pub struct CoverageOracle {
+    data: Arc<CoverageData>,
+}
+
+#[derive(Debug)]
+struct CoverageData {
+    /// CSR offsets, length n+1.
+    offsets: Vec<u32>,
+    /// Concatenated covered-item lists.
+    items: Vec<u32>,
+    /// Universe item weights (all 1.0 for unweighted coverage).
+    weights: Vec<f64>,
+}
+
+impl CoverageOracle {
+    /// Build from per-element item lists and a weight per universe item.
+    ///
+    /// Panics if any item id is out of range of `weights`.
+    pub fn new(sets: Vec<Vec<u32>>, weights: Vec<f64>) -> Self {
+        let mut offsets = Vec::with_capacity(sets.len() + 1);
+        let mut items = Vec::new();
+        offsets.push(0u32);
+        for s in &sets {
+            for &j in s {
+                assert!((j as usize) < weights.len(), "item {j} out of universe");
+                items.push(j);
+            }
+            offsets.push(items.len() as u32);
+        }
+        CoverageOracle { data: Arc::new(CoverageData { offsets, items, weights }) }
+    }
+
+    /// Unweighted coverage (all item weights 1).
+    pub fn unweighted(sets: Vec<Vec<u32>>, universe: usize) -> Self {
+        Self::new(sets, vec![1.0; universe])
+    }
+
+    /// Universe size.
+    pub fn universe(&self) -> usize {
+        self.data.weights.len()
+    }
+
+    /// Items covered by element `e`.
+    pub fn items_of(&self, e: ElementId) -> &[u32] {
+        let d = &self.data;
+        &d.items[d.offsets[e as usize] as usize..d.offsets[e as usize + 1] as usize]
+    }
+
+    /// Total universe weight — an upper bound on OPT for any k.
+    pub fn total_weight(&self) -> f64 {
+        self.data.weights.iter().sum()
+    }
+}
+
+impl Oracle for CoverageOracle {
+    fn ground_size(&self) -> usize {
+        self.data.offsets.len() - 1
+    }
+
+    fn state(&self) -> Box<dyn OracleState> {
+        Box::new(CoverageState {
+            data: Arc::clone(&self.data),
+            covered: vec![false; self.data.weights.len()],
+            sel: Selection::new(self.data.offsets.len() - 1),
+            value: 0.0,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+struct CoverageState {
+    data: Arc<CoverageData>,
+    covered: Vec<bool>,
+    sel: Selection,
+    value: f64,
+}
+
+impl CoverageState {
+    fn items_of(&self, e: ElementId) -> &[u32] {
+        let d = &self.data;
+        &d.items[d.offsets[e as usize] as usize..d.offsets[e as usize + 1] as usize]
+    }
+}
+
+impl OracleState for CoverageState {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn marginal(&self, e: ElementId) -> f64 {
+        if self.sel.contains(e) {
+            return 0.0;
+        }
+        let mut gain = 0.0;
+        for &j in self.items_of(e) {
+            if !self.covered[j as usize] {
+                gain += self.data.weights[j as usize];
+            }
+        }
+        gain
+    }
+
+    fn insert(&mut self, e: ElementId) {
+        if !self.sel.insert(e) {
+            return;
+        }
+        let d = Arc::clone(&self.data);
+        let (lo, hi) = (d.offsets[e as usize] as usize, d.offsets[e as usize + 1] as usize);
+        for &j in &d.items[lo..hi] {
+            let j = j as usize;
+            if !self.covered[j] {
+                self.covered[j] = true;
+                self.value += d.weights[j];
+            }
+        }
+    }
+
+    fn selected(&self) -> &[ElementId] {
+        self.sel.order()
+    }
+
+    fn clone_state(&self) -> Box<dyn OracleState> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::axioms::check_axioms;
+    use crate::util::check::forall;
+
+    fn tiny() -> CoverageOracle {
+        // e0 = {0,1}, e1 = {1,2}, e2 = {3}, e3 = {} (empty set)
+        CoverageOracle::unweighted(vec![vec![0, 1], vec![1, 2], vec![3], vec![]], 4)
+    }
+
+    #[test]
+    fn values_and_marginals() {
+        let o = tiny();
+        assert_eq!(o.ground_size(), 4);
+        assert_eq!(o.universe(), 4);
+        assert_eq!(o.value(&[0]), 2.0);
+        assert_eq!(o.value(&[0, 1]), 3.0);
+        assert_eq!(o.value(&[0, 1, 2]), 4.0);
+        assert_eq!(o.value(&[3]), 0.0);
+        let mut st = o.state();
+        st.insert(0);
+        assert_eq!(st.marginal(1), 1.0); // only item 2 is new
+        assert_eq!(st.marginal(0), 0.0); // member
+        st.insert(1);
+        assert_eq!(st.value(), 3.0);
+        assert_eq!(st.selected(), &[0, 1]);
+    }
+
+    #[test]
+    fn weighted_coverage_counts_weights() {
+        let o = CoverageOracle::new(vec![vec![0], vec![1], vec![0, 1]], vec![5.0, 0.5]);
+        assert_eq!(o.value(&[2]), 5.5);
+        assert_eq!(o.total_weight(), 5.5);
+        let mut st = o.state();
+        st.insert(0);
+        assert_eq!(st.marginal(2), 0.5);
+    }
+
+    #[test]
+    fn axioms_hold_random_instance() {
+        let o = crate::workload::coverage::CoverageGen::new(60, 40, 5).build(3);
+        check_axioms(&o, 11, 40);
+    }
+
+    #[test]
+    fn prop_coverage_axioms() {
+        forall(0xC01, 25, |g| {
+            let seed = g.u64_in(1000);
+            let n = g.usize_in(8, 40);
+            let u = g.usize_in(4, 30);
+            let deg = g.usize_in(1, 6);
+            let o = crate::workload::coverage::CoverageGen::new(n, u, deg).build(seed);
+            check_axioms(&o, seed ^ 0xabc, 8);
+        });
+    }
+
+    #[test]
+    fn prop_value_never_exceeds_universe() {
+        forall(0xC02, 30, |g| {
+            let seed = g.u64_in(200);
+            let o = crate::workload::coverage::CoverageGen::new(30, 20, 4).build(seed);
+            let all: Vec<ElementId> = (0..30).collect();
+            assert!(o.value(&all) <= o.total_weight() + 1e-9);
+        });
+    }
+}

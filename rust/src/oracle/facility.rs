@@ -1,0 +1,209 @@
+//! Facility-location oracle: `f(S) = Σ_j max_{i ∈ S} sim(i, j)` over a dense
+//! similarity matrix — the exemplar-selection objective of the distributed
+//! submodular-maximization literature (Mirzasoleiman et al., Barbosa et al.).
+//!
+//! The state keeps the running per-point coverage vector
+//! `cur[j] = max_{i∈G} sim(i,j)`, so a marginal is a single row scan:
+//! `f_G(e) = Σ_j max(sim(e,j) − cur[j], 0)`. This row scan is exactly the
+//! computation the L1 Pallas kernel implements; [`super::hlo::HloFacilityOracle`]
+//! is the PJRT-accelerated twin of this oracle and is tested against it.
+
+use std::sync::Arc;
+
+use super::{Oracle, OracleState, Selection};
+use crate::core::ElementId;
+
+/// Dense facility-location instance. `sim` is row-major `n × d`, `sim >= 0`.
+#[derive(Debug)]
+pub struct FacilityOracle {
+    data: Arc<FacilityData>,
+}
+
+#[derive(Debug)]
+pub(crate) struct FacilityData {
+    pub n: usize,
+    pub d: usize,
+    /// Row-major similarities, length `n * d`, all entries `>= 0`.
+    pub sim: Vec<f32>,
+}
+
+impl FacilityOracle {
+    /// Build from a row-major `n × d` similarity matrix (entries must be >= 0).
+    pub fn new(n: usize, d: usize, sim: Vec<f32>) -> Self {
+        assert_eq!(sim.len(), n * d, "sim must be n*d row-major");
+        debug_assert!(sim.iter().all(|&x| x >= 0.0), "similarities must be non-negative");
+        FacilityOracle { data: Arc::new(FacilityData { n, d, sim }) }
+    }
+
+    /// Number of demand points (columns).
+    pub fn num_points(&self) -> usize {
+        self.data.d
+    }
+
+    /// Similarity row of element `e`.
+    pub fn row(&self, e: ElementId) -> &[f32] {
+        let d = self.data.d;
+        &self.data.sim[e as usize * d..(e as usize + 1) * d]
+    }
+
+}
+
+/// The marginal row scan: `Σ_j max(row[j] − cur[j], 0)`.
+///
+/// Branchless (`max`) with 8 independent f32 lane accumulators so LLVM
+/// vectorizes the subtract/max/add chain; lane sums are folded into f64
+/// every `CHUNK` elements to keep the accumulation error at the f32-ulp
+/// level regardless of row length. ~8× faster than the scalar
+/// branchy/widening loop it replaces (see EXPERIMENTS.md §Perf).
+#[inline]
+pub(crate) fn relu_dot_gain(row: &[f32], cur: &[f32]) -> f64 {
+    const LANES: usize = 8;
+    const CHUNK: usize = 1024;
+    debug_assert_eq!(row.len(), cur.len());
+    let mut gain = 0.0f64;
+    let mut i = 0;
+    while i < row.len() {
+        let end = (i + CHUNK).min(row.len());
+        let mut acc = [0.0f32; LANES];
+        let (mut r, mut c) = (&row[i..end], &cur[i..end]);
+        while r.len() >= LANES {
+            for l in 0..LANES {
+                acc[l] += (r[l] - c[l]).max(0.0);
+            }
+            r = &r[LANES..];
+            c = &c[LANES..];
+        }
+        for l in 0..r.len() {
+            acc[l] += (r[l] - c[l]).max(0.0);
+        }
+        gain += acc.iter().map(|&x| x as f64).sum::<f64>();
+        i = end;
+    }
+    gain
+}
+
+impl Oracle for FacilityOracle {
+    fn ground_size(&self) -> usize {
+        self.data.n
+    }
+
+    fn state(&self) -> Box<dyn OracleState> {
+        Box::new(FacilityState {
+            data: Arc::clone(&self.data),
+            cur: vec![0.0; self.data.d],
+            sel: Selection::new(self.data.n),
+            value: 0.0,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+struct FacilityState {
+    data: Arc<FacilityData>,
+    /// cur[j] = max_{i in G} sim(i, j); empty max = 0 (f(∅) = 0).
+    cur: Vec<f32>,
+    sel: Selection,
+    value: f64,
+}
+
+impl OracleState for FacilityState {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    #[inline]
+    fn marginal(&self, e: ElementId) -> f64 {
+        if self.sel.contains(e) {
+            return 0.0;
+        }
+        let d = self.data.d;
+        let row = &self.data.sim[e as usize * d..(e as usize + 1) * d];
+        relu_dot_gain(row, &self.cur)
+    }
+
+    fn insert(&mut self, e: ElementId) {
+        if !self.sel.insert(e) {
+            return;
+        }
+        let d = self.data.d;
+        let data = Arc::clone(&self.data);
+        let row = &data.sim[e as usize * d..(e as usize + 1) * d];
+        let mut gain = 0.0f64;
+        for (c, s) in self.cur.iter_mut().zip(row) {
+            if *s > *c {
+                gain += (*s - *c) as f64;
+                *c = *s;
+            }
+        }
+        self.value += gain;
+    }
+
+    fn selected(&self) -> &[ElementId] {
+        self.sel.order()
+    }
+
+    fn clone_state(&self) -> Box<dyn OracleState> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::axioms::check_axioms;
+    use crate::util::check::forall;
+
+    fn tiny() -> FacilityOracle {
+        // 3 elements, 2 points.
+        FacilityOracle::new(3, 2, vec![1.0, 0.0, 0.0, 2.0, 0.5, 0.5])
+    }
+
+    #[test]
+    fn values() {
+        let o = tiny();
+        assert_eq!(o.value(&[0]), 1.0);
+        assert_eq!(o.value(&[1]), 2.0);
+        assert_eq!(o.value(&[0, 1]), 3.0);
+        assert_eq!(o.value(&[0, 1, 2]), 3.0); // element 2 dominated
+        let mut st = o.state();
+        st.insert(2);
+        assert_eq!(st.value(), 1.0);
+        assert_eq!(st.marginal(0), 0.5);
+        assert_eq!(st.marginal(1), 1.5);
+    }
+
+    #[test]
+    fn axioms_hold_random_instance() {
+        let o = crate::workload::facility::FacilityGen::new(40, 25).build(5);
+        check_axioms(&o, 17, 30);
+    }
+
+    #[test]
+    fn prop_facility_axioms() {
+        forall(0xFA1, 20, |g| {
+            let seed = g.u64_in(500);
+            let n = g.usize_in(6, 30);
+            let d = g.usize_in(2, 20);
+            let o = crate::workload::facility::FacilityGen::new(n, d).build(seed);
+            check_axioms(&o, seed ^ 0x5f5f, 6);
+        });
+    }
+
+    #[test]
+    fn prop_value_bounded_by_colmax_sum() {
+        forall(0xFA2, 20, |g| {
+            let seed = g.u64_in(100);
+            let o = crate::workload::facility::FacilityGen::new(20, 10).build(seed);
+            let all: Vec<ElementId> = (0..20).collect();
+            let mut bound = 0.0f64;
+            for j in 0..10 {
+                let mut m = 0.0f32;
+                for e in 0..20u32 {
+                    m = m.max(o.row(e)[j]);
+                }
+                bound += m as f64;
+            }
+            assert!((o.value(&all) - bound).abs() < 1e-6 * (1.0 + bound));
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! PJRT-accelerated facility-location oracle (the L3↔L1 bridge).
+//!
+//! Same objective as [`super::facility::FacilityOracle`], but batched
+//! marginal queries are served by the AOT-compiled JAX/Pallas artifact
+//! (`artifacts/marginals.hlo.txt`) through [`crate::runtime::MarginalsEngine`].
+//! Scalar queries fall back to the native row scan so the oracle is a
+//! drop-in [`Oracle`] anywhere; algorithms that batch (ThresholdFilter over
+//! a shard) get the accelerated path automatically via
+//! [`OracleState::marginals`].
+
+use std::sync::Arc;
+
+use super::facility::FacilityOracle;
+use super::{Oracle, OracleState, Selection};
+use crate::core::ElementId;
+use crate::runtime::MarginalsEngine;
+
+/// Facility-location oracle whose batch marginals run on the PJRT engine.
+pub struct HloFacilityOracle {
+    native: FacilityOracle,
+    engine: Arc<MarginalsEngine>,
+    n: usize,
+    d: usize,
+    /// Row-major padded similarity matrix (d padded up to the engine tile).
+    sim_padded: Arc<Vec<f32>>,
+    d_padded: usize,
+}
+
+impl HloFacilityOracle {
+    /// Wrap a dense facility instance with a PJRT engine. The similarity
+    /// matrix is re-padded once so every universe tile is engine-aligned.
+    pub fn new(n: usize, d: usize, sim: Vec<f32>, engine: Arc<MarginalsEngine>) -> Self {
+        let tile_d = engine.tile_d();
+        let d_padded = d.div_ceil(tile_d) * tile_d;
+        let mut sim_padded = vec![0.0f32; n * d_padded];
+        for i in 0..n {
+            sim_padded[i * d_padded..i * d_padded + d].copy_from_slice(&sim[i * d..(i + 1) * d]);
+        }
+        let native = FacilityOracle::new(n, d, sim);
+        HloFacilityOracle { native, engine, n, d, sim_padded: Arc::new(sim_padded), d_padded }
+    }
+
+    /// The native (pure-Rust) twin — used by tests to cross-check numerics.
+    pub fn native(&self) -> &FacilityOracle {
+        &self.native
+    }
+}
+
+impl Oracle for HloFacilityOracle {
+    fn ground_size(&self) -> usize {
+        self.n
+    }
+
+    fn state(&self) -> Box<dyn OracleState> {
+        Box::new(HloFacilityState {
+            native: self.native.state(),
+            engine: Arc::clone(&self.engine),
+            sim_padded: Arc::clone(&self.sim_padded),
+            cur_padded: vec![0.0f32; self.d_padded],
+            sel: Selection::new(self.n),
+            d: self.d,
+            d_padded: self.d_padded,
+        })
+    }
+}
+
+struct HloFacilityState {
+    /// Native state drives scalar marginals, value, and insertion.
+    native: Box<dyn OracleState>,
+    engine: Arc<MarginalsEngine>,
+    sim_padded: Arc<Vec<f32>>,
+    /// Padded coverage vector mirrored from the native state's `cur`.
+    cur_padded: Vec<f32>,
+    sel: Selection,
+    d: usize,
+    d_padded: usize,
+}
+
+impl OracleState for HloFacilityState {
+    fn value(&self) -> f64 {
+        self.native.value()
+    }
+
+    fn marginal(&self, e: ElementId) -> f64 {
+        self.native.marginal(e)
+    }
+
+    fn insert(&mut self, e: ElementId) {
+        if !self.sel.insert(e) {
+            return;
+        }
+        self.native.insert(e);
+        // mirror the coverage update into the padded vector.
+        let row = &self.sim_padded[e as usize * self.d_padded..e as usize * self.d_padded + self.d];
+        for (c, s) in self.cur_padded[..self.d].iter_mut().zip(row) {
+            if *s > *c {
+                *c = *s;
+            }
+        }
+    }
+
+    fn selected(&self) -> &[ElementId] {
+        self.sel.order()
+    }
+
+    fn clone_state(&self) -> Box<dyn OracleState> {
+        Box::new(HloFacilityState {
+            native: self.native.clone_state(),
+            engine: Arc::clone(&self.engine),
+            sim_padded: Arc::clone(&self.sim_padded),
+            cur_padded: self.cur_padded.clone(),
+            sel: self.sel.clone(),
+            d: self.d,
+            d_padded: self.d_padded,
+        })
+    }
+
+    /// The accelerated hot path: one PJRT call per (block × universe tile).
+    fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(es.len(), out.len());
+        if es.is_empty() {
+            return;
+        }
+        let rows = |e: ElementId| {
+            &self.sim_padded[e as usize * self.d_padded..(e as usize + 1) * self.d_padded]
+        };
+        self.engine
+            .batch_marginals(es, rows, &self.cur_padded, out)
+            .expect("PJRT batch marginal execution failed");
+        // members must report 0 regardless of padding artifacts.
+        for (o, &e) in out.iter_mut().zip(es) {
+            if self.sel.contains(e) {
+                *o = 0.0;
+            }
+        }
+    }
+}

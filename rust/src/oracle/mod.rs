@@ -1,0 +1,281 @@
+//! Value-oracle abstraction for monotone submodular functions.
+//!
+//! Every algorithm in the paper interacts with `f` exclusively through
+//! marginal queries `f_G(e) = f(G ∪ {e}) − f(G)`, so the central abstraction
+//! is an *incremental evaluation state* ([`OracleState`]): it carries the
+//! current set `G`, answers marginals in the family's natural incremental
+//! complexity (e.g. O(deg) for coverage instead of O(|G|·deg)), and supports
+//! O(1)-amortized insertion.
+//!
+//! [`Oracle`] is the immutable instance: the data defining `f` plus a
+//! factory for fresh states. Oracles keep their data behind `Arc` so states
+//! are `'static` and cheap to fan out across simulated machines (rayon).
+
+use crate::core::ElementId;
+
+pub mod adversarial;
+pub mod concave;
+pub mod counting;
+pub mod coverage;
+pub mod cut;
+pub mod facility;
+pub mod hlo;
+pub mod modular;
+
+pub use counting::CountingOracle;
+
+/// A monotone submodular instance `f : 2^V -> R_{>=0}` with `V = 0..n`.
+pub trait Oracle: Send + Sync {
+    /// Ground-set size `n = |V|`.
+    fn ground_size(&self) -> usize;
+
+    /// Fresh evaluation state positioned at `G = ∅`.
+    fn state(&self) -> Box<dyn OracleState>;
+
+    /// `f(S)` evaluated from scratch (default: replay into a fresh state).
+    fn value(&self, set: &[ElementId]) -> f64 {
+        let mut st = self.state();
+        for &e in set {
+            st.insert(e);
+        }
+        st.value()
+    }
+
+    /// Singleton value `f({e})`.
+    fn singleton(&self, e: ElementId) -> f64 {
+        self.state().marginal(e)
+    }
+
+    /// A cheap upper bound on `OPT_k` used by tests and OPT-guessing:
+    /// `k · max_e f({e})` (valid for any monotone submodular `f`).
+    fn opt_upper_bound(&self, k: usize) -> f64 {
+        let st = self.state();
+        let mut best: f64 = 0.0;
+        for e in 0..self.ground_size() as ElementId {
+            best = best.max(st.marginal(e));
+        }
+        best * k as f64
+    }
+}
+
+/// Incremental evaluation state: the current set `G`, its value, and
+/// marginal queries against it.
+///
+/// `Sync` is required so a single frozen state (e.g. the shared `G₀` of
+/// Algorithm 4) can serve read-only marginal queries from all simulated
+/// machines in parallel.
+pub trait OracleState: Send + Sync {
+    /// `f(G)` for the current set.
+    fn value(&self) -> f64;
+
+    /// Marginal gain `f_G(e)`. Must return 0 for `e ∈ G` (idempotence).
+    fn marginal(&self, e: ElementId) -> f64;
+
+    /// Add `e` to `G`. Inserting an element twice is a no-op.
+    fn insert(&mut self, e: ElementId);
+
+    /// The current set `G` in insertion order.
+    fn selected(&self) -> &[ElementId];
+
+    /// Deep copy (used when an algorithm forks a partial solution across
+    /// guesses or simulated machines).
+    fn clone_state(&self) -> Box<dyn OracleState>;
+
+    /// Batched marginals — the hot path of ThresholdFilter. The default
+    /// loops over [`OracleState::marginal`]; accelerated oracles (PJRT)
+    /// override it with a single device call per block.
+    fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(es.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(es) {
+            *o = self.marginal(e);
+        }
+    }
+
+    /// Number of selected elements (convenience).
+    fn len(&self) -> usize {
+        self.selected().len()
+    }
+
+    /// True iff `G = ∅`.
+    fn is_empty(&self) -> bool {
+        self.selected().is_empty()
+    }
+}
+
+impl<T: Oracle + ?Sized> Oracle for std::sync::Arc<T> {
+    fn ground_size(&self) -> usize {
+        (**self).ground_size()
+    }
+    fn state(&self) -> Box<dyn OracleState> {
+        (**self).state()
+    }
+    fn value(&self, set: &[ElementId]) -> f64 {
+        (**self).value(set)
+    }
+    fn singleton(&self, e: ElementId) -> f64 {
+        (**self).singleton(e)
+    }
+    fn opt_upper_bound(&self, k: usize) -> f64 {
+        (**self).opt_upper_bound(k)
+    }
+}
+
+impl<T: Oracle + ?Sized> Oracle for &T {
+    fn ground_size(&self) -> usize {
+        (**self).ground_size()
+    }
+    fn state(&self) -> Box<dyn OracleState> {
+        (**self).state()
+    }
+    fn value(&self, set: &[ElementId]) -> f64 {
+        (**self).value(set)
+    }
+    fn singleton(&self, e: ElementId) -> f64 {
+        (**self).singleton(e)
+    }
+    fn opt_upper_bound(&self, k: usize) -> f64 {
+        (**self).opt_upper_bound(k)
+    }
+}
+
+/// Shared helper: track selection order + membership for states.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct Selection {
+    order: Vec<ElementId>,
+    member: Vec<bool>,
+}
+
+impl Selection {
+    pub fn new(n: usize) -> Self {
+        Selection { order: Vec::new(), member: vec![false; n] }
+    }
+
+    /// Returns true if `e` was newly inserted.
+    pub fn insert(&mut self, e: ElementId) -> bool {
+        let i = e as usize;
+        if self.member[i] {
+            return false;
+        }
+        self.member[i] = true;
+        self.order.push(e);
+        true
+    }
+
+    pub fn contains(&self, e: ElementId) -> bool {
+        self.member[e as usize]
+    }
+
+    pub fn order(&self) -> &[ElementId] {
+        &self.order
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod axioms {
+    //! Reusable oracle-axiom checks shared by per-family tests and proptest
+    //! suites: monotonicity, submodularity, idempotence, state/scratch
+    //! consistency.
+
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Check the four oracle axioms on random chains A ⊆ B and probes e.
+    pub fn check_axioms(oracle: &dyn Oracle, seed: u64, trials: usize) {
+        let n = oracle.ground_size();
+        assert!(n >= 3, "axiom check needs n >= 3");
+        let mut rng = Rng::seed_from_u64(seed);
+        let ids: Vec<ElementId> = (0..n as ElementId).collect();
+        for trial in 0..trials {
+            let mut perm = ids.clone();
+            rng.shuffle(&mut perm);
+            let b_len = rng.gen_range(1..n.min(24) + 1);
+            let a_len = rng.gen_range(0..b_len);
+            let (b_set, rest) = perm.split_at(b_len);
+            let a_set = &b_set[..a_len];
+
+            let mut st_a = oracle.state();
+            for &e in a_set {
+                st_a.insert(e);
+            }
+            let mut st_b = oracle.state();
+            for &e in b_set {
+                st_b.insert(e);
+            }
+
+            // monotone: values non-negative and non-decreasing along chain.
+            assert!(st_a.value() >= -1e-9, "f must be non-negative");
+            assert!(
+                st_b.value() >= st_a.value() - 1e-9,
+                "monotonicity violated: f(B)={} < f(A)={} (trial {trial})",
+                st_b.value(),
+                st_a.value()
+            );
+
+            // probe elements outside B.
+            for &e in rest.iter().take(8) {
+                let ma = st_a.marginal(e);
+                let mb = st_b.marginal(e);
+                assert!(mb >= -1e-9, "marginal must be non-negative (monotone f)");
+                assert!(
+                    ma >= mb - 1e-6 * (1.0 + ma.abs()),
+                    "submodularity violated at e={e}: f_A(e)={ma} < f_B(e)={mb} (trial {trial})"
+                );
+                // marginal consistency: inserting e yields exactly value + marginal.
+                let mut st_a2 = st_a.clone_state();
+                st_a2.insert(e);
+                let err = (st_a2.value() - (st_a.value() + ma)).abs();
+                assert!(
+                    err <= 1e-6 * (1.0 + st_a2.value().abs()),
+                    "insert/marginal mismatch: {err}"
+                );
+            }
+
+            // idempotence: marginal of a member is 0, re-insert is a no-op.
+            if let Some(&e) = b_set.first() {
+                assert!(st_b.marginal(e).abs() <= 1e-9, "member marginal must be 0");
+                let v = st_b.value();
+                st_b.insert(e);
+                assert!((st_b.value() - v).abs() <= 1e-12, "re-insert changed value");
+            }
+
+            // scratch evaluation agrees with incremental state.
+            let direct = oracle.value(b_set);
+            let mut st = oracle.state();
+            for &e in b_set {
+                st.insert(e);
+            }
+            assert!(
+                (direct - st.value()).abs() <= 1e-6 * (1.0 + direct.abs()),
+                "value() vs state mismatch: {direct} vs {}",
+                st.value()
+            );
+
+            // batch marginals agree with scalar marginals.
+            let probes: Vec<ElementId> = rest.iter().take(8).copied().collect();
+            let mut batch = vec![0.0; probes.len()];
+            st_a.marginals(&probes, &mut batch);
+            for (i, &e) in probes.iter().enumerate() {
+                assert!(
+                    (batch[i] - st_a.marginal(e)).abs() <= 1e-6,
+                    "batch marginal mismatch at {e}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_insert_dedups_and_orders() {
+        let mut s = Selection::new(5);
+        assert!(s.insert(3));
+        assert!(s.insert(1));
+        assert!(!s.insert(3));
+        assert!(s.contains(3));
+        assert!(!s.contains(0));
+        assert_eq!(s.order(), &[3, 1]);
+    }
+}

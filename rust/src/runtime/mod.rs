@@ -1,0 +1,336 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and serves
+//! batched marginal evaluations to the Rust hot path. Python is never on
+//! this path — the HLO text is parsed and compiled by the in-process XLA
+//! CPU client (`xla` crate over xla_extension 0.5.1).
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that this XLA rejects; the text parser reassigns
+//! ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::core::{ElementId, Error, Result};
+use crate::util::json::Json;
+
+/// Shape manifest written by `python -m compile.aot` next to the artifacts.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Candidate block size B of the compiled marginals kernel.
+    pub b: usize,
+    /// Universe tile size D of the compiled kernels.
+    pub d: usize,
+    /// Element dtype (always "f32" for the shipped artifacts).
+    pub dtype: String,
+    /// Artifact file names, keyed by entry point.
+    pub artifacts: std::collections::HashMap<String, String>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+        let json =
+            Json::parse(&text).map_err(|e| Error::Runtime(format!("parse manifest: {e}")))?;
+        let field = |k: &str| {
+            json.get(k).ok_or_else(|| Error::Runtime(format!("manifest missing {k:?}")))
+        };
+        let b = field("b")?.as_usize().ok_or_else(|| Error::Runtime("bad b".into()))?;
+        let d = field("d")?.as_usize().ok_or_else(|| Error::Runtime("bad d".into()))?;
+        let dtype = field("dtype")?
+            .as_str()
+            .ok_or_else(|| Error::Runtime("bad dtype".into()))?
+            .to_string();
+        let mut artifacts = std::collections::HashMap::new();
+        if let Json::Obj(m) = field("artifacts")? {
+            for (k, v) in m {
+                artifacts.insert(
+                    k.clone(),
+                    v.as_str().ok_or_else(|| Error::Runtime("bad artifact path".into()))?.to_string(),
+                );
+            }
+        } else {
+            return Err(Error::Runtime("manifest artifacts must be an object".into()));
+        }
+        Ok(Manifest { b, d, dtype, artifacts })
+    }
+}
+
+/// Everything PJRT lives here; `PjRtClient` is `Rc`-based so the inner
+/// struct is not `Send`. Access is serialized through the surrounding
+/// `Mutex` and the CPU device serializes execution anyway, so we assert
+/// `Send` for the guarded payload (the PJRT C API itself is thread-safe;
+/// the non-atomic `Rc` refcounts are only ever touched under the lock).
+struct EngineInner {
+    _client: xla::PjRtClient,
+    exe_marginals: xla::PjRtLoadedExecutable,
+    exe_update: xla::PjRtLoadedExecutable,
+    exe_filter: Option<xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: see `EngineInner` doc — all uses go through `Mutex<EngineInner>`,
+// so no two threads touch the Rc refcounts or PJRT handles concurrently.
+unsafe impl Send for EngineInner {}
+
+/// Compiled marginal-evaluation engine over the AOT artifacts.
+///
+/// Fixed shapes: candidate blocks of `B` rows × universe tiles of `D`
+/// columns (from the manifest). Callers with larger universes tile over D
+/// and accumulate; callers with ragged blocks pad to B (padding rows are
+/// all-zero and yield marginal 0 under a non-negative coverage vector).
+pub struct MarginalsEngine {
+    inner: Mutex<EngineInner>,
+    b: usize,
+    d: usize,
+    /// Total PJRT executions served (for perf accounting).
+    execs: std::sync::atomic::AtomicU64,
+}
+
+impl MarginalsEngine {
+    /// Load and compile the artifacts from `dir` (default: `./artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        if manifest.dtype != "f32" {
+            return Err(Error::Runtime(format!("unsupported dtype {}", manifest.dtype)));
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e:?}")))?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let file = manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| Error::Runtime(format!("artifact {name} missing from manifest")))?;
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("artifact path must be utf-8"),
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e:?}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {name}: {e:?}")))
+        };
+        let exe_marginals = compile("marginals")?;
+        let exe_update = compile("update")?;
+        let exe_filter = compile("filter").ok();
+        Ok(MarginalsEngine {
+            inner: Mutex::new(EngineInner { _client: client, exe_marginals, exe_update, exe_filter }),
+            b: manifest.b,
+            d: manifest.d,
+            execs: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Candidate block size B the artifact was compiled for.
+    pub fn tile_b(&self) -> usize {
+        self.b
+    }
+
+    /// Universe tile size D the artifact was compiled for.
+    pub fn tile_d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of PJRT executions served so far.
+    pub fn executions(&self) -> u64 {
+        self.execs.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Batched marginals for candidates `es`. `rows(e)` must return e's
+    /// similarity row, padded to a multiple of `tile_d()`; `cur` is the
+    /// coverage vector padded to the same length. Results land in `out`
+    /// (f64, one per candidate).
+    pub fn batch_marginals<'a, F>(
+        &self,
+        es: &[ElementId],
+        rows: F,
+        cur: &[f32],
+        out: &mut [f64],
+    ) -> Result<()>
+    where
+        F: Fn(ElementId) -> &'a [f32],
+    {
+        debug_assert_eq!(es.len(), out.len());
+        let d_total = cur.len();
+        assert!(d_total % self.d == 0, "cur must be padded to a multiple of tile_d");
+        let tiles = d_total / self.d;
+        out.iter_mut().for_each(|o| *o = 0.0);
+
+        // Reused per-call buffers: one packed host block and one literal per
+        // input, refilled per (chunk, tile) via copy_raw_from — avoids a
+        // 2 MiB literal allocation per PJRT call (§Perf).
+        let mut sim_block = vec![0.0f32; self.b * self.d];
+        let mut sim_lit =
+            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[self.b, self.d]);
+        let mut cur_lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[self.d]);
+        let inner = self.inner.lock().expect("engine poisoned");
+        for chunk_start in (0..es.len()).step_by(self.b) {
+            let chunk = &es[chunk_start..(chunk_start + self.b).min(es.len())];
+            for t in 0..tiles {
+                let col0 = t * self.d;
+                // pack the (chunk × tile) sim block; unused rows stay zero.
+                for (r, &e) in chunk.iter().enumerate() {
+                    let row = rows(e);
+                    sim_block[r * self.d..(r + 1) * self.d]
+                        .copy_from_slice(&row[col0..col0 + self.d]);
+                }
+                for r in chunk.len()..self.b {
+                    sim_block[r * self.d..(r + 1) * self.d].fill(0.0);
+                }
+                sim_lit
+                    .copy_raw_from(&sim_block)
+                    .map_err(|e| Error::Runtime(format!("sim copy: {e:?}")))?;
+                cur_lit
+                    .copy_raw_from(&cur[col0..col0 + self.d])
+                    .map_err(|e| Error::Runtime(format!("cur copy: {e:?}")))?;
+                let result = inner
+                    .exe_marginals
+                    .execute::<&xla::Literal>(&[&sim_lit, &cur_lit])
+                    .map_err(|e| Error::Runtime(format!("execute marginals: {e:?}")))?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| Error::Runtime(format!("sync: {e:?}")))?;
+                let partial = result
+                    .to_tuple1()
+                    .map_err(|e| Error::Runtime(format!("tuple: {e:?}")))?
+                    .to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("to_vec: {e:?}")))?;
+                self.execs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                for (r, o) in out[chunk_start..chunk_start + chunk.len()].iter_mut().enumerate() {
+                    *o += partial[r] as f64;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Coverage-vector update through the AOT `update` artifact:
+    /// `cur <- max(cur, row)`, tile by tile. Used by integration tests and
+    /// the e2e example to prove the update path composes; the oracle keeps
+    /// a mirrored native update for the scalar path.
+    pub fn update_coverage(&self, row: &[f32], cur: &mut [f32]) -> Result<()> {
+        assert_eq!(row.len(), cur.len());
+        assert!(cur.len() % self.d == 0, "vectors must be padded to tile_d");
+        let inner = self.inner.lock().expect("engine poisoned");
+        for t in 0..cur.len() / self.d {
+            let lo = t * self.d;
+            let out = exec_update(&inner.exe_update, &row[lo..lo + self.d], &cur[lo..lo + self.d])?;
+            self.execs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            cur[lo..lo + self.d].copy_from_slice(&out);
+        }
+        Ok(())
+    }
+
+    /// Fused filter: marginals + survivor mask at threshold `tau` for one
+    /// B×D-padded block. Returns `(marginals, mask)` of length `es.len()`.
+    /// Only valid when the universe fits a single tile (`cur.len() == tile_d`);
+    /// multi-tile callers use [`Self::batch_marginals`] and threshold on the CPU.
+    pub fn filter_threshold<'a, F>(
+        &self,
+        es: &[ElementId],
+        rows: F,
+        cur: &[f32],
+        tau: f32,
+    ) -> Result<(Vec<f64>, Vec<bool>)>
+    where
+        F: Fn(ElementId) -> &'a [f32],
+    {
+        let inner = self.inner.lock().expect("engine poisoned");
+        let exe = inner
+            .exe_filter
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("filter artifact not loaded".into()))?;
+        assert_eq!(cur.len(), self.d, "fused filter requires a single-tile universe");
+        let mut sim_block = vec![0.0f32; self.b * self.d];
+        let mut marg = Vec::with_capacity(es.len());
+        let mut mask = Vec::with_capacity(es.len());
+        for chunk in es.chunks(self.b) {
+            for (r, &e) in chunk.iter().enumerate() {
+                sim_block[r * self.d..(r + 1) * self.d].copy_from_slice(rows(e));
+            }
+            for r in chunk.len()..self.b {
+                sim_block[r * self.d..(r + 1) * self.d].fill(0.0);
+            }
+            let (m, msk) = exec_filter(exe, &sim_block, cur, tau, self.b, self.d)?;
+            self.execs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            for r in 0..chunk.len() {
+                marg.push(m[r] as f64);
+                mask.push(msk[r] >= 0.5);
+            }
+        }
+        Ok((marg, mask))
+    }
+}
+
+fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    // Single-copy literal: create at the target shape and copy raw bytes in,
+    // instead of vec1 (copy) + reshape (second copy). ~2x less memcpy on the
+    // per-call hot path (see EXPERIMENTS.md §Perf).
+    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims_usize);
+    lit.copy_raw_from(data)
+        .map_err(|e| Error::Runtime(format!("literal copy_raw_from: {e:?}")))?;
+    Ok(lit)
+}
+
+fn exec_update(
+    exe: &xla::PjRtLoadedExecutable,
+    row: &[f32],
+    cur: &[f32],
+) -> Result<Vec<f32>> {
+    let d = row.len();
+    let row_lit = literal_f32(row, &[d as i64])?;
+    let cur_lit = literal_f32(cur, &[d as i64])?;
+    let result = exe
+        .execute::<xla::Literal>(&[row_lit, cur_lit])
+        .map_err(|e| Error::Runtime(format!("execute update: {e:?}")))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("sync: {e:?}")))?;
+    let out = result.to_tuple1().map_err(|e| Error::Runtime(format!("tuple: {e:?}")))?;
+    out.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec: {e:?}")))
+}
+
+fn exec_filter(
+    exe: &xla::PjRtLoadedExecutable,
+    sim: &[f32],
+    cur: &[f32],
+    tau: f32,
+    b: usize,
+    d: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let sim_lit = literal_f32(sim, &[b as i64, d as i64])?;
+    let cur_lit = literal_f32(cur, &[d as i64])?;
+    let tau_lit = xla::Literal::scalar(tau);
+    let result = exe
+        .execute::<xla::Literal>(&[sim_lit, cur_lit, tau_lit])
+        .map_err(|e| Error::Runtime(format!("execute filter: {e:?}")))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("sync: {e:?}")))?;
+    let (m, mask) = result.to_tuple2().map_err(|e| Error::Runtime(format!("tuple2: {e:?}")))?;
+    Ok((
+        m.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec m: {e:?}")))?,
+        mask.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec mask: {e:?}")))?,
+    ))
+}
+
+/// Locate the artifact directory: `$MRSUB_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (walks up from cwd looking for
+/// `artifacts/manifest.json`).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MRSUB_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}

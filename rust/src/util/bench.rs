@@ -1,0 +1,92 @@
+//! Tiny timing harness for the `harness = false` benches (the criterion
+//! substitute): warmup + N timed iterations, reporting min/median/mean.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary over iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl Timing {
+    /// `"min 1.234ms  med 1.301ms  mean 1.310ms  (n=20)"`
+    pub fn display(&self) -> String {
+        format!(
+            "min {:>9}  med {:>9}  mean {:>9}  (n={})",
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            self.iters
+        )
+    }
+}
+
+/// Human duration: ns/µs/ms/s with 3 significant places.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs. The
+/// closure's return value is consumed with `std::hint::black_box`.
+pub fn time<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Timing {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    Timing { iters: samples.len(), min, median, mean }
+}
+
+/// Throughput helper: items per second at a given duration.
+pub fn throughput(items: usize, d: Duration) -> f64 {
+    items as f64 / d.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_reports_ordered_stats() {
+        let t = time(1, 9, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.min <= t.median);
+        assert_eq!(t.iters, 9);
+        assert!(!t.display().is_empty());
+    }
+
+    #[test]
+    fn fmt_covers_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(5)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert_eq!(throughput(1000, Duration::from_secs(1)), 1000.0);
+    }
+}

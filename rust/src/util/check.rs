@@ -1,0 +1,89 @@
+//! Seeded property-check harness — the proptest substitute. A property is
+//! a closure over a [`Gen`] (an RNG with sampling helpers); it is executed
+//! for `cases` derived seeds and panics with the failing seed on the first
+//! violation, so failures reproduce exactly by re-running with that seed.
+
+use super::rng::Rng;
+use crate::core::derive_seed;
+
+/// Sampling context handed to properties.
+pub struct Gen {
+    /// Underlying RNG — free to use directly.
+    pub rng: Rng,
+    /// Seed this case was derived from (for error messages).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.gen_range(lo..hi)
+    }
+
+    /// Uniform u64 in `[0, hi)`.
+    pub fn u64_in(&mut self, hi: u64) -> u64 {
+        self.rng.gen_range(0..hi as usize) as u64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.gen_range_f64(lo, hi)
+    }
+
+    /// Fair coin / Bernoulli(p).
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+}
+
+/// Run `property` for `cases` cases derived from `master_seed`.
+///
+/// The property signals failure by panicking (use `assert!`); the harness
+/// re-panics with the case seed prepended.
+pub fn forall(master_seed: u64, cases: usize, mut property: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let case_seed = derive_seed(master_seed, case as u64 + 1);
+        let mut g = Gen { rng: Rng::seed_from_u64(case_seed), case_seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed (case {case}, seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall(1, 50, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert!(a + b >= a.max(b));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failing_seed() {
+        forall(2, 50, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x < 9, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first = Vec::new();
+        forall(3, 5, |g| first.push(g.usize_in(0, 1000)));
+        let mut second = Vec::new();
+        forall(3, 5, |g| second.push(g.usize_in(0, 1000)));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,232 @@
+//! TOML-subset parser for run configs: top-level keys, `[table]` headers
+//! (one level), and scalar values (string, integer, float, boolean).
+//! Comments (`#`), blank lines, and underscores in numbers are handled.
+//! Arrays/dates/nested tables are intentionally out of scope — configs in
+//! this repo don't use them.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    /// String accessor.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric accessor (ints widen to f64).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer accessor.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    /// u64 accessor.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    /// Bool accessor.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// One table: key → value.
+pub type Table = BTreeMap<String, Value>;
+
+/// A parsed document: the root table plus named tables.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    /// Keys before any `[section]` header.
+    pub root: Table,
+    /// Named `[section]` tables in declaration order-independent storage.
+    pub tables: BTreeMap<String, Table>,
+}
+
+impl Document {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Document, String> {
+        let mut doc = Document::default();
+        let mut current: Option<String> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.contains('[') || name.contains('.') {
+                    return Err(format!("line {}: unsupported table header {name:?}", lineno + 1));
+                }
+                doc.tables.entry(name.to_string()).or_default();
+                current = Some(name.to_string());
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(value.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let table = match &current {
+                None => &mut doc.root,
+                Some(name) => doc.tables.get_mut(name).expect("created on header"),
+            };
+            table.insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Named table accessor.
+    pub fn table(&self, name: &str) -> Option<&Table> {
+        self.tables.get(name)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        // minimal escapes
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape \\{other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean: String = text.chars().filter(|&c| c != '_').collect();
+    if !clean.contains('.') && !clean.contains('e') && !clean.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(x) = clean.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    Err(format!("cannot parse value {text:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_run_config_shape() {
+        let text = r#"
+            # experiment
+            k = 50
+            seed = 7
+
+            [instance]
+            kind = "coverage"   # dense regime
+            n = 100_000
+            universe = 40000
+            avg_degree = 12
+            weighted = false
+
+            [algorithm]
+            kind = "combined"
+            eps = 0.1
+
+            [cluster]
+            sample_factor = 4.0
+            parallel = true
+        "#;
+        let doc = Document::parse(text).unwrap();
+        assert_eq!(doc.root["k"], Value::Int(50));
+        assert_eq!(doc.table("instance").unwrap()["n"], Value::Int(100_000));
+        assert_eq!(doc.table("instance").unwrap()["kind"].as_str(), Some("coverage"));
+        assert_eq!(doc.table("algorithm").unwrap()["eps"].as_f64(), Some(0.1));
+        assert_eq!(doc.table("cluster").unwrap()["parallel"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn strings_with_hash_and_escapes() {
+        let doc = Document::parse(r#"name = "a # not comment \n b"  # real comment"#).unwrap();
+        assert_eq!(doc.root["name"].as_str(), Some("a # not comment \n b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Document::parse("[unclosed").is_err());
+        assert!(Document::parse("novalue").is_err());
+        assert!(Document::parse("x = ").is_err());
+        assert!(Document::parse("[a.b]\nx = 1").is_err());
+        assert!(Document::parse(r#"s = "unterminated"#).is_err());
+    }
+
+    #[test]
+    fn numbers_and_accessors() {
+        let doc = Document::parse("a = -3\nb = 2.5\nc = 1e3\nd = true").unwrap();
+        assert_eq!(doc.root["a"].as_f64(), Some(-3.0));
+        assert_eq!(doc.root["a"].as_usize(), None);
+        assert_eq!(doc.root["b"].as_f64(), Some(2.5));
+        assert_eq!(doc.root["c"].as_f64(), Some(1000.0));
+        assert_eq!(doc.root["d"].as_bool(), Some(true));
+        assert_eq!(doc.root["d"].as_f64(), None);
+    }
+}

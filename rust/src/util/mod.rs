@@ -1,0 +1,12 @@
+//! In-repo substrates for ecosystem crates that are unavailable in this
+//! fully-offline build (see the note in `Cargo.toml`): a deterministic RNG,
+//! a scoped-thread parallel map, a JSON emitter/parser, a TOML-subset
+//! parser, and a seeded property-check harness. Each is small, tested, and
+//! scoped to exactly what the library needs.
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod minitoml;
+pub mod pool;
+pub mod rng;

@@ -1,0 +1,49 @@
+//! Workload wrapper around the Theorem-4 adversarial oracle, so the
+//! tightness experiment (E3) flows through the same `Instance` plumbing as
+//! every other workload.
+
+use super::{Instance, WorkloadGen};
+use crate::oracle::adversarial::AdversarialOracle;
+
+/// Theorem-4 hard instance against `t` thresholds at cardinality `k`.
+#[derive(Debug, Clone, Copy)]
+pub struct AdversarialGen {
+    /// Number of thresholds the instance is hard for.
+    pub t: usize,
+    /// Cardinality constraint (also the number of optimal elements).
+    pub k: usize,
+}
+
+impl AdversarialGen {
+    /// New hard-instance generator.
+    pub fn new(t: usize, k: usize) -> Self {
+        AdversarialGen { t, k }
+    }
+
+    /// Build the concrete oracle (deterministic; no randomness involved).
+    pub fn build(&self) -> AdversarialOracle {
+        AdversarialOracle::hard_instance(self.t, self.k)
+    }
+}
+
+impl WorkloadGen for AdversarialGen {
+    fn generate(&self, _seed: u64) -> Instance {
+        let oracle = self.build();
+        let opt = oracle.known_opt();
+        let name = format!("adversarial(t={},k={})", self.t, self.k);
+        Instance::new(name, std::sync::Arc::new(oracle)).with_opt(opt, self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instance_carries_exact_opt() {
+        let inst = AdversarialGen::new(3, 12).generate(0);
+        assert_eq!(inst.known_opt, Some(12.0));
+        assert_eq!(inst.planted_k, Some(12));
+        assert!(inst.name.contains("t=3"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Synthetic Zipf document corpus → coverage instance.
+//!
+//! Stand-in for the real text corpora used in empirical max-coverage work
+//! (the paper itself is theory-only; DESIGN.md §2 documents this
+//! substitution): documents are elements, the words they contain are the
+//! covered items, and word frequencies follow a Zipf law — which produces
+//! the realistic structure (few stop-words covered by everyone, a long tail
+//! of rare words) that makes document selection non-trivial.
+
+use super::{Instance, WorkloadGen};
+use crate::core::derive_seed;
+use crate::oracle::coverage::CoverageOracle;
+use crate::util::rng::Rng;
+
+/// Zipf-corpus coverage generator.
+#[derive(Debug, Clone)]
+pub struct ZipfCorpusGen {
+    /// Number of documents (elements).
+    pub docs: usize,
+    /// Vocabulary size (universe).
+    pub vocab: usize,
+    /// Words per document (pre-dedup).
+    pub doc_len: usize,
+    /// Zipf exponent (≈1.0 for natural language).
+    pub s: f64,
+    /// Weight items by inverse document frequency instead of 1.
+    pub idf_weighted: bool,
+}
+
+impl ZipfCorpusGen {
+    /// Plain coverage corpus.
+    pub fn new(docs: usize, vocab: usize, doc_len: usize) -> Self {
+        ZipfCorpusGen { docs, vocab, doc_len, s: 1.05, idf_weighted: false }
+    }
+
+    /// IDF-weighted variant: covering rare words is worth more.
+    pub fn idf(docs: usize, vocab: usize, doc_len: usize) -> Self {
+        ZipfCorpusGen { docs, vocab, doc_len, s: 1.05, idf_weighted: true }
+    }
+
+    /// Deterministically build the oracle.
+    pub fn build(&self, seed: u64) -> CoverageOracle {
+        let mut rng = Rng::seed_from_u64(derive_seed(seed, 0x21F));
+        // Zipf CDF via inverse-transform on precomputed cumulative weights.
+        let mut cum = Vec::with_capacity(self.vocab);
+        let mut total = 0.0f64;
+        for r in 1..=self.vocab {
+            total += (r as f64).powf(-self.s);
+            cum.push(total);
+        }
+        let draw = |rng: &mut Rng| -> u32 {
+            let x = rng.gen_range_f64(0.0, total);
+            cum.partition_point(|&c| c < x) as u32
+        };
+        let mut doc_count = vec![0u32; self.vocab];
+        let sets: Vec<Vec<u32>> = (0..self.docs)
+            .map(|_| {
+                let mut words: Vec<u32> = (0..self.doc_len).map(|_| draw(&mut rng)).collect();
+                words.sort_unstable();
+                words.dedup();
+                for &w in &words {
+                    doc_count[w as usize] += 1;
+                }
+                words
+            })
+            .collect();
+        let weights = if self.idf_weighted {
+            doc_count
+                .iter()
+                .map(|&c| ((self.docs as f64 + 1.0) / (c as f64 + 1.0)).ln().max(0.0) + 1e-9)
+                .collect()
+        } else {
+            vec![1.0; self.vocab]
+        };
+        CoverageOracle::new(sets, weights)
+    }
+}
+
+impl WorkloadGen for ZipfCorpusGen {
+    fn generate(&self, seed: u64) -> Instance {
+        let tag = if self.idf_weighted { "zipf-idf" } else { "zipf" };
+        let name = format!(
+            "{tag}(docs={},vocab={},len={},s={},seed={seed})",
+            self.docs, self.vocab, self.doc_len, self.s
+        );
+        Instance::new(name, std::sync::Arc::new(self.build(seed)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::Oracle;
+
+    #[test]
+    fn zipf_head_is_common() {
+        let o = ZipfCorpusGen::new(200, 500, 30).build(1);
+        // word 0 (rank 1) should be covered by many documents; count docs
+        // containing it.
+        let containing = (0..200u32).filter(|&e| o.items_of(e).contains(&0)).count();
+        assert!(containing > 50, "head word in only {containing} docs");
+    }
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let a = ZipfCorpusGen::new(50, 100, 10).build(3);
+        let b = ZipfCorpusGen::new(50, 100, 10).build(3);
+        assert_eq!(a.ground_size(), 50);
+        for e in 0..50u32 {
+            assert_eq!(a.items_of(e), b.items_of(e));
+        }
+    }
+
+    #[test]
+    fn idf_weights_make_rare_words_valuable() {
+        let o = ZipfCorpusGen::idf(200, 500, 30).build(5);
+        assert!(o.total_weight() > 0.0);
+        let inst = ZipfCorpusGen::idf(200, 500, 30).generate(5);
+        assert!(inst.name.starts_with("zipf-idf"));
+    }
+}

@@ -1,0 +1,106 @@
+//! Random (weighted) coverage instances — the "dense" regime of the paper:
+//! with i.i.d. element degrees, far more than `√(nk)` elements have
+//! singleton value ≥ OPT/(2k), so Algorithm 6's max-sampled-singleton OPT
+//! guessing is the binding path.
+
+use super::{Instance, WorkloadGen};
+use crate::core::derive_seed;
+use crate::oracle::coverage::CoverageOracle;
+use crate::util::rng::Rng;
+
+/// Uniform random bipartite coverage: `n` elements over `universe` items,
+/// each element covering `1..=2·avg_degree` uniform items.
+#[derive(Debug, Clone)]
+pub struct CoverageGen {
+    /// Number of elements.
+    pub n: usize,
+    /// Universe size.
+    pub universe: usize,
+    /// Average element degree.
+    pub avg_degree: usize,
+    /// If true, items get log-normal-ish weights instead of 1.
+    pub weighted: bool,
+}
+
+impl CoverageGen {
+    /// Unweighted generator.
+    pub fn new(n: usize, universe: usize, avg_degree: usize) -> Self {
+        CoverageGen { n, universe, avg_degree, weighted: false }
+    }
+
+    /// Weighted variant (heavy-tailed item weights).
+    pub fn weighted(n: usize, universe: usize, avg_degree: usize) -> Self {
+        CoverageGen { n, universe, avg_degree, weighted: true }
+    }
+
+    /// Deterministically build the concrete oracle.
+    pub fn build(&self, seed: u64) -> CoverageOracle {
+        let mut rng = Rng::seed_from_u64(derive_seed(seed, 0xC0F));
+        let sets: Vec<Vec<u32>> = (0..self.n)
+            .map(|_| {
+                let deg = rng.gen_range(1..(2 * self.avg_degree).max(1) + 1);
+                let mut items: Vec<u32> =
+                    (0..deg).map(|_| rng.gen_range(0..self.universe) as u32).collect();
+                items.sort_unstable();
+                items.dedup();
+                items
+            })
+            .collect();
+        let weights = if self.weighted {
+            (0..self.universe)
+                .map(|_| {
+                    let x = rng.gen_range_f64(f64::MIN_POSITIVE, 1.0);
+                    (-x.ln()).max(1e-3) // exp(1)-distributed weights
+                })
+                .collect()
+        } else {
+            vec![1.0; self.universe]
+        };
+        CoverageOracle::new(sets, weights)
+    }
+}
+
+impl WorkloadGen for CoverageGen {
+    fn generate(&self, seed: u64) -> Instance {
+        let tag = if self.weighted { "wcoverage" } else { "coverage" };
+        let name =
+            format!("{tag}(n={},u={},deg={},seed={seed})", self.n, self.universe, self.avg_degree);
+        Instance::new(name, std::sync::Arc::new(self.build(seed)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::Oracle;
+
+    #[test]
+    fn generates_requested_shape() {
+        let o = CoverageGen::new(100, 50, 4).build(1);
+        assert_eq!(o.ground_size(), 100);
+        assert_eq!(o.universe(), 50);
+        // every element covers at least one item (degree >= 1 pre-dedup,
+        // dedup can't empty a non-empty list)
+        for e in 0..100u32 {
+            assert!(!o.items_of(e).is_empty());
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = CoverageGen::new(50, 30, 3).build(7);
+        let b = CoverageGen::new(50, 30, 3).build(7);
+        for e in 0..50u32 {
+            assert_eq!(a.items_of(e), b.items_of(e));
+        }
+    }
+
+    #[test]
+    fn weighted_weights_positive() {
+        let o = CoverageGen::weighted(50, 30, 3).build(2);
+        assert!(o.total_weight() > 0.0);
+        let inst = CoverageGen::weighted(50, 30, 3).generate(2);
+        assert!(inst.name.starts_with("wcoverage"));
+        assert!(inst.known_opt.is_none());
+    }
+}

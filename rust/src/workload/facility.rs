@@ -1,0 +1,167 @@
+//! Facility-location workloads: exemplar selection over random planar point
+//! clouds. Default kernel `sim(i,j) = exp(−γ·‖x_i − y_j‖²)` (RBF), the
+//! standard choice in the distributed-submodular evaluation literature.
+
+use super::{Instance, WorkloadGen};
+use crate::core::derive_seed;
+use crate::oracle::facility::FacilityOracle;
+use crate::util::rng::Rng;
+
+/// Similarity kernel between candidate and demand points.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kernel {
+    /// `exp(−γ·dist²)`.
+    Rbf { gamma: f64 },
+    /// `1 / (1 + γ·dist)`.
+    Inverse { gamma: f64 },
+}
+
+/// `n` candidate points and `d` demand points uniform in the unit square.
+#[derive(Debug, Clone)]
+pub struct FacilityGen {
+    /// Number of candidate elements.
+    pub n: usize,
+    /// Number of demand points (universe columns).
+    pub d: usize,
+    /// Similarity kernel.
+    pub kernel: Kernel,
+    /// Number of planted cluster centers; 0 = fully uniform.
+    pub clusters: usize,
+}
+
+impl FacilityGen {
+    /// Uniform points with the default RBF kernel (γ = 8).
+    pub fn new(n: usize, d: usize) -> Self {
+        FacilityGen { n, d, kernel: Kernel::Rbf { gamma: 8.0 }, clusters: 0 }
+    }
+
+    /// Clustered variant: points drawn around `clusters` random centers,
+    /// which makes greedy/threshold selections strongly diminishing.
+    pub fn clustered(n: usize, d: usize, clusters: usize) -> Self {
+        FacilityGen { n, d, kernel: Kernel::Rbf { gamma: 8.0 }, clusters }
+    }
+
+    /// Deterministically build the dense similarity matrix oracle.
+    pub fn build(&self, seed: u64) -> FacilityOracle {
+        let mut rng = Rng::seed_from_u64(derive_seed(seed, 0xFAC));
+        let centers: Vec<(f64, f64)> = (0..self.clusters.max(1))
+            .map(|_| (rng.gen_f64(), rng.gen_f64()))
+            .collect();
+        let point = |rng: &mut Rng| -> (f64, f64) {
+            if self.clusters == 0 {
+                (rng.gen_f64(), rng.gen_f64())
+            } else {
+                let (cx, cy) = centers[rng.gen_range(0..centers.len())];
+                (
+                    (cx + rng.gen_range_f64(-0.08, 0.08)).clamp(0.0, 1.0),
+                    (cy + rng.gen_range_f64(-0.08, 0.08)).clamp(0.0, 1.0),
+                )
+            }
+        };
+        let cands: Vec<(f64, f64)> = (0..self.n).map(|_| point(&mut rng)).collect();
+        let demands: Vec<(f64, f64)> = (0..self.d).map(|_| point(&mut rng)).collect();
+        let mut sim = vec![0.0f32; self.n * self.d];
+        for (i, &(xi, yi)) in cands.iter().enumerate() {
+            for (j, &(xj, yj)) in demands.iter().enumerate() {
+                let d2 = (xi - xj).powi(2) + (yi - yj).powi(2);
+                let s = match self.kernel {
+                    Kernel::Rbf { gamma } => (-gamma * d2).exp(),
+                    Kernel::Inverse { gamma } => 1.0 / (1.0 + gamma * d2.sqrt()),
+                };
+                sim[i * self.d + j] = s as f32;
+            }
+        }
+        FacilityOracle::new(self.n, self.d, sim)
+    }
+
+    /// The raw similarity matrix (used to construct the HLO-backed twin).
+    pub fn build_matrix(&self, seed: u64) -> (usize, usize, Vec<f32>) {
+        let o = self.build(seed);
+        let mut sim = Vec::with_capacity(self.n * self.d);
+        for e in 0..self.n as u32 {
+            sim.extend_from_slice(o.row(e));
+        }
+        (self.n, self.d, sim)
+    }
+}
+
+impl WorkloadGen for FacilityGen {
+    fn generate(&self, seed: u64) -> Instance {
+        let name = format!(
+            "facility(n={},d={},clusters={},seed={seed})",
+            self.n, self.d, self.clusters
+        );
+        Instance::new(name, std::sync::Arc::new(self.build(seed)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::Oracle;
+
+    #[test]
+    fn shapes_and_range() {
+        let o = FacilityGen::new(30, 20).build(1);
+        assert_eq!(o.ground_size(), 30);
+        assert_eq!(o.num_points(), 20);
+        for e in 0..30u32 {
+            for &s in o.row(e) {
+                assert!((0.0..=1.0).contains(&s), "RBF similarity in [0,1]");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = FacilityGen::new(10, 8).build(3);
+        let b = FacilityGen::new(10, 8).build(3);
+        for e in 0..10u32 {
+            assert_eq!(a.row(e), b.row(e));
+        }
+    }
+
+    #[test]
+    fn clustered_has_redundancy() {
+        // In a 2-cluster instance, the 3rd selection gains far less than the
+        // 1st two (diminishing returns across duplicated mass).
+        let o = FacilityGen::clustered(60, 40, 2).build(5);
+        let mut st = o.state();
+        let g1 = {
+            let (mut be, mut bv) = (0u32, -1.0);
+            for e in 0..60u32 {
+                let m = st.marginal(e);
+                if m > bv {
+                    bv = m;
+                    be = e;
+                }
+            }
+            st.insert(be);
+            bv
+        };
+        let g3 = {
+            // greedy two more
+            for _ in 0..2 {
+                let (mut be, mut bv) = (0u32, -1.0);
+                for e in 0..60u32 {
+                    let m = st.marginal(e);
+                    if m > bv {
+                        bv = m;
+                        be = e;
+                    }
+                }
+                st.insert(be);
+            }
+            let (mut bv2, mut _be) = (-1.0, 0u32);
+            for e in 0..60u32 {
+                let m = st.marginal(e);
+                if m > bv2 {
+                    bv2 = m;
+                    _be = e;
+                }
+            }
+            bv2
+        };
+        assert!(g3 < g1 * 0.8, "4th-best marginal {g3} should be well below 1st {g1}");
+    }
+}

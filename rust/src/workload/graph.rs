@@ -1,0 +1,123 @@
+//! Graph workloads for the edge-coverage oracle: Erdős–Rényi and
+//! Barabási–Albert generators. BA's heavy-tailed degree distribution creates
+//! the "few huge elements" structure that separates the paper's dense and
+//! sparse input classes on graphs.
+
+use super::{Instance, WorkloadGen};
+use crate::core::derive_seed;
+use crate::oracle::cut::CutCoverageOracle;
+use crate::util::rng::Rng;
+
+/// Random-graph family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GraphKind {
+    /// G(n, p): each edge present independently with probability p.
+    ErdosRenyi { p: f64 },
+    /// Preferential attachment: each new vertex attaches `m` edges.
+    BarabasiAlbert { attach: usize },
+}
+
+/// Graph workload generator over `n` vertices.
+#[derive(Debug, Clone)]
+pub struct GraphGen {
+    /// Number of vertices (= ground-set size).
+    pub n: usize,
+    /// Graph family.
+    pub kind: GraphKind,
+}
+
+impl GraphGen {
+    /// Erdős–Rényi `G(n, p)`.
+    pub fn erdos_renyi(n: usize, p: f64) -> Self {
+        GraphGen { n, kind: GraphKind::ErdosRenyi { p } }
+    }
+
+    /// Barabási–Albert with `attach` edges per arriving vertex.
+    pub fn barabasi_albert(n: usize, attach: usize) -> Self {
+        GraphGen { n, kind: GraphKind::BarabasiAlbert { attach } }
+    }
+
+    /// Deterministically build the edge-coverage oracle (unit weights).
+    pub fn build(&self, seed: u64) -> CutCoverageOracle {
+        let mut rng = Rng::seed_from_u64(derive_seed(seed, 0x6AF));
+        let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+        match self.kind {
+            GraphKind::ErdosRenyi { p } => {
+                for u in 0..self.n as u32 {
+                    for v in (u + 1)..self.n as u32 {
+                        if rng.gen_bool(p.clamp(0.0, 1.0)) {
+                            edges.push((u, v, 1.0));
+                        }
+                    }
+                }
+            }
+            GraphKind::BarabasiAlbert { attach } => {
+                let attach = attach.max(1);
+                // endpoint pool: picking uniform from past endpoints ≈
+                // preferential attachment.
+                let mut pool: Vec<u32> = vec![0];
+                for v in 1..self.n as u32 {
+                    for _ in 0..attach.min(v as usize) {
+                        let u = pool[rng.gen_range(0..pool.len())];
+                        if u != v {
+                            edges.push((u, v, 1.0));
+                            pool.push(u);
+                        }
+                    }
+                    pool.push(v);
+                }
+            }
+        }
+        // ensure no isolated instance (empty edge set breaks nothing, but
+        // keep at least one edge for sane oracles on tiny n).
+        if edges.is_empty() && self.n >= 2 {
+            edges.push((0, 1, 1.0));
+        }
+        CutCoverageOracle::new(self.n, &edges)
+    }
+}
+
+impl WorkloadGen for GraphGen {
+    fn generate(&self, seed: u64) -> Instance {
+        let name = match self.kind {
+            GraphKind::ErdosRenyi { p } => format!("er(n={},p={p},seed={seed})", self.n),
+            GraphKind::BarabasiAlbert { attach } => {
+                format!("ba(n={},m={attach},seed={seed})", self.n)
+            }
+        };
+        Instance::new(name, std::sync::Arc::new(self.build(seed)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::Oracle;
+
+    #[test]
+    fn er_edge_count_reasonable() {
+        let o = GraphGen::erdos_renyi(50, 0.2).build(1);
+        let expect = 0.2 * (50.0 * 49.0 / 2.0);
+        let got = o.num_edges() as f64;
+        assert!((got - expect).abs() < expect * 0.5, "edges {got} vs expected {expect}");
+    }
+
+    #[test]
+    fn ba_is_connected_ish_and_heavy_tailed() {
+        let o = GraphGen::barabasi_albert(200, 2).build(2);
+        assert!(o.num_edges() >= 199, "BA must have ≥ n-1 edges");
+        // hub: some vertex's singleton value far above the median.
+        let st = o.state();
+        let mut vals: Vec<f64> = (0..200u32).map(|v| st.marginal(v)).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(vals[199] >= 4.0 * vals[100], "expected heavy-tailed degrees");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = GraphGen::barabasi_albert(50, 2).build(3);
+        let b = GraphGen::barabasi_albert(50, 2).build(3);
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert_eq!(a.value(&[0, 1, 2]), b.value(&[0, 1, 2]));
+    }
+}

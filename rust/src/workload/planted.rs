@@ -1,0 +1,140 @@
+//! Planted-optimum coverage instances — the workloads where the *exact*
+//! OPT is known by construction, so benches can report true approximation
+//! ratios (not ratios vs greedy).
+//!
+//! `k` golden elements partition the universe evenly (together they cover
+//! everything); `noise_n` noise elements cover `noise_deg` random items
+//! each. Any k-set containing a noise element covers strictly less than the
+//! golden k-set, so `OPT_k = universe` exactly.
+//!
+//! With `noise_deg` small this is also the paper's **sparse** regime: only
+//! the k golden elements have singleton value ≥ OPT/(2k) (≪ √(nk) of them),
+//! which is precisely the case Algorithm 7 exists for. With `noise_deg`
+//! comparable to `universe/k` the instance turns **dense** (Algorithm 6's
+//! regime).
+
+use super::{Instance, WorkloadGen};
+use crate::core::derive_seed;
+use crate::oracle::coverage::CoverageOracle;
+use crate::util::rng::Rng;
+
+/// Planted coverage generator.
+#[derive(Debug, Clone)]
+pub struct PlantedCoverageGen {
+    /// Number of golden elements (= the planted optimal k).
+    pub k: usize,
+    /// Universe size (must be ≥ k).
+    pub universe: usize,
+    /// Number of noise elements.
+    pub noise_n: usize,
+    /// Items covered by each noise element.
+    pub noise_deg: usize,
+}
+
+impl PlantedCoverageGen {
+    /// Sparse regime: noise elements cover a single item each.
+    pub fn sparse(k: usize, universe: usize, noise_n: usize) -> Self {
+        PlantedCoverageGen { k, universe, noise_n, noise_deg: 1 }
+    }
+
+    /// Dense regime: noise elements cover ~ `universe/(2k)` items each, so
+    /// ≥ √(nk) elements clear the OPT/(2k) singleton bar.
+    pub fn dense(k: usize, universe: usize, noise_n: usize) -> Self {
+        PlantedCoverageGen { k, universe, noise_n, noise_deg: (universe / (2 * k)).max(2) }
+    }
+
+    /// Golden element ids are `0..k`; noise ids are `k..k+noise_n`.
+    pub fn build(&self, seed: u64) -> CoverageOracle {
+        assert!(self.universe >= self.k, "universe must be >= k");
+        let mut rng = Rng::seed_from_u64(derive_seed(seed, 0x91A));
+        let mut sets: Vec<Vec<u32>> = Vec::with_capacity(self.k + self.noise_n);
+        // golden: contiguous equal slices of the universe.
+        for g in 0..self.k {
+            let lo = g * self.universe / self.k;
+            let hi = (g + 1) * self.universe / self.k;
+            sets.push((lo as u32..hi as u32).collect());
+        }
+        for _ in 0..self.noise_n {
+            let mut items: Vec<u32> = (0..self.noise_deg)
+                .map(|_| rng.gen_range(0..self.universe) as u32)
+                .collect();
+            items.sort_unstable();
+            items.dedup();
+            sets.push(items);
+        }
+        CoverageOracle::unweighted(sets, self.universe)
+    }
+
+    /// The planted optimum value (total universe weight).
+    pub fn opt(&self) -> f64 {
+        self.universe as f64
+    }
+}
+
+impl WorkloadGen for PlantedCoverageGen {
+    fn generate(&self, seed: u64) -> Instance {
+        let name = format!(
+            "planted(k={},u={},noise={}x{},seed={seed})",
+            self.k, self.universe, self.noise_n, self.noise_deg
+        );
+        Instance::new(name, std::sync::Arc::new(self.build(seed))).with_opt(self.opt(), self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ElementId;
+    use crate::oracle::Oracle;
+
+    #[test]
+    fn golden_set_achieves_opt() {
+        let g = PlantedCoverageGen::sparse(5, 100, 50);
+        let o = g.build(1);
+        let golden: Vec<ElementId> = (0..5).collect();
+        assert_eq!(o.value(&golden), 100.0);
+        assert_eq!(g.opt(), 100.0);
+    }
+
+    #[test]
+    fn noise_strictly_worse() {
+        let g = PlantedCoverageGen::sparse(5, 100, 50);
+        let o = g.build(2);
+        // swap one golden for one noise: strictly less coverage.
+        let mixed: Vec<ElementId> = vec![0, 1, 2, 3, 7]; // 7 is noise
+        assert!(o.value(&mixed) < 100.0);
+    }
+
+    #[test]
+    fn dense_regime_many_large_singletons() {
+        let g = PlantedCoverageGen::dense(10, 1000, 500);
+        let o = g.build(3);
+        let opt_bar = g.opt() / (2.0 * 10.0); // OPT/(2k) = 50
+        // noise_deg = 50 -> noise elements have singleton value ~50 ≥ bar.
+        let st = o.state();
+        let large = (0..o.ground_size() as ElementId)
+            .filter(|&e| st.marginal(e) >= opt_bar * 0.9)
+            .count();
+        assert!(large > 100, "dense instance should have many large elements, got {large}");
+    }
+
+    #[test]
+    fn sparse_regime_few_large_singletons() {
+        let g = PlantedCoverageGen::sparse(10, 1000, 2000);
+        let o = g.build(4);
+        let opt_bar = g.opt() / (2.0 * 10.0);
+        let st = o.state();
+        let large = (0..o.ground_size() as ElementId)
+            .filter(|&e| st.marginal(e) >= opt_bar)
+            .count();
+        assert_eq!(large, 10, "only the golden elements clear OPT/(2k)");
+    }
+
+    #[test]
+    fn instance_has_known_opt() {
+        let inst = PlantedCoverageGen::sparse(5, 50, 20).generate(9);
+        assert_eq!(inst.known_opt, Some(50.0));
+        assert_eq!(inst.planted_k, Some(5));
+        assert_eq!(inst.n, 25);
+    }
+}

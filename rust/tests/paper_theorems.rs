@@ -1,0 +1,175 @@
+//! The paper's theorems as executable tests — the reproduction's core
+//! correctness contract. Each test cites the claim it checks.
+
+use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::dense::DenseTwoRound;
+use mrsub::algorithms::multi_round::MultiRound;
+use mrsub::algorithms::sparse::SparseTwoRound;
+use mrsub::algorithms::two_round::{lemma1_invariant, TwoRoundKnownOpt};
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::core::{threshold_bound, ONE_MINUS_1_E};
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::oracle::adversarial::AdversarialOracle;
+use mrsub::oracle::Oracle;
+use mrsub::workload::adversarial::AdversarialGen;
+use mrsub::workload::planted::PlantedCoverageGen;
+use mrsub::workload::WorkloadGen;
+
+fn cfg(seed: u64) -> ClusterConfig {
+    ClusterConfig { seed, ..ClusterConfig::default() }
+}
+
+/// Lemma 1: Algorithm 4 with exact OPT is a 1/2-approximation, and its
+/// output G satisfies: |G| = k, or ∀e: f_G(e) < OPT/(2k).
+#[test]
+fn lemma_1_two_round_half_approximation() {
+    for seed in 0..8 {
+        let inst = PlantedCoverageGen::dense(12, 1200, 2400).generate(seed);
+        let opt = inst.known_opt.unwrap();
+        let res = TwoRoundKnownOpt::new(opt).run(&inst.oracle, 12, &cfg(seed)).unwrap();
+        assert!(
+            res.solution.value >= 0.5 * opt - 1e-9,
+            "seed {seed}: {} < OPT/2 = {}",
+            res.solution.value,
+            opt / 2.0
+        );
+        assert!(lemma1_invariant(
+            &*inst.oracle,
+            &res.solution,
+            opt / 24.0,
+            12
+        ));
+    }
+}
+
+/// Lemma 2: w.h.p. the number of elements sent to the central machine is
+/// at most √(nk) (we allow the paper's constants: sample 4√(nk) + filter
+/// survivors ≤ √(nk) ⇒ total received ≤ ~5-8·√(nk)).
+#[test]
+fn lemma_2_central_memory() {
+    let n = 40_000usize;
+    let k = 40usize;
+    let bound = (n as f64 * k as f64).sqrt();
+    for seed in 0..5 {
+        let inst =
+            mrsub::workload::coverage::CoverageGen::new(n, 16_000, 10).generate(seed);
+        let opt_est = mrsub::algorithms::greedy::lazy_greedy(&inst.oracle, k).value;
+        let res = TwoRoundKnownOpt::new(opt_est).run(&inst.oracle, k, &cfg(seed)).unwrap();
+        assert!(
+            (res.metrics.peak_central_recv() as f64) < 8.0 * bound,
+            "seed {seed}: {} ≥ 8√(nk)",
+            res.metrics.peak_central_recv()
+        );
+    }
+}
+
+/// Lemma 3: Algorithm 5 with t thresholds achieves 1 − (1 − 1/(t+1))^t.
+#[test]
+fn lemma_3_multi_round_bound() {
+    let inst = PlantedCoverageGen::dense(12, 1800, 3600).generate(3);
+    let opt = inst.known_opt.unwrap();
+    for t in 1..=6 {
+        let res = MultiRound::known(t, opt).run(&inst.oracle, 12, &cfg(5)).unwrap();
+        let ratio = res.solution.value / opt;
+        assert!(
+            ratio >= threshold_bound(t) - 1e-9,
+            "t={t}: {ratio} < {}",
+            threshold_bound(t)
+        );
+    }
+}
+
+/// Lemma 3 (limit): the bound converges to 1 − 1/e from below, so for
+/// large t the measured ratio must exceed 1 − 1/e − ε.
+#[test]
+fn lemma_3_limit_one_minus_1_over_e() {
+    let inst = PlantedCoverageGen::dense(16, 1600, 3200).generate(4);
+    let opt = inst.known_opt.unwrap();
+    let t = 12; // bound(12) ≈ 0.6321… within 0.02 of 1−1/e
+    let res = MultiRound::known(t, opt).run(&inst.oracle, 16, &cfg(6)).unwrap();
+    assert!(res.solution.value / opt >= ONE_MINUS_1_E - 0.02);
+}
+
+/// Theorem 4: on the adversarial instance, the t-threshold algorithm gets
+/// *exactly* the cap (to within the δ tie-break slack) — tightness.
+#[test]
+fn theorem_4_tightness() {
+    for t in 1..=5 {
+        let k = 60;
+        let inst = AdversarialGen::new(t, k).generate(0);
+        let opt = inst.known_opt.unwrap();
+        let res = MultiRound::known(t, opt).run(&inst.oracle, k, &cfg(1)).unwrap();
+        let ratio = res.solution.value / opt;
+        let cap = threshold_bound(t);
+        assert!(
+            (ratio - cap).abs() < 0.02,
+            "t={t}: measured {ratio} should pin the cap {cap}"
+        );
+    }
+}
+
+/// Theorem 4 (construction sanity): the optimal block alone achieves OPT
+/// and the distractor mass devalues it exactly as the proof computes.
+#[test]
+fn theorem_4_instance_structure() {
+    let t = 3;
+    let k = 30;
+    let o = AdversarialOracle::hard_instance(t, k);
+    let opt_ids: Vec<u32> = o.optimal_ids().collect();
+    assert_eq!(opt_ids.len(), k);
+    assert!((o.value(&opt_ids) - o.known_opt()).abs() < 1e-9);
+    // selecting ALL distractors leaves the o-marginal at α_t = (t/(t+1))^t·v*.
+    let mut st = o.state();
+    for e in 0..(o.ground_size() as u32 - k as u32) {
+        st.insert(e);
+    }
+    let alpha_t = (t as f64 / (t as f64 + 1.0)).powi(t as i32);
+    let margin = st.marginal(opt_ids[0]);
+    assert!(
+        (margin - alpha_t).abs() < 1e-3,
+        "o-marginal {margin} should be ≈ α_t = {alpha_t}"
+    );
+}
+
+/// Lemma 5 / Lemma 7 / Theorem 8: the OPT-free 2-round algorithms achieve
+/// 1/2 − ε on their respective regimes, and the combination on both.
+#[test]
+fn theorem_8_dense_sparse_combined() {
+    let eps = 0.1;
+    let dense_inst = PlantedCoverageGen::dense(10, 1000, 2000).generate(11);
+    let sparse_inst = PlantedCoverageGen::sparse(10, 1000, 2000).generate(12);
+
+    let d = DenseTwoRound::new(eps).run(&dense_inst.oracle, 10, &cfg(13)).unwrap();
+    assert!(d.solution.value / dense_inst.known_opt.unwrap() >= 0.5 - eps);
+
+    let s = SparseTwoRound::new(eps).run(&sparse_inst.oracle, 10, &cfg(14)).unwrap();
+    assert!(s.solution.value / sparse_inst.known_opt.unwrap() >= 0.5 - eps);
+
+    for inst in [&dense_inst, &sparse_inst] {
+        let c = CombinedTwoRound::new(eps).run(&inst.oracle, 10, &cfg(15)).unwrap();
+        assert!(
+            c.solution.value / inst.known_opt.unwrap() >= 0.5 - eps,
+            "{}",
+            inst.name
+        );
+        let rounds = c.metrics.rounds.iter().filter(|r| !r.name.starts_with("r0:")).count();
+        assert_eq!(rounds, 2, "Theorem 8 is a 2-round result");
+    }
+}
+
+/// §2.2: ε (the OPT-guess resolution) does not affect the number of
+/// rounds — only memory. Verify rounds are identical across ε.
+#[test]
+fn eps_does_not_change_round_count() {
+    let inst = PlantedCoverageGen::dense(10, 1000, 2000).generate(21);
+    let mut rounds = Vec::new();
+    let mut memory = Vec::new();
+    for eps in [0.5, 0.2, 0.05] {
+        let res = CombinedTwoRound::new(eps).run(&inst.oracle, 10, &cfg(22)).unwrap();
+        rounds.push(res.metrics.rounds.len());
+        memory.push(res.metrics.peak_central_recv());
+    }
+    assert_eq!(rounds[0], rounds[1]);
+    assert_eq!(rounds[1], rounds[2]);
+    assert!(memory[2] >= memory[0], "smaller ε must cost (weakly) more memory");
+}

@@ -1,0 +1,138 @@
+//! PJRT runtime integration: load the AOT artifacts (built by
+//! `make artifacts`), execute the compiled JAX/Pallas kernels from Rust,
+//! and cross-check the accelerated oracle against the native one — the
+//! end-to-end proof that L1 (Pallas) → L2 (jax) → HLO text → L3 (Rust
+//! PJRT) compose with correct numerics.
+//!
+//! These tests require `artifacts/manifest.json`; `make test` builds it
+//! first. They are skipped (pass vacuously, with a note) if absent so
+//! plain `cargo test` works in a fresh checkout.
+
+use std::sync::Arc;
+
+use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::greedy::lazy_greedy;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::oracle::hlo::HloFacilityOracle;
+use mrsub::oracle::{Oracle, OracleState};
+use mrsub::runtime::{default_artifact_dir, MarginalsEngine};
+use mrsub::workload::facility::FacilityGen;
+
+fn engine() -> Option<Arc<MarginalsEngine>> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Arc::new(MarginalsEngine::load(&dir).expect("engine load")))
+}
+
+fn hlo_oracle(engine: Arc<MarginalsEngine>, n: usize, d: usize, seed: u64) -> HloFacilityOracle {
+    let (n, d, sim) = FacilityGen::new(n, d).build_matrix(seed);
+    HloFacilityOracle::new(n, d, sim, engine)
+}
+
+#[test]
+fn engine_loads_and_reports_tiles() {
+    let Some(engine) = engine() else { return };
+    assert_eq!(engine.tile_b(), 256);
+    assert_eq!(engine.tile_d(), 2048);
+}
+
+#[test]
+fn batch_marginals_match_native_exactly_empty_state() {
+    let Some(engine) = engine() else { return };
+    let o = hlo_oracle(engine, 600, 400, 1);
+    let st_h = o.state();
+    let st_n = o.native().state();
+    let es: Vec<u32> = (0..600).collect();
+    let (mut mh, mut mn) = (vec![0.0; 600], vec![0.0; 600]);
+    st_h.marginals(&es, &mut mh);
+    st_n.marginals(&es, &mut mn);
+    for (i, (a, b)) in mh.iter().zip(&mn).enumerate() {
+        assert!((a - b).abs() < 1e-3, "e={i}: hlo {a} vs native {b}");
+    }
+}
+
+#[test]
+fn batch_marginals_match_after_insertions() {
+    let Some(engine) = engine() else { return };
+    let o = hlo_oracle(engine, 500, 700, 2); // d=700 forces padding to 2048
+    let mut st_h = o.state();
+    let mut st_n = o.native().state();
+    for e in [5u32, 100, 499, 250] {
+        st_h.insert(e);
+        st_n.insert(e);
+    }
+    let es: Vec<u32> = (0..500).step_by(3).collect();
+    let (mut mh, mut mn) = (vec![0.0; es.len()], vec![0.0; es.len()]);
+    st_h.marginals(&es, &mut mh);
+    st_n.marginals(&es, &mut mn);
+    let max_err = mh.iter().zip(&mn).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+    assert!(max_err < 1e-3, "max err {max_err}");
+    // members report zero
+    let mut out = [0.0];
+    st_h.marginals(&[100], &mut out);
+    assert_eq!(out[0], 0.0);
+}
+
+#[test]
+fn multi_tile_universe_accumulates() {
+    let Some(engine) = engine() else { return };
+    // d = 3000 > 2048 → two universe tiles.
+    let o = hlo_oracle(engine, 300, 3000, 3);
+    let st_h = o.state();
+    let st_n = o.native().state();
+    let es: Vec<u32> = (0..300).step_by(11).collect();
+    let (mut mh, mut mn) = (vec![0.0; es.len()], vec![0.0; es.len()]);
+    st_h.marginals(&es, &mut mh);
+    st_n.marginals(&es, &mut mn);
+    for (a, b) in mh.iter().zip(&mn) {
+        assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn update_artifact_matches_native_update() {
+    let Some(engine) = engine() else { return };
+    let d = engine.tile_d();
+    let mut row = vec![0.0f32; d];
+    let mut cur = vec![0.0f32; d];
+    for j in 0..d {
+        row[j] = ((j * 37) % 100) as f32 / 100.0;
+        cur[j] = ((j * 53) % 100) as f32 / 100.0;
+    }
+    let expect: Vec<f32> = row.iter().zip(&cur).map(|(a, b)| a.max(*b)).collect();
+    engine.update_coverage(&row, &mut cur).unwrap();
+    assert_eq!(cur, expect);
+}
+
+#[test]
+fn greedy_through_hlo_oracle_matches_native_greedy() {
+    let Some(engine) = engine() else { return };
+    let o = hlo_oracle(engine, 400, 300, 4);
+    let a = lazy_greedy(&o, 8);
+    let b = lazy_greedy(o.native(), 8);
+    assert_eq!(a.elements, b.elements, "selection paths must agree");
+    assert!((a.value - b.value).abs() < 1e-3);
+}
+
+#[test]
+fn full_mapreduce_job_over_hlo_oracle() {
+    // The paper's headline algorithm running with its filter hot path on
+    // the PJRT engine end to end.
+    let Some(engine) = engine() else { return };
+    let o = hlo_oracle(engine.clone(), 1200, 500, 5);
+    let cfg = ClusterConfig { seed: 6, ..ClusterConfig::default() };
+    let execs_before = engine.executions();
+    let res = CombinedTwoRound::new(0.15).run(&o, 10, &cfg).unwrap();
+    let g = lazy_greedy(o.native(), 10);
+    assert!(
+        res.solution.value >= (0.5 - 0.15) * g.value,
+        "hlo-backed combined {} vs greedy {}",
+        res.solution.value,
+        g.value
+    );
+    assert!(engine.executions() > execs_before, "the PJRT engine must actually serve the job");
+}
