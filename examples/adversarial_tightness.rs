@@ -15,7 +15,7 @@ use mrsub::mapreduce::ClusterConfig;
 use mrsub::workload::adversarial::AdversarialGen;
 use mrsub::workload::WorkloadGen;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let k = 120;
     println!("Theorem 4: no t-threshold algorithm beats 1 − (1 − 1/(t+1))^t");
     println!(
@@ -39,7 +39,9 @@ fn main() -> anyhow::Result<()> {
             greedy_ratio,
             if (ratio - cap).abs() < 0.02 { "yes" } else { "NO" }
         );
-        anyhow::ensure!((ratio - cap).abs() < 0.02, "t={t}: tightness violated");
+        if (ratio - cap).abs() >= 0.02 {
+            return Err(format!("t={t}: tightness violated").into());
+        }
     }
     println!("\nEvery row pins its cap: the thresholds, not the instance, are the bottleneck.");
     Ok(())

@@ -12,7 +12,7 @@ use mrsub::mapreduce::ClusterConfig;
 use mrsub::workload::coverage::CoverageGen;
 use mrsub::workload::WorkloadGen;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 50k elements covering a 20k-item universe, ~12 items each.
     let inst = CoverageGen::new(50_000, 20_000, 12).generate(42);
     let k = 100;

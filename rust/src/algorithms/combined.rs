@@ -41,14 +41,16 @@ impl MrAlgorithm for CombinedTwoRound {
     fn run(&self, oracle: &dyn Oracle, k: usize, cfg: &ClusterConfig) -> Result<AlgResult> {
         let n = oracle.ground_size();
         let mut cluster = MrCluster::new(n, k, cfg)?;
-        let plan = dense_prepare(oracle, cluster.sample(), k, self.eps, cfg.parallel);
+        let exec = std::sync::Arc::clone(cluster.exec());
+        let plan = dense_prepare(oracle, cluster.sample(), k, self.eps, exec.as_ref());
 
         // Round 1: each machine runs both workers.
         let plan_ref = &plan;
         let (c_, k_) = (self.c, k);
+        let states = crate::oracle::StatePool::new(oracle);
         let outputs: Vec<(Vec<Vec<ElementId>>, Vec<ElementId>)> = cluster
             .worker_round("r1:dense+sparse", plan.resident(), |ctx| {
-                (dense_worker(plan_ref, k_, ctx.shard), sparse_worker(oracle, ctx.shard, k_, c_))
+                (dense_worker(plan_ref, k_, ctx.shard), sparse_worker(&states, ctx.shard, k_, c_))
             })?;
 
         let (dense_parts, sparse_parts): (Vec<_>, Vec<_>) = outputs.into_iter().unzip();

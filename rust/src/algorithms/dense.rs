@@ -12,9 +12,10 @@
 //! `v ≥ OPT/(2k)` under denseness, the guesses must descend *from* `v`, so
 //! we use `v/(1+ε)^j` — same set of guesses, unambiguous direction.
 
-use super::threshold::{merge_sorted, threshold_filter, threshold_greedy};
+use super::threshold::{block_max_marginal, merge_sorted, threshold_filter, threshold_greedy};
 use super::{finish, AlgResult, MrAlgorithm};
 use crate::core::{ElementId, Result, Solution};
+use crate::mapreduce::backend::{self, ExecBackend};
 use crate::mapreduce::{ClusterConfig, MrCluster};
 use crate::oracle::{Oracle, OracleState};
 
@@ -49,24 +50,25 @@ impl DensePlan {
 
 /// Derive the dense plan from the broadcast sample (identical on every
 /// machine; executed once in simulation). The per-guess `G₀` computations
-/// are independent, so they run on the thread pool — this was the Amdahl
-/// bottleneck of the whole 2-round pipeline before being parallelized
-/// (see EXPERIMENTS.md §Perf).
+/// are independent, so they fan out on the cluster's execution backend —
+/// this was the Amdahl bottleneck of the whole 2-round pipeline before
+/// being parallelized (see EXPERIMENTS.md §Perf). The max-singleton scan
+/// and the per-guess greedy both run through the block-marginal path.
 pub(crate) fn dense_prepare(
     oracle: &dyn Oracle,
     sample: &[ElementId],
     k: usize,
     eps: f64,
-    parallel: bool,
+    exec: &dyn ExecBackend,
 ) -> DensePlan {
     let st = oracle.state();
-    let v = sample.iter().map(|&e| st.marginal(e)).fold(0.0f64, f64::max);
+    let v = block_max_marginal(st.as_ref(), sample);
     if v <= 0.0 {
         return DensePlan { taus: Vec::new(), g0: Vec::new() };
     }
     let j_max = ((2.0 * k as f64).ln() / (1.0 + eps).ln()).ceil() as usize;
     let taus: Vec<f64> = (0..=j_max).map(|j| v / (1.0 + eps).powi(j as i32)).collect();
-    let g0 = crate::util::pool::parallel_map(&taus, parallel, |_, &tau| {
+    let g0 = backend::map_slice(exec, &taus, |_, &tau| {
         let mut g = oracle.state();
         threshold_greedy(g.as_mut(), sample, tau, k);
         g
@@ -134,7 +136,8 @@ impl MrAlgorithm for DenseTwoRound {
     fn run(&self, oracle: &dyn Oracle, k: usize, cfg: &ClusterConfig) -> Result<AlgResult> {
         let n = oracle.ground_size();
         let mut cluster = MrCluster::new(n, k, cfg)?;
-        let plan = dense_prepare(oracle, cluster.sample(), k, self.eps, cfg.parallel);
+        let exec = std::sync::Arc::clone(cluster.exec());
+        let plan = dense_prepare(oracle, cluster.sample(), k, self.eps, exec.as_ref());
 
         let plan_ref = &plan;
         let per_machine = cluster.worker_round("r1:dense-filter", plan.resident(), |ctx| {
@@ -192,7 +195,7 @@ mod tests {
     fn guess_ladder_covers_range() {
         let o = CoverageGen::new(500, 300, 5).build(5);
         let cl = MrCluster::new(500, 10, &cfg(6)).unwrap();
-        let plan = dense_prepare(&o, cl.sample(), 10, 0.1, false);
+        let plan = dense_prepare(&o, cl.sample(), 10, 0.1, &backend::Serial);
         assert!(!plan.taus.is_empty());
         let lo = *plan.taus.last().unwrap();
         let hi = plan.taus[0];

@@ -10,8 +10,9 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::finish;
+use super::threshold::block_marginals;
 use crate::core::{ElementId, Solution};
-use crate::oracle::{Oracle, OracleState};
+use crate::oracle::{Oracle, OracleState, StatePool};
 
 /// Max-heap entry: (cached marginal, element, stamp of last refresh).
 struct HeapItem {
@@ -51,16 +52,30 @@ pub fn lazy_greedy_over(oracle: &dyn Oracle, candidates: &[ElementId], k: usize)
     finish(oracle, state.selected().to_vec())
 }
 
+/// [`lazy_greedy_over`] on a recycled state from `states` — the
+/// per-machine hot path of RandGreeDi / MZ core-sets, which used to
+/// allocate a fresh state per machine per round.
+pub fn lazy_greedy_over_pooled(
+    oracle: &dyn Oracle,
+    states: &StatePool<'_>,
+    candidates: &[ElementId],
+    k: usize,
+) -> Solution {
+    let mut state = states.acquire();
+    lazy_greedy_extend(&mut *state, candidates, k);
+    finish(oracle, state.selected().to_vec())
+}
+
 /// Extend an existing state by lazy greedy over `candidates` until the
-/// *total* size reaches `k`. Returns the elements added.
+/// *total* size reaches `k`. Returns the elements added. The initial heap
+/// fill is evaluated through the block-marginal path.
 pub fn lazy_greedy_extend(
     state: &mut dyn OracleState,
     candidates: &[ElementId],
     k: usize,
 ) -> Vec<ElementId> {
     let mut heap = BinaryHeap::with_capacity(candidates.len());
-    let mut buf = vec![0.0f64; candidates.len()];
-    state.marginals(candidates, &mut buf);
+    let buf = block_marginals(state, candidates);
     for (&e, &gain) in candidates.iter().zip(&buf) {
         if gain > 0.0 {
             heap.push(HeapItem { gain, e, stamp: 0 });

@@ -17,12 +17,11 @@
 //! the *same* physical rounds with memory accounted multiplicatively, as
 //! the paper prescribes.
 
-use super::threshold::{merge_sorted, threshold_filter, threshold_greedy};
+use super::threshold::{block_max_marginal, merge_sorted, threshold_filter, threshold_greedy};
 use super::{finish, AlgResult, MrAlgorithm};
 use crate::core::{threshold_bound, ElementId, Result, Solution};
-use crate::mapreduce::{ClusterConfig, MrCluster};
-use crate::oracle::{Oracle, OracleState};
-use crate::util::pool::parallel_map;
+use crate::mapreduce::{backend, ClusterConfig, MrCluster};
+use crate::oracle::{Oracle, OracleState, StatePool};
 
 /// Where the algorithm gets OPT from.
 #[derive(Debug, Clone, Copy)]
@@ -99,9 +98,11 @@ impl MrAlgorithm for MultiRound {
             OptSource::Guess { eps } => {
                 assert!(eps > 0.0);
                 // Extra initial round: global max singleton v => OPT ∈ [v, k·v].
+                // Block-marginal scan over pooled per-machine states.
+                let pool = StatePool::new(oracle);
                 let maxes = cluster.worker_round("r0b:max-singleton", 0, |ctx| {
-                    let st = oracle.state();
-                    ctx.shard.iter().map(|&e| st.marginal(e)).fold(0.0f64, f64::max)
+                    let st = pool.acquire();
+                    block_max_marginal(&*st, ctx.shard)
                 })?;
                 let v = maxes.into_iter().fold(0.0f64, f64::max);
                 if v <= 0.0 {
@@ -152,17 +153,16 @@ impl MrAlgorithm for MultiRound {
                         g.shards.iter_mut().for_each(Vec::clear);
                     }
                 }
-                let parallel = cluster.parallel();
+                let exec = std::sync::Arc::clone(cluster.exec());
                 let active: Vec<(usize, &Guess, f64)> = guesses
                     .iter()
                     .enumerate()
                     .filter(|(_, g)| !g.done)
                     .map(|(gi, g)| (gi, g, self.alpha(g.opt, k, l)))
                     .collect();
-                // filter machine-major so the pool parallelizes across machines.
-                let machine_ids: Vec<usize> = (0..m).collect();
+                // filter machine-major so the backend parallelizes across machines.
                 let per_machine: Vec<Vec<(usize, Vec<ElementId>)>> =
-                    parallel_map(&machine_ids, parallel, |_, &i| {
+                    backend::map_indexed(exec.as_ref(), m, |i| {
                         active
                             .iter()
                             .map(|&(gi, g, tau)| {

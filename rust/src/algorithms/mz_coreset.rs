@@ -29,9 +29,10 @@ impl MrAlgorithm for MzCoreset {
         let n = oracle.ground_size();
         let mut cluster = MrCluster::new(n, k, cfg)?;
 
+        let states = crate::oracle::StatePool::new(oracle);
         let coresets: Vec<Vec<ElementId>> = cluster
             .worker_round("r1:greedy-coreset", 0, |ctx| {
-                lazy_greedy_over(oracle, ctx.shard, k).elements
+                super::greedy::lazy_greedy_over_pooled(oracle, &states, ctx.shard, k).elements
             })?;
 
         let union: Vec<ElementId> = {

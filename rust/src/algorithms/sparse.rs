@@ -8,11 +8,11 @@
 //! large elements w.h.p. — finds a near-OPT/(2k) threshold from the pooled
 //! max singleton and runs the sequential version of Algorithm 4 per guess.
 
-use super::threshold::threshold_greedy;
+use super::threshold::{block_marginals, block_max_marginal, threshold_greedy};
 use super::{finish, AlgResult, MrAlgorithm};
 use crate::core::{ElementId, Result, Solution};
 use crate::mapreduce::{ClusterConfig, MrCluster};
-use crate::oracle::Oracle;
+use crate::oracle::{Oracle, StatePool};
 
 /// Algorithm 7.
 #[derive(Debug, Clone, Copy)]
@@ -32,15 +32,18 @@ impl SparseTwoRound {
 }
 
 /// Worker side: the `c·k` largest-singleton elements of a shard
-/// (ties broken toward smaller id; output ascending by id).
+/// (ties broken toward smaller id; output ascending by id). Singleton
+/// scoring runs through the block-marginal path over a pooled state.
 pub(crate) fn sparse_worker(
-    oracle: &dyn Oracle,
+    states: &StatePool<'_>,
     shard: &[ElementId],
     k: usize,
     c: usize,
 ) -> Vec<ElementId> {
-    let st = oracle.state();
-    let mut scored: Vec<(f64, ElementId)> = shard.iter().map(|&e| (st.marginal(e), e)).collect();
+    let st = states.acquire();
+    let scores = block_marginals(&*st, shard);
+    let mut scored: Vec<(f64, ElementId)> =
+        scores.into_iter().zip(shard.iter().copied()).collect();
     scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
     let take = (c * k).min(scored.len());
     let mut ids: Vec<ElementId> = scored[..take].iter().map(|&(_, e)| e).collect();
@@ -57,7 +60,7 @@ pub(crate) fn sparse_central(
     eps: f64,
 ) -> Solution {
     let st = oracle.state();
-    let v = pool.iter().map(|&e| st.marginal(e)).fold(0.0f64, f64::max);
+    let v = block_max_marginal(st.as_ref(), pool);
     if v <= 0.0 {
         return Solution::empty();
     }
@@ -81,8 +84,9 @@ impl MrAlgorithm for SparseTwoRound {
         let n = oracle.ground_size();
         let mut cluster = MrCluster::new(n, k, cfg)?;
         let (k_, c_) = (k, self.c);
+        let states = StatePool::new(oracle);
         let per_machine = cluster.worker_round("r1:top-singletons", 0, |ctx| {
-            sparse_worker(oracle, ctx.shard, k_, c_)
+            sparse_worker(&states, ctx.shard, k_, c_)
         })?;
         let mut pool: Vec<ElementId> = per_machine.into_iter().flatten().collect();
         pool.sort_unstable();
@@ -124,9 +128,10 @@ mod tests {
         let gen = PlantedCoverageGen::sparse(8, 800, 2000);
         let o = gen.build(3);
         let cluster = MrCluster::new(2008, 8, &cfg(4)).unwrap();
+        let states = StatePool::new(&o);
         let mut pool = Vec::new();
         for i in 0..cluster.machines() {
-            pool.extend(sparse_worker(&o, cluster.shard(i), 8, 4));
+            pool.extend(sparse_worker(&states, cluster.shard(i), 8, 4));
         }
         for golden in 0..8u32 {
             assert!(pool.contains(&golden), "golden element {golden} missing from pool");
@@ -138,7 +143,8 @@ mod tests {
         let gen = PlantedCoverageGen::sparse(5, 100, 500);
         let o = gen.build(5);
         let shard: Vec<ElementId> = (0..300).collect();
-        let out = sparse_worker(&o, &shard, 5, 4);
+        let states = StatePool::new(&o);
+        let out = sparse_worker(&states, &shard, 5, 4);
         assert!(out.len() <= 20);
         assert!(out.windows(2).all(|w| w[0] < w[1]), "ascending ids");
     }

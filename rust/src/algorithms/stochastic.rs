@@ -3,7 +3,14 @@
 //! `⌈(n/k)·ln(1/δ)⌉` candidates and picks the best. `1 − 1/e − δ` in
 //! expectation with O(n·ln(1/δ)) total marginals — the cheap sequential
 //! reference for the oracle-complexity comparisons in E6/E7.
+//!
+//! The per-step candidate sample is scored through the block-marginal
+//! path ([`crate::oracle::OracleState::marginals`]) and the argmax is
+//! taken over the returned block — batched stochastic sampling with the
+//! same tie-break (and therefore identical selections) as the scalar
+//! candidate loop.
 
+use super::threshold::block_marginals;
 use super::{finish, AlgResult, MrAlgorithm};
 use crate::core::{derive_seed, ElementId, Result};
 use crate::mapreduce::ClusterConfig;
@@ -43,9 +50,9 @@ impl MrAlgorithm for StochasticGreedy {
             }
             rng.shuffle(&mut remaining);
             let cand = &remaining[..sample_size.min(remaining.len())];
+            let scores = block_marginals(state.as_ref(), cand);
             let mut best: Option<(f64, ElementId)> = None;
-            for &e in cand {
-                let m = state.marginal(e);
+            for (&e, &m) in cand.iter().zip(&scores) {
                 if best.map_or(m > 0.0, |(bm, be)| m > bm || (m == bm && e < be)) {
                     best = Some((m, e));
                 }

@@ -12,21 +12,74 @@
 //! lower bound is realized only when distractors precede the optimal
 //! elements in the scan. All callers pass ascending-id inputs.
 //!
-//! The filter is the batched hot path: marginals are evaluated through
-//! [`OracleState::marginals`] in blocks so accelerated oracles (PJRT) serve
-//! one device call per block.
+//! Both building blocks drive the oracle through the block-marginal path
+//! ([`OracleState::marginals`]): the filter evaluates whole blocks against
+//! a fixed state, and the greedy scans blocks *lazily* — a block is
+//! evaluated once against the state at block entry, and because marginals
+//! only shrink as the solution grows (submodularity), any candidate whose
+//! block-entry marginal is already `< τ` is skipped without a fresh query.
+//! Only candidates still at `≥ τ` after an insertion are re-evaluated, so
+//! the selection sequence is **exactly** the scalar algorithm's (asserted
+//! by `prop_greedy_matches_scalar_reference` and
+//! `tests/batch_equivalence.rs`) while the bulk of the marginal traffic
+//! flows through the batched backends.
 
 use crate::core::ElementId;
-use crate::oracle::OracleState;
+use crate::oracle::{OracleState, MARGINAL_BLOCK};
 
-/// Batch size for filter marginal evaluation; matches the AOT block size of
+/// Batch size for block marginal evaluation; matches the AOT block size of
 /// the PJRT engine so accelerated oracles get full tiles.
-pub const FILTER_BLOCK: usize = 256;
+pub const FILTER_BLOCK: usize = MARGINAL_BLOCK;
 
 /// Algorithm 1. Extends `state` in place; returns the elements added.
 ///
 /// `k` bounds the *total* solution size (`state.len() + added ≤ k`).
+///
+/// Block-lazy scan, selection-identical to the scalar reference (see the
+/// module docs for the submodularity argument). Oracle-call count is
+/// slightly above the scalar scan's: whole blocks are evaluated up front
+/// (so a mid-block `k`-stop still charges the full block) and candidates
+/// invalidated by an insertion are re-queried once — the price of routing
+/// the scan through the batched backends.
 pub fn threshold_greedy(
+    state: &mut dyn OracleState,
+    input: &[ElementId],
+    tau: f64,
+    k: usize,
+) -> Vec<ElementId> {
+    let mut added = Vec::new();
+    if state.len() >= k {
+        return added;
+    }
+    let mut buf = [0.0f64; FILTER_BLOCK];
+    for chunk in input.chunks(FILTER_BLOCK) {
+        let m = &mut buf[..chunk.len()];
+        state.marginals(chunk, m);
+        // Inserts invalidate the block's cached marginals — but only
+        // downward, so `cached < τ` remains a sound (and exact) skip.
+        let mut stale = false;
+        for (i, &e) in chunk.iter().enumerate() {
+            if m[i] < tau {
+                continue;
+            }
+            let gain = if stale { state.marginal(e) } else { m[i] };
+            if gain >= tau {
+                state.insert(e);
+                added.push(e);
+                stale = true;
+                if state.len() >= k {
+                    return added;
+                }
+            }
+        }
+    }
+    added
+}
+
+/// Scalar reference implementation of Algorithm 1 (one marginal per scan
+/// step). Kept for the equivalence tests and the `mrsub bench`
+/// batched-vs-scalar comparison; not used by the algorithms.
+pub fn threshold_greedy_scalar(
     state: &mut dyn OracleState,
     input: &[ElementId],
     tau: f64,
@@ -46,6 +99,33 @@ pub fn threshold_greedy(
         }
     }
     added
+}
+
+/// Max singleton/marginal over `input` w.r.t. `state`, evaluated through
+/// the block path (`0.0` for empty input — the identity the scalar folds
+/// used).
+pub fn block_max_marginal(state: &dyn OracleState, input: &[ElementId]) -> f64 {
+    let mut buf = [0.0f64; FILTER_BLOCK];
+    let mut best = 0.0f64;
+    for chunk in input.chunks(FILTER_BLOCK) {
+        let m = &mut buf[..chunk.len()];
+        state.marginals(chunk, m);
+        for &v in m.iter() {
+            best = best.max(v);
+        }
+    }
+    best
+}
+
+/// Evaluate marginals of `input` w.r.t. `state` into a fresh vec, block by
+/// block — the SoA scoring step of the sparse worker and stochastic
+/// sampling.
+pub fn block_marginals(state: &dyn OracleState, input: &[ElementId]) -> Vec<f64> {
+    let mut out = vec![0.0f64; input.len()];
+    for (chunk, o) in input.chunks(FILTER_BLOCK).zip(out.chunks_mut(FILTER_BLOCK)) {
+        state.marginals(chunk, o);
+    }
+    out
 }
 
 /// Algorithm 2. Returns the elements of `input` with `f_G(e) ≥ τ` for the
@@ -163,6 +243,42 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn prop_greedy_matches_scalar_reference() {
+        // The block-lazy greedy must reproduce the scalar scan's selection
+        // sequence element for element, on every family shape.
+        forall(0x74, 30, |g| {
+            let seed = g.u64_in(300);
+            let tau = g.f64_in(0.2, 4.0);
+            let k = g.usize_in(1, 20);
+            let o = crate::workload::coverage::CoverageGen::new(400, 150, 4).build(seed);
+            let input: Vec<ElementId> = (0..400).collect();
+            let mut st_block = o.state();
+            let mut st_scalar = o.state();
+            let a = threshold_greedy(st_block.as_mut(), &input, tau, k);
+            let b = threshold_greedy_scalar(st_scalar.as_mut(), &input, tau, k);
+            assert_eq!(a, b, "seed {seed} tau {tau} k {k}");
+            assert_eq!(st_block.value().to_bits(), st_scalar.value().to_bits());
+        });
+    }
+
+    #[test]
+    fn block_helpers_match_scalar_folds() {
+        let o = crate::workload::coverage::CoverageGen::new(600, 200, 5).build(9);
+        let mut st = o.state();
+        st.insert(1);
+        let input: Vec<ElementId> = (0..600).collect();
+        let best = block_max_marginal(st.as_ref(), &input);
+        let best_scalar = input.iter().map(|&e| st.marginal(e)).fold(0.0f64, f64::max);
+        assert_eq!(best.to_bits(), best_scalar.to_bits());
+        let all = block_marginals(st.as_ref(), &input);
+        assert_eq!(all.len(), 600);
+        for (&e, &m) in input.iter().zip(&all) {
+            assert_eq!(m.to_bits(), st.marginal(e).to_bits());
+        }
+        assert_eq!(block_max_marginal(st.as_ref(), &[]), 0.0);
     }
 
     #[test]

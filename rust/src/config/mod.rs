@@ -24,7 +24,9 @@
 //!
 //! [cluster]
 //! sample_factor = 4.0
-//! parallel = true
+//! parallel = true          # legacy switch; superseded by `backend`
+//! backend = "rayon"        # serial | rayon (execution substrate)
+//! chunk = 1                # rayon work-claim granularity
 //! enforce_memory = false
 //! machines = 0             # 0 = paper default ceil(sqrt(n/k))
 //! ```
@@ -43,6 +45,7 @@ use crate::algorithms::stochastic::StochasticGreedy;
 use crate::algorithms::two_round::TwoRoundKnownOpt;
 use crate::algorithms::{AlgResult, MrAlgorithm};
 use crate::core::{Error, Result};
+use crate::mapreduce::backend::BackendKind;
 use crate::mapreduce::ClusterConfig;
 use crate::util::minitoml::{Document, Table};
 use crate::workload::adversarial::AdversarialGen;
@@ -131,6 +134,12 @@ impl RunConfig {
             cluster.sample_factor = opt_f64(t, "sample_factor").unwrap_or(4.0);
             cluster.enforce_memory = opt_bool(t, "enforce_memory", false);
             cluster.parallel = opt_bool(t, "parallel", true);
+            if let Some(name) = t.get("backend").and_then(|v| v.as_str()) {
+                let chunk = opt_usize(t, "chunk", 1);
+                cluster.backend = Some(BackendKind::parse(name, chunk).ok_or_else(|| {
+                    Error::Config(format!("unknown backend {name:?} (serial | rayon)"))
+                })?);
+            }
         }
         Ok(RunConfig { k, seed, instance, algorithm, cluster, output })
     }
@@ -396,6 +405,35 @@ mod tests {
         assert_eq!(cfg.cluster.sample_factor, 2.0);
         assert!(!cfg.cluster.parallel);
         assert!(cfg.cluster.enforce_memory);
+        assert_eq!(cfg.cluster.backend_kind(), BackendKind::Serial, "legacy flag maps to serial");
+    }
+
+    #[test]
+    fn cluster_backend_parsed() {
+        let text = |backend: &str| {
+            format!(
+                r#"
+                k = 5
+                [instance]
+                kind = "coverage"
+                n = 40
+                universe = 30
+                avg_degree = 3
+                [algorithm]
+                kind = "greedy"
+                [cluster]
+                {backend}
+            "#
+            )
+        };
+        let cfg = RunConfig::parse(&text("backend = \"serial\"")).unwrap();
+        assert_eq!(cfg.cluster.backend, Some(BackendKind::Serial));
+        let cfg = RunConfig::parse(&text("backend = \"rayon\"\nchunk = 4")).unwrap();
+        assert_eq!(cfg.cluster.backend, Some(BackendKind::Rayon { chunk: 4 }));
+        // explicit backend beats the legacy flag.
+        let cfg = RunConfig::parse(&text("parallel = true\nbackend = \"serial\"")).unwrap();
+        assert_eq!(cfg.cluster.backend_kind(), BackendKind::Serial);
+        assert!(RunConfig::parse(&text("backend = \"gpu\"")).is_err());
     }
 
     #[test]

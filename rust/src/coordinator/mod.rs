@@ -44,10 +44,21 @@ pub struct ExperimentRecord {
     pub communication: usize,
     /// Total oracle calls.
     pub oracle_calls: u64,
+    /// Of `oracle_calls`, queries served through the block-marginal path.
+    pub batched_oracle_calls: u64,
+    /// Number of block-marginal calls issued.
+    pub oracle_batches: u64,
     /// End-to-end wall time (ms).
     pub wall_ms: f64,
     /// Full per-round metrics.
     pub metrics: MrMetrics,
+}
+
+impl ExperimentRecord {
+    /// Queries served one at a time (`oracle_calls − batched_oracle_calls`).
+    pub fn scalar_oracle_calls(&self) -> u64 {
+        self.oracle_calls.saturating_sub(self.batched_oracle_calls)
+    }
 }
 
 impl ExperimentRecord {
@@ -67,6 +78,9 @@ impl ExperimentRecord {
             ("peak_central_recv", Json::Num(self.peak_central_recv as f64)),
             ("communication", Json::Num(self.communication as f64)),
             ("oracle_calls", Json::Num(self.oracle_calls as f64)),
+            ("batched_oracle_calls", Json::Num(self.batched_oracle_calls as f64)),
+            ("scalar_oracle_calls", Json::Num(self.scalar_oracle_calls() as f64)),
+            ("oracle_batches", Json::Num(self.oracle_batches as f64)),
             ("wall_ms", Json::Num(self.wall_ms)),
             ("metrics", self.metrics.to_json()),
         ])
@@ -84,13 +98,14 @@ pub fn run_experiment(
     cfg: &ClusterConfig,
 ) -> Result<ExperimentRecord> {
     let counting = CountingOracle::new(Arc::clone(&inst.oracle));
+    let counters = counting.counter();
     let mut cfg = cfg.clone();
-    cfg.call_counter = Some(counting.counter());
+    cfg.call_counter = Some(Arc::clone(&counters));
 
     let start = Instant::now();
     let result = alg.run(&counting, k, &cfg)?;
     let wall_ms = start.elapsed().as_secs_f64() * 1e3;
-    let oracle_calls = counting.calls();
+    let (oracle_calls, batched_oracle_calls, oracle_batches) = counters.snapshot();
 
     let (reference, reference_is_opt) = match (inst.known_opt, inst.planted_k) {
         (Some(opt), Some(pk)) if pk == k => (opt, true),
@@ -115,6 +130,8 @@ pub fn run_experiment(
         peak_central_recv: result.metrics.peak_central_recv(),
         communication: result.metrics.total_communication(),
         oracle_calls,
+        batched_oracle_calls,
+        oracle_batches,
         wall_ms,
         metrics: result.metrics,
     })
@@ -125,12 +142,17 @@ pub fn render_table(title: &str, records: &[ExperimentRecord]) -> String {
     let mut out = String::new();
     out.push_str(&format!("\n== {title} ==\n"));
     out.push_str(&format!(
-        "{:<28} {:<34} {:>4} {:>9} {:>7} {:>7} {:>10} {:>10} {:>12} {:>9}\n",
-        "algorithm", "instance", "k", "value", "ratio", "rounds", "peak-mem", "central", "oracle-calls", "wall-ms"
+        "{:<28} {:<34} {:>4} {:>9} {:>7} {:>7} {:>10} {:>10} {:>12} {:>9} {:>9}\n",
+        "algorithm", "instance", "k", "value", "ratio", "rounds", "peak-mem", "central", "oracle-calls", "batched%", "wall-ms"
     ));
     for r in records {
+        let batched_pct = if r.oracle_calls > 0 {
+            100.0 * r.batched_oracle_calls as f64 / r.oracle_calls as f64
+        } else {
+            0.0
+        };
         out.push_str(&format!(
-            "{:<28} {:<34} {:>4} {:>9.2} {:>7.4} {:>7} {:>10} {:>10} {:>12} {:>9.1}\n",
+            "{:<28} {:<34} {:>4} {:>9.2} {:>7.4} {:>7} {:>10} {:>10} {:>12} {:>8.1}% {:>9.1}\n",
             r.algorithm,
             truncate(&r.instance, 34),
             r.k,
@@ -140,17 +162,28 @@ pub fn render_table(title: &str, records: &[ExperimentRecord]) -> String {
             r.peak_machine_memory,
             r.peak_central_recv,
             r.oracle_calls,
+            batched_pct,
             r.wall_ms
         ));
     }
     out
 }
 
+/// Char-aware truncation to at most `n` characters, appending `…` when the
+/// input is longer. Counts chars on both sides of the decision (the old
+/// byte-length test over-truncated any multibyte instance name).
 fn truncate(s: &str, n: usize) -> String {
-    if s.len() <= n {
-        s.to_string()
-    } else {
-        format!("{}…", &s[..s.char_indices().take(n - 1).last().map(|(i, c)| i + c.len_utf8()).unwrap_or(0)])
+    let mut chars = s.char_indices();
+    match chars.nth(n) {
+        None => s.to_string(),
+        Some(_) => {
+            let cut = s
+                .char_indices()
+                .nth(n.saturating_sub(1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            format!("{}…", &s[..cut])
+        }
     }
 }
 
@@ -191,6 +224,51 @@ mod tests {
         let rec = run_experiment(&inst, &CombinedTwoRound::new(0.1), 5, &cfg).unwrap();
         assert!(!rec.reference_is_opt);
         assert!(rec.reference > 0.0);
+    }
+
+    #[test]
+    fn truncate_is_char_aware() {
+        // ASCII: unchanged when short, n chars total when long.
+        assert_eq!(truncate("short", 10), "short");
+        assert_eq!(truncate("abcdefgh", 5), "abcd…");
+        assert_eq!(truncate("abcde", 5), "abcde");
+        // Multibyte: 7 chars but 14+ bytes — must NOT be truncated at n=10
+        // (the old byte-length test split it), and truncation must land on
+        // a char boundary, never mid-codepoint.
+        let s = "coverage·τ≥α₂"; // 13 chars, >13 bytes
+        assert_eq!(truncate(s, 13), s);
+        assert_eq!(truncate(s, 20), s);
+        let cut = truncate(s, 10);
+        assert_eq!(cut.chars().count(), 10);
+        assert!(cut.ends_with('…'));
+        assert!(s.starts_with(cut.trim_end_matches('…')));
+        // Degenerate widths stay safe.
+        assert_eq!(truncate("αβγ", 1), "…");
+        assert_eq!(truncate("", 4), "");
+    }
+
+    #[test]
+    fn record_reports_batched_split() {
+        let inst = PlantedCoverageGen::dense(8, 400, 800).generate(5);
+        let cfg = ClusterConfig { parallel: false, ..ClusterConfig::default() };
+        let rec = run_experiment(&inst, &CombinedTwoRound::new(0.1), 8, &cfg).unwrap();
+        assert!(rec.batched_oracle_calls > 0, "hot loops must use the block path");
+        assert!(rec.oracle_batches > 0);
+        assert!(rec.batched_oracle_calls <= rec.oracle_calls);
+        assert_eq!(
+            rec.scalar_oracle_calls(),
+            rec.oracle_calls - rec.batched_oracle_calls
+        );
+        // the block path dominates the oracle traffic of the 2-round algs.
+        assert!(
+            rec.batched_oracle_calls * 2 > rec.oracle_calls,
+            "expected mostly-batched traffic, got {}/{}",
+            rec.batched_oracle_calls,
+            rec.oracle_calls
+        );
+        let json = rec.to_json();
+        assert!(json.get("batched_oracle_calls").is_some());
+        assert!(json.get("oracle_batches").is_some());
     }
 
     #[test]

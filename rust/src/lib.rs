@@ -8,22 +8,27 @@
 //! ## Layout
 //!
 //! * [`core`] — element ids, solutions, shared numeric helpers.
-//! * [`oracle`] — the value-oracle abstraction and seven concrete monotone
-//!   submodular families (coverage, weighted coverage, facility location,
-//!   graph cut-coverage, modular, concave-over-modular, and the adversarial
-//!   instance of the paper's Theorem 4), plus a call-counting decorator and
-//!   an XLA/PJRT-accelerated facility oracle.
+//! * [`oracle`] — the value-oracle abstraction with **block-marginal
+//!   evaluation as the primary interface** (every family implements a real
+//!   SoA/block `marginals`, bit-identical to its scalar path), a reusable
+//!   state pool, seven concrete monotone submodular families (coverage,
+//!   weighted coverage, facility location, graph cut-coverage, modular,
+//!   concave-over-modular, and the adversarial instance of the paper's
+//!   Theorem 4), and a call-counting decorator with batched-vs-scalar
+//!   accounting. The XLA/PJRT-accelerated facility oracle rides the same
+//!   block path behind the `xla` feature.
 //! * [`mapreduce`] — the MRC cluster simulator: random partitioning and
-//!   sampling (Algorithm 3), synchronous rounds, per-machine memory and
-//!   communication metering.
+//!   sampling (Algorithm 3), synchronous rounds scheduled on a pluggable
+//!   execution substrate ([`mapreduce::backend::ExecBackend`]: serial /
+//!   thread-pool), per-machine memory and communication metering.
 //! * [`algorithms`] — the paper's Algorithms 1–7 and the Theorem 8
 //!   combination, plus sequential and distributed baselines
 //!   (greedy/lazy/stochastic greedy, RandGreeDi, Mirrokni–Zadimoghaddam
-//!   core-sets, Sample&Prune).
+//!   core-sets, Sample&Prune) — hot loops drive the oracle in blocks.
 //! * [`workload`] — instance generators used by the experiment suite.
-//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and serves batched marginal
-//!   evaluations to the Rust hot path.
+//! * `runtime` (feature `xla`) — PJRT client wrapper that loads the
+//!   AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and serves
+//!   batched marginal evaluations to the Rust hot path.
 //! * [`coordinator`] — experiment driver: runs algorithms over workloads,
 //!   collects [`metrics`], writes JSON reports.
 //! * [`config`] — TOML-backed configuration for the `mrsub` launcher.
@@ -49,6 +54,7 @@ pub mod core;
 pub mod mapreduce;
 pub mod metrics;
 pub mod oracle;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod util;
 pub mod workload;

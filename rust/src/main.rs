@@ -2,20 +2,26 @@
 //!
 //! ```text
 //! mrsub run --config cfg.toml      one configured experiment (+ JSON report)
-//! mrsub demo [--k K] [--n N] [--seed S]
+//! mrsub demo [--k K] [--n N] [--seed S] [--backend serial|rayon]
 //!                                  all paper algorithms + baselines, one table
 //! mrsub sweep-t [--t-max T] [--k K] [--seed S]
 //!                                  ratio vs #thresholds (E2 series)
 //! mrsub adversarial [--t-max T] [--k K]
 //!                                  Theorem-4 tightness (E3 series)
+//! mrsub bench [--n N] [--k K] [--families a,b,..] [--backends serial,rayon]
+//!             [--sizes NxK,NxK,..] [--seed S] [--output report.json]
+//!                                  batched-vs-scalar hot path × families,
+//!                                  plus backend × family × (n,k) cluster
+//!                                  sweep; writes the JSON report
 //! mrsub engine-check [--artifacts DIR]
 //!                                  PJRT artifacts + HLO-oracle cross-check
+//!                                  (requires the `xla` build feature)
 //! ```
 //!
-//! (Arg parsing is hand-rolled — this workspace builds offline without clap;
-//! see the note in Cargo.toml.)
+//! (Arg parsing and error handling are hand-rolled — this workspace builds
+//! offline without clap/anyhow; see the note in Cargo.toml.)
 
-use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
 use mrsub::algorithms::combined::CombinedTwoRound;
 use mrsub::algorithms::multi_round::MultiRound;
@@ -23,15 +29,31 @@ use mrsub::algorithms::mz_coreset::MzCoreset;
 use mrsub::algorithms::randgreedi::RandGreeDi;
 use mrsub::algorithms::sample_prune::SamplePrune;
 use mrsub::algorithms::stochastic::StochasticGreedy;
+use mrsub::algorithms::threshold::FILTER_BLOCK;
 use mrsub::algorithms::two_round::TwoRoundKnownOpt;
 use mrsub::algorithms::MrAlgorithm;
 use mrsub::config::{GreedyAlg, RunConfig};
 use mrsub::coordinator::{render_table, run_experiment, write_json};
-use mrsub::core::threshold_bound;
+use mrsub::core::{threshold_bound, ElementId, Error, Result};
+use mrsub::mapreduce::backend::BackendKind;
 use mrsub::mapreduce::ClusterConfig;
+use mrsub::oracle::concave::{ConcaveOverModularOracle, Phi};
+use mrsub::oracle::modular::ModularOracle;
+use mrsub::oracle::{Oracle, OracleState};
+use mrsub::util::bench::{throughput, time};
+use mrsub::util::json::Json;
+use mrsub::util::rng::Rng;
 use mrsub::workload::adversarial::AdversarialGen;
+use mrsub::workload::corpus::ZipfCorpusGen;
+use mrsub::workload::coverage::CoverageGen;
+use mrsub::workload::facility::FacilityGen;
+use mrsub::workload::graph::GraphGen;
 use mrsub::workload::planted::PlantedCoverageGen;
-use mrsub::workload::WorkloadGen;
+use mrsub::workload::{Instance, WorkloadGen};
+
+fn cli_err(msg: impl Into<String>) -> Error {
+    Error::Config(msg.into())
+}
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -45,8 +67,8 @@ impl Args {
         while let Some(flag) = it.next() {
             let key = flag
                 .strip_prefix("--")
-                .with_context(|| format!("expected --flag, got {flag:?}"))?;
-            let value = it.next().with_context(|| format!("--{key} needs a value"))?;
+                .ok_or_else(|| cli_err(format!("expected --flag, got {flag:?}")))?;
+            let value = it.next().ok_or_else(|| cli_err(format!("--{key} needs a value")))?;
             flags.insert(key.replace('-', "_"), value.clone());
         }
         Ok(Args { flags })
@@ -55,9 +77,9 @@ impl Args {
     fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("invalid value {v:?} for --{key}")),
+            Some(v) => {
+                v.parse().map_err(|_| cli_err(format!("invalid value {v:?} for --{key}")))
+            }
         }
     }
 
@@ -66,29 +88,63 @@ impl Args {
     }
 }
 
-const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|engine-check> [--flag value]...
+/// Parse an optional `--backend serial|rayon [--chunk N]` pair.
+fn backend_flag(args: &Args) -> Result<Option<BackendKind>> {
+    match args.get_str("backend") {
+        None => Ok(None),
+        Some(name) => {
+            let chunk = args.get("chunk", 1usize)?;
+            BackendKind::parse(name, chunk)
+                .map(Some)
+                .ok_or_else(|| cli_err(format!("unknown backend {name:?} (serial | rayon)")))
+        }
+    }
+}
+
+const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|engine-check> [--flag value]...
   run           --config <file.toml>
-  demo          [--k 20] [--n 20000] [--seed 7]
+  demo          [--k 20] [--n 20000] [--seed 7] [--backend serial|rayon] [--chunk 1]
   sweep-t       [--t-max 6] [--k 20] [--seed 7]
   adversarial   [--t-max 5] [--k 60]
-  engine-check  [--artifacts <dir>]";
+  bench         [--n 4096] [--k 32] [--seed 11]
+                [--families coverage,zipf,facility,cut,concave,modular,adversarial]
+                [--backends serial,rayon] [--sizes 8000x20,32000x40]
+                [--output bench_report.json]
+  engine-check  [--artifacts <dir>]   (xla feature builds only)";
 
-fn main() -> Result<()> {
+fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
     let Some(cmd) = argv.first() else {
         eprintln!("{USAGE}");
-        bail!("missing subcommand");
+        return Err(cli_err("missing subcommand"));
     };
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
-        "run" => cmd_run(args.get_str("config").context("run needs --config")?),
-        "demo" => cmd_demo(args.get("k", 20)?, args.get("n", 20_000)?, args.get("seed", 7)?),
+        "run" => cmd_run(args.get_str("config").ok_or_else(|| cli_err("run needs --config"))?),
+        "demo" => cmd_demo(
+            args.get("k", 20)?,
+            args.get("n", 20_000)?,
+            args.get("seed", 7)?,
+            backend_flag(&args)?,
+        ),
         "sweep-t" => cmd_sweep_t(args.get("t_max", 6)?, args.get("k", 20)?, args.get("seed", 7)?),
         "adversarial" => cmd_adversarial(args.get("t_max", 5)?, args.get("k", 60)?),
+        "bench" => cmd_bench(&args),
         "engine-check" => cmd_engine_check(args.get_str("artifacts")),
         other => {
             eprintln!("{USAGE}");
-            bail!("unknown subcommand {other:?}")
+            Err(cli_err(format!("unknown subcommand {other:?}")))
         }
     }
 }
@@ -108,10 +164,10 @@ fn cmd_run(path: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_demo(k: usize, n: usize, seed: u64) -> Result<()> {
+fn cmd_demo(k: usize, n: usize, seed: u64, backend: Option<BackendKind>) -> Result<()> {
     let inst = PlantedCoverageGen::dense(k, n / 2, n).generate(seed);
     let opt = inst.known_opt.unwrap();
-    let cfg = ClusterConfig { seed, ..ClusterConfig::default() };
+    let cfg = ClusterConfig { seed, backend, ..ClusterConfig::default() };
     let algs: Vec<Box<dyn MrAlgorithm>> = vec![
         Box::new(GreedyAlg),
         Box::new(TwoRoundKnownOpt::new(opt)),
@@ -127,7 +183,12 @@ fn cmd_demo(k: usize, n: usize, seed: u64) -> Result<()> {
     for alg in &algs {
         records.push(run_experiment(&inst, alg.as_ref(), k, &cfg)?);
     }
-    println!("{}", render_table(&format!("demo: {} (OPT = {opt})", inst.name), &records));
+    let label = format!(
+        "demo: {} (OPT = {opt}, backend = {})",
+        inst.name,
+        cfg.backend_kind().label()
+    );
+    println!("{}", render_table(&label, &records));
     Ok(())
 }
 
@@ -166,12 +227,216 @@ fn cmd_adversarial(t_max: usize, k: usize) -> Result<()> {
     Ok(())
 }
 
+// --- `mrsub bench`: batched-vs-scalar × backends × families × (n, k) -------
+
+const ALL_FAMILIES: &[&str] =
+    &["coverage", "zipf", "facility", "cut", "concave", "modular", "adversarial"];
+
+/// Build a bench instance of family `name` with ~`n` elements. Facility is
+/// capped (dense n×d rows); adversarial derives its size from `n` alone.
+fn bench_instance(name: &str, n: usize, seed: u64) -> Result<Instance> {
+    Ok(match name {
+        "coverage" => CoverageGen::new(n, n / 2, 8).generate(seed),
+        "facility" => FacilityGen::clustered(n.min(4096), 512, 16).generate(seed),
+        "cut" => GraphGen::barabasi_albert(n, 6).generate(seed),
+        "zipf" => ZipfCorpusGen::new(n, n, 20).generate(seed),
+        "concave" => {
+            let mut rng = Rng::seed_from_u64(seed);
+            let groups = 256;
+            let incidence: Vec<Vec<(u32, f64)>> = (0..n)
+                .map(|_| {
+                    (0..4)
+                        .map(|_| (rng.gen_range(0..groups) as u32, rng.gen_range_f64(0.1, 2.0)))
+                        .collect()
+                })
+                .collect();
+            Instance::new(
+                format!("concave(n={n},groups={groups})"),
+                Arc::new(ConcaveOverModularOracle::new(n, groups, incidence, Phi::Sqrt)),
+            )
+        }
+        "modular" => {
+            let mut rng = Rng::seed_from_u64(seed);
+            let w: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(0.0, 10.0)).collect();
+            Instance::new(format!("modular(n={n})"), Arc::new(ModularOracle::new(w)))
+        }
+        "adversarial" => AdversarialGen::new(4, (n / 2).max(8)).generate(seed),
+        other => {
+            return Err(cli_err(format!(
+                "unknown family {other:?} (expected one of {ALL_FAMILIES:?})"
+            )))
+        }
+    })
+}
+
+/// One hot-path row: the full singleton sweep over the ground set, scalar
+/// (one virtual `marginal` per element) vs batched (block `marginals`).
+fn bench_hotpath(inst: &Instance, iters: usize) -> (f64, f64, f64) {
+    let oracle = inst.oracle.as_ref();
+    let g = oracle.ground_size();
+    let mut st = oracle.state();
+    // a partially-built solution so marginals do real incremental work.
+    for i in 0..8usize {
+        st.insert(((i * g) / 8) as ElementId);
+    }
+    let ids: Vec<ElementId> = (0..g as ElementId).collect();
+
+    let t_scalar = time(1, iters, || {
+        let mut acc = 0.0f64;
+        for &e in &ids {
+            acc += st.marginal(e);
+        }
+        acc
+    });
+    let mut out = vec![0.0f64; ids.len()];
+    let t_batched = time(1, iters, || {
+        for (chunk, o) in ids.chunks(FILTER_BLOCK).zip(out.chunks_mut(FILTER_BLOCK)) {
+            st.marginals(chunk, o);
+        }
+    });
+    let scalar_eps = throughput(g, t_scalar.median);
+    let batched_eps = throughput(g, t_batched.median);
+    let speedup = t_scalar.median.as_secs_f64() / t_batched.median.as_secs_f64().max(1e-12);
+    (scalar_eps, batched_eps, speedup)
+}
+
+fn parse_sizes(spec: &str) -> Result<Vec<(usize, usize)>> {
+    spec.split(',')
+        .map(|pair| {
+            let (n, k) = pair
+                .split_once('x')
+                .ok_or_else(|| cli_err(format!("bad --sizes entry {pair:?} (want NxK)")))?;
+            let n: usize =
+                n.trim().parse().map_err(|_| cli_err(format!("bad n in {pair:?}")))?;
+            let k: usize =
+                k.trim().parse().map_err(|_| cli_err(format!("bad k in {pair:?}")))?;
+            Ok((n, k))
+        })
+        .collect()
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let n: usize = args.get("n", 4096)?;
+    let k: usize = args.get("k", 32)?;
+    let seed: u64 = args.get("seed", 11)?;
+    let iters: usize = args.get("iters", 7)?;
+    let output = args.get_str("output").unwrap_or("bench_report.json").to_string();
+    let families: Vec<String> = args
+        .get_str("families")
+        .unwrap_or("coverage,zipf,facility,cut,concave,modular,adversarial")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let backends: Vec<BackendKind> = args
+        .get_str("backends")
+        .unwrap_or("serial,rayon")
+        .split(',')
+        .map(|s| {
+            let chunk = 1;
+            BackendKind::parse(s.trim(), chunk)
+                .ok_or_else(|| cli_err(format!("unknown backend {s:?}")))
+        })
+        .collect::<Result<_>>()?;
+    if backends.len() < 2 {
+        eprintln!("(note: pass >= 2 --backends for a cross-backend comparison)");
+    }
+    let sizes = parse_sizes(args.get_str("sizes").unwrap_or("8000x20,32000x40"))?;
+
+    // --- part 1: oracle hot path, batched vs scalar per family -----------
+    println!("\n== bench 1/2: block-marginal hot path (full singleton sweep) ==");
+    println!(
+        "{:<12} {:>9} {:>14} {:>14} {:>9}",
+        "family", "n", "scalar el/s", "batched el/s", "speedup"
+    );
+    let mut hotpath_rows = Vec::new();
+    for fam in &families {
+        let inst = bench_instance(fam, n, seed)?;
+        let (scalar_eps, batched_eps, speedup) = bench_hotpath(&inst, iters);
+        println!(
+            "{:<12} {:>9} {:>14.3e} {:>14.3e} {:>8.2}x",
+            fam,
+            inst.n,
+            scalar_eps,
+            batched_eps,
+            speedup
+        );
+        hotpath_rows.push(Json::obj([
+            ("family", Json::Str(fam.clone())),
+            ("instance", Json::Str(inst.name.clone())),
+            ("n", Json::Num(inst.n as f64)),
+            ("scalar_elems_per_s", Json::Num(scalar_eps)),
+            ("batched_elems_per_s", Json::Num(batched_eps)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    // --- part 2: cluster sweep, backends × families × (n, k) -------------
+    println!("\n== bench 2/2: combined(eps=0.1) end-to-end, backend sweep ==");
+    println!(
+        "{:<12} {:<16} {:>9} {:>5} {:>9} {:>9} {:>9}",
+        "family", "backend", "n", "k", "wall-ms", "batched%", "value"
+    );
+    let mut cluster_rows = Vec::new();
+    for fam in &families {
+        for &(sz_n, sz_k) in &sizes {
+            let inst = bench_instance(fam, sz_n, seed)?;
+            let k_eff = sz_k.min(inst.n);
+            for &backend in &backends {
+                let cfg = ClusterConfig {
+                    seed,
+                    backend: Some(backend),
+                    ..ClusterConfig::default()
+                };
+                let rec = run_experiment(&inst, &CombinedTwoRound::new(0.1), k_eff, &cfg)?;
+                let batched_pct = if rec.oracle_calls > 0 {
+                    100.0 * rec.batched_oracle_calls as f64 / rec.oracle_calls as f64
+                } else {
+                    0.0
+                };
+                println!(
+                    "{:<12} {:<16} {:>9} {:>5} {:>9.1} {:>8.1}% {:>9.1}",
+                    fam,
+                    backend.label(),
+                    inst.n,
+                    k_eff,
+                    rec.wall_ms,
+                    batched_pct,
+                    rec.value
+                );
+                cluster_rows.push(Json::obj([
+                    ("family", Json::Str(fam.clone())),
+                    ("backend", Json::Str(backend.label())),
+                    ("n", Json::Num(inst.n as f64)),
+                    ("k", Json::Num(k_eff as f64)),
+                    ("wall_ms", Json::Num(rec.wall_ms)),
+                    ("value", Json::Num(rec.value)),
+                    ("oracle_calls", Json::Num(rec.oracle_calls as f64)),
+                    ("batched_oracle_calls", Json::Num(rec.batched_oracle_calls as f64)),
+                    ("oracle_batches", Json::Num(rec.oracle_batches as f64)),
+                    ("rounds", Json::Num(rec.rounds as f64)),
+                ]));
+            }
+        }
+    }
+
+    let report = Json::obj([
+        ("n", Json::Num(n as f64)),
+        ("k", Json::Num(k as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("hotpath", Json::Arr(hotpath_rows)),
+        ("cluster", Json::Arr(cluster_rows)),
+    ]);
+    std::fs::write(&output, report.to_string_pretty())
+        .map_err(|e| Error::Runtime(format!("write {output}: {e}")))?;
+    println!("\nbench report written to {output}");
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
 fn cmd_engine_check(artifacts: Option<&str>) -> Result<()> {
     use mrsub::oracle::hlo::HloFacilityOracle;
-    use mrsub::oracle::Oracle;
     use mrsub::runtime::{default_artifact_dir, MarginalsEngine};
-    use mrsub::workload::facility::FacilityGen;
-    use std::sync::Arc;
 
     let dir = artifacts
         .map(std::path::PathBuf::from)
@@ -197,7 +462,17 @@ fn cmd_engine_check(artifacts: Option<&str>) -> Result<()> {
         out_h.iter().zip(&out_n).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
     println!("batch of {}: max |hlo - native| = {max_err:.3e}", es.len());
     println!("PJRT executions: {}", engine.executions());
-    anyhow::ensure!(max_err < 1e-3, "HLO oracle disagrees with native oracle");
+    if max_err >= 1e-3 {
+        return Err(Error::Runtime("HLO oracle disagrees with native oracle".into()));
+    }
     println!("engine-check OK");
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_engine_check(_artifacts: Option<&str>) -> Result<()> {
+    Err(cli_err(
+        "engine-check requires the `xla` build feature (PJRT runtime); \
+         rebuild with `cargo build --features xla` and a vendored xla crate",
+    ))
 }

@@ -1,0 +1,220 @@
+//! Pluggable execution substrate for the cluster simulator.
+//!
+//! Every simulated worker round is "run this closure once per machine";
+//! [`ExecBackend`] abstracts *how* those per-machine executions are
+//! scheduled, replacing the hard-coded rayon-or-serial switch that used to
+//! live inside `MrCluster::worker_round`. Two backends ship today:
+//!
+//! * [`Serial`] — in-order execution on the calling thread. The reference
+//!   semantics; also the right choice for tiny rounds where dispatch
+//!   overhead dominates.
+//! * [`Rayon`] — the persistent thread pool of [`crate::util::pool`]
+//!   (the in-repo rayon substitute), with a configurable work-claim
+//!   `chunk`: machines are claimed `chunk` at a time from an atomic
+//!   cursor, trading load balancing (chunk = 1) against dispatch cost on
+//!   many cheap machines (chunk > 1).
+//!
+//! The contract every backend must satisfy — and which
+//! `tests/batch_equivalence.rs` asserts pairwise — is *output
+//! determinism*: `map_indexed(backend, n, f)[i] == f(i)` regardless of
+//! scheduling, so `Serial` and `Rayon` runs of the same algorithm produce
+//! identical per-machine outputs and identical metrics.
+//!
+//! Room is deliberately left for heavier substrates (a multi-process
+//! backend shelling out to worker processes, an async round scheduler
+//! overlapping communication with compute): implement [`ExecBackend`] and
+//! add a [`BackendKind`] variant — nothing above this module changes.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::util::pool;
+
+/// How per-machine closures of a worker round are executed.
+///
+/// Implementations must run `work(i)` exactly once for every `i < n`
+/// before returning, and may use any parallelism; callers rely only on
+/// completion, never on ordering.
+pub trait ExecBackend: Send + Sync + fmt::Debug {
+    /// Stable human-readable name (used in metrics and bench reports).
+    fn name(&self) -> &'static str;
+
+    /// Execute `work(i)` for every `i < n`; blocks until all are done.
+    fn for_each(&self, n: usize, work: &(dyn Fn(usize) + Sync));
+}
+
+/// In-order execution on the calling thread.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Serial;
+
+impl ExecBackend for Serial {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn for_each(&self, n: usize, work: &(dyn Fn(usize) + Sync)) {
+        for i in 0..n {
+            work(i);
+        }
+    }
+}
+
+/// Persistent-thread-pool execution with `chunk`-granular work claiming.
+#[derive(Debug, Clone, Copy)]
+pub struct Rayon {
+    /// Indices claimed per atomic cursor bump (>= 1). 1 = max balancing.
+    pub chunk: usize,
+}
+
+impl Default for Rayon {
+    fn default() -> Self {
+        Rayon { chunk: 1 }
+    }
+}
+
+impl ExecBackend for Rayon {
+    fn name(&self) -> &'static str {
+        "rayon"
+    }
+
+    fn for_each(&self, n: usize, work: &(dyn Fn(usize) + Sync)) {
+        pool::run_indexed(n, self.chunk, work);
+    }
+}
+
+/// Serializable backend selector — what configs, the CLI, and
+/// [`super::ClusterConfig`] carry; [`BackendKind::build`] instantiates the
+/// actual backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// [`Serial`].
+    Serial,
+    /// [`Rayon`] with the given work-claim chunk.
+    Rayon {
+        /// Indices claimed per cursor bump.
+        chunk: usize,
+    },
+}
+
+impl BackendKind {
+    /// Instantiate the backend.
+    pub fn build(self) -> Arc<dyn ExecBackend> {
+        match self {
+            BackendKind::Serial => Arc::new(Serial),
+            BackendKind::Rayon { chunk } => Arc::new(Rayon { chunk: chunk.max(1) }),
+        }
+    }
+
+    /// Parse a config/CLI name (`"serial"` or `"rayon"`), with `chunk`
+    /// applying to the rayon variant.
+    pub fn parse(name: &str, chunk: usize) -> Option<BackendKind> {
+        match name {
+            "serial" => Some(BackendKind::Serial),
+            "rayon" => Some(BackendKind::Rayon { chunk: chunk.max(1) }),
+            _ => None,
+        }
+    }
+
+    /// Display label, e.g. `"rayon(chunk=4)"`.
+    pub fn label(&self) -> String {
+        match self {
+            BackendKind::Serial => "serial".into(),
+            BackendKind::Rayon { chunk } => format!("rayon(chunk={chunk})"),
+        }
+    }
+
+    /// Whether this backend executes machines concurrently.
+    pub fn is_parallel(&self) -> bool {
+        !matches!(self, BackendKind::Serial)
+    }
+}
+
+/// Order-preserving indexed map over `0..n` through a backend: the result
+/// at position `i` is `f(i)` no matter how the backend scheduled the work.
+/// (The slot-writer machinery lives in [`pool::map_indexed_with`] so the
+/// `unsafe` has a single home.)
+pub fn map_indexed<R, F>(backend: &dyn ExecBackend, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    pool::map_indexed_with(n, |work| backend.for_each(n, work), f)
+}
+
+/// Order-preserving map over a slice through a backend.
+pub fn map_slice<T, R, F>(backend: &dyn ExecBackend, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    map_indexed(backend, items.len(), |i| f(i, &items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_kinds() -> Vec<BackendKind> {
+        vec![
+            BackendKind::Serial,
+            BackendKind::Rayon { chunk: 1 },
+            BackendKind::Rayon { chunk: 7 },
+        ]
+    }
+
+    #[test]
+    fn backends_agree_with_serial_reference() {
+        let reference: Vec<u64> = (0..129u64).map(|i| i * i + 1).collect();
+        for kind in all_kinds() {
+            let backend = kind.build();
+            let got = map_indexed(backend.as_ref(), 129, |i| (i as u64) * (i as u64) + 1);
+            assert_eq!(got, reference, "{}", kind.label());
+        }
+    }
+
+    #[test]
+    fn map_slice_preserves_order() {
+        let items: Vec<u32> = (0..64).rev().collect();
+        for kind in all_kinds() {
+            let backend = kind.build();
+            let got = map_slice(backend.as_ref(), &items, |i, &x| (i, x));
+            for (i, &(gi, gx)) in got.iter().enumerate() {
+                assert_eq!(gi, i);
+                assert_eq!(gx, items[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        for kind in all_kinds() {
+            let backend = kind.build();
+            let got: Vec<u8> = map_indexed(backend.as_ref(), 0, |_| unreachable!());
+            assert!(got.is_empty());
+        }
+    }
+
+    #[test]
+    fn kind_parse_and_label_roundtrip() {
+        assert_eq!(BackendKind::parse("serial", 9), Some(BackendKind::Serial));
+        assert_eq!(BackendKind::parse("rayon", 4), Some(BackendKind::Rayon { chunk: 4 }));
+        assert_eq!(BackendKind::parse("rayon", 0), Some(BackendKind::Rayon { chunk: 1 }));
+        assert_eq!(BackendKind::parse("cuda", 1), None);
+        assert_eq!(BackendKind::Serial.label(), "serial");
+        assert_eq!(BackendKind::Rayon { chunk: 4 }.label(), "rayon(chunk=4)");
+        assert!(!BackendKind::Serial.is_parallel());
+        assert!(BackendKind::Rayon { chunk: 1 }.is_parallel());
+    }
+
+    #[test]
+    fn rayon_backend_handles_nested_fanout() {
+        let backend = BackendKind::Rayon { chunk: 1 }.build();
+        let outer = map_indexed(backend.as_ref(), 4, |i| {
+            let inner = map_indexed(backend.as_ref(), 8, |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        assert_eq!(outer.len(), 4);
+        assert_eq!(outer[0], (0..8).sum::<usize>());
+    }
+}

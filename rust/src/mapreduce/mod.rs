@@ -5,19 +5,23 @@
 //! `O(√(nk))` elements, one central machine with memory relaxed by a
 //! `Õ(·)` factor, and computation proceeding in synchronous rounds. The
 //! simulator is the *measurement instrument* for the reproduction: it
-//! executes each round (optionally in parallel across simulated machines
-//! via rayon), accounts resident memory and communication in elements — the
-//! unit of the paper's analysis — and can hard-enforce the budgets.
+//! executes each round across the simulated machines through a pluggable
+//! execution substrate ([`backend::ExecBackend`]: serial, thread-pool, and
+//! room for heavier backends), accounts resident memory and communication
+//! in elements — the unit of the paper's analysis — and can hard-enforce
+//! the budgets. Per-round accounting includes oracle calls split into
+//! batched (block-marginal) vs scalar traffic.
 
+pub mod backend;
 pub mod partition;
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::core::{derive_seed, ElementId, Error, Result};
 use crate::metrics::{MrMetrics, RoundStat};
-use crate::util::pool::parallel_map;
+use crate::oracle::OracleCounters;
+use backend::{BackendKind, ExecBackend};
 use partition::{default_machines, partition_and_sample, sample_probability, Partitioned};
 
 /// Cluster construction parameters.
@@ -32,12 +36,18 @@ pub struct ClusterConfig {
     /// If true, exceeding an MRC memory budget aborts with
     /// [`Error::MemoryBudget`] instead of just being recorded.
     pub enforce_memory: bool,
-    /// Execute worker machines in parallel with rayon.
+    /// Legacy machine-parallelism switch: `true` = thread-pool execution,
+    /// `false` = serial. Superseded by [`ClusterConfig::backend`]; consulted
+    /// only when `backend` is `None` (see [`ClusterConfig::backend_kind`]).
     pub parallel: bool,
-    /// Shared oracle-call counter (from [`crate::oracle::CountingOracle`]);
+    /// Execution backend for worker rounds; `None` derives one from the
+    /// legacy `parallel` flag.
+    pub backend: Option<BackendKind>,
+    /// Shared oracle-query counters (from [`crate::oracle::CountingOracle`]);
     /// wired by the coordinator so every algorithm's cluster reports
-    /// per-round oracle calls. Not part of any serialized config.
-    pub call_counter: Option<Arc<AtomicU64>>,
+    /// per-round oracle calls with the batched-vs-scalar split. Not part of
+    /// any serialized config.
+    pub call_counter: Option<Arc<OracleCounters>>,
 }
 
 impl Default for ClusterConfig {
@@ -48,8 +58,22 @@ impl Default for ClusterConfig {
             seed: 0xC0FFEE,
             enforce_memory: false,
             parallel: true,
+            backend: None,
             call_counter: None,
         }
+    }
+}
+
+impl ClusterConfig {
+    /// The effective backend selector: the explicit `backend` field when
+    /// set, else the legacy `parallel` flag mapped to `Rayon{chunk:1}` /
+    /// `Serial`.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.unwrap_or(if self.parallel {
+            BackendKind::Rayon { chunk: 1 }
+        } else {
+            BackendKind::Serial
+        })
     }
 }
 
@@ -113,15 +137,20 @@ impl<A: CommSize, B: CommSize, C: CommSize> CommSize for (A, B, C) {
     }
 }
 
-/// The simulated cluster: shards, broadcast sample, and metering state.
+/// The simulated cluster: shards, broadcast sample, execution backend, and
+/// metering state.
 pub struct MrCluster {
     cfg: ClusterConfig,
     shards: Vec<Vec<ElementId>>,
     sample: Vec<ElementId>,
     metrics: MrMetrics,
-    /// Optional shared oracle-call counter (from [`crate::oracle::CountingOracle`]);
-    /// snapshotted around each round so `RoundStat::oracle_calls` is per-round.
-    call_counter: Option<Arc<AtomicU64>>,
+    /// The execution substrate worker rounds run on (from
+    /// [`ClusterConfig::backend_kind`]).
+    exec: Arc<dyn ExecBackend>,
+    /// Optional shared oracle counters (from [`crate::oracle::CountingOracle`]);
+    /// snapshotted around each round so `RoundStat::oracle_calls` /
+    /// `batched_calls` / `oracle_batches` are per-round.
+    call_counter: Option<Arc<OracleCounters>>,
 }
 
 impl MrCluster {
@@ -144,6 +173,7 @@ impl MrCluster {
             shards,
             sample,
             metrics: MrMetrics { rounds: Vec::new(), n, k, machines: m, sample_size },
+            exec: cfg.backend_kind().build(),
             call_counter: cfg.call_counter.clone(),
         };
         // Round 0: the input distribution itself. Every machine receives its
@@ -154,14 +184,14 @@ impl MrCluster {
             max_shard + sample_size,
             n + (m + 1) * sample_size,
             sample_size,
-            0,
+            (0, 0, 0),
             std::time::Duration::ZERO,
         )?;
         Ok(cluster)
     }
 
-    /// Attach a shared oracle-call counter for per-round accounting.
-    pub fn with_call_counter(mut self, counter: Arc<AtomicU64>) -> Self {
+    /// Attach shared oracle counters for per-round accounting.
+    pub fn with_call_counter(mut self, counter: Arc<OracleCounters>) -> Self {
         self.call_counter = Some(counter);
         self
     }
@@ -207,14 +237,14 @@ impl MrCluster {
         self.cfg.seed
     }
 
-    fn calls_snapshot(&self) -> u64 {
-        self.call_counter.as_ref().map_or(0, |c| c.load(Ordering::Relaxed))
+    fn calls_snapshot(&self) -> (u64, u64, u64) {
+        self.call_counter.as_ref().map_or((0, 0, 0), |c| c.snapshot())
     }
 
-    /// Execute one synchronous worker round: `f` runs on every machine
-    /// (rayon-parallel if configured); outputs are shipped to the central
-    /// machine. `extra_resident` accounts broadcast state beyond shard+sample
-    /// (e.g. a partial solution `G`, ≤ k elements).
+    /// Execute one synchronous worker round: `f` runs on every machine,
+    /// scheduled by the cluster's [`ExecBackend`]; outputs are shipped to
+    /// the central machine. `extra_resident` accounts broadcast state
+    /// beyond shard+sample (e.g. a partial solution `G`, ≤ k elements).
     pub fn worker_round<T, F>(&mut self, name: &str, extra_resident: usize, f: F) -> Result<Vec<T>>
     where
         T: CommSize + Send,
@@ -223,7 +253,7 @@ impl MrCluster {
         let start = Instant::now();
         let calls0 = self.calls_snapshot();
         let sample = &self.sample;
-        let outputs: Vec<T> = parallel_map(&self.shards, self.cfg.parallel, |id, shard| {
+        let outputs: Vec<T> = backend::map_slice(self.exec.as_ref(), &self.shards, |id, shard| {
             f(MachineCtx { id, shard, sample })
         });
         let max_resident = self
@@ -233,7 +263,7 @@ impl MrCluster {
             .max()
             .unwrap_or(0);
         let total_sent: usize = outputs.iter().map(CommSize::comm_size).sum();
-        let calls = self.calls_snapshot() - calls0;
+        let calls = delta(calls0, self.calls_snapshot());
         self.record_round(
             name,
             self.shards.len(),
@@ -256,7 +286,7 @@ impl MrCluster {
         let start = Instant::now();
         let calls0 = self.calls_snapshot();
         let out = f();
-        let calls = self.calls_snapshot() - calls0;
+        let calls = delta(calls0, self.calls_snapshot());
         self.record_round(name, 0, 0, 0, received, calls, start.elapsed())?;
         Ok(out)
     }
@@ -280,7 +310,7 @@ impl MrCluster {
         let start = Instant::now();
         let calls0 = self.calls_snapshot();
         let out = f();
-        let calls = self.calls_snapshot() - calls0;
+        let calls = delta(calls0, self.calls_snapshot());
         let machines = self.shards.len();
         self.record_round(name, machines, max_resident, total_sent, central_recv, calls, start.elapsed())?;
         Ok(out)
@@ -288,7 +318,15 @@ impl MrCluster {
 
     /// Whether worker rounds execute machine closures in parallel.
     pub fn parallel(&self) -> bool {
-        self.cfg.parallel
+        self.cfg.backend_kind().is_parallel()
+    }
+
+    /// The execution backend worker rounds are scheduled on. Algorithms
+    /// that fan out work *inside* a round (per-guess planning, per-machine
+    /// filtering across guesses) run it through the same backend so one
+    /// config knob governs all parallelism.
+    pub fn exec(&self) -> &Arc<dyn ExecBackend> {
+        &self.exec
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -299,9 +337,10 @@ impl MrCluster {
         max_resident: usize,
         total_sent: usize,
         central_recv: usize,
-        oracle_calls: u64,
+        calls: (u64, u64, u64),
         wall: std::time::Duration,
     ) -> Result<()> {
+        let (oracle_calls, batched_calls, oracle_batches) = calls;
         self.metrics.rounds.push(RoundStat {
             name: name.to_string(),
             machines,
@@ -309,6 +348,8 @@ impl MrCluster {
             total_sent,
             central_recv,
             oracle_calls,
+            batched_calls,
+            oracle_batches,
             wall,
         });
         if self.cfg.enforce_memory && name != "r0:partition+sample" {
@@ -328,6 +369,15 @@ impl MrCluster {
 /// Derive a per-machine RNG seed for randomized per-machine logic.
 pub fn machine_seed(cluster_seed: u64, round: usize, machine: usize) -> u64 {
     derive_seed(cluster_seed, ((round as u64) << 32) | machine as u64)
+}
+
+/// Per-round delta of `(total, batched, batches)` counter snapshots.
+fn delta(before: (u64, u64, u64), after: (u64, u64, u64)) -> (u64, u64, u64) {
+    (
+        after.0.saturating_sub(before.0),
+        after.1.saturating_sub(before.1),
+        after.2.saturating_sub(before.2),
+    )
 }
 
 #[cfg(test)]
@@ -408,6 +458,55 @@ mod tests {
             v
         });
         assert!(err.is_err() || c.metrics().peak_central_recv() < c.metrics().central_budget());
+    }
+
+    #[test]
+    fn explicit_backend_overrides_legacy_flag() {
+        let cfg_ser = ClusterConfig {
+            parallel: true,
+            backend: Some(BackendKind::Serial),
+            ..ClusterConfig::default()
+        };
+        assert_eq!(cfg_ser.backend_kind(), BackendKind::Serial);
+        let c = MrCluster::new(100, 4, &cfg_ser).unwrap();
+        assert!(!c.parallel());
+        assert_eq!(c.exec().name(), "serial");
+
+        let cfg_ray = ClusterConfig { parallel: false, ..ClusterConfig::default() };
+        assert_eq!(cfg_ray.backend_kind(), BackendKind::Serial);
+        let cfg_ray = ClusterConfig {
+            parallel: false,
+            backend: Some(BackendKind::Rayon { chunk: 2 }),
+            ..ClusterConfig::default()
+        };
+        let c = MrCluster::new(100, 4, &cfg_ray).unwrap();
+        assert!(c.parallel());
+        assert_eq!(c.exec().name(), "rayon");
+    }
+
+    #[test]
+    fn every_backend_yields_identical_round_outputs() {
+        let f = |ctx: MachineCtx<'_>| -> Vec<ElementId> {
+            ctx.shard.iter().filter(|&&e| e % 5 == 0).copied().collect()
+        };
+        let kinds = [
+            BackendKind::Serial,
+            BackendKind::Rayon { chunk: 1 },
+            BackendKind::Rayon { chunk: 3 },
+        ];
+        let mut reference: Option<Vec<Vec<ElementId>>> = None;
+        for kind in kinds {
+            let mut c = MrCluster::new(500, 8, &ClusterConfig {
+                backend: Some(kind),
+                ..cfg(4)
+            })
+            .unwrap();
+            let out = c.worker_round("r", 0, f).unwrap();
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => assert_eq!(&out, r, "{} diverged", kind.label()),
+            }
+        }
     }
 
     #[test]

@@ -19,8 +19,14 @@ pub struct RoundStat {
     pub total_sent: usize,
     /// Elements received by the central machine this round.
     pub central_recv: usize,
-    /// Oracle calls issued during the round (workers + central).
+    /// Oracle calls issued during the round (workers + central; batched
+    /// calls count as their block length).
     pub oracle_calls: u64,
+    /// Of `oracle_calls`, the queries served through the block-marginal
+    /// path ([`crate::oracle::OracleState::marginals`]).
+    pub batched_calls: u64,
+    /// Number of block-marginal calls issued during the round.
+    pub oracle_batches: u64,
     /// Wall-clock time of the simulated round.
     pub wall: Duration,
 }
@@ -35,6 +41,8 @@ impl RoundStat {
             ("total_sent", Json::Num(self.total_sent as f64)),
             ("central_recv", Json::Num(self.central_recv as f64)),
             ("oracle_calls", Json::Num(self.oracle_calls as f64)),
+            ("batched_calls", Json::Num(self.batched_calls as f64)),
+            ("oracle_batches", Json::Num(self.oracle_batches as f64)),
             ("wall_us", Json::Num(self.wall.as_micros() as f64)),
         ])
     }
@@ -82,6 +90,16 @@ impl MrMetrics {
         self.rounds.iter().map(|r| r.oracle_calls).sum()
     }
 
+    /// Total queries served through the block-marginal path.
+    pub fn total_batched_calls(&self) -> u64 {
+        self.rounds.iter().map(|r| r.batched_calls).sum()
+    }
+
+    /// Total block-marginal calls across rounds.
+    pub fn total_oracle_batches(&self) -> u64 {
+        self.rounds.iter().map(|r| r.oracle_batches).sum()
+    }
+
     /// Total simulated wall time.
     pub fn total_wall(&self) -> Duration {
         self.rounds.iter().map(|r| r.wall).sum()
@@ -127,6 +145,8 @@ mod tests {
             total_sent: sent,
             central_recv: recv,
             oracle_calls: 10,
+            batched_calls: 6,
+            oracle_batches: 2,
             wall: Duration::from_micros(100),
         }
     }
@@ -145,6 +165,8 @@ mod tests {
         assert_eq!(m.peak_central_recv(), 30);
         assert_eq!(m.total_communication(), 80);
         assert_eq!(m.total_oracle_calls(), 20);
+        assert_eq!(m.total_batched_calls(), 12);
+        assert_eq!(m.total_oracle_batches(), 4);
         assert_eq!(m.total_wall(), Duration::from_micros(200));
         assert!(m.machine_budget() >= (1000f64 * 10.0).sqrt() as usize);
     }

@@ -157,6 +157,29 @@ impl OracleState for AdvState {
         }
     }
 
+    /// Block path: the two per-block-invariant scale factors (`o_scale`
+    /// and the distractor discount) are hoisted once per block.
+    fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(es.len(), out.len());
+        let opt_gain = self.o_scale() * self.data.v_star;
+        let discount = 1.0 - self.count_o as f64 / self.data.k as f64;
+        for (o, &e) in out.iter_mut().zip(es) {
+            *o = if self.sel.contains(e) {
+                0.0
+            } else if self.is_optimal_id(e) {
+                opt_gain
+            } else {
+                (self.data.distractor[e as usize] * discount).max(0.0)
+            };
+        }
+    }
+
+    fn reset(&mut self) {
+        self.sel.clear();
+        self.sum_s = 0.0;
+        self.count_o = 0;
+    }
+
     fn insert(&mut self, e: ElementId) {
         if !self.sel.insert(e) {
             return;

@@ -101,9 +101,19 @@ struct ComState {
 }
 
 impl ComState {
-    fn entries_of(&self, e: ElementId) -> &[(u32, f64)] {
-        let d = &self.data;
-        &d.entries[d.offsets[e as usize] as usize..d.offsets[e as usize + 1] as usize]
+    /// Per-element gain kernel shared by the scalar and block paths, so
+    /// both return bit-identical values.
+    #[inline]
+    fn gain_of(&self, e: ElementId) -> f64 {
+        let d = &*self.data;
+        let (lo, hi) = (d.offsets[e as usize] as usize, d.offsets[e as usize + 1] as usize);
+        let phi = d.phi;
+        let mut gain = 0.0;
+        for &(g, w) in &d.entries[lo..hi] {
+            let m = self.mass[g as usize];
+            gain += phi.eval(m + w) - phi.eval(m);
+        }
+        gain
     }
 }
 
@@ -116,13 +126,22 @@ impl OracleState for ComState {
         if self.sel.contains(e) {
             return 0.0;
         }
-        let phi = self.data.phi;
-        let mut gain = 0.0;
-        for &(g, w) in self.entries_of(e) {
-            let m = self.mass[g as usize];
-            gain += phi.eval(m + w) - phi.eval(m);
+        self.gain_of(e)
+    }
+
+    /// Block path: one incidence sweep per block with member tests and
+    /// data pointers hoisted out of the virtual call.
+    fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(es.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(es) {
+            *o = if self.sel.contains(e) { 0.0 } else { self.gain_of(e) };
         }
-        gain
+    }
+
+    fn reset(&mut self) {
+        self.mass.fill(0.0);
+        self.sel.clear();
+        self.value = 0.0;
     }
 
     fn insert(&mut self, e: ElementId) {

@@ -2,9 +2,21 @@
 //! value-oracle queries across all states (thread-safe), so experiments can
 //! report oracle complexity alongside rounds and memory.
 //!
-//! Batched marginal calls count as `len` queries — the metric is the
-//! *oracle-call complexity* of the algorithm, independent of whether a
-//! backend amortizes the batch.
+//! Counting distinguishes the *scalar* path from the *block* path: a
+//! batched [`OracleState::marginals`] call counts as `len` queries toward
+//! the total (amortization inside a backend is not rewarded) and
+//! additionally as `len` **batched** queries in one **batch** — so metrics
+//! can report how much of an algorithm's oracle traffic actually flows
+//! through the block pipeline.
+//!
+//! Note that the total is a property of the *scan strategy*, not just the
+//! algorithm: the block-lazy ThresholdGreedy
+//! ([`crate::algorithms::threshold`]) evaluates whole blocks up front and
+//! re-queries candidates invalidated by an insertion, so its count can
+//! exceed the element-at-a-time scalar scan's by up to one block (the
+//! `k`-stop tail) plus one query per insertion-invalidated survivor —
+//! while `Serial`/`Rayon` execution backends of the *same* strategy always
+//! report identical counts (asserted in `tests/batch_equivalence.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -12,31 +24,92 @@ use std::sync::Arc;
 use super::{Oracle, OracleState};
 use crate::core::ElementId;
 
+/// Shared oracle-query counters: total queries plus the batched-vs-scalar
+/// split. Cheap relaxed atomics; snapshot/reset from any thread.
+#[derive(Debug, Default)]
+pub struct OracleCounters {
+    total: AtomicU64,
+    batched: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl OracleCounters {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total queries (scalar + batched elements).
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Queries served through the block path ([`OracleState::marginals`]).
+    pub fn batched(&self) -> u64 {
+        self.batched.load(Ordering::Relaxed)
+    }
+
+    /// Number of block calls.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Queries served one at a time (`total − batched`).
+    pub fn scalar(&self) -> u64 {
+        self.total().saturating_sub(self.batched())
+    }
+
+    /// Consistent-enough snapshot `(total, batched, batches)` for
+    /// per-round deltas.
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (self.total(), self.batched(), self.batches())
+    }
+
+    /// Zero all counters.
+    pub fn reset(&self) {
+        self.total.store(0, Ordering::Relaxed);
+        self.batched.store(0, Ordering::Relaxed);
+        self.batches.store(0, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn record_scalar(&self, n: u64) {
+        self.total.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn record_batch(&self, len: u64) {
+        self.total.fetch_add(len, Ordering::Relaxed);
+        self.batched.fetch_add(len, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// Oracle decorator that counts queries issued through any of its states.
 pub struct CountingOracle<O: Oracle> {
     inner: O,
-    calls: Arc<AtomicU64>,
+    counters: Arc<OracleCounters>,
 }
 
 impl<O: Oracle> CountingOracle<O> {
-    /// Wrap an oracle with a fresh counter.
+    /// Wrap an oracle with fresh counters.
     pub fn new(inner: O) -> Self {
-        CountingOracle { inner, calls: Arc::new(AtomicU64::new(0)) }
+        CountingOracle { inner, counters: Arc::new(OracleCounters::new()) }
     }
 
     /// Total marginal/value queries so far.
     pub fn calls(&self) -> u64 {
-        self.calls.load(Ordering::Relaxed)
+        self.counters.total()
     }
 
-    /// Reset the counter (e.g. between benchmark phases).
+    /// Reset the counters (e.g. between benchmark phases).
     pub fn reset(&self) {
-        self.calls.store(0, Ordering::Relaxed);
+        self.counters.reset();
     }
 
-    /// Shared handle to the counter (for metrics snapshots inside rounds).
-    pub fn counter(&self) -> Arc<AtomicU64> {
-        Arc::clone(&self.calls)
+    /// Shared handle to the counters (for metrics snapshots inside rounds).
+    pub fn counter(&self) -> Arc<OracleCounters> {
+        Arc::clone(&self.counters)
     }
 
     /// Access the wrapped oracle.
@@ -51,18 +124,18 @@ impl<O: Oracle> Oracle for CountingOracle<O> {
     }
 
     fn state(&self) -> Box<dyn OracleState> {
-        Box::new(CountingState { inner: self.inner.state(), calls: Arc::clone(&self.calls) })
+        Box::new(CountingState { inner: self.inner.state(), counters: Arc::clone(&self.counters) })
     }
 
     fn value(&self, set: &[ElementId]) -> f64 {
-        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.counters.record_scalar(1);
         self.inner.value(set)
     }
 }
 
 struct CountingState {
     inner: Box<dyn OracleState>,
-    calls: Arc<AtomicU64>,
+    counters: Arc<OracleCounters>,
 }
 
 impl OracleState for CountingState {
@@ -71,7 +144,7 @@ impl OracleState for CountingState {
     }
 
     fn marginal(&self, e: ElementId) -> f64 {
-        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.counters.record_scalar(1);
         self.inner.marginal(e)
     }
 
@@ -84,11 +157,18 @@ impl OracleState for CountingState {
     }
 
     fn clone_state(&self) -> Box<dyn OracleState> {
-        Box::new(CountingState { inner: self.inner.clone_state(), calls: Arc::clone(&self.calls) })
+        Box::new(CountingState {
+            inner: self.inner.clone_state(),
+            counters: Arc::clone(&self.counters),
+        })
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
     }
 
     fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
-        self.calls.fetch_add(es.len() as u64, Ordering::Relaxed);
+        self.counters.record_batch(es.len() as u64);
         self.inner.marginals(es, out);
     }
 }
@@ -115,6 +195,25 @@ mod tests {
         assert_eq!(o.calls(), 6);
         o.reset();
         assert_eq!(o.calls(), 0);
+    }
+
+    #[test]
+    fn splits_batched_from_scalar_traffic() {
+        let o = CountingOracle::new(ModularOracle::new(vec![1.0; 10]));
+        let st = o.state();
+        st.marginal(0);
+        st.marginal(1);
+        let mut out = [0.0; 4];
+        st.marginals(&[2, 3, 4, 5], &mut out);
+        st.marginals(&[6, 7], &mut out[..2]);
+        let c = o.counter();
+        assert_eq!(c.total(), 8);
+        assert_eq!(c.batched(), 6);
+        assert_eq!(c.scalar(), 2);
+        assert_eq!(c.batches(), 2);
+        assert_eq!(c.snapshot(), (8, 6, 2));
+        c.reset();
+        assert_eq!(c.snapshot(), (0, 0, 0));
     }
 
     #[test]

@@ -91,9 +91,19 @@ struct CoverageState {
 }
 
 impl CoverageState {
-    fn items_of(&self, e: ElementId) -> &[u32] {
-        let d = &self.data;
-        &d.items[d.offsets[e as usize] as usize..d.offsets[e as usize + 1] as usize]
+    /// Per-element gain kernel shared by the scalar and block paths, so
+    /// both return bit-identical values.
+    #[inline]
+    fn gain_of(&self, e: ElementId) -> f64 {
+        let d = &*self.data;
+        let (lo, hi) = (d.offsets[e as usize] as usize, d.offsets[e as usize + 1] as usize);
+        let mut gain = 0.0;
+        for &j in &d.items[lo..hi] {
+            if !self.covered[j as usize] {
+                gain += d.weights[j as usize];
+            }
+        }
+        gain
     }
 }
 
@@ -106,13 +116,30 @@ impl OracleState for CoverageState {
         if self.sel.contains(e) {
             return 0.0;
         }
-        let mut gain = 0.0;
-        for &j in self.items_of(e) {
-            if !self.covered[j as usize] {
-                gain += self.data.weights[j as usize];
+        self.gain_of(e)
+    }
+
+    /// Block path: one CSR sweep per block with the member test and data
+    /// pointers hoisted out of the virtual call — the coverage hot path of
+    /// ThresholdFilter.
+    fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(es.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(es) {
+            *o = if self.sel.contains(e) { 0.0 } else { self.gain_of(e) };
+        }
+    }
+
+    fn reset(&mut self) {
+        let data = Arc::clone(&self.data);
+        for &e in self.sel.order() {
+            let (lo, hi) =
+                (data.offsets[e as usize] as usize, data.offsets[e as usize + 1] as usize);
+            for &j in &data.items[lo..hi] {
+                self.covered[j as usize] = false;
             }
         }
-        gain
+        self.sel.clear();
+        self.value = 0.0;
     }
 
     fn insert(&mut self, e: ElementId) {

@@ -96,9 +96,19 @@ struct CutState {
 }
 
 impl CutState {
-    fn edges_of(&self, v: ElementId) -> &[(u32, u32)] {
-        let d = &self.data;
-        &d.adj[d.offsets[v as usize] as usize..d.offsets[v as usize + 1] as usize]
+    /// Per-vertex gain kernel shared by the scalar and block paths, so
+    /// both return bit-identical values.
+    #[inline]
+    fn gain_of(&self, v: ElementId) -> f64 {
+        let d = &*self.data;
+        let (lo, hi) = (d.offsets[v as usize] as usize, d.offsets[v as usize + 1] as usize);
+        let mut gain = 0.0;
+        for &(_, eid) in &d.adj[lo..hi] {
+            if !self.covered[eid as usize] {
+                gain += d.weights[eid as usize];
+            }
+        }
+        gain
     }
 }
 
@@ -111,13 +121,29 @@ impl OracleState for CutState {
         if self.sel.contains(e) {
             return 0.0;
         }
-        let mut gain = 0.0;
-        for &(_, eid) in self.edges_of(e) {
-            if !self.covered[eid as usize] {
-                gain += self.data.weights[eid as usize];
+        self.gain_of(e)
+    }
+
+    /// Block path: one adjacency sweep per block with member tests and
+    /// data pointers hoisted out of the virtual call.
+    fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(es.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(es) {
+            *o = if self.sel.contains(e) { 0.0 } else { self.gain_of(e) };
+        }
+    }
+
+    fn reset(&mut self) {
+        let data = Arc::clone(&self.data);
+        for &v in self.sel.order() {
+            let (lo, hi) =
+                (data.offsets[v as usize] as usize, data.offsets[v as usize + 1] as usize);
+            for &(_, eid) in &data.adj[lo..hi] {
+                self.covered[eid as usize] = false;
             }
         }
-        gain
+        self.sel.clear();
+        self.value = 0.0;
     }
 
     fn insert(&mut self, e: ElementId) {

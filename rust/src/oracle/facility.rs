@@ -48,35 +48,46 @@ impl FacilityOracle {
 
 }
 
-/// The marginal row scan: `Σ_j max(row[j] − cur[j], 0)`.
-///
-/// Branchless (`max`) with 8 independent f32 lane accumulators so LLVM
-/// vectorizes the subtract/max/add chain; lane sums are folded into f64
-/// every `CHUNK` elements to keep the accumulation error at the f32-ulp
-/// level regardless of row length. ~8× faster than the scalar
-/// branchy/widening loop it replaces (see EXPERIMENTS.md §Perf).
+/// Column-tile width of the facility kernels: lane sums fold into f64
+/// every `TILE` columns (f32-ulp accuracy regardless of row length), and
+/// the block path walks the universe in `TILE`-column stripes so the
+/// coverage tile stays L1-resident across a whole candidate block.
+const TILE: usize = 1024;
+
+/// One tile of the marginal row scan: `Σ_j max(row[j] − cur[j], 0)` with 8
+/// independent f32 lane accumulators (LLVM vectorizes the
+/// subtract/max/add chain), folded to f64 at the end. Shared by the scalar
+/// and block paths so both produce bit-identical sums.
+#[inline]
+fn relu_dot_tile(row: &[f32], cur: &[f32]) -> f64 {
+    const LANES: usize = 8;
+    debug_assert_eq!(row.len(), cur.len());
+    let mut acc = [0.0f32; LANES];
+    let (mut r, mut c) = (row, cur);
+    while r.len() >= LANES {
+        for l in 0..LANES {
+            acc[l] += (r[l] - c[l]).max(0.0);
+        }
+        r = &r[LANES..];
+        c = &c[LANES..];
+    }
+    for l in 0..r.len() {
+        acc[l] += (r[l] - c[l]).max(0.0);
+    }
+    acc.iter().map(|&x| x as f64).sum::<f64>()
+}
+
+/// The full marginal row scan: `Σ_j max(row[j] − cur[j], 0)`, tile by
+/// tile. ~8× faster than the scalar branchy/widening loop it replaced
+/// (see EXPERIMENTS.md §Perf).
 #[inline]
 pub(crate) fn relu_dot_gain(row: &[f32], cur: &[f32]) -> f64 {
-    const LANES: usize = 8;
-    const CHUNK: usize = 1024;
     debug_assert_eq!(row.len(), cur.len());
     let mut gain = 0.0f64;
     let mut i = 0;
     while i < row.len() {
-        let end = (i + CHUNK).min(row.len());
-        let mut acc = [0.0f32; LANES];
-        let (mut r, mut c) = (&row[i..end], &cur[i..end]);
-        while r.len() >= LANES {
-            for l in 0..LANES {
-                acc[l] += (r[l] - c[l]).max(0.0);
-            }
-            r = &r[LANES..];
-            c = &c[LANES..];
-        }
-        for l in 0..r.len() {
-            acc[l] += (r[l] - c[l]).max(0.0);
-        }
-        gain += acc.iter().map(|&x| x as f64).sum::<f64>();
+        let end = (i + TILE).min(row.len());
+        gain += relu_dot_tile(&row[i..end], &cur[i..end]);
         i = end;
     }
     gain
@@ -144,6 +155,38 @@ impl OracleState for FacilityState {
 
     fn clone_state(&self) -> Box<dyn OracleState> {
         Box::new(self.clone())
+    }
+
+    fn reset(&mut self) {
+        self.cur.fill(0.0);
+        self.sel.clear();
+        self.value = 0.0;
+    }
+
+    /// Block path, column-tiled: the universe is walked in `TILE`-column
+    /// stripes with all candidate rows visited per stripe, so the coverage
+    /// tile is read from L1 for the whole block instead of being
+    /// re-streamed per row. Per-element sums accumulate in tile order —
+    /// exactly [`relu_dot_gain`]'s order — so results are bit-identical to
+    /// the scalar path.
+    fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(es.len(), out.len());
+        out.fill(0.0);
+        let d = self.data.d;
+        let sim = &self.data.sim;
+        let mut col = 0;
+        while col < d {
+            let end = (col + TILE).min(d);
+            let cur_tile = &self.cur[col..end];
+            for (o, &e) in out.iter_mut().zip(es) {
+                if self.sel.contains(e) {
+                    continue;
+                }
+                let base = e as usize * d;
+                *o += relu_dot_tile(&sim[base + col..base + end], cur_tile);
+            }
+            col = end;
+        }
     }
 }
 

@@ -4,9 +4,14 @@
 //! marginal queries are served by the AOT-compiled JAX/Pallas artifact
 //! (`artifacts/marginals.hlo.txt`) through [`crate::runtime::MarginalsEngine`].
 //! Scalar queries fall back to the native row scan so the oracle is a
-//! drop-in [`Oracle`] anywhere; algorithms that batch (ThresholdFilter over
-//! a shard) get the accelerated path automatically via
-//! [`OracleState::marginals`].
+//! drop-in [`Oracle`] anywhere.
+//!
+//! This oracle is *not* a special case in the algorithms: since batched
+//! evaluation ([`OracleState::marginals`]) is the primary query interface
+//! of every hot loop, the PJRT engine is simply one more backend of that
+//! block path — algorithms see identical semantics over the native
+//! column-tiled kernel and the device kernel. Gated behind the `xla`
+//! feature (the default build is offline-clean).
 
 use std::sync::Arc;
 
@@ -101,6 +106,12 @@ impl OracleState for HloFacilityState {
 
     fn selected(&self) -> &[ElementId] {
         self.sel.order()
+    }
+
+    fn reset(&mut self) {
+        self.native.reset();
+        self.cur_padded.fill(0.0);
+        self.sel.clear();
     }
 
     fn clone_state(&self) -> Box<dyn OracleState> {

@@ -9,9 +9,34 @@
 //!
 //! [`Oracle`] is the immutable instance: the data defining `f` plus a
 //! factory for fresh states. Oracles keep their data behind `Arc` so states
-//! are `'static` and cheap to fan out across simulated machines (rayon).
+//! are `'static` and cheap to fan out across simulated machines.
+//!
+//! ## The block-marginal API
+//!
+//! Batched evaluation ([`OracleState::marginals`]) is the *primary* query
+//! interface: every hot loop in `algorithms/` (threshold filter/greedy,
+//! stochastic sampling, top-singleton scans) drives the oracle in blocks of
+//! [`MARGINAL_BLOCK`] candidates, and every oracle family implements a real
+//! SoA/block evaluation rather than the scalar fallback — per-element gain
+//! kernels are shared between the scalar and block paths so the two return
+//! **bit-identical** f64 values (the contract `tests/batch_equivalence.rs`
+//! asserts). Accelerated backends (the PJRT `MarginalsEngine` behind the
+//! `xla` feature) slot in as just another implementation of the same block
+//! method.
+//!
+//! [`StatePool`] recycles evaluation states across simulated machines and
+//! rounds, so per-round state construction (and its O(universe) allocation)
+//! drops out of the round hot path.
+
+use std::sync::Mutex;
 
 use crate::core::ElementId;
+
+/// Preferred candidate-block size for [`OracleState::marginals`] callers.
+/// Matches the AOT tile of the PJRT engine so accelerated oracles get full
+/// device tiles; the native backends are insensitive to the exact value as
+/// long as blocks amortize the virtual dispatch.
+pub const MARGINAL_BLOCK: usize = 256;
 
 pub mod adversarial;
 pub mod concave;
@@ -19,10 +44,11 @@ pub mod counting;
 pub mod coverage;
 pub mod cut;
 pub mod facility;
+#[cfg(feature = "xla")]
 pub mod hlo;
 pub mod modular;
 
-pub use counting::CountingOracle;
+pub use counting::{CountingOracle, OracleCounters};
 
 /// A monotone submodular instance `f : 2^V -> R_{>=0}` with `V = 0..n`.
 pub trait Oracle: Send + Sync {
@@ -48,11 +74,28 @@ pub trait Oracle: Send + Sync {
 
     /// A cheap upper bound on `OPT_k` used by tests and OPT-guessing:
     /// `k · max_e f({e})` (valid for any monotone submodular `f`).
+    ///
+    /// Drives the singleton scan through the block-marginal path so
+    /// OPT-guessing is served by the batched backends instead of `n`
+    /// scalar calls.
     fn opt_upper_bound(&self, k: usize) -> f64 {
         let st = self.state();
+        let n = self.ground_size() as ElementId;
+        // fixed per-block id/result buffers: no O(n) allocation.
+        let mut ids = [0 as ElementId; MARGINAL_BLOCK];
+        let mut buf = [0.0f64; MARGINAL_BLOCK];
         let mut best: f64 = 0.0;
-        for e in 0..self.ground_size() as ElementId {
-            best = best.max(st.marginal(e));
+        let mut start: ElementId = 0;
+        while start < n {
+            let len = ((n - start) as usize).min(MARGINAL_BLOCK);
+            for (i, slot) in ids[..len].iter_mut().enumerate() {
+                *slot = start + i as ElementId;
+            }
+            st.marginals(&ids[..len], &mut buf[..len]);
+            for &v in &buf[..len] {
+                best = best.max(v);
+            }
+            start += len as ElementId;
         }
         best * k as f64
     }
@@ -81,9 +124,17 @@ pub trait OracleState: Send + Sync {
     /// guesses or simulated machines).
     fn clone_state(&self) -> Box<dyn OracleState>;
 
-    /// Batched marginals — the hot path of ThresholdFilter. The default
-    /// loops over [`OracleState::marginal`]; accelerated oracles (PJRT)
-    /// override it with a single device call per block.
+    /// Return to `G = ∅` in place, retaining allocations — the reuse hook
+    /// behind [`StatePool`]. Must leave the state indistinguishable from a
+    /// fresh [`Oracle::state`].
+    fn reset(&mut self);
+
+    /// Batched marginals — the primary query path of every algorithm hot
+    /// loop (threshold filter/greedy, stochastic sampling, singleton
+    /// scans). The default loops over [`OracleState::marginal`]; every
+    /// in-repo family overrides it with a real block evaluation sharing
+    /// the scalar path's per-element kernel (bit-identical results), and
+    /// accelerated oracles (PJRT) serve one device call per block.
     fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
         debug_assert_eq!(es.len(), out.len());
         for (o, &e) in out.iter_mut().zip(es) {
@@ -138,6 +189,72 @@ impl<T: Oracle + ?Sized> Oracle for &T {
     }
 }
 
+/// Recycles [`OracleState`]s across simulated machines and rounds.
+///
+/// Worker rounds used to allocate a fresh state (and its O(universe)
+/// buffers) per machine per round; the pool hands out reset states
+/// instead. [`StatePool::acquire`] returns a guard that releases the state
+/// back to the pool on drop, after [`OracleState::reset`] — so a pooled
+/// acquire is indistinguishable from `oracle.state()` (asserted by tests)
+/// while reusing the covered-bitmap / coverage-vector allocations.
+///
+/// Thread-safe: acquire/release from any worker thread (the free list is a
+/// mutex-guarded stack; contention is one lock op per machine per round,
+/// negligible next to the round body).
+pub struct StatePool<'a> {
+    oracle: &'a dyn Oracle,
+    free: Mutex<Vec<Box<dyn OracleState>>>,
+}
+
+impl<'a> StatePool<'a> {
+    /// New empty pool over `oracle`.
+    pub fn new(oracle: &'a dyn Oracle) -> Self {
+        StatePool { oracle, free: Mutex::new(Vec::new()) }
+    }
+
+    /// Take a state positioned at `G = ∅` (recycled if available).
+    pub fn acquire(&self) -> PooledState<'_, 'a> {
+        let state = self.free.lock().expect("state pool poisoned").pop();
+        let state = state.unwrap_or_else(|| self.oracle.state());
+        PooledState { pool: self, state: Some(state) }
+    }
+
+    /// States currently parked in the pool (for tests/metrics).
+    pub fn idle(&self) -> usize {
+        self.free.lock().expect("state pool poisoned").len()
+    }
+}
+
+/// Guard over a pooled state; derefs to `dyn OracleState` and returns the
+/// reset state to the pool on drop.
+pub struct PooledState<'p, 'a> {
+    pool: &'p StatePool<'a>,
+    state: Option<Box<dyn OracleState>>,
+}
+
+impl std::ops::Deref for PooledState<'_, '_> {
+    type Target = dyn OracleState;
+
+    fn deref(&self) -> &Self::Target {
+        self.state.as_deref().expect("pooled state present until drop")
+    }
+}
+
+impl std::ops::DerefMut for PooledState<'_, '_> {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        self.state.as_deref_mut().expect("pooled state present until drop")
+    }
+}
+
+impl Drop for PooledState<'_, '_> {
+    fn drop(&mut self) {
+        if let Some(mut state) = self.state.take() {
+            state.reset();
+            self.pool.free.lock().expect("state pool poisoned").push(state);
+        }
+    }
+}
+
 /// Shared helper: track selection order + membership for states.
 #[derive(Debug, Clone, Default)]
 pub(crate) struct Selection {
@@ -167,6 +284,14 @@ impl Selection {
 
     pub fn order(&self) -> &[ElementId] {
         &self.order
+    }
+
+    /// Back to the empty selection, keeping the membership allocation.
+    pub fn clear(&mut self) {
+        for &e in &self.order {
+            self.member[e as usize] = false;
+        }
+        self.order.clear();
     }
 }
 
@@ -250,14 +375,30 @@ pub(crate) mod axioms {
                 st.value()
             );
 
-            // batch marginals agree with scalar marginals.
+            // batch marginals are bit-identical to scalar marginals (the
+            // block path shares the scalar per-element kernel).
             let probes: Vec<ElementId> = rest.iter().take(8).copied().collect();
             let mut batch = vec![0.0; probes.len()];
             st_a.marginals(&probes, &mut batch);
             for (i, &e) in probes.iter().enumerate() {
-                assert!(
-                    (batch[i] - st_a.marginal(e)).abs() <= 1e-6,
-                    "batch marginal mismatch at {e}"
+                assert_eq!(
+                    batch[i].to_bits(),
+                    st_a.marginal(e).to_bits(),
+                    "batch marginal mismatch at {e} (trial {trial})"
+                );
+            }
+
+            // reset leaves the state indistinguishable from a fresh one.
+            let mut st_r = st_b.clone_state();
+            st_r.reset();
+            let fresh = oracle.state();
+            assert!(st_r.is_empty(), "reset state must be empty");
+            assert_eq!(st_r.value().to_bits(), fresh.value().to_bits(), "reset value");
+            for &e in b_set.iter().chain(rest.iter()).take(6) {
+                assert_eq!(
+                    st_r.marginal(e).to_bits(),
+                    fresh.marginal(e).to_bits(),
+                    "reset marginal mismatch at {e} (trial {trial})"
                 );
             }
         }
@@ -277,5 +418,60 @@ mod tests {
         assert!(s.contains(3));
         assert!(!s.contains(0));
         assert_eq!(s.order(), &[3, 1]);
+        s.clear();
+        assert!(s.order().is_empty());
+        assert!(!s.contains(3));
+        assert!(s.insert(3), "clear must forget membership");
+    }
+
+    #[test]
+    fn state_pool_recycles_and_resets() {
+        let o = crate::workload::coverage::CoverageGen::new(40, 30, 4).build(1);
+        let pool = StatePool::new(&o);
+        assert_eq!(pool.idle(), 0);
+        {
+            let mut st = pool.acquire();
+            st.insert(3);
+            st.insert(7);
+            assert_eq!(st.len(), 2);
+        }
+        assert_eq!(pool.idle(), 1, "dropped state must return to the pool");
+        {
+            let st = pool.acquire();
+            assert_eq!(pool.idle(), 0, "recycled, not re-allocated");
+            assert!(st.is_empty(), "recycled state must be reset");
+            let fresh = o.state();
+            for e in 0..40u32 {
+                assert_eq!(st.marginal(e).to_bits(), fresh.marginal(e).to_bits());
+            }
+        }
+        // concurrent acquire from worker threads is allowed.
+        let pool2 = StatePool::new(&o);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..8 {
+                        let mut st = pool2.acquire();
+                        st.insert(1);
+                    }
+                });
+            }
+        });
+        assert!(pool2.idle() >= 1 && pool2.idle() <= 4);
+    }
+
+    #[test]
+    fn opt_upper_bound_uses_batched_path() {
+        let o = crate::oracle::modular::ModularOracle::new(vec![1.0, 5.0, 2.0]);
+        assert_eq!(o.opt_upper_bound(2), 10.0);
+        // counting decorator: the scan must be issued as batches.
+        let c = CountingOracle::new(crate::oracle::modular::ModularOracle::new(vec![
+            1.0;
+            600
+        ]));
+        c.opt_upper_bound(3);
+        let counters = c.counter();
+        assert_eq!(counters.batched(), 600, "all singleton scans must be batched");
+        assert!(counters.batches() >= 2, "600 elements need >= 3 blocks of 256");
     }
 }

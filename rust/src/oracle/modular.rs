@@ -66,6 +66,19 @@ impl OracleState for ModularState {
         }
     }
 
+    /// Block path: a straight gather from the weight vector.
+    fn marginals(&self, es: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(es.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(es) {
+            *o = if self.sel.contains(e) { 0.0 } else { self.weights[e as usize] };
+        }
+    }
+
+    fn reset(&mut self) {
+        self.sel.clear();
+        self.value = 0.0;
+    }
+
     fn insert(&mut self, e: ElementId) {
         if self.sel.insert(e) {
             self.value += self.weights[e as usize];

@@ -22,14 +22,18 @@ pub fn num_threads() -> usize {
 }
 
 /// A type-erased index job: workers call `run(i)` for indices claimed from
-/// the shared cursor. The pointee lives on the submitting thread's stack;
-/// it is guaranteed valid until `remaining` hits zero (the submitter spins
-/// until then before returning).
+/// the shared cursor in granules of `chunk` (chunked claiming amortizes the
+/// atomic per cheap item while index-granular claiming load-balances skewed
+/// items). The pointee lives on the submitting thread's stack; it is
+/// guaranteed valid until `remaining` hits zero (the submitter spins until
+/// then before returning).
 struct IndexJob {
     /// Raw (possibly-dangling-after-completion) pointer to the work closure.
     work: *const (dyn Fn(usize) + Sync),
     cursor: AtomicUsize,
     n: usize,
+    /// Indices claimed per cursor bump (>= 1).
+    chunk: usize,
     /// Helpers still inside `run_all`.
     remaining: AtomicUsize,
 }
@@ -42,12 +46,14 @@ unsafe impl Sync for IndexJob {}
 impl IndexJob {
     fn run_all(&self) {
         loop {
-            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
-            if i >= self.n {
+            let lo = self.cursor.fetch_add(self.chunk, Ordering::Relaxed);
+            if lo >= self.n {
                 break;
             }
-            // SAFETY: pointer valid per the struct invariant.
-            unsafe { (*self.work)(i) };
+            for i in lo..(lo + self.chunk).min(self.n) {
+                // SAFETY: pointer valid per the struct invariant.
+                unsafe { (*self.work)(i) };
+            }
         }
     }
 }
@@ -89,9 +95,13 @@ fn pool() -> &'static PoolState {
 }
 
 /// Run `work(i)` for every `i < n`, sharded across the pool plus the
-/// calling thread. Blocks until all indices are done.
-fn run_indexed(n: usize, work: &(dyn Fn(usize) + Sync)) {
-    let helpers = num_threads().saturating_sub(1).min(n.saturating_sub(1));
+/// calling thread with `chunk`-granular work claiming. Blocks until all
+/// indices are done. This is the execution primitive behind
+/// [`crate::mapreduce::backend::Rayon`]; use `chunk = 1` for maximal load
+/// balancing of skewed items.
+pub fn run_indexed(n: usize, chunk: usize, work: &(dyn Fn(usize) + Sync)) {
+    let chunk = chunk.max(1);
+    let helpers = num_threads().saturating_sub(1).min(n.saturating_sub(1) / chunk);
     if helpers == 0 {
         for i in 0..n {
             work(i);
@@ -110,6 +120,7 @@ fn run_indexed(n: usize, work: &(dyn Fn(usize) + Sync)) {
         work: work_ptr,
         cursor: AtomicUsize::new(0),
         n,
+        chunk,
         remaining: AtomicUsize::new(helpers),
     });
     {
@@ -126,6 +137,37 @@ fn run_indexed(n: usize, work: &(dyn Fn(usize) + Sync)) {
     }
 }
 
+/// Order-preserving indexed map over an arbitrary executor: `run` must
+/// invoke the passed closure exactly once for every `i < n` (in any order,
+/// from any threads) before returning; the result at position `i` is
+/// `f(i)`.
+///
+/// This is the single home of the slot-writer `unsafe` — both
+/// [`parallel_map`] and the backend layer
+/// ([`crate::mapreduce::backend::map_indexed`]) funnel through it rather
+/// than duplicating the raw-pointer write pattern.
+pub fn map_indexed_with<R, E, F>(n: usize, run: E, f: F) -> Vec<R>
+where
+    R: Send,
+    E: FnOnce(&(dyn Fn(usize) + Sync)),
+    F: Fn(usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let out_ref = &out_ptr;
+    let work = |i: usize| {
+        let r = f(i);
+        // SAFETY: the executor contract guarantees each index runs exactly
+        // once, so the write is unaliased; `out` outlives `run`.
+        unsafe { out_ref.write(i, Some(r)) };
+    };
+    run(&work);
+    out.into_iter().map(|o| o.expect("executor ran every index")).collect()
+}
+
 /// Apply `f(index, &item)` to every item, in parallel when `parallel` is
 /// true, preserving order. `f` must be `Sync` (shared read-only captures).
 pub fn parallel_map<T, R, F>(items: &[T], parallel: bool, f: F) -> Vec<R>
@@ -138,20 +180,11 @@ where
     if !parallel || n <= 1 {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let out_ptr = SendPtr(out.as_mut_ptr());
-    let out_ref = &out_ptr;
-    let work = |i: usize| {
-        let r = f(i, &items[i]);
-        // SAFETY: each index is claimed exactly once by the cursor, so the
-        // write is unaliased; `out` outlives `run_indexed`.
-        unsafe { out_ref.write(i, Some(r)) };
-    };
-    run_indexed(n, &work);
-    out.into_iter().map(|o| o.expect("worker wrote every slot")).collect()
+    map_indexed_with(n, |work| run_indexed(n, 1, work), |i| f(i, &items[i]))
 }
 
-/// Pointer wrapper asserting cross-thread transferability (see SAFETY above).
+/// Pointer wrapper asserting cross-thread transferability (see SAFETY in
+/// [`map_indexed_with`]).
 struct SendPtr<T>(*mut T);
 unsafe impl<T> Sync for SendPtr<T> {}
 
@@ -219,5 +252,21 @@ mod tests {
     #[test]
     fn threads_env_override() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn chunked_claiming_covers_every_index() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for chunk in [1usize, 3, 8, 64, 1000] {
+            let n = 257;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            let work = |i: usize| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            };
+            run_indexed(n, chunk, &work);
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} with chunk {chunk}");
+            }
+        }
     }
 }

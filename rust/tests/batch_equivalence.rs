@@ -1,0 +1,283 @@
+//! The refactor's equivalence contract, asserted end to end:
+//!
+//! 1. **Batched ≡ scalar.** Every algorithm must produce element-for-element
+//!    identical selections whether the oracle serves marginals through its
+//!    real block implementation or through the forced scalar fallback
+//!    (`ScalarOnly` below suppresses every family's `marginals` override).
+//! 2. **Backend independence.** `Serial` and `Rayon` execution backends
+//!    must produce identical per-machine outputs, identical solutions, and
+//!    identical `MrMetrics` accounting (memory, communication, oracle-call
+//!    totals and the batched/scalar split) — wall time excepted.
+
+use std::sync::Arc;
+
+use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::dense::DenseTwoRound;
+use mrsub::algorithms::greedy::lazy_greedy;
+use mrsub::algorithms::multi_round::MultiRound;
+use mrsub::algorithms::mz_coreset::MzCoreset;
+use mrsub::algorithms::randgreedi::RandGreeDi;
+use mrsub::algorithms::sample_prune::SamplePrune;
+use mrsub::algorithms::sparse::SparseTwoRound;
+use mrsub::algorithms::stochastic::StochasticGreedy;
+use mrsub::algorithms::threshold::{threshold_filter, threshold_greedy, threshold_greedy_scalar};
+use mrsub::algorithms::two_round::TwoRoundKnownOpt;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::coordinator::run_experiment;
+use mrsub::mapreduce::backend::BackendKind;
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::oracle::concave::{ConcaveOverModularOracle, Phi};
+use mrsub::oracle::modular::ModularOracle;
+use mrsub::oracle::{Oracle, OracleState};
+use mrsub::util::rng::Rng;
+use mrsub::workload::adversarial::AdversarialGen;
+use mrsub::workload::coverage::CoverageGen;
+use mrsub::workload::facility::FacilityGen;
+use mrsub::workload::graph::GraphGen;
+use mrsub::workload::planted::PlantedCoverageGen;
+use mrsub::workload::{Instance, WorkloadGen};
+
+/// Decorator that hides the inner oracle's block `marginals` override, so
+/// every batched call falls back to the trait's scalar loop — the
+/// reference semantics the block implementations must reproduce.
+struct ScalarOnly<O>(O);
+
+impl<O: Oracle> Oracle for ScalarOnly<O> {
+    fn ground_size(&self) -> usize {
+        self.0.ground_size()
+    }
+
+    fn state(&self) -> Box<dyn OracleState> {
+        Box::new(ScalarOnlyState(self.0.state()))
+    }
+}
+
+struct ScalarOnlyState(Box<dyn OracleState>);
+
+impl OracleState for ScalarOnlyState {
+    fn value(&self) -> f64 {
+        self.0.value()
+    }
+
+    fn marginal(&self, e: mrsub::ElementId) -> f64 {
+        self.0.marginal(e)
+    }
+
+    fn insert(&mut self, e: mrsub::ElementId) {
+        self.0.insert(e);
+    }
+
+    fn selected(&self) -> &[mrsub::ElementId] {
+        self.0.selected()
+    }
+
+    fn clone_state(&self) -> Box<dyn OracleState> {
+        Box::new(ScalarOnlyState(self.0.clone_state()))
+    }
+
+    fn reset(&mut self) {
+        self.0.reset();
+    }
+
+    // NOTE: no `marginals` override — the default scalar loop applies.
+}
+
+/// One small instance per oracle family.
+fn family_instances(seed: u64) -> Vec<Instance> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let concave: Vec<Vec<(u32, f64)>> = (0..300)
+        .map(|_| {
+            (0..3)
+                .map(|_| (rng.gen_range(0..40) as u32, rng.gen_range_f64(0.1, 2.0)))
+                .collect()
+        })
+        .collect();
+    let modular: Vec<f64> = (0..300).map(|_| rng.gen_range_f64(0.0, 10.0)).collect();
+    vec![
+        CoverageGen::new(400, 200, 5).generate(seed),
+        FacilityGen::new(200, 60).generate(seed),
+        GraphGen::erdos_renyi(250, 0.05).generate(seed),
+        Instance::new(
+            "concave",
+            Arc::new(ConcaveOverModularOracle::new(300, 40, concave, Phi::Sqrt)),
+        ),
+        Instance::new("modular", Arc::new(ModularOracle::new(modular))),
+        AdversarialGen::new(3, 30).generate(seed),
+        PlantedCoverageGen::dense(10, 300, 600).generate(seed),
+    ]
+}
+
+/// Every paper algorithm + baseline under test, with OPT-dependent ones
+/// parameterized from `opt_hint`.
+fn all_algorithms(opt_hint: f64) -> Vec<Box<dyn MrAlgorithm>> {
+    vec![
+        Box::new(TwoRoundKnownOpt::new(opt_hint)),
+        Box::new(MultiRound::known(2, opt_hint)),
+        Box::new(MultiRound::guessing(2, 0.25)),
+        Box::new(DenseTwoRound::new(0.15)),
+        Box::new(SparseTwoRound::new(0.15)),
+        Box::new(CombinedTwoRound::new(0.15)),
+        Box::new(RandGreeDi),
+        Box::new(MzCoreset),
+        Box::new(SamplePrune::new(0.25)),
+        Box::new(StochasticGreedy::new(0.1)),
+    ]
+}
+
+fn cfg(seed: u64, backend: BackendKind) -> ClusterConfig {
+    ClusterConfig { seed, backend: Some(backend), ..ClusterConfig::default() }
+}
+
+#[test]
+fn batched_selections_identical_to_scalar_path() {
+    for inst in family_instances(3) {
+        let k = 12.min(inst.n);
+        let opt_hint = inst
+            .known_opt
+            .unwrap_or_else(|| lazy_greedy(&inst.oracle, k).value)
+            .max(1e-6);
+        for alg in all_algorithms(opt_hint) {
+            let c = cfg(9, BackendKind::Serial);
+            let batched = alg.run(&inst.oracle, k, &c).expect("batched run");
+            let scalar_oracle = ScalarOnly(Arc::clone(&inst.oracle));
+            let scalar = alg.run(&scalar_oracle, k, &c).expect("scalar run");
+            assert_eq!(
+                batched.solution.elements, scalar.solution.elements,
+                "{} on {}: batched selection diverged from scalar path",
+                alg.name(),
+                inst.name
+            );
+            assert_eq!(
+                batched.solution.value.to_bits(),
+                scalar.solution.value.to_bits(),
+                "{} on {}: value bits diverged",
+                alg.name(),
+                inst.name
+            );
+        }
+    }
+}
+
+#[test]
+fn building_blocks_identical_to_scalar_path() {
+    for inst in family_instances(5) {
+        let oracle = &inst.oracle;
+        let ids: Vec<mrsub::ElementId> = (0..oracle.ground_size() as mrsub::ElementId).collect();
+        let mut st = oracle.state();
+        st.insert(ids[ids.len() / 3]);
+        st.insert(ids[ids.len() / 2]);
+        let tau = st.marginal(ids[0]).max(0.4);
+
+        // filter: block path vs per-element definition.
+        let kept = threshold_filter(st.as_ref(), &ids, tau);
+        let expect: Vec<_> = ids.iter().copied().filter(|&e| st.marginal(e) >= tau).collect();
+        assert_eq!(kept, expect, "filter diverged on {}", inst.name);
+
+        // greedy: block-lazy scan vs scalar reference scan.
+        let mut st_a = st.clone_state();
+        let mut st_b = st.clone_state();
+        let a = threshold_greedy(st_a.as_mut(), &ids, tau, 15);
+        let b = threshold_greedy_scalar(st_b.as_mut(), &ids, tau, 15);
+        assert_eq!(a, b, "greedy selection diverged on {}", inst.name);
+        assert_eq!(st_a.value().to_bits(), st_b.value().to_bits());
+    }
+}
+
+#[test]
+fn serial_and_rayon_backends_agree_on_outputs_and_metrics() {
+    let backends =
+        [BackendKind::Serial, BackendKind::Rayon { chunk: 1 }, BackendKind::Rayon { chunk: 4 }];
+    for inst in family_instances(7).into_iter().take(4) {
+        let k = 10.min(inst.n);
+        let opt_hint = inst
+            .known_opt
+            .unwrap_or_else(|| lazy_greedy(&inst.oracle, k).value)
+            .max(1e-6);
+        for alg in all_algorithms(opt_hint) {
+            let mut reference: Option<mrsub::coordinator::ExperimentRecord> = None;
+            for backend in backends {
+                let rec = run_experiment(&inst, alg.as_ref(), k, &cfg(13, backend))
+                    .expect("experiment");
+                match &reference {
+                    None => reference = Some(rec),
+                    Some(r) => {
+                        let label =
+                            format!("{} on {} via {}", alg.name(), inst.name, backend.label());
+                        assert_eq!(rec.value.to_bits(), r.value.to_bits(), "{label}: value");
+                        assert_eq!(rec.oracle_calls, r.oracle_calls, "{label}: oracle calls");
+                        assert_eq!(
+                            rec.batched_oracle_calls, r.batched_oracle_calls,
+                            "{label}: batched calls"
+                        );
+                        assert_eq!(rec.oracle_batches, r.oracle_batches, "{label}: batches");
+                        assert_eq!(rec.communication, r.communication, "{label}: comm");
+                        assert_eq!(
+                            rec.peak_machine_memory, r.peak_machine_memory,
+                            "{label}: peak mem"
+                        );
+                        assert_eq!(
+                            rec.peak_central_recv, r.peak_central_recv,
+                            "{label}: central recv"
+                        );
+                        assert_eq!(
+                            rec.metrics.rounds.len(),
+                            r.metrics.rounds.len(),
+                            "{label}: round count"
+                        );
+                        for (a, b) in rec.metrics.rounds.iter().zip(&r.metrics.rounds) {
+                            assert_eq!(a.name, b.name, "{label}: round name");
+                            assert_eq!(a.machines, b.machines, "{label}: {} machines", a.name);
+                            assert_eq!(
+                                a.max_resident, b.max_resident,
+                                "{label}: {} resident",
+                                a.name
+                            );
+                            assert_eq!(a.total_sent, b.total_sent, "{label}: {} sent", a.name);
+                            assert_eq!(
+                                a.central_recv, b.central_recv,
+                                "{label}: {} central",
+                                a.name
+                            );
+                            assert_eq!(
+                                a.oracle_calls, b.oracle_calls,
+                                "{label}: {} calls",
+                                a.name
+                            );
+                            assert_eq!(
+                                a.batched_calls, b.batched_calls,
+                                "{label}: {} batched",
+                                a.name
+                            );
+                            assert_eq!(
+                                a.oracle_batches, b.oracle_batches,
+                                "{label}: {} batches",
+                                a.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn block_path_carries_the_oracle_traffic() {
+    // The point of the refactor: on the 2-round pipeline the batched share
+    // of oracle traffic must dominate.
+    let inst = CoverageGen::new(2000, 1000, 6).generate(2);
+    let rec = run_experiment(
+        &inst,
+        &CombinedTwoRound::new(0.1),
+        25,
+        &cfg(4, BackendKind::Rayon { chunk: 1 }),
+    )
+    .expect("experiment");
+    assert!(rec.oracle_batches > 0);
+    assert!(
+        rec.batched_oracle_calls * 2 > rec.oracle_calls,
+        "batched {} of {} calls — block path must dominate",
+        rec.batched_oracle_calls,
+        rec.oracle_calls
+    );
+}

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification entry point (documented in ROADMAP.md).
+#
+#   ./verify.sh          build + test + fmt + clippy
+#   ./verify.sh fast     build + test only
+#
+# The default build is offline-clean (no crates.io deps, `xla` feature off).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+
+if [ "${1:-full}" != "fast" ]; then
+    cargo fmt --check
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "verify: OK"
