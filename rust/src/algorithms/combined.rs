@@ -9,10 +9,13 @@
 //! completes both and returns the better solution. Exactly 2 MapReduce
 //! rounds on one random partition.
 
-use super::dense::{dense_central, dense_prepare, dense_worker, transpose_survivors};
-use super::sparse::{sparse_central, sparse_worker};
+use super::dense::{
+    dense_central, dense_guess_filters, dense_prepare, scatter_guess_reply, transpose_survivors,
+};
+use super::sparse::sparse_central;
 use super::{AlgResult, MrAlgorithm};
 use crate::core::{ElementId, Result};
+use crate::mapreduce::wire::{RoundTask, TaskReply};
 use crate::mapreduce::{ClusterConfig, MrCluster};
 use crate::oracle::Oracle;
 
@@ -44,18 +47,28 @@ impl MrAlgorithm for CombinedTwoRound {
         let exec = std::sync::Arc::clone(cluster.exec());
         let plan = dense_prepare(oracle, cluster.sample(), k, self.eps, exec.as_ref());
 
-        // Round 1: each machine runs both workers.
-        let plan_ref = &plan;
-        let (c_, k_) = (self.c, k);
-        let states = crate::oracle::StatePool::new(oracle);
-        let outputs: Vec<(Vec<Vec<ElementId>>, Vec<ElementId>)> = cluster
-            .worker_round("r1:dense+sparse", plan.resident(), |ctx| {
-                (dense_worker(plan_ref, k_, ctx.shard), sparse_worker(&states, ctx.shard, k_, c_))
-            })?;
+        // Round 1: each machine runs both workers — one Batch task, two
+        // programs, one synchronous round.
+        let task = RoundTask::Batch(vec![
+            RoundTask::MultiFilter {
+                persist: false,
+                guesses: dense_guess_filters(&plan, k),
+                drop: Vec::new(),
+            },
+            RoundTask::TopSingletons { k, c: self.c },
+        ]);
+        let replies = cluster.shard_round("r1:dense+sparse", plan.resident(), oracle, &task)?;
 
-        let (dense_parts, sparse_parts): (Vec<_>, Vec<_>) = outputs.into_iter().unzip();
+        let mut dense_parts: Vec<Vec<Vec<ElementId>>> = Vec::with_capacity(replies.len());
+        let mut pool: Vec<ElementId> = Vec::new();
+        for reply in replies {
+            let mut parts = reply.into_batch().into_iter();
+            let dense_reply = parts.next().map(TaskReply::into_multi).unwrap_or_default();
+            let sparse_reply = parts.next().map(TaskReply::into_ids).unwrap_or_default();
+            dense_parts.push(scatter_guess_reply(dense_reply, plan.taus.len()));
+            pool.extend(sparse_reply);
+        }
         let survivors = transpose_survivors(&dense_parts, plan.taus.len());
-        let mut pool: Vec<ElementId> = sparse_parts.into_iter().flatten().collect();
         pool.sort_unstable();
 
         // Round 2: central completes both; keep the better.

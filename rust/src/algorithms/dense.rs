@@ -12,10 +12,11 @@
 //! `v ≥ OPT/(2k)` under denseness, the guesses must descend *from* `v`, so
 //! we use `v/(1+ε)^j` — same set of guesses, unambiguous direction.
 
-use super::threshold::{block_max_marginal, merge_sorted, threshold_filter, threshold_greedy};
+use super::threshold::{block_max_marginal, merge_sorted, threshold_greedy};
 use super::{finish, AlgResult, MrAlgorithm};
 use crate::core::{ElementId, Result, Solution};
 use crate::mapreduce::backend::{self, ExecBackend};
+use crate::mapreduce::wire::{GuessFilter, RoundTask};
 use crate::mapreduce::{ClusterConfig, MrCluster};
 use crate::oracle::{Oracle, OracleState};
 
@@ -76,25 +77,37 @@ pub(crate) fn dense_prepare(
     DensePlan { taus, g0 }
 }
 
-/// Worker side: filter a shard against every guess's `G₀`.
+/// The plan's worker round as a typed task: one [`GuessFilter`] per τ_j
+/// whose `G₀` is not already full.
 ///
 /// When a guess's `G₀` is already full (`|G₀| = k`) nothing is shipped for
 /// it — the central completion cannot extend a full solution, and this is
 /// exactly the "we are done and do not send anything to the central
 /// machine" case of the paper's Lemma 2 that keeps the central budget at
-/// `Õ(√(nk))`.
-pub(crate) fn dense_worker(plan: &DensePlan, k: usize, shard: &[ElementId]) -> Vec<Vec<ElementId>> {
+/// `Õ(√(nk))` — so the guess is simply omitted from the task.
+pub(crate) fn dense_guess_filters(plan: &DensePlan, k: usize) -> Vec<GuessFilter> {
     plan.taus
         .iter()
         .zip(&plan.g0)
-        .map(|(&tau, g0)| {
-            if g0.len() >= k {
-                Vec::new()
-            } else {
-                threshold_filter(g0.as_ref(), shard, tau)
-            }
-        })
+        .enumerate()
+        .filter(|(_, (_, g0))| g0.len() < k)
+        .map(|(j, (&tau, g0))| GuessFilter { id: j as u32, base: g0.selected().to_vec(), tau })
         .collect()
+}
+
+/// Scatter one machine's `Multi` reply into the per-guess row shape
+/// [`transpose_survivors`] expects (empty rows for omitted/full guesses).
+pub(crate) fn scatter_guess_reply(
+    parts: Vec<(u32, Vec<ElementId>)>,
+    guesses: usize,
+) -> Vec<Vec<ElementId>> {
+    let mut rows = vec![Vec::new(); guesses];
+    for (id, ids) in parts {
+        if let Some(row) = rows.get_mut(id as usize) {
+            *row = ids;
+        }
+    }
+    rows
 }
 
 /// Central side: complete every guess over its survivors; return the best.
@@ -139,10 +152,16 @@ impl MrAlgorithm for DenseTwoRound {
         let exec = std::sync::Arc::clone(cluster.exec());
         let plan = dense_prepare(oracle, cluster.sample(), k, self.eps, exec.as_ref());
 
-        let plan_ref = &plan;
-        let per_machine = cluster.worker_round("r1:dense-filter", plan.resident(), |ctx| {
-            dense_worker(plan_ref, k, ctx.shard)
-        })?;
+        let task = RoundTask::MultiFilter {
+            persist: false,
+            guesses: dense_guess_filters(&plan, k),
+            drop: Vec::new(),
+        };
+        let per_machine: Vec<Vec<Vec<ElementId>>> = cluster
+            .shard_round("r1:dense-filter", plan.resident(), oracle, &task)?
+            .into_iter()
+            .map(|r| scatter_guess_reply(r.into_multi(), plan.taus.len()))
+            .collect();
         let survivors = transpose_survivors(&per_machine, plan.taus.len());
 
         let received: usize =

@@ -17,11 +17,12 @@
 //! the *same* physical rounds with memory accounted multiplicatively, as
 //! the paper prescribes.
 
-use super::threshold::{block_max_marginal, merge_sorted, threshold_filter, threshold_greedy};
+use super::threshold::{merge_sorted, threshold_greedy};
 use super::{finish, AlgResult, MrAlgorithm};
 use crate::core::{threshold_bound, ElementId, Result, Solution};
-use crate::mapreduce::{backend, ClusterConfig, MrCluster};
-use crate::oracle::{Oracle, OracleState, StatePool};
+use crate::mapreduce::wire::{GuessFilter, RoundTask, TaskReply};
+use crate::mapreduce::{ClusterConfig, MrCluster};
+use crate::oracle::{Oracle, OracleState};
 
 /// Where the algorithm gets OPT from.
 #[derive(Debug, Clone, Copy)]
@@ -98,13 +99,11 @@ impl MrAlgorithm for MultiRound {
             OptSource::Guess { eps } => {
                 assert!(eps > 0.0);
                 // Extra initial round: global max singleton v => OPT ∈ [v, k·v].
-                // Block-marginal scan over pooled per-machine states.
-                let pool = StatePool::new(oracle);
-                let maxes = cluster.worker_round("r0b:max-singleton", 0, |ctx| {
-                    let st = pool.acquire();
-                    block_max_marginal(&*st, ctx.shard)
-                })?;
-                let v = maxes.into_iter().fold(0.0f64, f64::max);
+                // Typed shard round (block-marginal scan; worker-side on
+                // the process backend).
+                let maxes =
+                    cluster.shard_round("r0b:max-singleton", 0, oracle, &RoundTask::MaxSingleton)?;
+                let v = maxes.iter().map(TaskReply::as_scalar).fold(0.0f64, f64::max);
                 if v <= 0.0 {
                     return Ok(AlgResult {
                         solution: Solution::empty(),
@@ -134,53 +133,92 @@ impl MrAlgorithm for MultiRound {
             .collect();
         let m = cluster.machines();
         let sample: Vec<ElementId> = cluster.sample().to_vec();
+        // Which guesses' machine-resident shards have been evicted (see
+        // the drop list below).
+        let mut dropped = vec![false; guesses.len()];
 
         for l in 1..=self.t {
             // Worker half-round: sample-greedy (identical on all machines,
-            // executed once here) + per-machine filtering, for every guess.
-            let mut sent_total = 0usize;
-            let mut resident = vec![sample.len(); m];
-            {
-                let taus: Vec<f64> =
-                    guesses.iter().map(|g| self.alpha(g.opt, k, l)).collect();
-                for (g, &tau) in guesses.iter_mut().zip(&taus) {
-                    if g.done {
-                        continue;
-                    }
-                    threshold_greedy(g.state.as_mut(), &sample, tau, k);
-                    if g.state.len() >= k {
-                        g.done = true;
-                        g.shards.iter_mut().for_each(Vec::clear);
-                    }
+            // executed once here — Lemma 1's fixed-order determinism) and
+            // then a typed MultiFilter round: every active guess filters
+            // its persistently shrinking per-machine shard against the
+            // broadcast G at α_ℓ. On the process backend the persistent
+            // shards live *inside* the worker processes (shipped once at
+            // init, retained across all t thresholds); the coordinator
+            // mirrors them from the returned survivors for accounting and
+            // the central completion.
+            for g in guesses.iter_mut() {
+                if g.done {
+                    continue;
                 }
-                let exec = std::sync::Arc::clone(cluster.exec());
-                let active: Vec<(usize, &Guess, f64)> = guesses
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, g)| !g.done)
-                    .map(|(gi, g)| (gi, g, self.alpha(g.opt, k, l)))
-                    .collect();
-                // filter machine-major so the backend parallelizes across machines.
-                let per_machine: Vec<Vec<(usize, Vec<ElementId>)>> =
-                    backend::map_indexed(exec.as_ref(), m, |i| {
-                        active
-                            .iter()
-                            .map(|&(gi, g, tau)| {
-                                (gi, threshold_filter(g.state.as_ref(), &g.shards[i], tau))
-                            })
-                            .collect()
-                    });
-                // write back + account.
-                for (i, res) in per_machine.into_iter().enumerate() {
-                    for (gi, filtered) in res {
-                        resident[i] += guesses[gi].shards[i].len() + guesses[gi].state.len();
-                        sent_total += filtered.len();
-                        guesses[gi].shards[i] = filtered;
-                    }
+                let tau = self.alpha(g.opt, k, l);
+                threshold_greedy(g.state.as_mut(), &sample, tau, k);
+                if g.state.len() >= k {
+                    g.done = true;
+                    g.shards.iter_mut().for_each(Vec::clear);
+                }
+            }
+            // Evict machine-resident shards of every guess that finished
+            // since the last task (whether in the sample-greedy above or
+            // in the previous central completion).
+            let drop_ids: Vec<u32> = guesses
+                .iter()
+                .enumerate()
+                .filter(|&(gi, g)| g.done && !dropped[gi])
+                .map(|(gi, _)| gi as u32)
+                .collect();
+            for &id in &drop_ids {
+                dropped[id as usize] = true;
+            }
+            let active: Vec<usize> = guesses
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| !g.done)
+                .map(|(gi, _)| gi)
+                .collect();
+            let mut resident = vec![sample.len(); m];
+            for &gi in &active {
+                let g = &guesses[gi];
+                for (r, shard) in resident.iter_mut().zip(&g.shards) {
+                    *r += shard.len() + g.state.len();
                 }
             }
             let max_resident = resident.iter().copied().max().unwrap_or(0);
-            cluster.raw_round(&format!("r{l}a:sample-greedy+filter"), max_resident, sent_total, sent_total, || {})?;
+            let task = RoundTask::MultiFilter {
+                persist: true,
+                guesses: active
+                    .iter()
+                    .map(|&gi| {
+                        let g = &guesses[gi];
+                        GuessFilter {
+                            id: gi as u32,
+                            base: g.state.selected().to_vec(),
+                            tau: self.alpha(g.opt, k, l),
+                        }
+                    })
+                    .collect(),
+                drop: drop_ids,
+            };
+            let replies = cluster.shard_round_explicit(
+                &format!("r{l}a:sample-greedy+filter"),
+                max_resident,
+                oracle,
+                &task,
+            )?;
+            let mut sent_total = 0usize;
+            for (i, reply) in replies.into_iter().enumerate() {
+                for (gi, filtered) in reply.into_multi() {
+                    // ids cross a trust boundary on the process backend:
+                    // an unknown id is a worker bug, surfaced structurally.
+                    let Some(guess) = guesses.get_mut(gi as usize) else {
+                        return Err(crate::core::Error::Runtime(format!(
+                            "multi-filter reply carried unknown guess id {gi}"
+                        )));
+                    };
+                    sent_total += filtered.len();
+                    guess.shards[i] = filtered;
+                }
+            }
 
             // Central half-round: complete each guess over its survivors at
             // the same threshold; broadcast the new G (≤ k elements/guess).

@@ -13,6 +13,7 @@
 use super::greedy::lazy_greedy_over;
 use super::{AlgResult, MrAlgorithm};
 use crate::core::{ElementId, Result};
+use crate::mapreduce::wire::{RoundTask, TaskReply};
 use crate::mapreduce::{ClusterConfig, MrCluster};
 use crate::oracle::Oracle;
 
@@ -29,11 +30,11 @@ impl MrAlgorithm for MzCoreset {
         let n = oracle.ground_size();
         let mut cluster = MrCluster::new(n, k, cfg)?;
 
-        let states = crate::oracle::StatePool::new(oracle);
         let coresets: Vec<Vec<ElementId>> = cluster
-            .worker_round("r1:greedy-coreset", 0, |ctx| {
-                super::greedy::lazy_greedy_over_pooled(oracle, &states, ctx.shard, k).elements
-            })?;
+            .shard_round("r1:greedy-coreset", 0, oracle, &RoundTask::LocalGreedy { k })?
+            .into_iter()
+            .map(TaskReply::into_ids)
+            .collect();
 
         let union: Vec<ElementId> = {
             let mut u: Vec<ElementId> = coresets.into_iter().flatten().collect();

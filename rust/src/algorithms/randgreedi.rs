@@ -9,11 +9,12 @@
 //! duplication caveats (the no-duplication form loses a constant factor —
 //! exactly the gap the paper's thresholding closes).
 
-use super::greedy::{lazy_greedy_over, lazy_greedy_over_pooled};
+use super::greedy::lazy_greedy_over;
 use super::{AlgResult, MrAlgorithm};
 use crate::core::{ElementId, Result, Solution};
+use crate::mapreduce::wire::{RoundTask, TaskReply};
 use crate::mapreduce::{ClusterConfig, MrCluster};
-use crate::oracle::{Oracle, StatePool};
+use crate::oracle::Oracle;
 
 /// Barbosa et al.'s RandGreeDi (no duplication).
 #[derive(Debug, Clone, Copy, Default)]
@@ -28,11 +29,13 @@ impl MrAlgorithm for RandGreeDi {
         let n = oracle.ground_size();
         let mut cluster = MrCluster::new(n, k, cfg)?;
 
-        // Round 1: greedy per shard (recycled per-machine states).
-        let states = StatePool::new(oracle);
-        let locals: Vec<Vec<ElementId>> = cluster.worker_round("r1:local-greedy", 0, |ctx| {
-            lazy_greedy_over_pooled(oracle, &states, ctx.shard, k).elements
-        })?;
+        // Round 1: greedy per shard (typed round; worker-side on the
+        // process backend, recycled pooled states in-process).
+        let locals: Vec<Vec<ElementId>> = cluster
+            .shard_round("r1:local-greedy", 0, oracle, &RoundTask::LocalGreedy { k })?
+            .into_iter()
+            .map(TaskReply::into_ids)
+            .collect();
 
         // Best local solution (its value is recomputed centrally; the ids
         // are already on the central machine as part of the round-1 output).

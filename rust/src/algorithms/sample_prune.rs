@@ -11,11 +11,12 @@
 //! sample-then-prune structure and round complexity that E6 compares
 //! against.
 
-use super::threshold::{block_max_marginal, merge_sorted, threshold_filter, threshold_greedy};
+use super::threshold::{merge_sorted, threshold_filter, threshold_greedy};
 use super::{finish, AlgResult, MrAlgorithm};
 use crate::core::{derive_seed, ElementId, Result, Solution};
+use crate::mapreduce::wire::{RoundTask, TaskReply};
 use crate::mapreduce::{machine_seed, ClusterConfig, MrCluster};
-use crate::oracle::{Oracle, StatePool};
+use crate::oracle::Oracle;
 use crate::util::rng::Rng;
 
 /// Kumar et al.-style Sample&Prune threshold greedy.
@@ -45,13 +46,12 @@ impl MrAlgorithm for SamplePrune {
         let mut cluster = MrCluster::new(n, k, cfg)?;
         let budget = ((n as f64 * k as f64).sqrt().ceil() as usize).max(k);
 
-        // Round 1: global max singleton Δ (block scan over pooled states).
-        let states = StatePool::new(oracle);
-        let maxes = cluster.worker_round("r1:max-singleton", 0, |ctx| {
-            let st = states.acquire();
-            block_max_marginal(&*st, ctx.shard)
-        })?;
-        let delta = maxes.into_iter().fold(0.0f64, f64::max);
+        // Round 1: global max singleton Δ (typed shard round; worker-side
+        // on the process backend). The later prune+sample rounds carry
+        // per-machine RNG state and stay coordinator-side for now (see
+        // ROADMAP).
+        let maxes = cluster.shard_round("r1:max-singleton", 0, oracle, &RoundTask::MaxSingleton)?;
+        let delta = maxes.iter().map(TaskReply::as_scalar).fold(0.0f64, f64::max);
         if delta <= 0.0 {
             return Ok(AlgResult { solution: Solution::empty(), metrics: cluster.into_metrics() });
         }

@@ -11,6 +11,7 @@
 use super::threshold::{block_marginals, block_max_marginal, threshold_greedy};
 use super::{finish, AlgResult, MrAlgorithm};
 use crate::core::{ElementId, Result, Solution};
+use crate::mapreduce::wire::{RoundTask, TaskReply};
 use crate::mapreduce::{ClusterConfig, MrCluster};
 use crate::oracle::{Oracle, StatePool};
 
@@ -83,12 +84,10 @@ impl MrAlgorithm for SparseTwoRound {
     fn run(&self, oracle: &dyn Oracle, k: usize, cfg: &ClusterConfig) -> Result<AlgResult> {
         let n = oracle.ground_size();
         let mut cluster = MrCluster::new(n, k, cfg)?;
-        let (k_, c_) = (k, self.c);
-        let states = StatePool::new(oracle);
-        let per_machine = cluster.worker_round("r1:top-singletons", 0, |ctx| {
-            sparse_worker(&states, ctx.shard, k_, c_)
-        })?;
-        let mut pool: Vec<ElementId> = per_machine.into_iter().flatten().collect();
+        let task = RoundTask::TopSingletons { k, c: self.c };
+        let per_machine = cluster.shard_round("r1:top-singletons", 0, oracle, &task)?;
+        let mut pool: Vec<ElementId> =
+            per_machine.into_iter().flat_map(TaskReply::into_ids).collect();
         pool.sort_unstable();
 
         let received = pool.len();

@@ -12,9 +12,10 @@
 //! once and shared (its determinism is asserted by a test); per-machine
 //! memory accounting still charges the sample residency on every machine.
 
-use super::threshold::{merge_sorted, threshold_filter, threshold_greedy};
+use super::threshold::{merge_sorted, threshold_greedy};
 use super::{finish, AlgResult, MrAlgorithm};
-use crate::core::{Result, Solution};
+use crate::core::{ElementId, Result, Solution};
+use crate::mapreduce::wire::{RoundTask, TaskReply};
 use crate::mapreduce::{ClusterConfig, MrCluster};
 use crate::oracle::Oracle;
 
@@ -49,16 +50,19 @@ impl MrAlgorithm for TwoRoundKnownOpt {
 
         // Round 1: filter each shard against G0; ship survivors. If G0 is
         // already full, the completion cannot extend it — nothing is sent
-        // (Lemma 2's "we are done" case).
-        let g0_ref = &g0;
-        let g0_full = g0.len() >= k;
-        let survivors_per_machine = cluster.worker_round("r1:filter", g0.len(), |ctx| {
-            if g0_full {
-                Vec::new()
-            } else {
-                threshold_filter(g0_ref.as_ref(), ctx.shard, tau)
-            }
-        })?;
+        // (Lemma 2's "we are done" case). The filter is a typed shard
+        // round: on the process backend it executes inside the worker
+        // processes against their spec-rebuilt oracles.
+        let survivors_per_machine: Vec<Vec<ElementId>> = if g0.len() >= k {
+            cluster.worker_round("r1:filter", g0.len(), |_ctx| Vec::new())?
+        } else {
+            let task = RoundTask::Filter { base: g0.selected().to_vec(), tau };
+            cluster
+                .shard_round("r1:filter", g0.len(), oracle, &task)?
+                .into_iter()
+                .map(TaskReply::into_ids)
+                .collect()
+        };
         let survivors = merge_sorted(&survivors_per_machine);
 
         // Round 2: central completion from G0 over the survivors.

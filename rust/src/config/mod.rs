@@ -25,8 +25,10 @@
 //! [cluster]
 //! sample_factor = 4.0
 //! parallel = true          # legacy switch; superseded by `backend`
-//! backend = "rayon"        # serial | rayon (execution substrate)
+//! backend = "rayon"        # serial | rayon | process:N (execution substrate)
 //! chunk = 1                # rayon work-claim granularity
+//! worker_timeout_ms = 30000  # process backend: per-reply wait bound
+//! max_frame_mb = 64        # process backend: wire frame payload cap
 //! enforce_memory = false
 //! machines = 0             # 0 = paper default ceil(sqrt(n/k))
 //! ```
@@ -137,8 +139,25 @@ impl RunConfig {
             if let Some(name) = t.get("backend").and_then(|v| v.as_str()) {
                 let chunk = opt_usize(t, "chunk", 1);
                 cluster.backend = Some(BackendKind::parse(name, chunk).ok_or_else(|| {
-                    Error::Config(format!("unknown backend {name:?} (serial | rayon)"))
+                    Error::Config(format!(
+                        "unknown backend {name:?} (serial | rayon | process:N with N >= 1)"
+                    ))
                 })?);
+            }
+            if let Some(v) = t.get("worker_timeout_ms") {
+                let ms = v.as_u64().ok_or_else(|| {
+                    Error::Config("[cluster]: invalid integer \"worker_timeout_ms\"".into())
+                })?;
+                cluster.worker_timeout_ms = ClusterConfig::validate_worker_timeout_ms(ms)
+                    .map_err(|e| Error::Config(format!("[cluster]: {e}")))?;
+            }
+            if let Some(v) = t.get("max_frame_mb") {
+                let mb = v.as_usize().ok_or_else(|| {
+                    Error::Config("[cluster]: invalid integer \"max_frame_mb\"".into())
+                })?;
+                cluster.max_frame_bytes = ClusterConfig::validate_max_frame_mb(mb)
+                    .map_err(|e| Error::Config(format!("[cluster]: {e}")))?
+                    << 20;
             }
         }
         Ok(RunConfig { k, seed, instance, algorithm, cluster, output })
@@ -434,6 +453,77 @@ mod tests {
         let cfg = RunConfig::parse(&text("parallel = true\nbackend = \"serial\"")).unwrap();
         assert_eq!(cfg.cluster.backend_kind(), BackendKind::Serial);
         assert!(RunConfig::parse(&text("backend = \"gpu\"")).is_err());
+    }
+
+    #[test]
+    fn cluster_process_backend_parsed_and_validated() {
+        let text = |cluster: &str| {
+            format!(
+                r#"
+                k = 5
+                [instance]
+                kind = "coverage"
+                n = 40
+                universe = 30
+                avg_degree = 3
+                [algorithm]
+                kind = "greedy"
+                [cluster]
+                {cluster}
+            "#
+            )
+        };
+        let cfg = RunConfig::parse(&text("backend = \"process:4\"")).unwrap();
+        assert_eq!(cfg.cluster.backend, Some(BackendKind::Process { workers: 4 }));
+        assert_eq!(cfg.cluster.worker_timeout_ms, 30_000, "default timeout");
+        // bare "process" takes the worker count from `chunk`.
+        let cfg = RunConfig::parse(&text("backend = \"process\"\nchunk = 3")).unwrap();
+        assert_eq!(cfg.cluster.backend, Some(BackendKind::Process { workers: 3 }));
+        // process:0 must be rejected, not clamped.
+        assert!(RunConfig::parse(&text("backend = \"process:0\"")).is_err());
+
+        // timeout bounds: 0 and absurd values rejected, sane ones kept.
+        let cfg =
+            RunConfig::parse(&text("backend = \"process:2\"\nworker_timeout_ms = 5000")).unwrap();
+        assert_eq!(cfg.cluster.worker_timeout_ms, 5000);
+        assert!(RunConfig::parse(&text("worker_timeout_ms = 0")).is_err());
+        assert!(RunConfig::parse(&text("worker_timeout_ms = 99999999")).is_err());
+
+        // frame cap in MiB, same bounds discipline.
+        let cfg = RunConfig::parse(&text("max_frame_mb = 8")).unwrap();
+        assert_eq!(cfg.cluster.max_frame_bytes, 8 << 20);
+        assert!(RunConfig::parse(&text("max_frame_mb = 0")).is_err());
+        assert!(RunConfig::parse(&text("max_frame_mb = 100000")).is_err());
+    }
+
+    #[test]
+    fn bench_report_backend_labels_roundtrip_into_configs() {
+        // `mrsub bench` writes backend *labels* into its JSON report; a
+        // config citing such a label verbatim must parse back to the same
+        // backend — the report → config round-trip.
+        for kind in [
+            BackendKind::Serial,
+            BackendKind::Rayon { chunk: 4 },
+            BackendKind::Process { workers: 2 },
+        ] {
+            let text = format!(
+                r#"
+                k = 5
+                [instance]
+                kind = "coverage"
+                n = 40
+                universe = 30
+                avg_degree = 3
+                [algorithm]
+                kind = "greedy"
+                [cluster]
+                backend = "{}"
+            "#,
+                kind.label()
+            );
+            let cfg = RunConfig::parse(&text).unwrap();
+            assert_eq!(cfg.cluster.backend, Some(kind), "label {:?}", kind.label());
+        }
     }
 
     #[test]

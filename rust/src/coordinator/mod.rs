@@ -15,6 +15,12 @@ use crate::oracle::CountingOracle;
 use crate::util::json::Json;
 use crate::workload::Instance;
 
+/// Schema version stamped into every `mrsub bench` JSON report
+/// (`"schema_version"`). Bump whenever a report field is added, removed,
+/// or changes meaning; `tests/bench_report_schema.rs` pins the committed
+/// fixture against this so report consumers cannot break silently.
+pub const BENCH_SCHEMA_VERSION: u32 = 2;
+
 /// One algorithm × instance execution, fully accounted.
 #[derive(Debug, Clone)]
 pub struct ExperimentRecord {
@@ -48,6 +54,11 @@ pub struct ExperimentRecord {
     pub batched_oracle_calls: u64,
     /// Number of block-marginal calls issued.
     pub oracle_batches: u64,
+    /// Wire-frame bytes coordinator → workers (0 unless the run used the
+    /// shared-nothing process backend).
+    pub ipc_bytes_out: u64,
+    /// Wire-frame bytes workers → coordinator.
+    pub ipc_bytes_in: u64,
     /// End-to-end wall time (ms).
     pub wall_ms: f64,
     /// Full per-round metrics.
@@ -81,6 +92,8 @@ impl ExperimentRecord {
             ("batched_oracle_calls", Json::Num(self.batched_oracle_calls as f64)),
             ("scalar_oracle_calls", Json::Num(self.scalar_oracle_calls() as f64)),
             ("oracle_batches", Json::Num(self.oracle_batches as f64)),
+            ("ipc_bytes_out", Json::Num(self.ipc_bytes_out as f64)),
+            ("ipc_bytes_in", Json::Num(self.ipc_bytes_in as f64)),
             ("wall_ms", Json::Num(self.wall_ms)),
             ("metrics", self.metrics.to_json()),
         ])
@@ -101,6 +114,11 @@ pub fn run_experiment(
     let counters = counting.counter();
     let mut cfg = cfg.clone();
     cfg.call_counter = Some(Arc::clone(&counters));
+    // Hand the instance's construction recipe to the cluster so the
+    // process backend can rebuild the oracle in its workers.
+    if cfg.oracle_spec.is_none() {
+        cfg.oracle_spec = inst.spec.clone();
+    }
 
     let start = Instant::now();
     let result = alg.run(&counting, k, &cfg)?;
@@ -115,6 +133,7 @@ pub fn run_experiment(
 
     // compute rounds exclude the r0 partition record.
     let rounds = result.metrics.rounds.iter().filter(|r| !r.name.starts_with("r0:")).count();
+    let (ipc_bytes_out, ipc_bytes_in) = result.metrics.total_ipc_bytes();
 
     Ok(ExperimentRecord {
         algorithm: alg.name(),
@@ -132,6 +151,8 @@ pub fn run_experiment(
         oracle_calls,
         batched_oracle_calls,
         oracle_batches,
+        ipc_bytes_out,
+        ipc_bytes_in,
         wall_ms,
         metrics: result.metrics,
     })

@@ -51,6 +51,15 @@ pub enum Error {
     Runtime(String),
     /// Configuration error (bad TOML, unknown workload/algorithm name, ...).
     Config(String),
+    /// A process-backend worker failed (died, timed out, sent a bad
+    /// frame). Structured so the coordinator degrades cleanly instead of
+    /// panicking; `worker` is the pool-local worker index.
+    Worker {
+        /// Pool-local worker index.
+        worker: usize,
+        /// What went wrong.
+        message: String,
+    },
 }
 
 impl std::fmt::Display for Error {
@@ -62,6 +71,9 @@ impl std::fmt::Display for Error {
             }
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Worker { worker, message } => {
+                write!(f, "worker {worker}: {message}")
+            }
         }
     }
 }

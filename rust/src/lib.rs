@@ -20,7 +20,10 @@
 //! * [`mapreduce`] — the MRC cluster simulator: random partitioning and
 //!   sampling (Algorithm 3), synchronous rounds scheduled on a pluggable
 //!   execution substrate ([`mapreduce::backend::ExecBackend`]: serial /
-//!   thread-pool), per-machine memory and communication metering.
+//!   thread-pool / shared-nothing worker *processes* with shards and
+//!   oracle specs serialized over a checksummed wire protocol
+//!   ([`mapreduce::wire`], [`mapreduce::process`])), per-machine memory,
+//!   communication, and IPC-byte metering.
 //! * [`algorithms`] — the paper's Algorithms 1–7 and the Theorem 8
 //!   combination, plus sequential and distributed baselines
 //!   (greedy/lazy/stochastic greedy, RandGreeDi, Mirrokni–Zadimoghaddam

@@ -33,12 +33,12 @@ use mrsub::algorithms::threshold::FILTER_BLOCK;
 use mrsub::algorithms::two_round::TwoRoundKnownOpt;
 use mrsub::algorithms::MrAlgorithm;
 use mrsub::config::{GreedyAlg, RunConfig};
-use mrsub::coordinator::{render_table, run_experiment, write_json};
+use mrsub::coordinator::{render_table, run_experiment, write_json, BENCH_SCHEMA_VERSION};
 use mrsub::core::{threshold_bound, ElementId, Error, Result};
 use mrsub::mapreduce::backend::BackendKind;
 use mrsub::mapreduce::ClusterConfig;
-use mrsub::oracle::concave::{ConcaveOverModularOracle, Phi};
 use mrsub::oracle::modular::ModularOracle;
+use mrsub::oracle::spec::OracleSpec;
 use mrsub::oracle::{Oracle, OracleState};
 use mrsub::util::bench::{throughput, time};
 use mrsub::util::json::Json;
@@ -88,29 +88,48 @@ impl Args {
     }
 }
 
-/// Parse an optional `--backend serial|rayon [--chunk N]` pair.
+/// Parse an optional `--backend serial|rayon|process:N [--chunk N]` pair.
 fn backend_flag(args: &Args) -> Result<Option<BackendKind>> {
     match args.get_str("backend") {
         None => Ok(None),
         Some(name) => {
             let chunk = args.get("chunk", 1usize)?;
-            BackendKind::parse(name, chunk)
-                .map(Some)
-                .ok_or_else(|| cli_err(format!("unknown backend {name:?} (serial | rayon)")))
+            BackendKind::parse(name, chunk).map(Some).ok_or_else(|| {
+                cli_err(format!(
+                    "unknown backend {name:?} (serial | rayon | process:N with N >= 1)"
+                ))
+            })
         }
     }
 }
 
+/// Apply the process-backend tuning flags (`--worker-timeout-ms`,
+/// `--max-frame-mb`) to a cluster config; bounds are shared with the TOML
+/// parser via [`ClusterConfig`]'s validators.
+fn apply_cluster_flags(args: &Args, cfg: &mut ClusterConfig) -> Result<()> {
+    let timeout: u64 = args.get("worker_timeout_ms", cfg.worker_timeout_ms)?;
+    cfg.worker_timeout_ms =
+        ClusterConfig::validate_worker_timeout_ms(timeout).map_err(cli_err)?;
+    let default_mb = cfg.max_frame_bytes >> 20;
+    let mb: usize = args.get("max_frame_mb", default_mb)?;
+    cfg.max_frame_bytes = ClusterConfig::validate_max_frame_mb(mb).map_err(cli_err)? << 20;
+    Ok(())
+}
+
 const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|engine-check> [--flag value]...
   run           --config <file.toml>
-  demo          [--k 20] [--n 20000] [--seed 7] [--backend serial|rayon] [--chunk 1]
+  demo          [--k 20] [--n 20000] [--seed 7] [--backend serial|rayon|process:N] [--chunk 1]
+                [--worker-timeout-ms 30000] [--max-frame-mb 64]
   sweep-t       [--t-max 6] [--k 20] [--seed 7]
   adversarial   [--t-max 5] [--k 60]
   bench         [--n 4096] [--k 32] [--seed 11]
                 [--families coverage,zipf,facility,cut,concave,modular,adversarial]
-                [--backends serial,rayon] [--sizes 8000x20,32000x40]
-                [--output bench_report.json]
-  engine-check  [--artifacts <dir>]   (xla feature builds only)";
+                [--backends serial,rayon,process:4] [--backend process:4]
+                [--sizes 8000x20,32000x40] [--output bench_report.json]
+  engine-check  [--artifacts <dir>]   (xla feature builds only)
+(internal: `mrsub worker` is the shared-nothing process-backend worker; it
+ speaks the mapreduce::wire protocol on stdin/stdout and is spawned by the
+ coordinator, never by hand.)";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -129,15 +148,15 @@ fn dispatch(argv: &[String]) -> Result<()> {
         eprintln!("{USAGE}");
         return Err(cli_err("missing subcommand"));
     };
+    // Hidden worker subcommand: serve the wire protocol on stdin/stdout.
+    // Handled before flag parsing — workers take env config, not flags.
+    if cmd == "worker" {
+        std::process::exit(mrsub::mapreduce::process::worker_main());
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(args.get_str("config").ok_or_else(|| cli_err("run needs --config"))?),
-        "demo" => cmd_demo(
-            args.get("k", 20)?,
-            args.get("n", 20_000)?,
-            args.get("seed", 7)?,
-            backend_flag(&args)?,
-        ),
+        "demo" => cmd_demo(&args),
         "sweep-t" => cmd_sweep_t(args.get("t_max", 6)?, args.get("k", 20)?, args.get("seed", 7)?),
         "adversarial" => cmd_adversarial(args.get("t_max", 5)?, args.get("k", 60)?),
         "bench" => cmd_bench(&args),
@@ -164,10 +183,15 @@ fn cmd_run(path: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_demo(k: usize, n: usize, seed: u64, backend: Option<BackendKind>) -> Result<()> {
+fn cmd_demo(args: &Args) -> Result<()> {
+    let k: usize = args.get("k", 20)?;
+    let n: usize = args.get("n", 20_000)?;
+    let seed: u64 = args.get("seed", 7)?;
+    let backend = backend_flag(args)?;
     let inst = PlantedCoverageGen::dense(k, n / 2, n).generate(seed);
     let opt = inst.known_opt.unwrap();
-    let cfg = ClusterConfig { seed, backend, ..ClusterConfig::default() };
+    let mut cfg = ClusterConfig { seed, backend, ..ClusterConfig::default() };
+    apply_cluster_flags(args, &mut cfg)?;
     let algs: Vec<Box<dyn MrAlgorithm>> = vec![
         Box::new(GreedyAlg),
         Box::new(TwoRoundKnownOpt::new(opt)),
@@ -241,24 +265,17 @@ fn bench_instance(name: &str, n: usize, seed: u64) -> Result<Instance> {
         "cut" => GraphGen::barabasi_albert(n, 6).generate(seed),
         "zipf" => ZipfCorpusGen::new(n, n, 20).generate(seed),
         "concave" => {
-            let mut rng = Rng::seed_from_u64(seed);
             let groups = 256;
-            let incidence: Vec<Vec<(u32, f64)>> = (0..n)
-                .map(|_| {
-                    (0..4)
-                        .map(|_| (rng.gen_range(0..groups) as u32, rng.gen_range_f64(0.1, 2.0)))
-                        .collect()
-                })
-                .collect();
-            Instance::new(
-                format!("concave(n={n},groups={groups})"),
-                Arc::new(ConcaveOverModularOracle::new(n, groups, incidence, Phi::Sqrt)),
-            )
+            let spec = OracleSpec::ConcaveBench { n, groups, seed };
+            Instance::new(format!("concave(n={n},groups={groups})"), spec.build()?)
+                .with_spec(spec)
         }
         "modular" => {
             let mut rng = Rng::seed_from_u64(seed);
             let w: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(0.0, 10.0)).collect();
+            let spec = OracleSpec::Modular { weights: w.clone() };
             Instance::new(format!("modular(n={n})"), Arc::new(ModularOracle::new(w)))
+                .with_spec(spec)
         }
         "adversarial" => AdversarialGen::new(4, (n / 2).max(8)).generate(seed),
         other => {
@@ -328,9 +345,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
         .collect();
-    let backends: Vec<BackendKind> = args
+    // `--backend X` (singular) is accepted as an alias for `--backends X`.
+    let backends_spec = args
         .get_str("backends")
-        .unwrap_or("serial,rayon")
+        .or_else(|| args.get_str("backend"))
+        .unwrap_or("serial,rayon");
+    let backends: Vec<BackendKind> = backends_spec
         .split(',')
         .map(|s| {
             let chunk = 1;
@@ -374,8 +394,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // --- part 2: cluster sweep, backends × families × (n, k) -------------
     println!("\n== bench 2/2: combined(eps=0.1) end-to-end, backend sweep ==");
     println!(
-        "{:<12} {:<16} {:>9} {:>5} {:>9} {:>9} {:>9}",
-        "family", "backend", "n", "k", "wall-ms", "batched%", "value"
+        "{:<12} {:<16} {:>9} {:>5} {:>9} {:>9} {:>11} {:>9}",
+        "family", "backend", "n", "k", "wall-ms", "batched%", "ipc-bytes", "value"
     );
     let mut cluster_rows = Vec::new();
     for fam in &families {
@@ -383,25 +403,28 @@ fn cmd_bench(args: &Args) -> Result<()> {
             let inst = bench_instance(fam, sz_n, seed)?;
             let k_eff = sz_k.min(inst.n);
             for &backend in &backends {
-                let cfg = ClusterConfig {
+                let mut cfg = ClusterConfig {
                     seed,
                     backend: Some(backend),
                     ..ClusterConfig::default()
                 };
+                apply_cluster_flags(args, &mut cfg)?;
                 let rec = run_experiment(&inst, &CombinedTwoRound::new(0.1), k_eff, &cfg)?;
                 let batched_pct = if rec.oracle_calls > 0 {
                     100.0 * rec.batched_oracle_calls as f64 / rec.oracle_calls as f64
                 } else {
                     0.0
                 };
+                let ipc_total = rec.ipc_bytes_out + rec.ipc_bytes_in;
                 println!(
-                    "{:<12} {:<16} {:>9} {:>5} {:>9.1} {:>8.1}% {:>9.1}",
+                    "{:<12} {:<16} {:>9} {:>5} {:>9.1} {:>8.1}% {:>11} {:>9.1}",
                     fam,
                     backend.label(),
                     inst.n,
                     k_eff,
                     rec.wall_ms,
                     batched_pct,
+                    ipc_total,
                     rec.value
                 );
                 cluster_rows.push(Json::obj([
@@ -414,6 +437,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     ("oracle_calls", Json::Num(rec.oracle_calls as f64)),
                     ("batched_oracle_calls", Json::Num(rec.batched_oracle_calls as f64)),
                     ("oracle_batches", Json::Num(rec.oracle_batches as f64)),
+                    ("ipc_bytes_out", Json::Num(rec.ipc_bytes_out as f64)),
+                    ("ipc_bytes_in", Json::Num(rec.ipc_bytes_in as f64)),
                     ("rounds", Json::Num(rec.rounds as f64)),
                 ]));
             }
@@ -421,6 +446,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
 
     let report = Json::obj([
+        ("schema_version", Json::Num(BENCH_SCHEMA_VERSION as f64)),
         ("n", Json::Num(n as f64)),
         ("k", Json::Num(k as f64)),
         ("seed", Json::Num(seed as f64)),

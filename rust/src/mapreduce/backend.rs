@@ -3,7 +3,7 @@
 //! Every simulated worker round is "run this closure once per machine";
 //! [`ExecBackend`] abstracts *how* those per-machine executions are
 //! scheduled, replacing the hard-coded rayon-or-serial switch that used to
-//! live inside `MrCluster::worker_round`. Two backends ship today:
+//! live inside `MrCluster::worker_round`. Three backends ship today:
 //!
 //! * [`Serial`] — in-order execution on the calling thread. The reference
 //!   semantics; also the right choice for tiny rounds where dispatch
@@ -13,6 +13,11 @@
 //!   `chunk`: machines are claimed `chunk` at a time from an atomic
 //!   cursor, trading load balancing (chunk = 1) against dispatch cost on
 //!   many cheap machines (chunk > 1).
+//! * [`BackendKind::Process`] — shared-nothing OS worker processes
+//!   ([`crate::mapreduce::process`]): shards and oracle specs are
+//!   serialized over pipes ([`crate::mapreduce::wire`]) and typed shard
+//!   rounds execute worker-side; see [`ProcessCtl`] for how the closure
+//!   interface degrades for control-plane work.
 //!
 //! The contract every backend must satisfy — and which
 //! `tests/batch_equivalence.rs` asserts pairwise — is *output
@@ -82,6 +87,31 @@ impl ExecBackend for Rayon {
     }
 }
 
+/// Control-plane stand-in for the shared-nothing process backend.
+///
+/// [`ExecBackend`] is the *in-address-space* scheduling interface; a
+/// shared-nothing backend cannot ship arbitrary closures to another
+/// process. Under [`BackendKind::Process`], the data plane — oracle
+/// evaluation over shards — runs in worker processes through the typed
+/// round API ([`crate::mapreduce::MrCluster::shard_round`] +
+/// [`crate::mapreduce::process::ProcessPool`]); whatever closure-based
+/// coordination remains (sample-side planning, legacy rounds) executes
+/// serially in the coordinator through this stand-in.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProcessCtl;
+
+impl ExecBackend for ProcessCtl {
+    fn name(&self) -> &'static str {
+        "process"
+    }
+
+    fn for_each(&self, n: usize, work: &(dyn Fn(usize) + Sync)) {
+        for i in 0..n {
+            work(i);
+        }
+    }
+}
+
 /// Serializable backend selector — what configs, the CLI, and
 /// [`super::ClusterConfig`] carry; [`BackendKind::build`] instantiates the
 /// actual backend.
@@ -94,38 +124,76 @@ pub enum BackendKind {
         /// Indices claimed per cursor bump.
         chunk: usize,
     },
+    /// Shared-nothing worker processes
+    /// ([`crate::mapreduce::process::ProcessPool`]); simulated machines
+    /// are assigned round-robin across `workers` OS processes.
+    Process {
+        /// Worker processes to spawn (≥ 1; capped at the machine count).
+        workers: usize,
+    },
 }
 
 impl BackendKind {
-    /// Instantiate the backend.
+    /// Instantiate the in-process scheduling backend. For
+    /// [`BackendKind::Process`] this is the [`ProcessCtl`] control-plane
+    /// stand-in — the worker pool itself is owned by the cluster, which
+    /// consults [`BackendKind::process_workers`] to spawn it.
     pub fn build(self) -> Arc<dyn ExecBackend> {
         match self {
             BackendKind::Serial => Arc::new(Serial),
             BackendKind::Rayon { chunk } => Arc::new(Rayon { chunk: chunk.max(1) }),
+            BackendKind::Process { .. } => Arc::new(ProcessCtl),
         }
     }
 
-    /// Parse a config/CLI name (`"serial"` or `"rayon"`), with `chunk`
-    /// applying to the rayon variant.
+    /// Parse a config/CLI backend name: `"serial"`, `"rayon"`,
+    /// `"process"`, `"process:N"` (N ≥ 1 worker processes), plus the
+    /// round-trippable [`BackendKind::label`] forms (`"rayon(chunk=N)"`).
+    /// `chunk` applies to the bare `"rayon"`/`"process"` forms.
+    /// `"process:0"` is rejected (`None`).
     pub fn parse(name: &str, chunk: usize) -> Option<BackendKind> {
+        if let Some(rest) = name.strip_prefix("process:") {
+            return rest
+                .trim()
+                .parse::<usize>()
+                .ok()
+                .filter(|&w| w > 0)
+                .map(|workers| BackendKind::Process { workers });
+        }
+        if let Some(rest) = name.strip_prefix("rayon(chunk=") {
+            let inner = rest.strip_suffix(')')?;
+            return inner.parse::<usize>().ok().map(|c| BackendKind::Rayon { chunk: c.max(1) });
+        }
         match name {
             "serial" => Some(BackendKind::Serial),
             "rayon" => Some(BackendKind::Rayon { chunk: chunk.max(1) }),
+            "process" => Some(BackendKind::Process { workers: chunk.max(1) }),
             _ => None,
         }
     }
 
-    /// Display label, e.g. `"rayon(chunk=4)"`.
+    /// Display label; every label round-trips through
+    /// [`BackendKind::parse`] (asserted by tests), so labels written into
+    /// bench reports and TOML configs can be read back verbatim.
     pub fn label(&self) -> String {
         match self {
             BackendKind::Serial => "serial".into(),
             BackendKind::Rayon { chunk } => format!("rayon(chunk={chunk})"),
+            BackendKind::Process { workers } => format!("process:{workers}"),
         }
     }
 
     /// Whether this backend executes machines concurrently.
     pub fn is_parallel(&self) -> bool {
         !matches!(self, BackendKind::Serial)
+    }
+
+    /// Worker-process count when this is the process backend.
+    pub fn process_workers(&self) -> Option<usize> {
+        match self {
+            BackendKind::Process { workers } => Some(*workers),
+            _ => None,
+        }
     }
 }
 
@@ -205,6 +273,45 @@ mod tests {
         assert_eq!(BackendKind::Rayon { chunk: 4 }.label(), "rayon(chunk=4)");
         assert!(!BackendKind::Serial.is_parallel());
         assert!(BackendKind::Rayon { chunk: 1 }.is_parallel());
+    }
+
+    #[test]
+    fn process_kind_parse_label_and_rejections() {
+        assert_eq!(
+            BackendKind::parse("process:4", 1),
+            Some(BackendKind::Process { workers: 4 })
+        );
+        assert_eq!(
+            BackendKind::parse("process", 3),
+            Some(BackendKind::Process { workers: 3 })
+        );
+        // process:0 is meaningless and must be rejected, not clamped.
+        assert_eq!(BackendKind::parse("process:0", 1), None);
+        assert_eq!(BackendKind::parse("process:", 1), None);
+        assert_eq!(BackendKind::parse("process:x", 1), None);
+        assert_eq!(BackendKind::Process { workers: 4 }.label(), "process:4");
+        assert!(BackendKind::Process { workers: 1 }.is_parallel());
+        assert_eq!(BackendKind::Process { workers: 2 }.process_workers(), Some(2));
+        assert_eq!(BackendKind::Serial.process_workers(), None);
+        assert_eq!(BackendKind::Process { workers: 2 }.build().name(), "process");
+    }
+
+    #[test]
+    fn every_label_roundtrips_through_parse() {
+        for kind in [
+            BackendKind::Serial,
+            BackendKind::Rayon { chunk: 1 },
+            BackendKind::Rayon { chunk: 7 },
+            BackendKind::Process { workers: 1 },
+            BackendKind::Process { workers: 16 },
+        ] {
+            assert_eq!(
+                BackendKind::parse(&kind.label(), 999),
+                Some(kind),
+                "label {:?} must parse back to its kind",
+                kind.label()
+            );
+        }
     }
 
     #[test]

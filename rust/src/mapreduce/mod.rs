@@ -14,15 +14,22 @@
 
 pub mod backend;
 pub mod partition;
+pub mod process;
+pub mod shard;
+pub mod wire;
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::core::{derive_seed, ElementId, Error, Result};
 use crate::metrics::{MrMetrics, RoundStat};
+use crate::oracle::spec::OracleSpec;
 use crate::oracle::OracleCounters;
 use backend::{BackendKind, ExecBackend};
 use partition::{default_machines, partition_and_sample, sample_probability, Partitioned};
+use process::{PoolOptions, ProcessPool};
+use shard::GuessStore;
+use wire::{RoundTask, TaskReply};
 
 /// Cluster construction parameters.
 #[derive(Debug, Clone)]
@@ -48,6 +55,23 @@ pub struct ClusterConfig {
     /// per-round oracle calls with the batched-vs-scalar split. Not part of
     /// any serialized config.
     pub call_counter: Option<Arc<OracleCounters>>,
+    /// Oracle construction recipe for shared-nothing workers; wired from
+    /// [`crate::workload::Instance::spec`] by the coordinator. Required by
+    /// the process backend (its workers rebuild the oracle from this),
+    /// ignored by the in-process backends. Not serialized.
+    pub oracle_spec: Option<OracleSpec>,
+    /// Per-reply worker wait bound (ms) for the process backend; a worker
+    /// silent for longer is declared dead with a structured error.
+    pub worker_timeout_ms: u64,
+    /// Hard cap on a single wire frame's payload (process backend).
+    pub max_frame_bytes: usize,
+    /// Worker executable override; `None` re-executes the current binary.
+    /// Integration tests point this at the built `mrsub` binary (a test
+    /// harness binary has no `worker` subcommand). Not serialized.
+    pub worker_exe: Option<std::path::PathBuf>,
+    /// Extra environment for worker processes (the conformance suite's
+    /// fault injection sets `MRSUB_FAULT` here). Not serialized.
+    pub worker_env: Vec<(String, String)>,
 }
 
 impl Default for ClusterConfig {
@@ -60,11 +84,40 @@ impl Default for ClusterConfig {
             parallel: true,
             backend: None,
             call_counter: None,
+            oracle_spec: None,
+            worker_timeout_ms: 30_000,
+            max_frame_bytes: wire::DEFAULT_MAX_FRAME,
+            worker_exe: None,
+            worker_env: Vec::new(),
         }
     }
 }
 
 impl ClusterConfig {
+    /// Inclusive accepted range for `worker_timeout_ms` — the single
+    /// source of truth for both the TOML parser and the CLI flags.
+    pub const WORKER_TIMEOUT_MS_BOUNDS: (u64, u64) = (1, 3_600_000);
+    /// Inclusive accepted range for the wire frame cap in MiB (TOML + CLI).
+    pub const MAX_FRAME_MB_BOUNDS: (usize, usize) = (1, 4096);
+
+    /// Validate a `worker_timeout_ms` value against the shared bounds.
+    pub fn validate_worker_timeout_ms(ms: u64) -> std::result::Result<u64, String> {
+        let (lo, hi) = Self::WORKER_TIMEOUT_MS_BOUNDS;
+        if ms < lo || ms > hi {
+            return Err(format!("worker_timeout_ms {ms} out of bounds ({lo}..={hi})"));
+        }
+        Ok(ms)
+    }
+
+    /// Validate a frame-cap value in MiB against the shared bounds.
+    pub fn validate_max_frame_mb(mb: usize) -> std::result::Result<usize, String> {
+        let (lo, hi) = Self::MAX_FRAME_MB_BOUNDS;
+        if mb < lo || mb > hi {
+            return Err(format!("max_frame_mb {mb} out of bounds ({lo}..={hi})"));
+        }
+        Ok(mb)
+    }
+
     /// The effective backend selector: the explicit `backend` field when
     /// set, else the legacy `parallel` flag mapped to `Rayon{chunk:1}` /
     /// `Serial`.
@@ -151,6 +204,12 @@ pub struct MrCluster {
     /// snapshotted around each round so `RoundStat::oracle_calls` /
     /// `batched_calls` / `oracle_batches` are per-round.
     call_counter: Option<Arc<OracleCounters>>,
+    /// Per-machine persistent guess stores for typed shard rounds on the
+    /// in-process backends (worker processes keep their own).
+    stores: Vec<GuessStore>,
+    /// Shared-nothing worker pool; lazily spawned on the first typed
+    /// shard round when the backend is [`BackendKind::Process`].
+    pool: Option<ProcessPool>,
 }
 
 impl MrCluster {
@@ -170,11 +229,13 @@ impl MrCluster {
         let max_shard = shards.iter().map(Vec::len).max().unwrap_or(0);
         let mut cluster = MrCluster {
             cfg: cfg.clone(),
+            stores: vec![GuessStore::default(); shards.len()],
             shards,
             sample,
             metrics: MrMetrics { rounds: Vec::new(), n, k, machines: m, sample_size },
             exec: cfg.backend_kind().build(),
             call_counter: cfg.call_counter.clone(),
+            pool: None,
         };
         // Round 0: the input distribution itself. Every machine receives its
         // shard plus the broadcast sample; the central machine receives S.
@@ -185,6 +246,7 @@ impl MrCluster {
             n + (m + 1) * sample_size,
             sample_size,
             (0, 0, 0),
+            (0, 0),
             std::time::Duration::ZERO,
         )?;
         Ok(cluster)
@@ -271,9 +333,112 @@ impl MrCluster {
             total_sent,
             total_sent,
             calls,
+            (0, 0),
             start.elapsed(),
         )?;
         Ok(outputs)
+    }
+
+    /// Execute one *typed* synchronous worker round: `task` runs against
+    /// every machine's shard through the backend-shared interpreter
+    /// ([`shard::run_task_all`]) — in this address space for
+    /// `Serial`/`Rayon`, in the shared-nothing worker processes for
+    /// [`BackendKind::Process`] (shards, specs, and replies crossing the
+    /// [`wire`] protocol; per-round IPC bytes land in the metrics).
+    ///
+    /// `extra_resident` accounts broadcast state beyond shard + sample,
+    /// as in [`MrCluster::worker_round`].
+    pub fn shard_round(
+        &mut self,
+        name: &str,
+        extra_resident: usize,
+        oracle: &dyn crate::oracle::Oracle,
+        task: &RoundTask,
+    ) -> Result<Vec<TaskReply>> {
+        let sample_len = self.sample.len();
+        let max_resident = self
+            .shards
+            .iter()
+            .map(|s| s.len() + sample_len + extra_resident)
+            .max()
+            .unwrap_or(0);
+        self.shard_round_explicit(name, max_resident, oracle, task)
+    }
+
+    /// [`MrCluster::shard_round`] with caller-supplied peak residency
+    /// (algorithms whose per-machine footprint is not `shard + sample +
+    /// extra`, e.g. Algorithm 5's per-guess shard copies).
+    pub fn shard_round_explicit(
+        &mut self,
+        name: &str,
+        max_resident: usize,
+        oracle: &dyn crate::oracle::Oracle,
+        task: &RoundTask,
+    ) -> Result<Vec<TaskReply>> {
+        let start = Instant::now();
+        let calls0 = self.calls_snapshot();
+        let mut ipc = (0u64, 0u64);
+        let mut remote_calls = (0u64, 0u64, 0u64);
+        let replies = if self.cfg.backend_kind().process_workers().is_some() {
+            self.ensure_pool()?;
+            let pool = self.pool.as_mut().expect("pool spawned above");
+            let (replies, stats) = pool.round(task)?;
+            ipc = (stats.bytes_out, stats.bytes_in);
+            // merge worker-side oracle traffic so MrMetrics stays coherent:
+            // through the shared counter when one is wired (the snapshot
+            // delta below then picks it up), directly into the round stat
+            // otherwise.
+            match &self.call_counter {
+                Some(c) => c.add(stats.calls.0, stats.calls.1, stats.calls.2),
+                None => remote_calls = stats.calls,
+            }
+            replies
+        } else {
+            shard::run_task_all(oracle, &self.shards, &mut self.stores, task, self.exec.as_ref())
+        };
+        let total_sent: usize = replies.iter().map(CommSize::comm_size).sum();
+        let mut calls = delta(calls0, self.calls_snapshot());
+        calls.0 += remote_calls.0;
+        calls.1 += remote_calls.1;
+        calls.2 += remote_calls.2;
+        self.record_round(
+            name,
+            self.shards.len(),
+            max_resident,
+            total_sent,
+            total_sent,
+            calls,
+            ipc,
+            start.elapsed(),
+        )?;
+        Ok(replies)
+    }
+
+    /// Spawn the shared-nothing worker pool if this cluster runs on the
+    /// process backend and none exists yet. Requires an oracle spec.
+    fn ensure_pool(&mut self) -> Result<()> {
+        if self.pool.is_some() {
+            return Ok(());
+        }
+        let Some(workers) = self.cfg.backend_kind().process_workers() else {
+            return Ok(());
+        };
+        let spec = self.cfg.oracle_spec.clone().ok_or_else(|| {
+            Error::Config(
+                "process backend requires a serializable oracle spec \
+                 (run through an Instance that carries one, e.g. via run_experiment)"
+                    .into(),
+            )
+        })?;
+        let opts = PoolOptions {
+            workers,
+            timeout: Duration::from_millis(self.cfg.worker_timeout_ms.max(1)),
+            max_frame: self.cfg.max_frame_bytes,
+            exe: self.cfg.worker_exe.clone(),
+            env: self.cfg.worker_env.clone(),
+        };
+        self.pool = Some(ProcessPool::spawn(&spec, &self.shards, &self.sample, &opts)?);
+        Ok(())
     }
 
     /// Execute a central-machine round. `received` is the number of elements
@@ -287,7 +452,7 @@ impl MrCluster {
         let calls0 = self.calls_snapshot();
         let out = f();
         let calls = delta(calls0, self.calls_snapshot());
-        self.record_round(name, 0, 0, 0, received, calls, start.elapsed())?;
+        self.record_round(name, 0, 0, 0, received, calls, (0, 0), start.elapsed())?;
         Ok(out)
     }
 
@@ -312,7 +477,16 @@ impl MrCluster {
         let out = f();
         let calls = delta(calls0, self.calls_snapshot());
         let machines = self.shards.len();
-        self.record_round(name, machines, max_resident, total_sent, central_recv, calls, start.elapsed())?;
+        self.record_round(
+            name,
+            machines,
+            max_resident,
+            total_sent,
+            central_recv,
+            calls,
+            (0, 0),
+            start.elapsed(),
+        )?;
         Ok(out)
     }
 
@@ -338,6 +512,7 @@ impl MrCluster {
         total_sent: usize,
         central_recv: usize,
         calls: (u64, u64, u64),
+        ipc: (u64, u64),
         wall: std::time::Duration,
     ) -> Result<()> {
         let (oracle_calls, batched_calls, oracle_batches) = calls;
@@ -350,6 +525,8 @@ impl MrCluster {
             oracle_calls,
             batched_calls,
             oracle_batches,
+            ipc_bytes_out: ipc.0,
+            ipc_bytes_in: ipc.1,
             wall,
         });
         if self.cfg.enforce_memory && name != "r0:partition+sample" {
@@ -506,6 +683,49 @@ mod tests {
                 None => reference = Some(out),
                 Some(r) => assert_eq!(&out, r, "{} diverged", kind.label()),
             }
+        }
+    }
+
+    #[test]
+    fn shard_round_matches_direct_interpreter_on_in_process_backends() {
+        use crate::workload::coverage::CoverageGen;
+        let o = CoverageGen::new(300, 150, 4).build(9);
+        let task = RoundTask::Filter { base: vec![2, 5], tau: 1.0 };
+        let mut reference: Option<Vec<TaskReply>> = None;
+        for kind in [BackendKind::Serial, BackendKind::Rayon { chunk: 2 }] {
+            let mut c = MrCluster::new(300, 6, &ClusterConfig {
+                backend: Some(kind),
+                ..cfg(11)
+            })
+            .unwrap();
+            let replies = c.shard_round("r1:test", 0, &o, &task).unwrap();
+            assert_eq!(replies.len(), c.machines());
+            let r = &c.metrics().rounds[1];
+            let sent: usize = replies.iter().map(CommSize::comm_size).sum();
+            assert_eq!(r.total_sent, sent);
+            assert_eq!((r.ipc_bytes_out, r.ipc_bytes_in), (0, 0), "no IPC in-process");
+            match &reference {
+                None => reference = Some(replies),
+                Some(prev) => assert_eq!(&replies, prev, "{} diverged", kind.label()),
+            }
+        }
+    }
+
+    #[test]
+    fn process_backend_without_spec_is_a_structured_config_error() {
+        use crate::workload::coverage::CoverageGen;
+        let o = CoverageGen::new(100, 60, 3).build(1);
+        let mut c = MrCluster::new(100, 4, &ClusterConfig {
+            backend: Some(BackendKind::Process { workers: 2 }),
+            ..cfg(3)
+        })
+        .unwrap();
+        // no oracle_spec in the config: the typed round must fail cleanly
+        // before any process is spawned.
+        let err = c.shard_round("r1:test", 0, &o, &RoundTask::MaxSingleton);
+        match err {
+            Err(Error::Config(msg)) => assert!(msg.contains("spec"), "{msg}"),
+            other => panic!("expected Config error, got {other:?}"),
         }
     }
 

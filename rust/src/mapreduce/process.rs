@@ -1,0 +1,709 @@
+//! Shared-nothing process backend: one OS worker process per group of
+//! simulated machines, speaking the [`crate::mapreduce::wire`] protocol
+//! over stdin/stdout pipes.
+//!
+//! ## Topology
+//!
+//! [`ProcessPool::spawn`] re-executes the current binary (or an explicit
+//! `worker_exe`) with the hidden `mrsub worker` subcommand, one process
+//! per worker, and assigns the `m` simulated machines round-robin across
+//! the `N` workers of `--backend process:N`. Each worker receives — once,
+//! at init — the oracle *spec* (rebuilt deterministically on its side; no
+//! shared memory), its machines' shards, and the broadcast sample. Worker
+//! processes then persist across rounds: Algorithm 5's `t` thresholds pay
+//! one spawn, not `t`.
+//!
+//! ## Round protocol
+//!
+//! A round writes one `Round(task)` frame to every worker (all workers
+//! compute concurrently), then joins the replies in worker order. Replies
+//! carry per-machine [`TaskReply`]s plus the worker-side oracle-call delta,
+//! which the coordinator merges into its [`OracleCounters`] so
+//! `MrMetrics` sees one coherent count. All frame traffic is metered —
+//! the per-round IPC byte counts land in `RoundStat::ipc_bytes_*`.
+//!
+//! ## Failure surface
+//!
+//! Every failure mode — worker killed mid-round, truncated or corrupted
+//! reply frame, oversized frame, handshake version mismatch, worker-side
+//! error — is a structured [`Error::Worker`] (never a panic, never a
+//! poisoned coordinator): the pool marks the worker dead, reaps the child,
+//! and the algorithm's `run` surfaces `Err`. Each worker gets a dedicated
+//! reader thread *and* writer thread, so the coordinator itself never
+//! blocks on a pipe — a worker that stops replying *or* stops reading is
+//! bounded by `worker_timeout_ms`, never a coordinator hang. Reply shapes
+//! are validated against the task ([`wire::reply_matches`]) before use.
+//!
+//! The `MRSUB_FAULT` environment variable (set by the conformance suite
+//! via `worker_env`) injects worker-side faults: `die-mid-round`,
+//! `hang-round`, `truncate-frame`, `corrupt-checksum`, `bad-version`.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::core::{ElementId, Error, Result};
+use crate::mapreduce::shard::{self, GuessStore};
+use crate::mapreduce::wire::{
+    self, FromWorker, RoundTask, TaskReply, ToWorker, WireError, WorkerInit, DEFAULT_MAX_FRAME,
+    WIRE_VERSION,
+};
+use crate::oracle::spec::OracleSpec;
+use crate::oracle::{CountingOracle, Oracle, OracleCounters};
+
+/// Pool construction knobs (derived from `ClusterConfig` by the cluster).
+#[derive(Debug, Clone)]
+pub struct PoolOptions {
+    /// Worker processes to spawn (capped at the machine count).
+    pub workers: usize,
+    /// Per-reply wait bound; a worker silent for longer is declared dead.
+    pub timeout: Duration,
+    /// Hard cap on a single frame's payload.
+    pub max_frame: usize,
+    /// Worker executable; `None` = `std::env::current_exe()` (the normal
+    /// case — coordinator and worker are the same binary). Tests point
+    /// this at the built `mrsub` binary.
+    pub exe: Option<PathBuf>,
+    /// Extra environment for workers (fault injection uses `MRSUB_FAULT`).
+    pub env: Vec<(String, String)>,
+}
+
+impl Default for PoolOptions {
+    fn default() -> Self {
+        PoolOptions {
+            workers: 1,
+            timeout: Duration::from_millis(30_000),
+            max_frame: DEFAULT_MAX_FRAME,
+            exe: None,
+            env: Vec::new(),
+        }
+    }
+}
+
+/// Per-round IPC accounting returned by [`ProcessPool::round`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundIpcStats {
+    /// Frame bytes coordinator → workers this round.
+    pub bytes_out: u64,
+    /// Frame bytes workers → coordinator this round.
+    pub bytes_in: u64,
+    /// Worker-side oracle calls `(total, batched, batches)` this round.
+    pub calls: (u64, u64, u64),
+}
+
+struct WorkerHandle {
+    child: Child,
+    /// Payloads to the dedicated writer thread (which owns the pipe and
+    /// does the blocking `write`); `None` once closed (shutdown/failure).
+    /// Queueing instead of writing inline keeps the coordinator off the
+    /// pipe: a worker that stops *reading* cannot wedge the coordinator —
+    /// the reply timeout still fires and the worker is declared dead.
+    tx: Option<mpsc::Sender<Vec<u8>>>,
+    /// Frames from the dedicated reader thread: `(payload, frame_bytes)`.
+    rx: mpsc::Receiver<std::result::Result<(Vec<u8>, usize), WireError>>,
+    /// Simulated machine ids this worker hosts.
+    machines: Vec<usize>,
+    alive: bool,
+}
+
+/// A running pool of shared-nothing worker processes.
+pub struct ProcessPool {
+    workers: Vec<WorkerHandle>,
+    n_machines: usize,
+    timeout: Duration,
+    max_frame: usize,
+    bytes_out: u64,
+    bytes_in: u64,
+}
+
+fn worker_error(worker: usize, message: impl Into<String>) -> Error {
+    Error::Worker { worker, message: message.into() }
+}
+
+impl ProcessPool {
+    /// Spawn workers, ship each its shards + spec + sample, and complete
+    /// the `Ready` handshake.
+    pub fn spawn(
+        spec: &OracleSpec,
+        shards: &[Vec<ElementId>],
+        sample: &[ElementId],
+        opts: &PoolOptions,
+    ) -> Result<ProcessPool> {
+        let m = shards.len();
+        if m == 0 {
+            return Err(Error::Config("process pool needs at least one machine".into()));
+        }
+        let w = opts.workers.clamp(1, m);
+        let exe = match &opts.exe {
+            Some(p) => p.clone(),
+            None => std::env::current_exe()
+                .map_err(|e| Error::Config(format!("cannot locate worker executable: {e}")))?,
+        };
+        let mut machines_of: Vec<Vec<usize>> = vec![Vec::new(); w];
+        for i in 0..m {
+            machines_of[i % w].push(i);
+        }
+        let mut workers: Vec<WorkerHandle> = Vec::with_capacity(w);
+        for (wi, machines) in machines_of.into_iter().enumerate() {
+            let mut cmd = Command::new(&exe);
+            cmd.arg("worker")
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .env("MRSUB_MAX_FRAME", opts.max_frame.to_string());
+            for (key, val) in &opts.env {
+                cmd.env(key, val);
+            }
+            let mut child = match cmd.spawn() {
+                Ok(child) => child,
+                Err(e) => {
+                    // reap the workers already spawned — no zombies on a
+                    // partial spawn (process-limit pressure, vanished exe).
+                    for mut prev in workers {
+                        let _ = prev.child.kill();
+                        let _ = prev.child.wait();
+                    }
+                    return Err(worker_error(wi, format!("spawn {}: {e}", exe.display())));
+                }
+            };
+            let mut stdin = child.stdin.take().expect("stdin piped");
+            let mut stdout = child.stdout.take().expect("stdout piped");
+            let (reply_tx, rx) = mpsc::channel();
+            let (tx, payload_rx) = mpsc::channel::<Vec<u8>>();
+            let max_frame = opts.max_frame;
+            std::thread::spawn(move || loop {
+                let res = wire::read_frame(&mut stdout, max_frame);
+                let stop = res.is_err();
+                if reply_tx.send(res).is_err() || stop {
+                    break;
+                }
+            });
+            std::thread::spawn(move || {
+                // exits when the sender is dropped (shutdown/mark_dead) or
+                // the pipe breaks; dropping stdin EOFs the worker.
+                while let Ok(payload) = payload_rx.recv() {
+                    if wire::write_frame(&mut stdin, &payload, max_frame).is_err() {
+                        break;
+                    }
+                }
+            });
+            workers.push(WorkerHandle { child, tx: Some(tx), rx, machines, alive: true });
+        }
+        let mut pool = ProcessPool {
+            workers,
+            n_machines: m,
+            timeout: opts.timeout,
+            max_frame: opts.max_frame,
+            bytes_out: 0,
+            bytes_in: 0,
+        };
+        for wi in 0..pool.workers.len() {
+            let init = ToWorker::Init(WorkerInit {
+                spec: spec.clone(),
+                machines: pool.workers[wi].machines.iter().map(|&i| i as u32).collect(),
+                shards: pool.workers[wi].machines.iter().map(|&i| shards[i].clone()).collect(),
+                sample: sample.to_vec(),
+            });
+            pool.send(wi, &init)?;
+        }
+        for wi in 0..pool.workers.len() {
+            match pool.recv(wi)? {
+                FromWorker::Ready { version } if version == WIRE_VERSION => {}
+                FromWorker::Ready { version } => {
+                    return Err(pool.mark_dead(
+                        wi,
+                        format!(
+                            "wire version mismatch: worker speaks v{version}, \
+                             coordinator v{WIRE_VERSION}"
+                        ),
+                    ))
+                }
+                FromWorker::Fail { message } => {
+                    return Err(pool.mark_dead(wi, format!("init failed: {message}")))
+                }
+                other => {
+                    return Err(pool.mark_dead(wi, format!("unexpected init reply: {other:?}")))
+                }
+            }
+        }
+        Ok(pool)
+    }
+
+    /// Number of worker processes.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Number of simulated machines served.
+    pub fn machines(&self) -> usize {
+        self.n_machines
+    }
+
+    /// Total frame bytes sent/received since spawn.
+    pub fn total_ipc_bytes(&self) -> (u64, u64) {
+        (self.bytes_out, self.bytes_in)
+    }
+
+    /// Execute one round on every worker; returns per-machine replies (in
+    /// machine order) plus the round's IPC stats.
+    pub fn round(&mut self, task: &RoundTask) -> Result<(Vec<TaskReply>, RoundIpcStats)> {
+        let (out0, in0) = (self.bytes_out, self.bytes_in);
+        // one encode; every worker receives byte-identical frames.
+        let payload = ToWorker::Round(task.clone()).encode();
+        for wi in 0..self.workers.len() {
+            self.send_payload(wi, &payload)?;
+        }
+        let mut out: Vec<Option<TaskReply>> = (0..self.n_machines).map(|_| None).collect();
+        let mut calls = (0u64, 0u64, 0u64);
+        for wi in 0..self.workers.len() {
+            match self.recv(wi)? {
+                FromWorker::RoundDone { replies, calls: c } => {
+                    let hosted = self.workers[wi].machines.len();
+                    if replies.len() != hosted {
+                        return Err(self.mark_dead(
+                            wi,
+                            format!("returned {} replies for {hosted} machines", replies.len()),
+                        ));
+                    }
+                    if let Some(bad) =
+                        replies.iter().find(|r| !wire::reply_matches(task, r))
+                    {
+                        let msg = format!(
+                            "reply shape mismatch for {} task: {bad:?}",
+                            task.label()
+                        );
+                        return Err(self.mark_dead(wi, msg));
+                    }
+                    for (slot, reply) in replies.into_iter().enumerate() {
+                        out[self.workers[wi].machines[slot]] = Some(reply);
+                    }
+                    calls.0 += c.0;
+                    calls.1 += c.1;
+                    calls.2 += c.2;
+                }
+                FromWorker::Fail { message } => return Err(self.mark_dead(wi, message)),
+                FromWorker::Ready { .. } => {
+                    return Err(self.mark_dead(wi, "unexpected Ready mid-round"))
+                }
+            }
+        }
+        let replies: Vec<TaskReply> =
+            out.into_iter().map(|r| r.expect("every machine is assigned a worker")).collect();
+        let stats = RoundIpcStats {
+            bytes_out: self.bytes_out - out0,
+            bytes_in: self.bytes_in - in0,
+            calls,
+        };
+        Ok((replies, stats))
+    }
+
+    /// Fault injection (tests): kill worker `wi`'s OS process *without*
+    /// telling the pool — the next round must surface a structured error,
+    /// exactly as if the process died on its own.
+    pub fn kill_worker(&mut self, wi: usize) {
+        if let Some(w) = self.workers.get_mut(wi) {
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+        }
+    }
+
+    fn send(&mut self, wi: usize, msg: &ToWorker) -> Result<()> {
+        self.send_payload(wi, &msg.encode())
+    }
+
+    /// Queue one frame for the worker's writer thread. Never blocks on the
+    /// pipe; oversized payloads fail here (structured), write failures
+    /// surface at the next `recv` (dead pipe / timeout).
+    fn send_payload(&mut self, wi: usize, payload: &[u8]) -> Result<()> {
+        if !self.workers[wi].alive {
+            return Err(worker_error(wi, "worker is dead (earlier failure)"));
+        }
+        if payload.len() > self.max_frame {
+            let e = WireError::FrameTooLarge { len: payload.len(), max: self.max_frame };
+            return Err(self.mark_dead(wi, format!("send failed: {e}")));
+        }
+        let queued = match &self.workers[wi].tx {
+            Some(tx) => tx.send(payload.to_vec()).is_ok(),
+            None => false,
+        };
+        if !queued {
+            return Err(self.mark_dead(wi, "send failed: writer thread gone (pipe broken)"));
+        }
+        self.bytes_out += wire::frame_size(payload.len()) as u64;
+        Ok(())
+    }
+
+    fn recv(&mut self, wi: usize) -> Result<FromWorker> {
+        if !self.workers[wi].alive {
+            return Err(worker_error(wi, "worker is dead (earlier failure)"));
+        }
+        match self.workers[wi].rx.recv_timeout(self.timeout) {
+            Ok(Ok((payload, nbytes))) => {
+                self.bytes_in += nbytes as u64;
+                match FromWorker::decode(&payload) {
+                    Ok(msg) => Ok(msg),
+                    Err(e) => Err(self.mark_dead(wi, format!("undecodable reply: {e}"))),
+                }
+            }
+            Ok(Err(WireError::Truncated { got: 0, .. })) => {
+                Err(self.mark_dead(wi, "worker closed its pipe (exited or was killed)"))
+            }
+            Ok(Err(e)) => Err(self.mark_dead(wi, format!("bad reply frame: {e}"))),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let ms = self.timeout.as_millis();
+                Err(self.mark_dead(wi, format!("no reply within {ms} ms (worker hung?)")))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(self.mark_dead(wi, "worker reader disconnected (process gone)"))
+            }
+        }
+    }
+
+    /// Mark `wi` dead, reap the child, and build the structured error.
+    fn mark_dead(&mut self, wi: usize, message: impl Into<String>) -> Error {
+        let w = &mut self.workers[wi];
+        w.alive = false;
+        w.tx = None; // writer thread exits, dropping the worker's stdin.
+        let _ = w.child.kill();
+        let _ = w.child.wait();
+        worker_error(wi, message)
+    }
+
+    fn shutdown_all(&mut self) {
+        for w in &mut self.workers {
+            if let Some(tx) = w.tx.take() {
+                let _ = tx.send(ToWorker::Shutdown.encode());
+            } // dropping tx ends the writer, closing the pipe: EOF is a
+              // shutdown too.
+        }
+        for w in &mut self.workers {
+            let deadline = Instant::now() + Duration::from_millis(250);
+            loop {
+                match w.child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    _ => {
+                        let _ = w.child.kill();
+                        let _ = w.child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ProcessPool {
+    fn drop(&mut self) {
+        self.shutdown_all();
+    }
+}
+
+// --- worker side ------------------------------------------------------------
+
+struct WorkerRuntime {
+    oracle: CountingOracle<std::sync::Arc<dyn Oracle>>,
+    counters: std::sync::Arc<OracleCounters>,
+    shards: Vec<Vec<ElementId>>,
+    stores: Vec<GuessStore>,
+}
+
+fn send_reply(w: &mut dyn Write, msg: &FromWorker, max_frame: usize) -> bool {
+    wire::write_frame(w, &msg.encode(), max_frame).is_ok()
+}
+
+/// The worker main loop over arbitrary streams (in-memory in unit tests,
+/// the process pipes in production). Returns the process exit code.
+pub fn run_worker(r: &mut dyn Read, w: &mut dyn Write, max_frame: usize, fault: Option<&str>) -> i32 {
+    let mut rt: Option<WorkerRuntime> = None;
+    loop {
+        let payload = match wire::read_frame(r, max_frame) {
+            Ok((payload, _)) => payload,
+            // clean EOF before a header byte: coordinator closed the pipe.
+            Err(WireError::Truncated { got: 0, .. }) => return 0,
+            Err(e) => {
+                send_reply(w, &FromWorker::Fail { message: e.to_string() }, max_frame);
+                return 3;
+            }
+        };
+        let msg = match ToWorker::decode(&payload) {
+            Ok(msg) => msg,
+            Err(e) => {
+                send_reply(
+                    w,
+                    &FromWorker::Fail { message: format!("undecodable message: {e}") },
+                    max_frame,
+                );
+                return 3;
+            }
+        };
+        match msg {
+            ToWorker::Init(init) => match init.spec.build() {
+                Ok(oracle) => {
+                    let counting = CountingOracle::new(oracle);
+                    let counters = counting.counter();
+                    let n = init.shards.len();
+                    rt = Some(WorkerRuntime {
+                        oracle: counting,
+                        counters,
+                        shards: init.shards,
+                        stores: vec![GuessStore::default(); n],
+                    });
+                    let version = if fault == Some("bad-version") {
+                        WIRE_VERSION.wrapping_add(1)
+                    } else {
+                        WIRE_VERSION
+                    };
+                    if !send_reply(w, &FromWorker::Ready { version }, max_frame) {
+                        return 3;
+                    }
+                }
+                Err(e) => {
+                    send_reply(
+                        w,
+                        &FromWorker::Fail { message: format!("cannot build oracle: {e}") },
+                        max_frame,
+                    );
+                    return 3;
+                }
+            },
+            ToWorker::Round(task) => {
+                match fault {
+                    // vanish without a reply: the coordinator sees a
+                    // closed pipe, exactly like an OOM-killed worker.
+                    Some("die-mid-round") => return 3,
+                    // go silent: the coordinator's worker_timeout_ms must
+                    // bound the wait and declare the worker dead.
+                    Some("hang-round") => {
+                        std::thread::sleep(Duration::from_secs(20));
+                        return 3;
+                    }
+                    Some("truncate-frame") => {
+                        let reply =
+                            FromWorker::RoundDone { replies: Vec::new(), calls: (0, 0, 0) };
+                        let mut framed = Vec::new();
+                        let _ = wire::write_frame(&mut framed, &reply.encode(), max_frame);
+                        let half = framed.len() / 2;
+                        let _ = w.write_all(&framed[..half]);
+                        let _ = w.flush();
+                        return 3;
+                    }
+                    Some("corrupt-checksum") => {
+                        let reply =
+                            FromWorker::RoundDone { replies: Vec::new(), calls: (0, 0, 0) };
+                        let mut framed = Vec::new();
+                        let _ = wire::write_frame(&mut framed, &reply.encode(), max_frame);
+                        if let Some(last) = framed.last_mut() {
+                            *last ^= 0xFF;
+                        }
+                        let _ = w.write_all(&framed);
+                        let _ = w.flush();
+                        return 3;
+                    }
+                    _ => {}
+                }
+                let Some(rt) = rt.as_mut() else {
+                    send_reply(
+                        w,
+                        &FromWorker::Fail { message: "round before init".into() },
+                        max_frame,
+                    );
+                    return 3;
+                };
+                let before = rt.counters.snapshot();
+                let replies = shard::run_task_all(
+                    &rt.oracle,
+                    &rt.shards,
+                    &mut rt.stores,
+                    &task,
+                    &crate::mapreduce::backend::Serial,
+                );
+                let after = rt.counters.snapshot();
+                let calls = (
+                    after.0.saturating_sub(before.0),
+                    after.1.saturating_sub(before.1),
+                    after.2.saturating_sub(before.2),
+                );
+                if !send_reply(w, &FromWorker::RoundDone { replies, calls }, max_frame) {
+                    return 3;
+                }
+            }
+            ToWorker::Shutdown => return 0,
+        }
+    }
+}
+
+/// Entry point for the hidden `mrsub worker` subcommand: serve the wire
+/// protocol on stdin/stdout until shutdown; returns the exit code.
+pub fn worker_main() -> i32 {
+    let max_frame = std::env::var("MRSUB_MAX_FRAME")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(DEFAULT_MAX_FRAME);
+    let fault = std::env::var("MRSUB_FAULT").ok();
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut r = stdin.lock();
+    let mut w = stdout.lock();
+    run_worker(&mut r, &mut w, max_frame, fault.as_deref())
+}
+
+#[cfg(test)]
+mod tests {
+    //! In-memory worker-loop tests (no process spawning — the spawning
+    //! path is exercised by `tests/backend_conformance.rs`, which can see
+    //! the built `mrsub` binary).
+
+    use super::*;
+    use crate::mapreduce::wire::{Dec, Enc};
+
+    fn spec() -> OracleSpec {
+        OracleSpec::Coverage { n: 60, universe: 40, avg_degree: 3, weighted: false, seed: 5 }
+    }
+
+    fn framed(msgs: &[ToWorker]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        for m in msgs {
+            wire::write_frame(&mut buf, &m.encode(), DEFAULT_MAX_FRAME).unwrap();
+        }
+        buf
+    }
+
+    fn read_replies(buf: &[u8]) -> Vec<FromWorker> {
+        let mut cursor = std::io::Cursor::new(buf.to_vec());
+        let mut out = Vec::new();
+        while let Ok((payload, _)) = wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME) {
+            out.push(FromWorker::decode(&payload).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn worker_loop_serves_init_round_shutdown() {
+        let init = ToWorker::Init(WorkerInit {
+            spec: spec(),
+            machines: vec![0, 1],
+            shards: vec![(0..30).collect(), (30..60).collect()],
+            sample: vec![1, 2, 3],
+        });
+        let round = ToWorker::Round(RoundTask::LocalGreedy { k: 3 });
+        let input = framed(&[init, round, ToWorker::Shutdown]);
+        let mut r = std::io::Cursor::new(input);
+        let mut out = Vec::new();
+        let code = run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, None);
+        assert_eq!(code, 0);
+        let replies = read_replies(&out);
+        assert_eq!(replies.len(), 2);
+        assert!(matches!(replies[0], FromWorker::Ready { version: WIRE_VERSION }));
+        match &replies[1] {
+            FromWorker::RoundDone { replies, calls } => {
+                assert_eq!(replies.len(), 2, "one reply per hosted machine");
+                assert!(calls.0 > 0, "worker-side oracle calls reported");
+                assert!(calls.1 > 0, "greedy heap fill runs the block path");
+            }
+            other => panic!("expected RoundDone, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn worker_eof_is_clean_exit() {
+        let mut r = std::io::Cursor::new(Vec::new());
+        let mut out = Vec::new();
+        assert_eq!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, None), 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_round_before_init_fails_structurally() {
+        let input = framed(&[ToWorker::Round(RoundTask::MaxSingleton)]);
+        let mut r = std::io::Cursor::new(input);
+        let mut out = Vec::new();
+        assert_ne!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, None), 0);
+        match &read_replies(&out)[0] {
+            FromWorker::Fail { message } => assert!(message.contains("before init")),
+            other => panic!("expected Fail, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn worker_rejects_corrupted_input_frame() {
+        let mut input = framed(&[ToWorker::Round(RoundTask::MaxSingleton)]);
+        let len = input.len();
+        input[len - 1] ^= 0x55; // corrupt the checksum
+        let mut r = std::io::Cursor::new(input);
+        let mut out = Vec::new();
+        assert_ne!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, None), 0);
+        match &read_replies(&out)[0] {
+            FromWorker::Fail { message } => assert!(message.contains("checksum")),
+            other => panic!("expected Fail, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fault_injection_shapes_are_detectable() {
+        // truncate-frame: the emitted bytes must NOT parse as a frame.
+        let init = ToWorker::Init(WorkerInit {
+            spec: spec(),
+            machines: vec![0],
+            shards: vec![(0..60).collect()],
+            sample: vec![],
+        });
+        let round = ToWorker::Round(RoundTask::MaxSingleton);
+        let input = framed(&[init.clone(), round.clone()]);
+        let mut out = Vec::new();
+        let code = run_worker(
+            &mut std::io::Cursor::new(input.clone()),
+            &mut out,
+            DEFAULT_MAX_FRAME,
+            Some("truncate-frame"),
+        );
+        assert_ne!(code, 0);
+        // first frame (Ready) parses, second is truncated.
+        let mut cursor = std::io::Cursor::new(out);
+        assert!(wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME).is_ok());
+        assert!(matches!(
+            wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME),
+            Err(WireError::Truncated { .. })
+        ));
+
+        // corrupt-checksum: second frame fails the checksum.
+        let mut out = Vec::new();
+        run_worker(
+            &mut std::io::Cursor::new(input),
+            &mut out,
+            DEFAULT_MAX_FRAME,
+            Some("corrupt-checksum"),
+        );
+        let mut cursor = std::io::Cursor::new(out);
+        assert!(wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME).is_ok());
+        assert!(matches!(
+            wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME),
+            Err(WireError::BadChecksum { .. })
+        ));
+    }
+
+    #[test]
+    fn spec_is_wire_codable_inside_init() {
+        // Init round-trips through encode/decode with the spec intact.
+        let init = WorkerInit {
+            spec: spec(),
+            machines: vec![3, 7],
+            shards: vec![vec![1, 2], vec![3]],
+            sample: vec![9],
+        };
+        let msg = ToWorker::Init(init.clone());
+        match ToWorker::decode(&msg.encode()).unwrap() {
+            ToWorker::Init(back) => assert_eq!(back, init),
+            other => panic!("expected Init, got {other:?}"),
+        }
+        // Enc/Dec are also usable standalone for specs.
+        let mut enc = Enc::new();
+        init.spec.encode(&mut enc);
+        let mut dec = Dec::new(&enc.buf);
+        assert_eq!(OracleSpec::decode(&mut dec).unwrap(), init.spec);
+    }
+}

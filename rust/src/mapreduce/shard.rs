@@ -1,0 +1,302 @@
+//! Machine-local execution of [`RoundTask`]s — the *single* interpreter
+//! shared by the in-process backends (`Serial`/`Rayon`, via
+//! [`crate::mapreduce::MrCluster::shard_round`]) and the `mrsub worker`
+//! subprocess of the process backend.
+//!
+//! Because every backend funnels through the same `prepare`/`compute`/
+//! `apply` code — and oracle reconstruction from an
+//! [`crate::oracle::spec::OracleSpec`] is deterministic — bit-identical
+//! per-machine outputs across backends hold *by construction*; the
+//! conformance suite then re-asserts it end to end.
+//!
+//! Execution is split into three phases so the read-heavy part can fan out
+//! across machines on any [`ExecBackend`] without aliasing the mutable
+//! per-machine stores:
+//!
+//! 1. [`prepare`] — rehydrate the broadcast oracle states (the partial
+//!    solutions `G` a filter runs against) **once per round**, exactly as
+//!    the lock-step simulation shares its identically-computed `G₀`;
+//! 2. [`compute`] — pure per-machine evaluation (parallelizable);
+//! 3. [`apply`] — fold persistent effects (Algorithm 5's shrinking
+//!    per-guess shards) back into each machine's [`GuessStore`].
+
+use std::collections::HashMap;
+
+use crate::algorithms::greedy::lazy_greedy_extend;
+use crate::algorithms::sparse::sparse_worker;
+use crate::algorithms::threshold::{block_max_marginal, threshold_filter};
+use crate::core::ElementId;
+use crate::mapreduce::backend::{self, ExecBackend};
+use crate::mapreduce::wire::{RoundTask, TaskReply};
+use crate::oracle::{Oracle, OracleState, StatePool};
+
+/// Per-machine persistent state across rounds: the per-OPT-guess filtered
+/// shard copies of Algorithm 5 (absent ⇒ the guess still sees the
+/// machine's original shard).
+#[derive(Debug, Default, Clone)]
+pub struct GuessStore {
+    shards: HashMap<u32, Vec<ElementId>>,
+}
+
+impl GuessStore {
+    /// The current shard for guess `id`, falling back to the machine's
+    /// base shard before the first persistent filter.
+    pub fn shard_for<'a>(&'a self, id: u32, base: &'a [ElementId]) -> &'a [ElementId] {
+        self.shards.get(&id).map_or(base, Vec::as_slice)
+    }
+
+    /// Number of persisted guess shards (tests/metrics).
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True iff nothing is persisted.
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+}
+
+/// A round task with its broadcast oracle states rehydrated (one
+/// `prepare` per round, shared read-only by every machine).
+pub enum Prepared {
+    /// See [`RoundTask::Filter`].
+    Filter {
+        /// Rehydrated base state `G`.
+        state: Box<dyn OracleState>,
+        /// Threshold.
+        tau: f64,
+    },
+    /// See [`RoundTask::MultiFilter`].
+    MultiFilter {
+        /// Persist per-guess filtered shards.
+        persist: bool,
+        /// `(guess id, rehydrated G, τ)` per active guess.
+        guesses: Vec<(u32, Box<dyn OracleState>, f64)>,
+        /// Guess ids to evict from the stores.
+        drop: Vec<u32>,
+    },
+    /// See [`RoundTask::LocalGreedy`].
+    LocalGreedy {
+        /// Cardinality bound.
+        k: usize,
+    },
+    /// See [`RoundTask::MaxSingleton`].
+    MaxSingleton,
+    /// See [`RoundTask::TopSingletons`].
+    TopSingletons {
+        /// Cardinality bound.
+        k: usize,
+        /// Ship factor.
+        c: usize,
+    },
+    /// See [`RoundTask::Batch`].
+    Batch(Vec<Prepared>),
+}
+
+/// Rehydrate a task's broadcast states by replaying each `base` into a
+/// fresh oracle state in insertion order — the same replay on every
+/// backend, so the resulting marginals are bit-identical everywhere.
+pub fn prepare(oracle: &dyn Oracle, task: &RoundTask) -> Prepared {
+    let replay = |base: &[ElementId]| -> Box<dyn OracleState> {
+        let mut st = oracle.state();
+        for &e in base {
+            st.insert(e);
+        }
+        st
+    };
+    match task {
+        RoundTask::Filter { base, tau } => Prepared::Filter { state: replay(base), tau: *tau },
+        RoundTask::MultiFilter { persist, guesses, drop } => Prepared::MultiFilter {
+            persist: *persist,
+            guesses: guesses.iter().map(|g| (g.id, replay(&g.base), g.tau)).collect(),
+            drop: drop.clone(),
+        },
+        RoundTask::LocalGreedy { k } => Prepared::LocalGreedy { k: *k },
+        RoundTask::MaxSingleton => Prepared::MaxSingleton,
+        RoundTask::TopSingletons { k, c } => Prepared::TopSingletons { k: *k, c: *c },
+        RoundTask::Batch(tasks) => {
+            Prepared::Batch(tasks.iter().map(|t| prepare(oracle, t)).collect())
+        }
+    }
+}
+
+/// Pure per-machine evaluation (no mutation; parallel-safe).
+pub fn compute(
+    states: &StatePool<'_>,
+    prep: &Prepared,
+    shard: &[ElementId],
+    store: &GuessStore,
+) -> TaskReply {
+    match prep {
+        Prepared::Filter { state, tau } => {
+            TaskReply::Ids(threshold_filter(state.as_ref(), shard, *tau))
+        }
+        Prepared::MultiFilter { persist, guesses, .. } => TaskReply::Multi(
+            guesses
+                .iter()
+                .map(|(id, state, tau)| {
+                    let input = if *persist { store.shard_for(*id, shard) } else { shard };
+                    (*id, threshold_filter(state.as_ref(), input, *tau))
+                })
+                .collect(),
+        ),
+        Prepared::LocalGreedy { k } => {
+            let mut st = states.acquire();
+            lazy_greedy_extend(&mut *st, shard, *k);
+            TaskReply::Ids(st.selected().to_vec())
+        }
+        Prepared::MaxSingleton => {
+            let st = states.acquire();
+            TaskReply::Scalar(block_max_marginal(&*st, shard))
+        }
+        Prepared::TopSingletons { k, c } => TaskReply::Ids(sparse_worker(states, shard, *k, *c)),
+        Prepared::Batch(parts) => {
+            TaskReply::Batch(parts.iter().map(|p| compute(states, p, shard, store)).collect())
+        }
+    }
+}
+
+/// Fold a reply's persistent effects into the machine's store.
+pub fn apply(prep: &Prepared, reply: &TaskReply, store: &mut GuessStore) {
+    match (prep, reply) {
+        (Prepared::MultiFilter { persist, drop, .. }, TaskReply::Multi(parts)) => {
+            for id in drop {
+                store.shards.remove(id);
+            }
+            if *persist {
+                for (id, filtered) in parts {
+                    store.shards.insert(*id, filtered.clone());
+                }
+            }
+        }
+        (Prepared::Batch(ps), TaskReply::Batch(rs)) => {
+            for (p, r) in ps.iter().zip(rs) {
+                apply(p, r, store);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Execute one task over every machine: prepare once, compute fanned out
+/// on `exec`, apply serially. `shards[i]`/`stores[i]` is machine `i`.
+pub fn run_task_all(
+    oracle: &dyn Oracle,
+    shards: &[Vec<ElementId>],
+    stores: &mut [GuessStore],
+    task: &RoundTask,
+    exec: &dyn ExecBackend,
+) -> Vec<TaskReply> {
+    debug_assert_eq!(shards.len(), stores.len());
+    let prep = prepare(oracle, task);
+    let states = StatePool::new(oracle);
+    let replies = {
+        let stores_ro: &[GuessStore] = stores;
+        backend::map_indexed(exec, shards.len(), |i| {
+            compute(&states, &prep, &shards[i], &stores_ro[i])
+        })
+    };
+    for (i, r) in replies.iter().enumerate() {
+        apply(&prep, r, &mut stores[i]);
+    }
+    replies
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::backend::Serial;
+    use crate::mapreduce::wire::GuessFilter;
+    use crate::workload::coverage::CoverageGen;
+
+    fn setup() -> (impl Oracle, Vec<Vec<ElementId>>, Vec<GuessStore>) {
+        let o = CoverageGen::new(120, 80, 4).build(7);
+        let shards: Vec<Vec<ElementId>> =
+            vec![(0..40).collect(), (40..80).collect(), (80..120).collect()];
+        let stores = vec![GuessStore::default(); 3];
+        (o, shards, stores)
+    }
+
+    #[test]
+    fn filter_task_matches_direct_threshold_filter() {
+        let (o, shards, mut stores) = setup();
+        let base = vec![3u32, 17];
+        let task = RoundTask::Filter { base: base.clone(), tau: 1.5 };
+        let replies = run_task_all(&o, &shards, &mut stores, &task, &Serial);
+        let mut st = o.state();
+        for &e in &base {
+            st.insert(e);
+        }
+        for (shard, reply) in shards.iter().zip(replies) {
+            assert_eq!(reply.into_ids(), threshold_filter(st.as_ref(), shard, 1.5));
+        }
+    }
+
+    #[test]
+    fn multifilter_persists_per_guess_shards() {
+        let (o, shards, mut stores) = setup();
+        let task = RoundTask::MultiFilter {
+            persist: true,
+            guesses: vec![GuessFilter { id: 9, base: vec![], tau: 1.0 }],
+            drop: vec![],
+        };
+        let first = run_task_all(&o, &shards, &mut stores, &task, &Serial);
+        assert!(stores.iter().all(|s| s.len() == 1), "guess shard persisted");
+        // second round at a higher tau filters the *persisted* shard.
+        let task2 = RoundTask::MultiFilter {
+            persist: true,
+            guesses: vec![GuessFilter { id: 9, base: vec![0, 1], tau: 2.0 }],
+            drop: vec![],
+        };
+        let second = run_task_all(&o, &shards, &mut stores, &task2, &Serial);
+        for (f, s) in first.iter().zip(&second) {
+            let f: Vec<_> = f.clone().into_multi();
+            let s: Vec<_> = s.clone().into_multi();
+            // survivors of round 2 are a subset of round 1's survivors.
+            for e in &s[0].1 {
+                assert!(f[0].1.contains(e), "round-2 survivor {e} not in round-1 set");
+            }
+        }
+        // drop evicts the persisted shard.
+        let task3 = RoundTask::MultiFilter { persist: true, guesses: vec![], drop: vec![9] };
+        run_task_all(&o, &shards, &mut stores, &task3, &Serial);
+        assert!(stores.iter().all(GuessStore::is_empty));
+    }
+
+    #[test]
+    fn batch_composes_and_preserves_shapes() {
+        let (o, shards, mut stores) = setup();
+        let task = RoundTask::Batch(vec![
+            RoundTask::MaxSingleton,
+            RoundTask::LocalGreedy { k: 4 },
+            RoundTask::TopSingletons { k: 3, c: 2 },
+        ]);
+        let replies = run_task_all(&o, &shards, &mut stores, &task, &Serial);
+        for r in replies {
+            let parts = r.into_batch();
+            assert_eq!(parts.len(), 3);
+            assert!(parts[0].as_scalar() > 0.0);
+            assert!(matches!(&parts[1], TaskReply::Ids(ids) if ids.len() <= 4));
+            assert!(matches!(&parts[2], TaskReply::Ids(ids) if ids.len() <= 6));
+        }
+    }
+
+    #[test]
+    fn serial_and_rayon_compute_identical_replies() {
+        let (o, shards, mut stores_a) = setup();
+        let mut stores_b = stores_a.clone();
+        let task = RoundTask::Batch(vec![
+            RoundTask::Filter { base: vec![5], tau: 1.0 },
+            RoundTask::LocalGreedy { k: 5 },
+        ]);
+        let a = run_task_all(&o, &shards, &mut stores_a, &task, &Serial);
+        let b = run_task_all(
+            &o,
+            &shards,
+            &mut stores_b,
+            &task,
+            &crate::mapreduce::backend::Rayon { chunk: 1 },
+        );
+        assert_eq!(a, b);
+    }
+}

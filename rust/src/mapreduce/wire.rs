@@ -1,0 +1,1010 @@
+//! Versioned wire format for the shared-nothing process backend.
+//!
+//! The coordinator and its worker processes (`mrsub worker`) speak a
+//! length-prefixed, checksummed binary framing over stdin/stdout pipes:
+//!
+//! ```text
+//! [magic "MRSB"][version u16 LE][len u32 LE][payload…][fnv1a-32 LE]
+//! ```
+//!
+//! Every frame is validated on receipt — magic, protocol version, a hard
+//! length cap (`max_frame`, config-driven), and an FNV-1a checksum over the
+//! payload — and every validation failure surfaces as a typed
+//! [`WireError`], never a panic: a corrupted or truncated stream from a
+//! dying worker must degrade into a structured coordinator error (the
+//! contract `tests/backend_conformance.rs` fault-injects against).
+//!
+//! **Versioning rule:** any change to the frame header, to a message tag,
+//! or to the byte layout of an existing message bumps [`WIRE_VERSION`].
+//! Coordinator and worker are always the same binary (the worker is a
+//! re-exec of `current_exe`), so no cross-version compatibility shims are
+//! kept; the version field exists to *detect* accidental mixed-binary
+//! deployments, which fail the `Ready` handshake with a clear error.
+//!
+//! Payloads are encoded with the hand-rolled [`Enc`]/[`Dec`] codec (the
+//! offline workspace carries no serde/bincode): little-endian fixed-width
+//! integers, `f64` as IEEE bit patterns (exact round-trip — the process
+//! backend's bit-identical-selection contract depends on it), and
+//! length-prefixed sequences with remaining-byte sanity checks so a
+//! malformed length can never trigger an over-allocation.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+use crate::core::ElementId;
+use crate::mapreduce::CommSize;
+use crate::oracle::spec::OracleSpec;
+
+/// Protocol version; bump on any layout or message change (see module docs).
+pub const WIRE_VERSION: u16 = 1;
+
+/// Frame magic: "MRSB" (MapReduce-Submodular Backend).
+pub const FRAME_MAGIC: [u8; 4] = *b"MRSB";
+
+/// Default hard cap on a single frame's payload (64 MiB); configurable via
+/// `ClusterConfig::max_frame_bytes` / `[cluster] max_frame_mb`.
+pub const DEFAULT_MAX_FRAME: usize = 64 << 20;
+
+/// Frame header bytes: magic + version + payload length.
+const HEADER_LEN: usize = 4 + 2 + 4;
+
+/// Typed wire-level failure. Every decode path returns one of these;
+/// none panics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Underlying pipe I/O failed (worker died, pipe closed, …).
+    Io(String),
+    /// The stream ended inside a frame.
+    Truncated {
+        /// Bytes the decoder needed.
+        needed: usize,
+        /// Bytes actually available.
+        got: usize,
+    },
+    /// First four bytes were not [`FRAME_MAGIC`].
+    BadMagic([u8; 4]),
+    /// Frame carried a different protocol version.
+    BadVersion {
+        /// Version found in the frame.
+        got: u16,
+        /// Version this binary speaks.
+        want: u16,
+    },
+    /// Payload checksum mismatch (corruption in transit).
+    BadChecksum {
+        /// Checksum found in the frame.
+        got: u32,
+        /// Checksum recomputed over the payload.
+        want: u32,
+    },
+    /// Frame length exceeded the configured cap.
+    FrameTooLarge {
+        /// Declared (or attempted) payload length.
+        len: usize,
+        /// Configured cap.
+        max: usize,
+    },
+    /// Structurally invalid payload (bad tag, bad length, trailing bytes).
+    Malformed(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(m) => write!(f, "wire i/o error: {m}"),
+            WireError::Truncated { needed, got } => {
+                write!(f, "truncated frame: needed {needed} bytes, got {got}")
+            }
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            WireError::BadVersion { got, want } => {
+                write!(f, "wire version mismatch: frame v{got}, binary speaks v{want}")
+            }
+            WireError::BadChecksum { got, want } => {
+                write!(f, "frame checksum mismatch: {got:#010x} != {want:#010x}")
+            }
+            WireError::FrameTooLarge { len, max } => {
+                write!(f, "frame payload of {len} bytes exceeds max-frame cap {max}")
+            }
+            WireError::Malformed(m) => write!(f, "malformed payload: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Total on-the-wire size of a frame carrying a `payload_len`-byte
+/// payload (header + payload + checksum) — byte accounting without I/O.
+pub fn frame_size(payload_len: usize) -> usize {
+    HEADER_LEN + payload_len + 4
+}
+
+/// FNV-1a (32-bit) over the payload — cheap, dependency-free, and plenty
+/// for catching pipe truncation/corruption (not cryptographic).
+pub fn checksum(data: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in data {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Write one frame; returns the total bytes written (header + payload +
+/// checksum) for IPC accounting.
+pub fn write_frame(w: &mut dyn Write, payload: &[u8], max_frame: usize) -> Result<usize, WireError> {
+    if payload.len() > max_frame {
+        return Err(WireError::FrameTooLarge { len: payload.len(), max: max_frame });
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&FRAME_MAGIC);
+    header[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    header[6..10].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let sum = checksum(payload).to_le_bytes();
+    let io = |e: std::io::Error| WireError::Io(e.to_string());
+    w.write_all(&header).map_err(io)?;
+    w.write_all(payload).map_err(io)?;
+    w.write_all(&sum).map_err(io)?;
+    w.flush().map_err(io)?;
+    Ok(frame_size(payload.len()))
+}
+
+fn read_exact_or(r: &mut dyn Read, buf: &mut [u8]) -> Result<(), WireError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Err(WireError::Truncated { needed: buf.len(), got: filled }),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame; returns `(payload, total_bytes_read)`.
+///
+/// A clean EOF *before any header byte* is reported as `Truncated { got: 0
+/// }` — callers treat it as "peer closed the stream".
+pub fn read_frame(r: &mut dyn Read, max_frame: usize) -> Result<(Vec<u8>, usize), WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_or(r, &mut header)?;
+    let mut magic = [0u8; 4];
+    magic.copy_from_slice(&header[..4]);
+    if magic != FRAME_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion { got: version, want: WIRE_VERSION });
+    }
+    let len = u32::from_le_bytes([header[6], header[7], header[8], header[9]]) as usize;
+    if len > max_frame {
+        return Err(WireError::FrameTooLarge { len, max: max_frame });
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_or(r, &mut payload)?;
+    let mut sum = [0u8; 4];
+    read_exact_or(r, &mut sum)?;
+    let got = u32::from_le_bytes(sum);
+    let want = checksum(&payload);
+    if got != want {
+        return Err(WireError::BadChecksum { got, want });
+    }
+    Ok((payload, HEADER_LEN + len + 4))
+}
+
+// --- byte codec -------------------------------------------------------------
+
+/// Append-only encoder (little-endian throughout).
+#[derive(Debug, Default)]
+pub struct Enc {
+    /// The bytes written so far.
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Fresh empty encoder.
+    pub fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+
+    /// Append a `u8`.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u16`.
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u32`.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64`.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `usize` (as `u64`).
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Append an `f64` as its IEEE bit pattern (exact round-trip).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Append a bool (one byte).
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append a length-prefixed element-id slice.
+    pub fn ids(&mut self, ids: &[ElementId]) {
+        self.u32(ids.len() as u32);
+        for &e in ids {
+            self.u32(e);
+        }
+    }
+
+    /// Append a length-prefixed `f64` slice (bit patterns).
+    pub fn f64s(&mut self, xs: &[f64]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+}
+
+/// Cursor-style decoder over a payload; every getter checks remaining
+/// bytes and returns [`WireError::Truncated`] instead of slicing past the
+/// end.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Decode from `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { needed: n, got: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a `u8`.
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a `u16`.
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    /// Read a `u32`.
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a `u64`.
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Read a `usize` (encoded as `u64`; checked narrowing).
+    pub fn usize(&mut self) -> Result<usize, WireError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| WireError::Malformed(format!("usize overflow: {v}")))
+    }
+
+    /// Read an `f64` bit pattern.
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a bool.
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(WireError::Malformed(format!("bad bool byte {b}"))),
+        }
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("invalid utf-8 string".into()))
+    }
+
+    /// Read a length-prefixed element-id vector (length sanity-checked
+    /// against the remaining bytes before allocation).
+    pub fn ids(&mut self) -> Result<Vec<ElementId>, WireError> {
+        let len = self.u32()? as usize;
+        if self.remaining() < len * 4 {
+            return Err(WireError::Truncated { needed: len * 4, got: self.remaining() });
+        }
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    /// Read a length-prefixed `f64` vector.
+    pub fn f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let len = self.u32()? as usize;
+        if self.remaining() < len * 8 {
+            return Err(WireError::Truncated { needed: len * 8, got: self.remaining() });
+        }
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    /// Assert the payload is fully consumed (catches layout drift).
+    pub fn finish(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after message",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// --- round tasks ------------------------------------------------------------
+
+/// One OPT-guess filter instruction inside [`RoundTask::MultiFilter`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct GuessFilter {
+    /// Stable guess identifier (coordinator-chosen).
+    pub id: u32,
+    /// The broadcast partial solution `G` to filter against, in insertion
+    /// order (the worker rehydrates an oracle state by replaying it).
+    pub base: Vec<ElementId>,
+    /// Threshold τ for this guess.
+    pub tau: f64,
+}
+
+/// A per-machine shard program — the unit of work the coordinator ships to
+/// every simulated machine in one synchronous round. The same
+/// [`crate::mapreduce::shard`] interpreter executes these for the
+/// in-process backends and inside `mrsub worker`, so all backends are
+/// bit-identical by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RoundTask {
+    /// `ThresholdFilter(shard, base, τ)` (Algorithm 2): ship the shard
+    /// elements whose marginal w.r.t. the rehydrated `base` is ≥ τ.
+    Filter {
+        /// Broadcast partial solution, insertion order.
+        base: Vec<ElementId>,
+        /// Threshold.
+        tau: f64,
+    },
+    /// Per-guess threshold filtering (Algorithms 5/6): one filter per OPT
+    /// guess. With `persist`, each guess filters its machine-resident
+    /// shard copy from the previous round and retains the survivors
+    /// (Algorithm 5's persistently shrinking shards); without, every guess
+    /// filters the machine's original shard (Algorithm 6's one-shot round).
+    MultiFilter {
+        /// Retain per-guess filtered shards across rounds.
+        persist: bool,
+        /// Active guesses.
+        guesses: Vec<GuessFilter>,
+        /// Guess ids whose persistent shards can be dropped (guess done).
+        drop: Vec<u32>,
+    },
+    /// Lazy greedy over the shard up to `k` elements (RandGreeDi / MZ
+    /// core-set round 1).
+    LocalGreedy {
+        /// Cardinality bound.
+        k: usize,
+    },
+    /// Max singleton value over the shard (OPT-guess seeding).
+    MaxSingleton,
+    /// The `c·k` largest-singleton shard elements, ascending ids
+    /// (Algorithm 7's worker).
+    TopSingletons {
+        /// Cardinality bound.
+        k: usize,
+        /// Ship factor (elements shipped = `c·k`).
+        c: usize,
+    },
+    /// Several programs in one synchronous round (Theorem 8 runs the dense
+    /// and sparse workers in the same physical round).
+    Batch(Vec<RoundTask>),
+}
+
+impl RoundTask {
+    /// Encode into `enc`.
+    pub fn encode(&self, enc: &mut Enc) {
+        match self {
+            RoundTask::Filter { base, tau } => {
+                enc.u8(1);
+                enc.ids(base);
+                enc.f64(*tau);
+            }
+            RoundTask::MultiFilter { persist, guesses, drop } => {
+                enc.u8(2);
+                enc.bool(*persist);
+                enc.u32(guesses.len() as u32);
+                for g in guesses {
+                    enc.u32(g.id);
+                    enc.ids(&g.base);
+                    enc.f64(g.tau);
+                }
+                enc.ids(drop);
+            }
+            RoundTask::LocalGreedy { k } => {
+                enc.u8(3);
+                enc.usize(*k);
+            }
+            RoundTask::MaxSingleton => enc.u8(4),
+            RoundTask::TopSingletons { k, c } => {
+                enc.u8(5);
+                enc.usize(*k);
+                enc.usize(*c);
+            }
+            RoundTask::Batch(tasks) => {
+                enc.u8(6);
+                enc.u32(tasks.len() as u32);
+                for t in tasks {
+                    t.encode(enc);
+                }
+            }
+        }
+    }
+
+    /// Decode one task.
+    pub fn decode(dec: &mut Dec<'_>) -> Result<RoundTask, WireError> {
+        Ok(match dec.u8()? {
+            1 => RoundTask::Filter { base: dec.ids()?, tau: dec.f64()? },
+            2 => {
+                let persist = dec.bool()?;
+                let n = dec.u32()? as usize;
+                let mut guesses = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    guesses.push(GuessFilter { id: dec.u32()?, base: dec.ids()?, tau: dec.f64()? });
+                }
+                RoundTask::MultiFilter { persist, guesses, drop: dec.ids()? }
+            }
+            3 => RoundTask::LocalGreedy { k: dec.usize()? },
+            4 => RoundTask::MaxSingleton,
+            5 => RoundTask::TopSingletons { k: dec.usize()?, c: dec.usize()? },
+            6 => {
+                let n = dec.u32()? as usize;
+                let mut tasks = Vec::with_capacity(n.min(64));
+                for _ in 0..n {
+                    tasks.push(RoundTask::decode(dec)?);
+                }
+                RoundTask::Batch(tasks)
+            }
+            t => return Err(WireError::Malformed(format!("unknown RoundTask tag {t}"))),
+        })
+    }
+
+    /// Display label for errors/metrics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoundTask::Filter { .. } => "filter",
+            RoundTask::MultiFilter { .. } => "multi-filter",
+            RoundTask::LocalGreedy { .. } => "local-greedy",
+            RoundTask::MaxSingleton => "max-singleton",
+            RoundTask::TopSingletons { .. } => "top-singletons",
+            RoundTask::Batch(_) => "batch",
+        }
+    }
+}
+
+/// True iff `reply` has the shape `task` produces — the coordinator
+/// validates every worker reply against this at the trust boundary, so a
+/// wrong-variant reply (dispatch bug, mismatched worker binary) surfaces
+/// as a structured error instead of a silent empty default.
+pub fn reply_matches(task: &RoundTask, reply: &TaskReply) -> bool {
+    match (task, reply) {
+        (RoundTask::Filter { .. }, TaskReply::Ids(_)) => true,
+        (RoundTask::MultiFilter { .. }, TaskReply::Multi(_)) => true,
+        (RoundTask::LocalGreedy { .. }, TaskReply::Ids(_)) => true,
+        (RoundTask::MaxSingleton, TaskReply::Scalar(_)) => true,
+        (RoundTask::TopSingletons { .. }, TaskReply::Ids(_)) => true,
+        (RoundTask::Batch(tasks), TaskReply::Batch(replies)) => {
+            tasks.len() == replies.len()
+                && tasks.iter().zip(replies).all(|(t, r)| reply_matches(t, r))
+        }
+        _ => false,
+    }
+}
+
+/// Per-machine result of a [`RoundTask`] — shape mirrors the task variant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskReply {
+    /// Selected/surviving element ids.
+    Ids(Vec<ElementId>),
+    /// A scalar (max singleton value).
+    Scalar(f64),
+    /// Per-guess survivor lists.
+    Multi(Vec<(u32, Vec<ElementId>)>),
+    /// One reply per sub-task of a `Batch`.
+    Batch(Vec<TaskReply>),
+}
+
+impl TaskReply {
+    /// Encode into `enc`.
+    pub fn encode(&self, enc: &mut Enc) {
+        match self {
+            TaskReply::Ids(ids) => {
+                enc.u8(1);
+                enc.ids(ids);
+            }
+            TaskReply::Scalar(v) => {
+                enc.u8(2);
+                enc.f64(*v);
+            }
+            TaskReply::Multi(parts) => {
+                enc.u8(3);
+                enc.u32(parts.len() as u32);
+                for (id, ids) in parts {
+                    enc.u32(*id);
+                    enc.ids(ids);
+                }
+            }
+            TaskReply::Batch(replies) => {
+                enc.u8(4);
+                enc.u32(replies.len() as u32);
+                for r in replies {
+                    r.encode(enc);
+                }
+            }
+        }
+    }
+
+    /// Decode one reply.
+    pub fn decode(dec: &mut Dec<'_>) -> Result<TaskReply, WireError> {
+        Ok(match dec.u8()? {
+            1 => TaskReply::Ids(dec.ids()?),
+            2 => TaskReply::Scalar(dec.f64()?),
+            3 => {
+                let n = dec.u32()? as usize;
+                let mut parts = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    parts.push((dec.u32()?, dec.ids()?));
+                }
+                TaskReply::Multi(parts)
+            }
+            4 => {
+                let n = dec.u32()? as usize;
+                let mut replies = Vec::with_capacity(n.min(64));
+                for _ in 0..n {
+                    replies.push(TaskReply::decode(dec)?);
+                }
+                TaskReply::Batch(replies)
+            }
+            t => return Err(WireError::Malformed(format!("unknown TaskReply tag {t}"))),
+        })
+    }
+
+    /// Extract `Ids`, defaulting to empty on shape mismatch (shape is
+    /// enforced by the task/reply pairing; mismatch is a logic bug caught
+    /// by debug assertions and the conformance suite).
+    pub fn into_ids(self) -> Vec<ElementId> {
+        match self {
+            TaskReply::Ids(ids) => ids,
+            other => {
+                debug_assert!(false, "expected Ids reply, got {other:?}");
+                Vec::new()
+            }
+        }
+    }
+
+    /// Extract `Scalar`, defaulting to 0.0 on shape mismatch.
+    pub fn as_scalar(&self) -> f64 {
+        match self {
+            TaskReply::Scalar(v) => *v,
+            other => {
+                debug_assert!(false, "expected Scalar reply, got {other:?}");
+                0.0
+            }
+        }
+    }
+
+    /// Extract `Multi`, defaulting to empty on shape mismatch.
+    pub fn into_multi(self) -> Vec<(u32, Vec<ElementId>)> {
+        match self {
+            TaskReply::Multi(parts) => parts,
+            other => {
+                debug_assert!(false, "expected Multi reply, got {other:?}");
+                Vec::new()
+            }
+        }
+    }
+
+    /// Extract `Batch`, defaulting to empty on shape mismatch.
+    pub fn into_batch(self) -> Vec<TaskReply> {
+        match self {
+            TaskReply::Batch(replies) => replies,
+            other => {
+                debug_assert!(false, "expected Batch reply, got {other:?}");
+                Vec::new()
+            }
+        }
+    }
+}
+
+impl CommSize for TaskReply {
+    fn comm_size(&self) -> usize {
+        match self {
+            TaskReply::Ids(ids) => ids.len(),
+            TaskReply::Scalar(_) => 1,
+            TaskReply::Multi(parts) => parts.iter().map(|(_, ids)| ids.len()).sum(),
+            TaskReply::Batch(replies) => replies.iter().map(|r| r.comm_size()).sum(),
+        }
+    }
+}
+
+// --- coordinator <-> worker messages ---------------------------------------
+
+/// First message to a worker: everything it needs to become a
+/// shared-nothing replica of its simulated machines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerInit {
+    /// Oracle construction recipe (rebuilt deterministically worker-side).
+    pub spec: OracleSpec,
+    /// Simulated machine ids this worker hosts.
+    pub machines: Vec<u32>,
+    /// One shard per hosted machine (same order as `machines`).
+    pub shards: Vec<Vec<ElementId>>,
+    /// The broadcast sample `S`.
+    pub sample: Vec<ElementId>,
+}
+
+/// Coordinator → worker messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ToWorker {
+    /// Shard + spec handoff; worker replies [`FromWorker::Ready`].
+    Init(WorkerInit),
+    /// Execute one round task over every hosted shard.
+    Round(RoundTask),
+    /// Clean shutdown (worker exits 0).
+    Shutdown,
+}
+
+impl ToWorker {
+    /// Encode to a payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut enc = Enc::new();
+        match self {
+            ToWorker::Init(init) => {
+                enc.u8(1);
+                init.spec.encode(&mut enc);
+                enc.ids(&init.machines);
+                enc.u32(init.shards.len() as u32);
+                for s in &init.shards {
+                    enc.ids(s);
+                }
+                enc.ids(&init.sample);
+            }
+            ToWorker::Round(task) => {
+                enc.u8(2);
+                task.encode(&mut enc);
+            }
+            ToWorker::Shutdown => enc.u8(3),
+        }
+        enc.buf
+    }
+
+    /// Decode from a payload.
+    pub fn decode(payload: &[u8]) -> Result<ToWorker, WireError> {
+        let mut dec = Dec::new(payload);
+        let msg = match dec.u8()? {
+            1 => {
+                let spec = OracleSpec::decode(&mut dec)?;
+                let machines = dec.ids()?;
+                let n = dec.u32()? as usize;
+                if n != machines.len() {
+                    return Err(WireError::Malformed(format!(
+                        "init: {n} shards for {} machines",
+                        machines.len()
+                    )));
+                }
+                let mut shards = Vec::with_capacity(n);
+                for _ in 0..n {
+                    shards.push(dec.ids()?);
+                }
+                ToWorker::Init(WorkerInit { spec, machines, shards, sample: dec.ids()? })
+            }
+            2 => ToWorker::Round(RoundTask::decode(&mut dec)?),
+            3 => ToWorker::Shutdown,
+            t => return Err(WireError::Malformed(format!("unknown ToWorker tag {t}"))),
+        };
+        dec.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Worker → coordinator messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FromWorker {
+    /// Init handshake: the worker is up, speaking `version`.
+    Ready {
+        /// The worker binary's [`WIRE_VERSION`].
+        version: u16,
+    },
+    /// One round's results: a reply per hosted machine (machine order of
+    /// the init), plus the worker-side oracle-call delta
+    /// `(total, batched, batches)` for the round.
+    RoundDone {
+        /// Per-machine replies.
+        replies: Vec<TaskReply>,
+        /// Oracle calls issued worker-side during the round.
+        calls: (u64, u64, u64),
+    },
+    /// Structured worker-side failure (bad spec, bad task, …).
+    Fail {
+        /// Human-readable reason.
+        message: String,
+    },
+}
+
+impl FromWorker {
+    /// Encode to a payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut enc = Enc::new();
+        match self {
+            FromWorker::Ready { version } => {
+                enc.u8(1);
+                enc.u16(*version);
+            }
+            FromWorker::RoundDone { replies, calls } => {
+                enc.u8(2);
+                enc.u32(replies.len() as u32);
+                for r in replies {
+                    r.encode(&mut enc);
+                }
+                enc.u64(calls.0);
+                enc.u64(calls.1);
+                enc.u64(calls.2);
+            }
+            FromWorker::Fail { message } => {
+                enc.u8(3);
+                enc.str(message);
+            }
+        }
+        enc.buf
+    }
+
+    /// Decode from a payload.
+    pub fn decode(payload: &[u8]) -> Result<FromWorker, WireError> {
+        let mut dec = Dec::new(payload);
+        let msg = match dec.u8()? {
+            1 => FromWorker::Ready { version: dec.u16()? },
+            2 => {
+                let n = dec.u32()? as usize;
+                let mut replies = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    replies.push(TaskReply::decode(&mut dec)?);
+                }
+                FromWorker::RoundDone {
+                    replies,
+                    calls: (dec.u64()?, dec.u64()?, dec.u64()?),
+                }
+            }
+            3 => FromWorker::Fail { message: dec.str()? },
+            t => return Err(WireError::Malformed(format!("unknown FromWorker tag {t}"))),
+        };
+        dec.finish()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{forall, Gen};
+
+    fn arb_ids(g: &mut Gen, max_len: usize) -> Vec<ElementId> {
+        let len = g.usize_in(0, max_len + 1);
+        (0..len).map(|_| g.usize_in(0, 1 << 20) as ElementId).collect()
+    }
+
+    fn arb_task(g: &mut Gen, depth: usize) -> RoundTask {
+        let hi = if depth == 0 { 7 } else { 6 };
+        match g.usize_in(1, hi) {
+            1 => RoundTask::Filter { base: arb_ids(g, 20), tau: g.f64_in(-3.0, 3.0) },
+            2 => {
+                let n = g.usize_in(0, 4);
+                RoundTask::MultiFilter {
+                    persist: g.bool_with(0.5),
+                    guesses: (0..n)
+                        .map(|i| GuessFilter {
+                            id: i as u32,
+                            base: arb_ids(g, 10),
+                            tau: g.f64_in(0.0, 5.0),
+                        })
+                        .collect(),
+                    drop: arb_ids(g, 4),
+                }
+            }
+            3 => RoundTask::LocalGreedy { k: g.usize_in(0, 100) },
+            4 => RoundTask::MaxSingleton,
+            5 => RoundTask::TopSingletons { k: g.usize_in(1, 50), c: g.usize_in(1, 8) },
+            _ => {
+                let n = g.usize_in(0, 4);
+                RoundTask::Batch((0..n).map(|_| arb_task(g, depth + 1)).collect())
+            }
+        }
+    }
+
+    fn arb_reply(g: &mut Gen, depth: usize) -> TaskReply {
+        let hi = if depth == 0 { 5 } else { 4 };
+        match g.usize_in(1, hi) {
+            1 => TaskReply::Ids(arb_ids(g, 30)),
+            2 => TaskReply::Scalar(g.f64_in(-1e9, 1e9)),
+            3 => {
+                let n = g.usize_in(0, 5);
+                TaskReply::Multi((0..n).map(|i| (i as u32, arb_ids(g, 10))).collect())
+            }
+            _ => {
+                let n = g.usize_in(0, 4);
+                TaskReply::Batch((0..n).map(|_| arb_reply(g, depth + 1)).collect())
+            }
+        }
+    }
+
+    fn frame_roundtrip(payload: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        let written = write_frame(&mut buf, payload, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(written, buf.len());
+        let mut cursor = std::io::Cursor::new(buf);
+        let (got, read) = read_frame(&mut cursor, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(read, written);
+        got
+    }
+
+    #[test]
+    fn frame_roundtrips_and_counts_bytes() {
+        assert_eq!(frame_roundtrip(b"hello"), b"hello");
+        assert_eq!(frame_roundtrip(b""), b"");
+    }
+
+    #[test]
+    fn prop_task_roundtrip() {
+        forall(0xA11, 60, |g| {
+            let task = arb_task(g, 0);
+            let mut enc = Enc::new();
+            task.encode(&mut enc);
+            let mut dec = Dec::new(&enc.buf);
+            let back = RoundTask::decode(&mut dec).expect("decode");
+            dec.finish().expect("fully consumed");
+            assert_eq!(task, back);
+        });
+    }
+
+    #[test]
+    fn prop_reply_roundtrip() {
+        forall(0xA12, 60, |g| {
+            let reply = arb_reply(g, 0);
+            let mut enc = Enc::new();
+            reply.encode(&mut enc);
+            let mut dec = Dec::new(&enc.buf);
+            let back = TaskReply::decode(&mut dec).expect("decode");
+            dec.finish().expect("fully consumed");
+            assert_eq!(reply, back);
+        });
+    }
+
+    #[test]
+    fn prop_messages_roundtrip_through_frames() {
+        forall(0xA13, 40, |g| {
+            let msg = ToWorker::Round(arb_task(g, 0));
+            let payload = msg.encode();
+            let framed = frame_roundtrip(&payload);
+            assert_eq!(ToWorker::decode(&framed).unwrap(), msg);
+
+            let reply = FromWorker::RoundDone {
+                replies: (0..g.usize_in(0, 4)).map(|_| arb_reply(g, 0)).collect(),
+                calls: (g.u64_in(1000), g.u64_in(1000), g.u64_in(100)),
+            };
+            let framed = frame_roundtrip(&reply.encode());
+            assert_eq!(FromWorker::decode(&framed).unwrap(), reply);
+        });
+    }
+
+    #[test]
+    fn prop_corrupted_frames_error_never_panic() {
+        forall(0xA14, 80, |g| {
+            let task = arb_task(g, 0);
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &ToWorker::Round(task).encode(), DEFAULT_MAX_FRAME).unwrap();
+
+            // flip one byte anywhere in the frame.
+            let idx = g.usize_in(0, buf.len());
+            let bit = 1u8 << g.usize_in(0, 8);
+            let mut corrupt = buf.clone();
+            corrupt[idx] ^= bit;
+            let mut cursor = std::io::Cursor::new(corrupt);
+            match read_frame(&mut cursor, DEFAULT_MAX_FRAME) {
+                Ok(_) => {
+                    // A payload byte flip is always caught (FNV-1a folds
+                    // every byte through an invertible multiply), and
+                    // header flips fail the magic/version/length checks —
+                    // reaching Ok on a corrupted frame is the one
+                    // unacceptable outcome.
+                    panic!("1-bit corruption went undetected at byte {idx}");
+                }
+                Err(_) => {} // structured error: the contract.
+            }
+
+            // truncation at every prefix length errors cleanly.
+            let cut = g.usize_in(0, buf.len());
+            let mut cursor = std::io::Cursor::new(buf[..cut].to_vec());
+            assert!(read_frame(&mut cursor, DEFAULT_MAX_FRAME).is_err());
+        });
+    }
+
+    #[test]
+    fn oversized_frames_rejected_both_sides() {
+        let payload = vec![0u8; 256];
+        let mut buf = Vec::new();
+        match write_frame(&mut buf, &payload, 64) {
+            Err(WireError::FrameTooLarge { len: 256, max: 64 }) => {}
+            other => panic!("expected FrameTooLarge, got {other:?}"),
+        }
+        // receiver side: a legal frame read under a smaller cap.
+        write_frame(&mut buf, &payload, DEFAULT_MAX_FRAME).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        match read_frame(&mut cursor, 64) {
+            Err(WireError::FrameTooLarge { len: 256, max: 64 }) => {}
+            other => panic!("expected FrameTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_detected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"xyz", DEFAULT_MAX_FRAME).unwrap();
+        let mut bad_magic = buf.clone();
+        bad_magic[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut std::io::Cursor::new(bad_magic), DEFAULT_MAX_FRAME),
+            Err(WireError::BadMagic(_))
+        ));
+        let mut bad_version = buf.clone();
+        bad_version[4] = WIRE_VERSION as u8 + 1;
+        assert!(matches!(
+            read_frame(&mut std::io::Cursor::new(bad_version), DEFAULT_MAX_FRAME),
+            Err(WireError::BadVersion { .. })
+        ));
+    }
+}

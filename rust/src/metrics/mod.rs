@@ -27,6 +27,11 @@ pub struct RoundStat {
     pub batched_calls: u64,
     /// Number of block-marginal calls issued during the round.
     pub oracle_batches: u64,
+    /// Wire-frame bytes coordinator → workers this round (0 unless the
+    /// round ran on the shared-nothing process backend).
+    pub ipc_bytes_out: u64,
+    /// Wire-frame bytes workers → coordinator this round.
+    pub ipc_bytes_in: u64,
     /// Wall-clock time of the simulated round.
     pub wall: Duration,
 }
@@ -43,6 +48,8 @@ impl RoundStat {
             ("oracle_calls", Json::Num(self.oracle_calls as f64)),
             ("batched_calls", Json::Num(self.batched_calls as f64)),
             ("oracle_batches", Json::Num(self.oracle_batches as f64)),
+            ("ipc_bytes_out", Json::Num(self.ipc_bytes_out as f64)),
+            ("ipc_bytes_in", Json::Num(self.ipc_bytes_in as f64)),
             ("wall_us", Json::Num(self.wall.as_micros() as f64)),
         ])
     }
@@ -100,6 +107,15 @@ impl MrMetrics {
         self.rounds.iter().map(|r| r.oracle_batches).sum()
     }
 
+    /// Total IPC frame bytes `(coordinator→workers, workers→coordinator)`
+    /// across rounds — nonzero only for process-backend runs.
+    pub fn total_ipc_bytes(&self) -> (u64, u64) {
+        (
+            self.rounds.iter().map(|r| r.ipc_bytes_out).sum(),
+            self.rounds.iter().map(|r| r.ipc_bytes_in).sum(),
+        )
+    }
+
     /// Total simulated wall time.
     pub fn total_wall(&self) -> Duration {
         self.rounds.iter().map(|r| r.wall).sum()
@@ -147,6 +163,8 @@ mod tests {
             oracle_calls: 10,
             batched_calls: 6,
             oracle_batches: 2,
+            ipc_bytes_out: 100,
+            ipc_bytes_in: 50,
             wall: Duration::from_micros(100),
         }
     }
@@ -167,6 +185,7 @@ mod tests {
         assert_eq!(m.total_oracle_calls(), 20);
         assert_eq!(m.total_batched_calls(), 12);
         assert_eq!(m.total_oracle_batches(), 4);
+        assert_eq!(m.total_ipc_bytes(), (200, 100));
         assert_eq!(m.total_wall(), Duration::from_micros(200));
         assert!(m.machine_budget() >= (1000f64 * 10.0).sqrt() as usize);
     }

@@ -65,6 +65,15 @@ impl OracleCounters {
         (self.total(), self.batched(), self.batches())
     }
 
+    /// Merge externally-counted queries (a process-backend worker's
+    /// per-round delta) into these counters, so coordinator metrics see
+    /// one coherent total across address spaces.
+    pub fn add(&self, total: u64, batched: u64, batches: u64) {
+        self.total.fetch_add(total, Ordering::Relaxed);
+        self.batched.fetch_add(batched, Ordering::Relaxed);
+        self.batches.fetch_add(batches, Ordering::Relaxed);
+    }
+
     /// Zero all counters.
     pub fn reset(&self) {
         self.total.store(0, Ordering::Relaxed);

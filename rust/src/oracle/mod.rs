@@ -47,6 +47,7 @@ pub mod facility;
 #[cfg(feature = "xla")]
 pub mod hlo;
 pub mod modular;
+pub mod spec;
 
 pub use counting::{CountingOracle, OracleCounters};
 

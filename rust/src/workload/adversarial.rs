@@ -31,7 +31,9 @@ impl WorkloadGen for AdversarialGen {
         let oracle = self.build();
         let opt = oracle.known_opt();
         let name = format!("adversarial(t={},k={})", self.t, self.k);
-        Instance::new(name, std::sync::Arc::new(oracle)).with_opt(opt, self.k)
+        Instance::new(name, std::sync::Arc::new(oracle))
+            .with_opt(opt, self.k)
+            .with_spec(crate::oracle::spec::OracleSpec::Adversarial { t: self.t, k: self.k })
     }
 }
 

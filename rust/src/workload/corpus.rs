@@ -83,7 +83,16 @@ impl WorkloadGen for ZipfCorpusGen {
             "{tag}(docs={},vocab={},len={},s={},seed={seed})",
             self.docs, self.vocab, self.doc_len, self.s
         );
-        Instance::new(name, std::sync::Arc::new(self.build(seed)))
+        Instance::new(name, std::sync::Arc::new(self.build(seed))).with_spec(
+            crate::oracle::spec::OracleSpec::Zipf {
+                docs: self.docs,
+                vocab: self.vocab,
+                doc_len: self.doc_len,
+                s: self.s,
+                idf: self.idf_weighted,
+                seed,
+            },
+        )
     }
 }
 

@@ -65,7 +65,15 @@ impl WorkloadGen for CoverageGen {
         let tag = if self.weighted { "wcoverage" } else { "coverage" };
         let name =
             format!("{tag}(n={},u={},deg={},seed={seed})", self.n, self.universe, self.avg_degree);
-        Instance::new(name, std::sync::Arc::new(self.build(seed)))
+        Instance::new(name, std::sync::Arc::new(self.build(seed))).with_spec(
+            crate::oracle::spec::OracleSpec::Coverage {
+                n: self.n,
+                universe: self.universe,
+                avg_degree: self.avg_degree,
+                weighted: self.weighted,
+                seed,
+            },
+        )
     }
 }
 

@@ -91,7 +91,20 @@ impl WorkloadGen for FacilityGen {
             "facility(n={},d={},clusters={},seed={seed})",
             self.n, self.d, self.clusters
         );
-        Instance::new(name, std::sync::Arc::new(self.build(seed)))
+        let (rbf, gamma) = match self.kernel {
+            Kernel::Rbf { gamma } => (true, gamma),
+            Kernel::Inverse { gamma } => (false, gamma),
+        };
+        Instance::new(name, std::sync::Arc::new(self.build(seed))).with_spec(
+            crate::oracle::spec::OracleSpec::Facility {
+                n: self.n,
+                d: self.d,
+                rbf,
+                gamma,
+                clusters: self.clusters,
+                seed,
+            },
+        )
     }
 }
 

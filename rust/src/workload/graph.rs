@@ -85,7 +85,15 @@ impl WorkloadGen for GraphGen {
                 format!("ba(n={},m={attach},seed={seed})", self.n)
             }
         };
-        Instance::new(name, std::sync::Arc::new(self.build(seed)))
+        let spec = match self.kind {
+            GraphKind::ErdosRenyi { p } => {
+                crate::oracle::spec::OracleSpec::ErdosRenyi { n: self.n, p, seed }
+            }
+            GraphKind::BarabasiAlbert { attach } => {
+                crate::oracle::spec::OracleSpec::BarabasiAlbert { n: self.n, attach, seed }
+            }
+        };
+        Instance::new(name, std::sync::Arc::new(self.build(seed))).with_spec(spec)
     }
 }
 

@@ -16,6 +16,7 @@ pub mod planted;
 
 use std::sync::Arc;
 
+use crate::oracle::spec::OracleSpec;
 use crate::oracle::Oracle;
 
 /// A generated problem instance: oracle + provenance.
@@ -32,19 +33,29 @@ pub struct Instance {
     pub known_opt: Option<f64>,
     /// The `k` the planted optimum refers to (when `known_opt` is set).
     pub planted_k: Option<usize>,
+    /// Serializable construction recipe — what the shared-nothing process
+    /// backend ships to its workers so they can rebuild a bit-identical
+    /// oracle. All in-repo generators attach one.
+    pub spec: Option<OracleSpec>,
 }
 
 impl Instance {
     /// Build an instance with no planted optimum.
     pub fn new(name: impl Into<String>, oracle: Arc<dyn Oracle>) -> Self {
         let n = oracle.ground_size();
-        Instance { name: name.into(), oracle, n, known_opt: None, planted_k: None }
+        Instance { name: name.into(), oracle, n, known_opt: None, planted_k: None, spec: None }
     }
 
     /// Attach a known optimum for cardinality `k`.
     pub fn with_opt(mut self, opt: f64, k: usize) -> Self {
         self.known_opt = Some(opt);
         self.planted_k = Some(k);
+        self
+    }
+
+    /// Attach the serializable construction recipe.
+    pub fn with_spec(mut self, spec: OracleSpec) -> Self {
+        self.spec = Some(spec);
         self
     }
 }

@@ -77,7 +77,15 @@ impl WorkloadGen for PlantedCoverageGen {
             "planted(k={},u={},noise={}x{},seed={seed})",
             self.k, self.universe, self.noise_n, self.noise_deg
         );
-        Instance::new(name, std::sync::Arc::new(self.build(seed))).with_opt(self.opt(), self.k)
+        Instance::new(name, std::sync::Arc::new(self.build(seed)))
+            .with_opt(self.opt(), self.k)
+            .with_spec(crate::oracle::spec::OracleSpec::Planted {
+                k: self.k,
+                universe: self.universe,
+                noise_n: self.noise_n,
+                noise_deg: self.noise_deg,
+                seed,
+            })
     }
 }
 

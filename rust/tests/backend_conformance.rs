@@ -1,0 +1,338 @@
+//! Cross-backend conformance suite for the shared-nothing process
+//! backend (and the in-process backends it must match).
+//!
+//! **Conformance half:** every algorithm × oracle family × backend triple
+//! must produce bit-identical selections and objective values against the
+//! `Serial` reference. For the process backend this exercises the whole
+//! shared-nothing path end to end: shards and oracle specs serialized
+//! over pipes, worker-side oracle reconstruction, typed round dispatch,
+//! and reply collection.
+//!
+//! **Fault-injection half:** a worker killed mid-round, a truncated reply
+//! frame, a corrupted checksum, an oversized shard/frame, a hung worker,
+//! and a wire-version mismatch must each surface as a *structured*
+//! [`Error::Worker`]/[`Error::Config`] — never a panic — and must not
+//! poison subsequent clean runs.
+//!
+//! Process-count stability: run with `--test-threads=1` (the
+//! `./verify.sh conformance` mode) for deterministic worker-process
+//! lifecycles; the assertions themselves are scheduling-independent.
+
+use std::path::PathBuf;
+
+use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::dense::DenseTwoRound;
+use mrsub::algorithms::greedy::lazy_greedy;
+use mrsub::algorithms::multi_round::MultiRound;
+use mrsub::algorithms::mz_coreset::MzCoreset;
+use mrsub::algorithms::randgreedi::RandGreeDi;
+use mrsub::algorithms::sample_prune::SamplePrune;
+use mrsub::algorithms::sparse::SparseTwoRound;
+use mrsub::algorithms::stochastic::StochasticGreedy;
+use mrsub::algorithms::two_round::TwoRoundKnownOpt;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::core::Error;
+use mrsub::mapreduce::backend::BackendKind;
+use mrsub::mapreduce::process::{PoolOptions, ProcessPool};
+use mrsub::mapreduce::wire::RoundTask;
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::oracle::spec::OracleSpec;
+use mrsub::workload::adversarial::AdversarialGen;
+use mrsub::workload::corpus::ZipfCorpusGen;
+use mrsub::workload::coverage::CoverageGen;
+use mrsub::workload::facility::FacilityGen;
+use mrsub::workload::graph::GraphGen;
+use mrsub::workload::planted::PlantedCoverageGen;
+use mrsub::workload::{Instance, WorkloadGen};
+
+/// The built `mrsub` binary — the worker executable for process-backend
+/// runs (the test harness binary itself has no `worker` subcommand).
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_mrsub"))
+}
+
+fn cfg(seed: u64, backend: BackendKind) -> ClusterConfig {
+    ClusterConfig {
+        seed,
+        backend: Some(backend),
+        worker_exe: Some(worker_exe()),
+        worker_timeout_ms: 60_000,
+        ..ClusterConfig::default()
+    }
+}
+
+fn families(seed: u64) -> Vec<Instance> {
+    let mut out = vec![
+        PlantedCoverageGen::dense(6, 200, 400).generate(seed),
+        CoverageGen::new(240, 120, 4).generate(seed),
+        ZipfCorpusGen::new(160, 120, 6).generate(seed),
+        FacilityGen::clustered(120, 40, 4).generate(seed),
+        GraphGen::barabasi_albert(150, 3).generate(seed),
+        AdversarialGen::new(2, 8).generate(seed),
+    ];
+    // data-defined families round-trip through explicit specs.
+    let weights: Vec<f64> = (0..150).map(|i| ((i * 37) % 101) as f64 / 7.0).collect();
+    let spec = OracleSpec::Modular { weights };
+    out.push(Instance::new("modular(test)", spec.build().unwrap()).with_spec(spec));
+    let spec = OracleSpec::ConcaveBench { n: 140, groups: 24, seed };
+    out.push(Instance::new("concave(test)", spec.build().unwrap()).with_spec(spec));
+    out
+}
+
+fn algorithms(inst: &Instance, k: usize) -> Vec<Box<dyn MrAlgorithm>> {
+    let opt = inst
+        .known_opt
+        .unwrap_or_else(|| lazy_greedy(&inst.oracle, k).value)
+        .max(1e-9);
+    vec![
+        Box::new(TwoRoundKnownOpt::new(opt)),
+        Box::new(MultiRound::known(2, opt)),
+        Box::new(MultiRound::guessing(2, 0.25)),
+        Box::new(DenseTwoRound::new(0.15)),
+        Box::new(SparseTwoRound::new(0.2)),
+        Box::new(CombinedTwoRound::new(0.15)),
+        Box::new(RandGreeDi),
+        Box::new(MzCoreset),
+        Box::new(SamplePrune::new(0.25)),
+        Box::new(StochasticGreedy::new(0.2)),
+    ]
+}
+
+/// The tentpole contract: every algorithm × family × backend produces
+/// **bit-identical selections** (element for element, in order) and
+/// objective values against `Serial`.
+#[test]
+fn every_algorithm_family_backend_triple_matches_serial() {
+    let k = 6;
+    let seed = 0xC0DE;
+    let backends =
+        [BackendKind::Serial, BackendKind::Rayon { chunk: 2 }, BackendKind::Process { workers: 2 }];
+    for inst in families(seed) {
+        for alg in algorithms(&inst, k) {
+            let run_on = |backend: BackendKind| {
+                let mut c = cfg(seed, backend);
+                c.oracle_spec = inst.spec.clone();
+                alg.run(inst.oracle.as_ref(), k, &c).unwrap_or_else(|e| {
+                    panic!("{} on {} [{}]: {e}", alg.name(), inst.name, backend.label())
+                })
+            };
+            let reference = run_on(backends[0]);
+            for &backend in &backends[1..] {
+                let got = run_on(backend);
+                assert_eq!(
+                    got.metrics.rounds.len(),
+                    reference.metrics.rounds.len(),
+                    "{} on {} [{}]: round count",
+                    alg.name(),
+                    inst.name,
+                    backend.label()
+                );
+                assert_eq!(
+                    got.solution.elements,
+                    reference.solution.elements,
+                    "{} on {} [{}]: selection sequence diverged",
+                    alg.name(),
+                    inst.name,
+                    backend.label()
+                );
+                assert_eq!(
+                    got.solution.value.to_bits(),
+                    reference.solution.value.to_bits(),
+                    "{} on {} [{}]: objective value diverged ({} vs {})",
+                    alg.name(),
+                    inst.name,
+                    backend.label(),
+                    got.solution.value,
+                    reference.solution.value
+                );
+            }
+        }
+    }
+}
+
+/// Selections (not just values) are element-for-element identical, and
+/// process-backend runs actually move bytes over the wire.
+#[test]
+fn process_backend_selections_identical_and_ipc_metered() {
+    let k = 6;
+    let seed = 7;
+    let inst = PlantedCoverageGen::dense(6, 300, 600).generate(seed);
+    // RandGreeDi round 1 is unconditionally a typed shard round, so the
+    // wire path is guaranteed to carry the greedy work.
+    let alg = RandGreeDi;
+    let serial = alg.run(inst.oracle.as_ref(), k, &cfg(seed, BackendKind::Serial)).unwrap();
+
+    let mut pcfg = cfg(seed, BackendKind::Process { workers: 3 });
+    pcfg.oracle_spec = inst.spec.clone();
+    let process = alg.run(inst.oracle.as_ref(), k, &pcfg).unwrap();
+
+    assert_eq!(
+        process.solution.elements, serial.solution.elements,
+        "process backend must reproduce the serial selection sequence"
+    );
+    assert_eq!(process.solution.value.to_bits(), serial.solution.value.to_bits());
+    let (out_bytes, in_bytes) = process.metrics.total_ipc_bytes();
+    assert!(out_bytes > 0, "the round task must ship over the wire");
+    assert!(in_bytes > 0, "local-greedy selections must come back over the wire");
+    assert_eq!(serial.metrics.total_ipc_bytes(), (0, 0), "serial runs move no IPC bytes");
+    // the round's oracle traffic happened worker-side but is still
+    // visible in the coordinator's per-round metrics.
+    let greedy_round = process
+        .metrics
+        .rounds
+        .iter()
+        .find(|r| r.name == "r1:local-greedy")
+        .expect("local-greedy round recorded");
+    assert!(greedy_round.oracle_calls > 0, "worker-side calls merged into metrics");
+    assert!(greedy_round.ipc_bytes_out > 0);
+    assert!(greedy_round.ipc_bytes_in > 0);
+}
+
+/// Worker reuse across rounds: Algorithm 5 with t thresholds runs all its
+/// typed rounds against one pool (spawn once, not per round).
+#[test]
+fn multi_round_reuses_workers_across_thresholds() {
+    let seed = 3;
+    let inst = PlantedCoverageGen::dense(6, 240, 480).generate(seed);
+    let opt = inst.known_opt.unwrap();
+    let t = 3;
+    let mut pcfg = cfg(seed, BackendKind::Process { workers: 2 });
+    pcfg.oracle_spec = inst.spec.clone();
+    let res = MultiRound::known(t, opt).run(inst.oracle.as_ref(), 6, &pcfg).unwrap();
+    // every threshold's worker half-round carried IPC traffic.
+    let ipc_rounds = res
+        .metrics
+        .rounds
+        .iter()
+        .filter(|r| r.name.ends_with("a:sample-greedy+filter"))
+        .count();
+    assert_eq!(ipc_rounds, t);
+    for r in &res.metrics.rounds {
+        if r.name.ends_with("a:sample-greedy+filter") {
+            assert!(r.ipc_bytes_out > 0, "round {} shipped no task", r.name);
+        }
+    }
+    let serial = MultiRound::known(t, opt)
+        .run(inst.oracle.as_ref(), 6, &cfg(seed, BackendKind::Serial))
+        .unwrap();
+    assert_eq!(res.solution.elements, serial.solution.elements);
+}
+
+// --- fault injection --------------------------------------------------------
+
+fn pool_for_faults(fault: Option<&str>, max_frame: usize, timeout_ms: u64) -> mrsub::core::Result<ProcessPool> {
+    let spec = OracleSpec::Coverage { n: 120, universe: 80, avg_degree: 3, weighted: false, seed: 5 };
+    let shards: Vec<Vec<u32>> = vec![(0..40).collect(), (40..80).collect(), (80..120).collect()];
+    let sample: Vec<u32> = (0..120).step_by(7).collect();
+    let mut env = Vec::new();
+    if let Some(f) = fault {
+        env.push(("MRSUB_FAULT".to_string(), f.to_string()));
+    }
+    ProcessPool::spawn(&spec, &shards, &sample, &PoolOptions {
+        workers: 2,
+        timeout: std::time::Duration::from_millis(timeout_ms),
+        max_frame,
+        exe: Some(worker_exe()),
+        env,
+    })
+}
+
+fn assert_worker_error<T: std::fmt::Debug>(res: mrsub::core::Result<T>, needle: &str) {
+    match res {
+        Err(Error::Worker { message, .. }) => assert!(
+            message.to_lowercase().contains(needle),
+            "worker error {message:?} does not mention {needle:?}"
+        ),
+        other => panic!("expected structured worker error about {needle:?}, got {other:?}"),
+    }
+}
+
+#[test]
+fn killed_worker_mid_round_degrades_cleanly() {
+    let mut pool = pool_for_faults(None, 64 << 20, 60_000).expect("clean spawn");
+    // sanity: a round works before the kill.
+    let (replies, stats) = pool.round(&RoundTask::MaxSingleton).unwrap();
+    assert_eq!(replies.len(), 3);
+    assert!(stats.bytes_out > 0 && stats.bytes_in > 0);
+    // kill one worker out from under the pool; the next round must fail
+    // with a structured error, not a panic or a hang.
+    pool.kill_worker(1);
+    let res = pool.round(&RoundTask::MaxSingleton);
+    assert!(
+        matches!(res, Err(Error::Worker { .. })),
+        "expected Err(Worker), got {res:?}"
+    );
+}
+
+#[test]
+fn die_mid_round_fault_is_a_structured_error() {
+    let mut pool = pool_for_faults(Some("die-mid-round"), 64 << 20, 60_000).expect("init is clean");
+    assert_worker_error(pool.round(&RoundTask::MaxSingleton), "pipe");
+}
+
+#[test]
+fn truncated_reply_frame_is_a_structured_error() {
+    let mut pool = pool_for_faults(Some("truncate-frame"), 64 << 20, 60_000).expect("init is clean");
+    assert_worker_error(pool.round(&RoundTask::MaxSingleton), "truncated");
+}
+
+#[test]
+fn corrupt_checksum_is_a_structured_error() {
+    let mut pool =
+        pool_for_faults(Some("corrupt-checksum"), 64 << 20, 60_000).expect("init is clean");
+    assert_worker_error(pool.round(&RoundTask::MaxSingleton), "checksum");
+}
+
+#[test]
+fn hung_worker_is_bounded_by_timeout() {
+    // init handshake is fast, so a 1.5s timeout is comfortably above spawn
+    // cost yet far below the injected 20s hang — if the timeout machinery
+    // failed, the round would take ~20s and trip the elapsed bound.
+    let mut pool = pool_for_faults(Some("hang-round"), 64 << 20, 1_500).expect("init is clean");
+    let start = std::time::Instant::now();
+    assert_worker_error(pool.round(&RoundTask::MaxSingleton), "no reply");
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(15),
+        "timeout must bound the wait, took {:?}",
+        start.elapsed()
+    );
+}
+
+#[test]
+fn version_mismatch_fails_the_handshake() {
+    let res = pool_for_faults(Some("bad-version"), 64 << 20, 60_000);
+    assert_worker_error(res.map(|_| ()), "version");
+}
+
+#[test]
+fn oversized_shard_rejected_by_frame_cap() {
+    // a 120-element init shard cannot fit a 64-byte frame cap: the spawn
+    // fails with a structured send error before any round runs.
+    let res = pool_for_faults(None, 64, 60_000);
+    assert_worker_error(res.map(|_| ()), "max-frame");
+}
+
+/// A faulted run must not poison the coordinator: its metrics stay
+/// readable and a subsequent clean run on the same instance succeeds.
+#[test]
+fn fault_does_not_poison_subsequent_runs() {
+    let seed = 13;
+    let inst = PlantedCoverageGen::dense(6, 200, 400).generate(seed);
+    // RandGreeDi's round 1 is unconditionally a typed shard round, so the
+    // injected fault is guaranteed to be exercised.
+    let alg = RandGreeDi;
+
+    let mut bad = cfg(seed, BackendKind::Process { workers: 2 });
+    bad.oracle_spec = inst.spec.clone();
+    bad.worker_env = vec![("MRSUB_FAULT".to_string(), "die-mid-round".to_string())];
+    let res = alg.run(inst.oracle.as_ref(), 6, &bad);
+    assert!(matches!(res, Err(Error::Worker { .. })), "faulted run must error: {res:?}");
+
+    // clean run right after: identical to serial, as if nothing happened.
+    let mut good = cfg(seed, BackendKind::Process { workers: 2 });
+    good.oracle_spec = inst.spec.clone();
+    let clean = alg.run(inst.oracle.as_ref(), 6, &good).unwrap();
+    let serial = alg.run(inst.oracle.as_ref(), 6, &cfg(seed, BackendKind::Serial)).unwrap();
+    assert_eq!(clean.solution.elements, serial.solution.elements);
+    assert_eq!(clean.solution.value.to_bits(), serial.solution.value.to_bits());
+}

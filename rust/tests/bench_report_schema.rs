@@ -1,0 +1,98 @@
+//! Schema guard for the `mrsub bench` JSON report.
+//!
+//! The report used to have no version field, so consumers (plot scripts,
+//! dashboards) could break silently when a key was renamed. Now:
+//!
+//! 1. every report carries `"schema_version"` =
+//!    [`mrsub::coordinator::BENCH_SCHEMA_VERSION`];
+//! 2. the committed fixture `tests/fixtures/bench_report_v2.json` is a
+//!    frozen example of the current schema, and this test deserializes it
+//!    and checks every required key — so a schema change forces a
+//!    deliberate fixture + version bump in the same commit.
+
+use mrsub::coordinator::BENCH_SCHEMA_VERSION;
+use mrsub::util::json::Json;
+
+const FIXTURE: &str = include_str!("fixtures/bench_report_v2.json");
+
+fn require<'a>(obj: &'a Json, key: &str) -> &'a Json {
+    obj.get(key).unwrap_or_else(|| panic!("report missing required key {key:?}"))
+}
+
+#[test]
+fn committed_fixture_matches_current_schema_version() {
+    let report = Json::parse(FIXTURE).expect("fixture must be valid JSON");
+    let version = require(&report, "schema_version")
+        .as_usize()
+        .expect("schema_version must be an integer");
+    assert_eq!(
+        version as u32, BENCH_SCHEMA_VERSION,
+        "fixture schema_version diverged from BENCH_SCHEMA_VERSION — \
+         bump both (and the fixture contents) together"
+    );
+}
+
+#[test]
+fn fixture_carries_every_required_field() {
+    let report = Json::parse(FIXTURE).unwrap();
+    for key in ["schema_version", "n", "k", "seed"] {
+        assert!(
+            require(&report, key).as_f64().is_some(),
+            "{key} must be numeric"
+        );
+    }
+
+    let Json::Arr(hotpath) = require(&report, "hotpath") else {
+        panic!("hotpath must be an array");
+    };
+    assert!(!hotpath.is_empty());
+    for row in hotpath {
+        for key in ["scalar_elems_per_s", "batched_elems_per_s", "speedup", "n"] {
+            assert!(require(row, key).as_f64().is_some(), "hotpath.{key}");
+        }
+        for key in ["family", "instance"] {
+            assert!(require(row, key).as_str().is_some(), "hotpath.{key}");
+        }
+    }
+
+    let Json::Arr(cluster) = require(&report, "cluster") else {
+        panic!("cluster must be an array");
+    };
+    assert!(!cluster.is_empty());
+    let mut saw_process_row = false;
+    for row in cluster {
+        for key in [
+            "n",
+            "k",
+            "wall_ms",
+            "value",
+            "oracle_calls",
+            "batched_oracle_calls",
+            "oracle_batches",
+            "ipc_bytes_out",
+            "ipc_bytes_in",
+            "rounds",
+        ] {
+            assert!(require(row, key).as_f64().is_some(), "cluster.{key}");
+        }
+        let backend = require(row, "backend").as_str().expect("cluster.backend");
+        // backend labels in reports must round-trip into configs.
+        assert!(
+            mrsub::mapreduce::backend::BackendKind::parse(backend, 1).is_some(),
+            "backend label {backend:?} must be parseable"
+        );
+        if backend.starts_with("process:") {
+            saw_process_row = true;
+            let out = require(row, "ipc_bytes_out").as_f64().unwrap();
+            let inb = require(row, "ipc_bytes_in").as_f64().unwrap();
+            assert!(
+                out > 0.0 && inb > 0.0,
+                "process rows must carry nonzero IPC byte counts"
+            );
+        }
+    }
+    assert!(
+        saw_process_row,
+        "fixture must exemplify a process-backend row (IPC overhead vs rayon)"
+    );
+}

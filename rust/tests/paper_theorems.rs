@@ -157,6 +157,73 @@ fn theorem_8_dense_sparse_combined() {
     }
 }
 
+/// Lemma 1 across *every* execution backend: on seeded randomized
+/// instances, Algorithm 4 fed greedy-as-OPT stays ≥ ½·greedy whether the
+/// machines are simulated serially, on the thread pool, or — via the
+/// typed shard rounds the algorithms now run on — any backend that
+/// executes the same tasks. (The process backend itself is asserted
+/// bit-identical to `Serial` in `backend_conformance.rs`; here we pin the
+/// *theorem* on the in-process matrix so a future backend regression
+/// trips a paper bound, not just an equality check.)
+#[test]
+fn lemma_1_bound_holds_on_all_in_process_backends() {
+    use mrsub::algorithms::greedy::lazy_greedy;
+    use mrsub::mapreduce::backend::BackendKind;
+    use mrsub::workload::coverage::CoverageGen;
+
+    for seed in [1u64, 17, 40, 91] {
+        let inst = CoverageGen::new(400, 200, 4).generate(seed);
+        let k = 8 + (seed as usize % 7);
+        let g = lazy_greedy(&inst.oracle, k).value;
+        for backend in [
+            BackendKind::Serial,
+            BackendKind::Rayon { chunk: 1 },
+            BackendKind::Rayon { chunk: 3 },
+        ] {
+            let cfg = ClusterConfig { seed, backend: Some(backend), ..ClusterConfig::default() };
+            let res = TwoRoundKnownOpt::new(g).run(&inst.oracle, k, &cfg).unwrap();
+            assert!(
+                res.solution.value >= 0.5 * g - 1e-9,
+                "seed {seed} [{}]: {} < greedy/2 = {}",
+                backend.label(),
+                res.solution.value,
+                g / 2.0
+            );
+        }
+    }
+}
+
+/// Lemma 3 across backends: the t-threshold scheme's
+/// `1 − (1 − 1/(t+1))^t` bound (and its 1−1/e−ε limit reading) holds on
+/// seeded randomized planted instances for every in-process backend.
+#[test]
+fn lemma_3_bound_holds_on_all_in_process_backends() {
+    use mrsub::mapreduce::backend::BackendKind;
+
+    for seed in [2u64, 23, 77] {
+        let inst = PlantedCoverageGen::dense(10, 900, 1800).generate(seed);
+        let opt = inst.known_opt.unwrap();
+        for t in [1usize, 3] {
+            for backend in [BackendKind::Serial, BackendKind::Rayon { chunk: 2 }] {
+                let cfg =
+                    ClusterConfig { seed, backend: Some(backend), ..ClusterConfig::default() };
+                let res = MultiRound::known(t, opt).run(&inst.oracle, 10, &cfg).unwrap();
+                let ratio = res.solution.value / opt;
+                assert!(
+                    ratio >= threshold_bound(t) - 1e-9,
+                    "seed {seed} t={t} [{}]: {ratio} < {}",
+                    backend.label(),
+                    threshold_bound(t)
+                );
+                // the threshold scheme also clears 1 − 1/e − ε for the ε
+                // implied by its own bound gap (sanity on the limit form).
+                let eps_t = ONE_MINUS_1_E - threshold_bound(t);
+                assert!(ratio >= ONE_MINUS_1_E - eps_t - 1e-9);
+            }
+        }
+    }
+}
+
 /// §2.2: ε (the OPT-guess resolution) does not affect the number of
 /// rounds — only memory. Verify rounds are identical across ε.
 #[test]
