@@ -1,0 +1,53 @@
+//! Transport demo: run a small instance on the shared-nothing process
+//! backend over a Unix-domain socket (`process:2@uds`) and print the
+//! per-round IPC byte accounting (referenced from docs/ARCHITECTURE.md).
+//!
+//! ```text
+//! cargo run --release --example remote_workers
+//! ```
+//!
+//! The example binary doubles as its own worker: the process pool
+//! re-executes `current_exe()` with a `worker` argv, which this `main`
+//! forwards to [`mrsub::mapreduce::process::worker_main`] — exactly what
+//! the `mrsub` binary does. For the multi-host flavor of the same flow,
+//! run a coordinator with `--backend process:N@tcp:HOST:PORT` and start
+//! `mrsub worker --connect HOST:PORT --id I` on the other machines (see
+//! README § transports).
+
+use mrsub::algorithms::randgreedi::RandGreeDi;
+use mrsub::algorithms::MrAlgorithm;
+use mrsub::mapreduce::backend::BackendKind;
+use mrsub::mapreduce::transport::Transport;
+use mrsub::mapreduce::ClusterConfig;
+use mrsub::workload::coverage::CoverageGen;
+use mrsub::workload::WorkloadGen;
+
+fn main() {
+    // worker re-exec hook: the pool spawns `current_exe() worker …`.
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) == Some("worker") {
+        std::process::exit(mrsub::mapreduce::process::worker_main(&args[1..]));
+    }
+
+    let inst = CoverageGen::new(4_000, 2_000, 8).generate(7);
+    let k = 25;
+    let cfg = ClusterConfig {
+        seed: 7,
+        backend: Some(BackendKind::Process { workers: 2, transport: Transport::Uds }),
+        // shared-nothing workers rebuild the oracle from its spec.
+        oracle_spec: inst.spec.clone(),
+        ..ClusterConfig::default()
+    };
+    let res = RandGreeDi.run(inst.oracle.as_ref(), k, &cfg).expect("process:2@uds run");
+
+    println!("instance: {} (n = {}, k = {k})", inst.name, inst.n);
+    println!("f(S) = {:.3} with |S| = {}", res.solution.value, res.solution.len());
+    println!();
+    println!("{:<26} {:>13} {:>13}", "round", "ipc-out bytes", "ipc-in bytes");
+    for r in &res.metrics.rounds {
+        println!("{:<26} {:>13} {:>13}", r.name, r.ipc_bytes_out, r.ipc_bytes_in);
+    }
+    let (out, inn) = res.metrics.total_ipc_bytes();
+    println!("{:<26} {:>13} {:>13}", "total", out, inn);
+    assert!(out > 0 && inn > 0, "typed rounds must cross the socket");
+}

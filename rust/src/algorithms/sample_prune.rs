@@ -11,13 +11,12 @@
 //! sample-then-prune structure and round complexity that E6 compares
 //! against.
 
-use super::threshold::{merge_sorted, threshold_filter, threshold_greedy};
+use super::threshold::{merge_sorted, threshold_greedy};
 use super::{finish, AlgResult, MrAlgorithm};
 use crate::core::{derive_seed, ElementId, Result, Solution};
 use crate::mapreduce::wire::{RoundTask, TaskReply};
-use crate::mapreduce::{machine_seed, ClusterConfig, MrCluster};
+use crate::mapreduce::{ClusterConfig, MrCluster};
 use crate::oracle::Oracle;
-use crate::util::rng::Rng;
 
 /// Kumar et al.-style Sample&Prune threshold greedy.
 #[derive(Debug, Clone, Copy)]
@@ -47,9 +46,7 @@ impl MrAlgorithm for SamplePrune {
         let budget = ((n as f64 * k as f64).sqrt().ceil() as usize).max(k);
 
         // Round 1: global max singleton Δ (typed shard round; worker-side
-        // on the process backend). The later prune+sample rounds carry
-        // per-machine RNG state and stay coordinator-side for now (see
-        // ROADMAP).
+        // on the process backend).
         let maxes = cluster.shard_round("r1:max-singleton", 0, oracle, &RoundTask::MaxSingleton)?;
         let delta = maxes.iter().map(TaskReply::as_scalar).fold(0.0f64, f64::max);
         if delta <= 0.0 {
@@ -57,57 +54,53 @@ impl MrAlgorithm for SamplePrune {
         }
 
         let mut g = oracle.state();
-        let mut shards: Vec<Vec<ElementId>> = cluster.shards().to_vec();
+        let m = cluster.machines();
+        let per_share = (budget / m.max(1)).max(1);
         let mut tau = delta;
         let floor = self.eps * delta / k as f64;
         let mut round = 0usize;
+        // residency of round r: the previous round's pruned shards (the
+        // original shards before the first prune) + the broadcast G. The
+        // pruned shards live machine-side; workers report their sizes in
+        // the Pruned replies.
+        let mut max_kept = cluster.shards().iter().map(Vec::len).max().unwrap_or(0);
         while tau > floor && g.len() < k && round < self.max_rounds {
             round += 1;
-            // Worker: permanently prune the shard at the *floor* (safe for
-            // every future threshold — marginals only shrink), and ship the
-            // elements above the current τ, sampled down to the central
-            // budget share if oversized.
-            let g_ref = &g;
-            let per_share = (budget / shards.len().max(1)).max(1);
-            let seed = derive_seed(cluster.seed(), round as u64);
-            let shards_in = std::mem::take(&mut shards);
-            let outputs: Vec<(Vec<ElementId>, Vec<ElementId>, bool)> = {
-                let run = |(i, shard): (usize, &Vec<ElementId>)| {
-                    let kept = threshold_filter(g_ref.as_ref(), shard, floor);
-                    let eligible = threshold_filter(g_ref.as_ref(), &kept, tau);
-                    let fit = eligible.len() <= per_share;
-                    let shipped = if fit {
-                        eligible
-                    } else {
-                        let mut rng = Rng::seed_from_u64(machine_seed(seed, round, i));
-                        let mut s = eligible;
-                        rng.shuffle(&mut s);
-                        s.truncate(per_share);
-                        s.sort_unstable();
-                        s
-                    };
-                    (kept, shipped, fit)
-                };
-                shards_in.iter().enumerate().map(run).collect()
+            // Worker half-round (typed; worker-side on every backend):
+            // permanently prune the machine-resident shard at the *floor*
+            // (safe for every future threshold — marginals only shrink),
+            // ship the elements above the current τ, sampled down to the
+            // central budget share if oversized. The per-machine RNG seed
+            // travels inside the task, so sampling is backend-independent.
+            let task = RoundTask::PruneSample {
+                base: g.selected().to_vec(),
+                floor,
+                tau,
+                per_share,
+                seed: derive_seed(cluster.seed(), round as u64),
+                round: round as u32,
             };
-            let max_resident =
-                shards_in.iter().map(Vec::len).max().unwrap_or(0) + g.len();
-            let mut kept_shards = Vec::with_capacity(outputs.len());
-            let mut shipped = Vec::with_capacity(outputs.len());
+            let replies = cluster.shard_round_explicit(
+                &format!("r{}a:prune+sample", round + 1),
+                max_kept + g.len(),
+                oracle,
+                &task,
+            )?;
+            let mut shipped: Vec<Vec<ElementId>> = Vec::with_capacity(replies.len());
             let mut all_fit = true;
-            for (kept, ship, fit) in outputs {
-                kept_shards.push(kept);
-                shipped.push(ship);
+            let mut kept_max = 0usize;
+            for r in replies {
+                let (ship, fit, resident) = r.into_pruned();
                 all_fit &= fit;
+                kept_max = kept_max.max(resident as usize);
+                shipped.push(ship);
             }
-            shards = kept_shards;
-            let sent: usize = shipped.iter().map(Vec::len).sum();
-            cluster.raw_round(&format!("r{}a:prune+sample", round + 1), max_resident, sent, sent, || {})?;
+            max_kept = kept_max;
 
             // Central: extend by threshold greedy at τ; broadcast G.
             let pool = merge_sorted(&shipped);
             let mut progressed = false;
-            cluster.raw_round(&format!("r{}b:extend", round + 1), 0, g.len() * shards.len(), pool.len(), || {
+            cluster.raw_round(&format!("r{}b:extend", round + 1), 0, g.len() * m, pool.len(), || {
                 let added = threshold_greedy(g.as_mut(), &pool, tau, k);
                 progressed = !added.is_empty();
             })?;

@@ -25,9 +25,13 @@
 //! [cluster]
 //! sample_factor = 4.0
 //! parallel = true          # legacy switch; superseded by `backend`
-//! backend = "rayon"        # serial | rayon | process:N (execution substrate)
+//! backend = "rayon"        # serial | rayon | process:N[@pipe|@uds|@tcp[:addr]]
+//!                          # (execution substrate; @-suffix picks the
+//!                          # process-backend transport, pipe by default —
+//!                          # an explicit @tcp:HOST:PORT listens there and
+//!                          # waits for external `mrsub worker --connect`s)
 //! chunk = 1                # rayon work-claim granularity
-//! worker_timeout_ms = 30000  # process backend: per-reply wait bound
+//! worker_timeout_ms = 30000  # process backend: per-reply + connect bound
 //! max_frame_mb = 64        # process backend: wire frame payload cap
 //! enforce_memory = false
 //! machines = 0             # 0 = paper default ceil(sqrt(n/k))
@@ -140,7 +144,8 @@ impl RunConfig {
                 let chunk = opt_usize(t, "chunk", 1);
                 cluster.backend = Some(BackendKind::parse(name, chunk).ok_or_else(|| {
                     Error::Config(format!(
-                        "unknown backend {name:?} (serial | rayon | process:N with N >= 1)"
+                        "unknown backend {name:?} (serial | rayon | \
+                         process:N[@pipe|@uds|@tcp[:HOST:PORT]] with N >= 1)"
                     ))
                 })?);
             }
@@ -168,19 +173,68 @@ impl RunConfig {
 #[derive(Debug, Clone)]
 pub enum InstanceConfig {
     /// Random (optionally weighted) coverage.
-    Coverage { n: usize, universe: usize, avg_degree: usize, weighted: bool },
+    Coverage {
+        /// Elements.
+        n: usize,
+        /// Universe size.
+        universe: usize,
+        /// Average element degree.
+        avg_degree: usize,
+        /// Heavy-tailed item weights.
+        weighted: bool,
+    },
     /// Zipf document corpus (optionally IDF-weighted).
-    Zipf { docs: usize, vocab: usize, doc_len: usize, idf: bool },
+    Zipf {
+        /// Documents (elements).
+        docs: usize,
+        /// Vocabulary size.
+        vocab: usize,
+        /// Words per document.
+        doc_len: usize,
+        /// IDF-weight the items.
+        idf: bool,
+    },
     /// Planted-optimum coverage, `regime` ∈ {"dense", "sparse"}.
-    Planted { k: usize, universe: usize, noise_n: usize, dense: bool },
+    Planted {
+        /// Planted optimal size.
+        k: usize,
+        /// Universe size.
+        universe: usize,
+        /// Noise elements.
+        noise_n: usize,
+        /// Dense (vs sparse) regime.
+        dense: bool,
+    },
     /// Facility location over random planar points.
-    Facility { n: usize, d: usize, clusters: usize },
+    Facility {
+        /// Candidate elements.
+        n: usize,
+        /// Demand points.
+        d: usize,
+        /// Planted cluster centers; 0 = uniform.
+        clusters: usize,
+    },
     /// Erdős–Rényi edge coverage.
-    ErdosRenyi { n: usize, p: f64 },
+    ErdosRenyi {
+        /// Vertices.
+        n: usize,
+        /// Edge probability.
+        p: f64,
+    },
     /// Barabási–Albert edge coverage.
-    BarabasiAlbert { n: usize, attach: usize },
+    BarabasiAlbert {
+        /// Vertices.
+        n: usize,
+        /// Edges attached per new vertex.
+        attach: usize,
+    },
     /// Theorem-4 adversarial instance.
-    Adversarial { t: usize, k: usize },
+    Adversarial {
+        /// Threshold-round parameter t.
+        t: usize,
+        /// Cardinality bound.
+        k: usize,
+    },
 }
 
 impl InstanceConfig {
@@ -282,26 +336,51 @@ impl InstanceConfig {
 pub enum AlgorithmConfig {
     /// Algorithm 4 (needs OPT; falls back to the instance's planted OPT,
     /// then to lazy greedy's value as the estimate).
-    TwoRound { opt: Option<f64> },
+    TwoRound {
+        /// Explicit OPT; `None` = planted/greedy fallback.
+        opt: Option<f64>,
+    },
     /// Algorithm 5 with t thresholds; OPT known (planted / given) or
     /// guessed with `eps`.
-    MultiRound { t: usize, opt: Option<f64>, eps: Option<f64> },
+    MultiRound {
+        /// Threshold count.
+        t: usize,
+        /// Explicit OPT; `None` = planted/greedy fallback or guessing.
+        opt: Option<f64>,
+        /// Guessing granularity (enables OPT-guessing when `opt` absent).
+        eps: Option<f64>,
+    },
     /// Algorithm 6.
-    Dense { eps: f64 },
+    Dense {
+        /// Guess granularity ε.
+        eps: f64,
+    },
     /// Algorithm 7.
-    Sparse { eps: f64 },
+    Sparse {
+        /// Guess granularity ε.
+        eps: f64,
+    },
     /// Theorem 8 (the paper's headline 2-round algorithm).
-    Combined { eps: f64 },
+    Combined {
+        /// Guess granularity ε.
+        eps: f64,
+    },
     /// Sequential lazy greedy (reference).
     Greedy,
     /// Sequential stochastic greedy.
-    Stochastic { delta: f64 },
+    Stochastic {
+        /// Failure probability δ.
+        delta: f64,
+    },
     /// Barbosa et al. RandGreeDi baseline.
     Randgreedi,
     /// Mirrokni–Zadimoghaddam core-set baseline.
     MzCoreset,
     /// Kumar et al. Sample&Prune baseline.
-    SamplePrune { eps: f64 },
+    SamplePrune {
+        /// Threshold decay ε.
+        eps: f64,
+    },
 }
 
 impl AlgorithmConfig {
@@ -377,6 +456,7 @@ impl MrAlgorithm for GreedyAlg {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mapreduce::transport::Transport;
 
     #[test]
     fn toml_roundtrip() {
@@ -473,12 +553,13 @@ mod tests {
             "#
             )
         };
+        let pipe = |workers| BackendKind::Process { workers, transport: Transport::Pipe };
         let cfg = RunConfig::parse(&text("backend = \"process:4\"")).unwrap();
-        assert_eq!(cfg.cluster.backend, Some(BackendKind::Process { workers: 4 }));
+        assert_eq!(cfg.cluster.backend, Some(pipe(4)));
         assert_eq!(cfg.cluster.worker_timeout_ms, 30_000, "default timeout");
         // bare "process" takes the worker count from `chunk`.
         let cfg = RunConfig::parse(&text("backend = \"process\"\nchunk = 3")).unwrap();
-        assert_eq!(cfg.cluster.backend, Some(BackendKind::Process { workers: 3 }));
+        assert_eq!(cfg.cluster.backend, Some(pipe(3)));
         // process:0 must be rejected, not clamped.
         assert!(RunConfig::parse(&text("backend = \"process:0\"")).is_err());
 
@@ -497,6 +578,47 @@ mod tests {
     }
 
     #[test]
+    fn cluster_process_transports_parsed() {
+        let text = |cluster: &str| {
+            format!(
+                r#"
+                k = 5
+                [instance]
+                kind = "coverage"
+                n = 40
+                universe = 30
+                avg_degree = 3
+                [algorithm]
+                kind = "greedy"
+                [cluster]
+                {cluster}
+            "#
+            )
+        };
+        let cfg = RunConfig::parse(&text("backend = \"process:2@uds\"")).unwrap();
+        assert_eq!(
+            cfg.cluster.backend,
+            Some(BackendKind::Process { workers: 2, transport: Transport::Uds })
+        );
+        let cfg = RunConfig::parse(&text("backend = \"process:2@tcp\"")).unwrap();
+        assert_eq!(
+            cfg.cluster.backend,
+            Some(BackendKind::Process { workers: 2, transport: Transport::Tcp { bind: None } })
+        );
+        let cfg = RunConfig::parse(&text("backend = \"process:2@tcp:0.0.0.0:7070\"")).unwrap();
+        assert_eq!(
+            cfg.cluster.backend,
+            Some(BackendKind::Process {
+                workers: 2,
+                transport: Transport::Tcp { bind: Some("0.0.0.0:7070".into()) },
+            })
+        );
+        // unknown / malformed transports are config errors, not defaults.
+        assert!(RunConfig::parse(&text("backend = \"process:2@shm\"")).is_err());
+        assert!(RunConfig::parse(&text("backend = \"process:2@tcp:\"")).is_err());
+    }
+
+    #[test]
     fn bench_report_backend_labels_roundtrip_into_configs() {
         // `mrsub bench` writes backend *labels* into its JSON report; a
         // config citing such a label verbatim must parse back to the same
@@ -504,7 +626,13 @@ mod tests {
         for kind in [
             BackendKind::Serial,
             BackendKind::Rayon { chunk: 4 },
-            BackendKind::Process { workers: 2 },
+            BackendKind::Process { workers: 2, transport: Transport::Pipe },
+            BackendKind::Process { workers: 2, transport: Transport::Uds },
+            BackendKind::Process { workers: 3, transport: Transport::Tcp { bind: None } },
+            BackendKind::Process {
+                workers: 3,
+                transport: Transport::Tcp { bind: Some("10.0.0.5:7070".into()) },
+            },
         ] {
             let text = format!(
                 r#"
@@ -522,7 +650,7 @@ mod tests {
                 kind.label()
             );
             let cfg = RunConfig::parse(&text).unwrap();
-            assert_eq!(cfg.cluster.backend, Some(kind), "label {:?}", kind.label());
+            assert_eq!(cfg.cluster.backend, Some(kind.clone()), "label {:?}", kind.label());
         }
     }
 

@@ -44,9 +44,21 @@ impl Solution {
 #[derive(Debug)]
 pub enum Error {
     /// Cardinality bound `k` was zero or exceeded the ground-set size.
-    InvalidK { k: usize, n: usize },
+    InvalidK {
+        /// The offending cardinality bound.
+        k: usize,
+        /// Ground-set size.
+        n: usize,
+    },
     /// An MRC memory budget was exceeded while `enforce_memory` was on.
-    MemoryBudget { round: String, used: usize, budget: usize },
+    MemoryBudget {
+        /// Name of the round that tripped the budget.
+        round: String,
+        /// Elements actually resident/received.
+        used: usize,
+        /// The budget in elements.
+        budget: usize,
+    },
     /// Artifact loading / PJRT execution failure.
     Runtime(String),
     /// Configuration error (bad TOML, unknown workload/algorithm name, ...).

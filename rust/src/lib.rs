@@ -22,8 +22,10 @@
 //!   execution substrate ([`mapreduce::backend::ExecBackend`]: serial /
 //!   thread-pool / shared-nothing worker *processes* with shards and
 //!   oracle specs serialized over a checksummed wire protocol
-//!   ([`mapreduce::wire`], [`mapreduce::process`])), per-machine memory,
-//!   communication, and IPC-byte metering.
+//!   ([`mapreduce::wire`], [`mapreduce::process`]) riding pluggable byte
+//!   streams — pipes, Unix-domain sockets, or TCP
+//!   ([`mapreduce::transport`])), per-machine memory, communication, and
+//!   IPC-byte metering.
 //! * [`algorithms`] — the paper's Algorithms 1–7 and the Theorem 8
 //!   combination, plus sequential and distributed baselines
 //!   (greedy/lazy/stochastic greedy, RandGreeDi, Mirrokni–Zadimoghaddam
@@ -49,6 +51,8 @@
 //! let out = alg.run(inst.oracle.as_ref(), 50, &ClusterConfig::default()).unwrap();
 //! println!("f(S) = {}", out.solution.value);
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod algorithms;
 pub mod config;

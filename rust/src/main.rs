@@ -88,7 +88,8 @@ impl Args {
     }
 }
 
-/// Parse an optional `--backend serial|rayon|process:N [--chunk N]` pair.
+/// Parse an optional `--backend serial|rayon|process:N[@transport]
+/// [--chunk N]` pair.
 fn backend_flag(args: &Args) -> Result<Option<BackendKind>> {
     match args.get_str("backend") {
         None => Ok(None),
@@ -96,7 +97,8 @@ fn backend_flag(args: &Args) -> Result<Option<BackendKind>> {
             let chunk = args.get("chunk", 1usize)?;
             BackendKind::parse(name, chunk).map(Some).ok_or_else(|| {
                 cli_err(format!(
-                    "unknown backend {name:?} (serial | rayon | process:N with N >= 1)"
+                    "unknown backend {name:?} (serial | rayon | \
+                     process:N[@pipe|@uds|@tcp[:HOST:PORT]] with N >= 1)"
                 ))
             })
         }
@@ -116,20 +118,23 @@ fn apply_cluster_flags(args: &Args, cfg: &mut ClusterConfig) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|engine-check> [--flag value]...
+const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|engine-check|worker> [--flag value]...
   run           --config <file.toml>
-  demo          [--k 20] [--n 20000] [--seed 7] [--backend serial|rayon|process:N] [--chunk 1]
-                [--worker-timeout-ms 30000] [--max-frame-mb 64]
+  demo          [--k 20] [--n 20000] [--seed 7] [--backend serial|rayon|process:N[@pipe|@uds|@tcp[:addr]]]
+                [--chunk 1] [--worker-timeout-ms 30000] [--max-frame-mb 64]
   sweep-t       [--t-max 6] [--k 20] [--seed 7]
   adversarial   [--t-max 5] [--k 60]
   bench         [--n 4096] [--k 32] [--seed 11]
                 [--families coverage,zipf,facility,cut,concave,modular,adversarial]
-                [--backends serial,rayon,process:4] [--backend process:4]
+                [--backends serial,rayon,process:4@uds] [--backend process:4]
                 [--sizes 8000x20,32000x40] [--output bench_report.json]
   engine-check  [--artifacts <dir>]   (xla feature builds only)
-(internal: `mrsub worker` is the shared-nothing process-backend worker; it
- speaks the mapreduce::wire protocol on stdin/stdout and is spawned by the
- coordinator, never by hand.)";
+  worker        [--connect HOST:PORT] [--connect-uds PATH] [--id N]
+                shared-nothing process-backend worker. Normally spawned by
+                the coordinator (pipes / MRSUB_CONNECT env); run it by hand
+                with --connect to join a `process:N@tcp:HOST:PORT`
+                coordinator from another host (--id picks the worker slot
+                0..N-1).";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -148,10 +153,11 @@ fn dispatch(argv: &[String]) -> Result<()> {
         eprintln!("{USAGE}");
         return Err(cli_err("missing subcommand"));
     };
-    // Hidden worker subcommand: serve the wire protocol on stdin/stdout.
-    // Handled before flag parsing — workers take env config, not flags.
+    // Hidden worker subcommand: serve the wire protocol on stdin/stdout or
+    // dial back to a coordinator listener (`--connect`). Handled before the
+    // generic flag parser — the worker has its own tiny flag set.
     if cmd == "worker" {
-        std::process::exit(mrsub::mapreduce::process::worker_main());
+        std::process::exit(mrsub::mapreduce::process::worker_main(&argv[1..]));
     }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
@@ -402,10 +408,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         for &(sz_n, sz_k) in &sizes {
             let inst = bench_instance(fam, sz_n, seed)?;
             let k_eff = sz_k.min(inst.n);
-            for &backend in &backends {
+            for backend in &backends {
                 let mut cfg = ClusterConfig {
                     seed,
-                    backend: Some(backend),
+                    backend: Some(backend.clone()),
                     ..ClusterConfig::default()
                 };
                 apply_cluster_flags(args, &mut cfg)?;

@@ -33,6 +33,7 @@
 use std::fmt;
 use std::sync::Arc;
 
+use crate::mapreduce::transport::Transport;
 use crate::util::pool;
 
 /// How per-machine closures of a worker round are executed.
@@ -115,7 +116,7 @@ impl ExecBackend for ProcessCtl {
 /// Serializable backend selector — what configs, the CLI, and
 /// [`super::ClusterConfig`] carry; [`BackendKind::build`] instantiates the
 /// actual backend.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum BackendKind {
     /// [`Serial`].
     Serial,
@@ -126,10 +127,13 @@ pub enum BackendKind {
     },
     /// Shared-nothing worker processes
     /// ([`crate::mapreduce::process::ProcessPool`]); simulated machines
-    /// are assigned round-robin across `workers` OS processes.
+    /// are assigned round-robin across `workers` OS processes, reached
+    /// over `transport` (pipes, a Unix-domain socket, or TCP).
     Process {
-        /// Worker processes to spawn (≥ 1; capped at the machine count).
+        /// Worker processes (≥ 1; capped at the machine count).
         workers: usize,
+        /// Byte-stream transport coordinator ↔ workers.
+        transport: Transport,
     },
 }
 
@@ -138,27 +142,34 @@ impl BackendKind {
     /// [`BackendKind::Process`] this is the [`ProcessCtl`] control-plane
     /// stand-in — the worker pool itself is owned by the cluster, which
     /// consults [`BackendKind::process_workers`] to spawn it.
-    pub fn build(self) -> Arc<dyn ExecBackend> {
+    pub fn build(&self) -> Arc<dyn ExecBackend> {
         match self {
             BackendKind::Serial => Arc::new(Serial),
-            BackendKind::Rayon { chunk } => Arc::new(Rayon { chunk: chunk.max(1) }),
+            BackendKind::Rayon { chunk } => Arc::new(Rayon { chunk: (*chunk).max(1) }),
             BackendKind::Process { .. } => Arc::new(ProcessCtl),
         }
     }
 
     /// Parse a config/CLI backend name: `"serial"`, `"rayon"`,
-    /// `"process"`, `"process:N"` (N ≥ 1 worker processes), plus the
-    /// round-trippable [`BackendKind::label`] forms (`"rayon(chunk=N)"`).
-    /// `chunk` applies to the bare `"rayon"`/`"process"` forms.
-    /// `"process:0"` is rejected (`None`).
+    /// `"process"`, `"process:N"` (N ≥ 1 worker processes),
+    /// `"process:N@pipe"` / `"process:N@uds"` / `"process:N@tcp"` /
+    /// `"process:N@tcp:HOST:PORT"` (transport selection; see
+    /// [`Transport`]), plus the round-trippable [`BackendKind::label`]
+    /// forms (`"rayon(chunk=N)"`). `chunk` applies to the bare
+    /// `"rayon"`/`"process"` forms. `"process:0"` and unknown transport
+    /// suffixes are rejected (`None`).
     pub fn parse(name: &str, chunk: usize) -> Option<BackendKind> {
         if let Some(rest) = name.strip_prefix("process:") {
-            return rest
+            let (workers, transport) = match rest.split_once('@') {
+                Some((w, t)) => (w, Transport::parse_suffix(t)?),
+                None => (rest, Transport::Pipe),
+            };
+            return workers
                 .trim()
                 .parse::<usize>()
                 .ok()
                 .filter(|&w| w > 0)
-                .map(|workers| BackendKind::Process { workers });
+                .map(|workers| BackendKind::Process { workers, transport });
         }
         if let Some(rest) = name.strip_prefix("rayon(chunk=") {
             let inner = rest.strip_suffix(')')?;
@@ -167,19 +178,26 @@ impl BackendKind {
         match name {
             "serial" => Some(BackendKind::Serial),
             "rayon" => Some(BackendKind::Rayon { chunk: chunk.max(1) }),
-            "process" => Some(BackendKind::Process { workers: chunk.max(1) }),
+            "process" => Some(BackendKind::Process {
+                workers: chunk.max(1),
+                transport: Transport::Pipe,
+            }),
             _ => None,
         }
     }
 
     /// Display label; every label round-trips through
     /// [`BackendKind::parse`] (asserted by tests), so labels written into
-    /// bench reports and TOML configs can be read back verbatim.
+    /// bench reports and TOML configs can be read back verbatim. The
+    /// default pipe transport is elided (`process:N`, not
+    /// `process:N@pipe`) so pre-transport labels stay stable.
     pub fn label(&self) -> String {
         match self {
             BackendKind::Serial => "serial".into(),
             BackendKind::Rayon { chunk } => format!("rayon(chunk={chunk})"),
-            BackendKind::Process { workers } => format!("process:{workers}"),
+            BackendKind::Process { workers, transport } => {
+                format!("process:{workers}{}", transport.label_suffix())
+            }
         }
     }
 
@@ -191,7 +209,15 @@ impl BackendKind {
     /// Worker-process count when this is the process backend.
     pub fn process_workers(&self) -> Option<usize> {
         match self {
-            BackendKind::Process { workers } => Some(*workers),
+            BackendKind::Process { workers, .. } => Some(*workers),
+            _ => None,
+        }
+    }
+
+    /// Worker transport when this is the process backend.
+    pub fn process_transport(&self) -> Option<&Transport> {
+        match self {
+            BackendKind::Process { transport, .. } => Some(transport),
             _ => None,
         }
     }
@@ -275,25 +301,55 @@ mod tests {
         assert!(BackendKind::Rayon { chunk: 1 }.is_parallel());
     }
 
+    fn process_kind(workers: usize, transport: Transport) -> BackendKind {
+        BackendKind::Process { workers, transport }
+    }
+
     #[test]
     fn process_kind_parse_label_and_rejections() {
         assert_eq!(
             BackendKind::parse("process:4", 1),
-            Some(BackendKind::Process { workers: 4 })
+            Some(process_kind(4, Transport::Pipe))
         );
-        assert_eq!(
-            BackendKind::parse("process", 3),
-            Some(BackendKind::Process { workers: 3 })
-        );
+        assert_eq!(BackendKind::parse("process", 3), Some(process_kind(3, Transport::Pipe)));
         // process:0 is meaningless and must be rejected, not clamped.
         assert_eq!(BackendKind::parse("process:0", 1), None);
         assert_eq!(BackendKind::parse("process:", 1), None);
         assert_eq!(BackendKind::parse("process:x", 1), None);
-        assert_eq!(BackendKind::Process { workers: 4 }.label(), "process:4");
-        assert!(BackendKind::Process { workers: 1 }.is_parallel());
-        assert_eq!(BackendKind::Process { workers: 2 }.process_workers(), Some(2));
+        assert_eq!(process_kind(4, Transport::Pipe).label(), "process:4");
+        assert!(process_kind(1, Transport::Pipe).is_parallel());
+        assert_eq!(process_kind(2, Transport::Pipe).process_workers(), Some(2));
         assert_eq!(BackendKind::Serial.process_workers(), None);
-        assert_eq!(BackendKind::Process { workers: 2 }.build().name(), "process");
+        assert_eq!(BackendKind::Serial.process_transport(), None);
+        assert_eq!(process_kind(2, Transport::Pipe).build().name(), "process");
+    }
+
+    #[test]
+    fn process_transport_suffixes_parse() {
+        assert_eq!(
+            BackendKind::parse("process:2@pipe", 1),
+            Some(process_kind(2, Transport::Pipe))
+        );
+        assert_eq!(
+            BackendKind::parse("process:2@uds", 1),
+            Some(process_kind(2, Transport::Uds))
+        );
+        assert_eq!(
+            BackendKind::parse("process:3@tcp", 1),
+            Some(process_kind(3, Transport::Tcp { bind: None }))
+        );
+        assert_eq!(
+            BackendKind::parse("process:3@tcp:0.0.0.0:7070", 1),
+            Some(process_kind(3, Transport::Tcp { bind: Some("0.0.0.0:7070".into()) }))
+        );
+        // bad worker counts / transports are rejected, not defaulted.
+        assert_eq!(BackendKind::parse("process:0@uds", 1), None);
+        assert_eq!(BackendKind::parse("process:2@shm", 1), None);
+        assert_eq!(BackendKind::parse("process:2@tcp:", 1), None);
+        assert_eq!(
+            process_kind(2, Transport::Uds).process_transport(),
+            Some(&Transport::Uds)
+        );
     }
 
     #[test]
@@ -302,12 +358,15 @@ mod tests {
             BackendKind::Serial,
             BackendKind::Rayon { chunk: 1 },
             BackendKind::Rayon { chunk: 7 },
-            BackendKind::Process { workers: 1 },
-            BackendKind::Process { workers: 16 },
+            process_kind(1, Transport::Pipe),
+            process_kind(16, Transport::Pipe),
+            process_kind(2, Transport::Uds),
+            process_kind(4, Transport::Tcp { bind: None }),
+            process_kind(4, Transport::Tcp { bind: Some("127.0.0.1:9100".into()) }),
         ] {
             assert_eq!(
                 BackendKind::parse(&kind.label(), 999),
-                Some(kind),
+                Some(kind.clone()),
                 "label {:?} must parse back to its kind",
                 kind.label()
             );

@@ -16,6 +16,7 @@ pub mod backend;
 pub mod partition;
 pub mod process;
 pub mod shard;
+pub mod transport;
 pub mod wire;
 
 use std::sync::Arc;
@@ -122,7 +123,7 @@ impl ClusterConfig {
     /// set, else the legacy `parallel` flag mapped to `Rayon{chunk:1}` /
     /// `Serial`.
     pub fn backend_kind(&self) -> BackendKind {
-        self.backend.unwrap_or(if self.parallel {
+        self.backend.clone().unwrap_or(if self.parallel {
             BackendKind::Rayon { chunk: 1 }
         } else {
             BackendKind::Serial
@@ -394,7 +395,16 @@ impl MrCluster {
             }
             replies
         } else {
-            shard::run_task_all(oracle, &self.shards, &mut self.stores, task, self.exec.as_ref())
+            // in-process: machine i IS global machine i.
+            let machine_ids: Vec<usize> = (0..self.shards.len()).collect();
+            shard::run_task_all(
+                oracle,
+                &self.shards,
+                &mut self.stores,
+                &machine_ids,
+                task,
+                self.exec.as_ref(),
+            )
         };
         let total_sent: usize = replies.iter().map(CommSize::comm_size).sum();
         let mut calls = delta(calls0, self.calls_snapshot());
@@ -420,7 +430,7 @@ impl MrCluster {
         if self.pool.is_some() {
             return Ok(());
         }
-        let Some(workers) = self.cfg.backend_kind().process_workers() else {
+        let BackendKind::Process { workers, transport } = self.cfg.backend_kind() else {
             return Ok(());
         };
         let spec = self.cfg.oracle_spec.clone().ok_or_else(|| {
@@ -432,6 +442,7 @@ impl MrCluster {
         })?;
         let opts = PoolOptions {
             workers,
+            transport,
             timeout: Duration::from_millis(self.cfg.worker_timeout_ms.max(1)),
             max_frame: self.cfg.max_frame_bytes,
             exe: self.cfg.worker_exe.clone(),
@@ -674,7 +685,7 @@ mod tests {
         let mut reference: Option<Vec<Vec<ElementId>>> = None;
         for kind in kinds {
             let mut c = MrCluster::new(500, 8, &ClusterConfig {
-                backend: Some(kind),
+                backend: Some(kind.clone()),
                 ..cfg(4)
             })
             .unwrap();
@@ -694,7 +705,7 @@ mod tests {
         let mut reference: Option<Vec<TaskReply>> = None;
         for kind in [BackendKind::Serial, BackendKind::Rayon { chunk: 2 }] {
             let mut c = MrCluster::new(300, 6, &ClusterConfig {
-                backend: Some(kind),
+                backend: Some(kind.clone()),
                 ..cfg(11)
             })
             .unwrap();
@@ -716,7 +727,10 @@ mod tests {
         use crate::workload::coverage::CoverageGen;
         let o = CoverageGen::new(100, 60, 3).build(1);
         let mut c = MrCluster::new(100, 4, &ClusterConfig {
-            backend: Some(BackendKind::Process { workers: 2 }),
+            backend: Some(BackendKind::Process {
+                workers: 2,
+                transport: transport::Transport::Pipe,
+            }),
             ..cfg(3)
         })
         .unwrap();

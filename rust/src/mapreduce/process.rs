@@ -1,17 +1,36 @@
 //! Shared-nothing process backend: one OS worker process per group of
 //! simulated machines, speaking the [`crate::mapreduce::wire`] protocol
-//! over stdin/stdout pipes.
+//! over a pluggable byte-stream transport
+//! ([`crate::mapreduce::transport`]): stdin/stdout pipes (default), a
+//! Unix-domain socket, or TCP.
 //!
 //! ## Topology
 //!
 //! [`ProcessPool::spawn`] re-executes the current binary (or an explicit
 //! `worker_exe`) with the hidden `mrsub worker` subcommand, one process
 //! per worker, and assigns the `m` simulated machines round-robin across
-//! the `N` workers of `--backend process:N`. Each worker receives — once,
-//! at init — the oracle *spec* (rebuilt deterministically on its side; no
-//! shared memory), its machines' shards, and the broadcast sample. Worker
-//! processes then persist across rounds: Algorithm 5's `t` thresholds pay
-//! one spawn, not `t`.
+//! the `N` workers of `--backend process:N[@transport]`. On the socket
+//! transports the coordinator binds a listener first and workers dial
+//! back (`MRSUB_CONNECT`); with an explicit TCP bind address
+//! (`process:N@tcp:HOST:PORT`) **no** local workers are spawned — the
+//! pool waits for `N` external `mrsub worker --connect HOST:PORT --id I`
+//! processes, which is how workers span hosts. Each worker receives —
+//! once, at init — the oracle *spec* (rebuilt deterministically on its
+//! side; no shared memory), its machines' shards, and the broadcast
+//! sample. Worker processes then persist across rounds: Algorithm 5's
+//! `t` thresholds pay one spawn, not `t`.
+//!
+//! ## Handshakes
+//!
+//! The first frame on every new byte stream — any transport — is
+//! [`FromWorker::Hello`], carrying the worker's slot id (socket
+//! connections arrive in arbitrary order) and its [`WIRE_VERSION`]; a
+//! version mismatch or an unknown slot fails here, before any shard data
+//! moves. [`ToWorker::Init`] → [`FromWorker::Ready`] then completes setup
+//! exactly as on pipes. Connection establishment is bounded by the same
+//! `worker_timeout_ms` that bounds round replies: a worker that never
+//! connects (crashed, connection refused, wrong endpoint) degrades into a
+//! structured [`Error::Worker`] when the accept deadline expires.
 //!
 //! ## Round protocol
 //!
@@ -19,33 +38,39 @@
 //! compute concurrently), then joins the replies in worker order. Replies
 //! carry per-machine [`TaskReply`]s plus the worker-side oracle-call delta,
 //! which the coordinator merges into its [`OracleCounters`] so
-//! `MrMetrics` sees one coherent count. All frame traffic is metered —
-//! the per-round IPC byte counts land in `RoundStat::ipc_bytes_*`.
+//! `MrMetrics` sees one coherent count. All frame traffic is metered
+//! identically on every transport — the per-round IPC byte counts land in
+//! `RoundStat::ipc_bytes_*`.
 //!
 //! ## Failure surface
 //!
 //! Every failure mode — worker killed mid-round, truncated or corrupted
-//! reply frame, oversized frame, handshake version mismatch, worker-side
-//! error — is a structured [`Error::Worker`] (never a panic, never a
-//! poisoned coordinator): the pool marks the worker dead, reaps the child,
-//! and the algorithm's `run` surfaces `Err`. Each worker gets a dedicated
-//! reader thread *and* writer thread, so the coordinator itself never
-//! blocks on a pipe — a worker that stops replying *or* stops reading is
-//! bounded by `worker_timeout_ms`, never a coordinator hang. Reply shapes
-//! are validated against the task ([`wire::reply_matches`]) before use.
+//! reply frame, oversized frame, handshake version mismatch, refused or
+//! dropped connection, worker-side error — is a structured
+//! [`Error::Worker`] (never a panic, never a poisoned coordinator): the
+//! pool marks the worker dead, force-closes its stream, reaps the child
+//! (when it spawned one), and the algorithm's `run` surfaces `Err`. Each
+//! worker gets a dedicated reader thread *and* writer thread, so the
+//! coordinator itself never blocks on a stream — a worker that stops
+//! replying *or* stops reading is bounded by `worker_timeout_ms`, never a
+//! coordinator hang. Reply shapes are validated against the task
+//! ([`wire::reply_matches`]) before use.
 //!
 //! The `MRSUB_FAULT` environment variable (set by the conformance suite
 //! via `worker_env`) injects worker-side faults: `die-mid-round`,
-//! `hang-round`, `truncate-frame`, `corrupt-checksum`, `bad-version`.
+//! `hang-round`, `truncate-frame`, `corrupt-checksum`, `bad-version`,
+//! `no-connect`.
 
 use std::io::{Read, Write};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::core::{ElementId, Error, Result};
 use crate::mapreduce::shard::{self, GuessStore};
+use crate::mapreduce::transport::{self, LinkControl, Listener, Transport};
 use crate::mapreduce::wire::{
     self, FromWorker, RoundTask, TaskReply, ToWorker, WireError, WorkerInit, DEFAULT_MAX_FRAME,
     WIRE_VERSION,
@@ -58,7 +83,10 @@ use crate::oracle::{CountingOracle, Oracle, OracleCounters};
 pub struct PoolOptions {
     /// Worker processes to spawn (capped at the machine count).
     pub workers: usize,
-    /// Per-reply wait bound; a worker silent for longer is declared dead.
+    /// Coordinator ↔ worker byte-stream transport.
+    pub transport: Transport,
+    /// Per-reply wait bound; also bounds connection establishment. A
+    /// worker silent for longer is declared dead.
     pub timeout: Duration,
     /// Hard cap on a single frame's payload.
     pub max_frame: usize,
@@ -74,6 +102,7 @@ impl Default for PoolOptions {
     fn default() -> Self {
         PoolOptions {
             workers: 1,
+            transport: Transport::Pipe,
             timeout: Duration::from_millis(30_000),
             max_frame: DEFAULT_MAX_FRAME,
             exe: None,
@@ -93,16 +122,28 @@ pub struct RoundIpcStats {
     pub calls: (u64, u64, u64),
 }
 
+/// Frames from a reader thread: `(payload, frame_bytes)` or a wire error.
+type FrameResult = std::result::Result<(Vec<u8>, usize), WireError>;
+
 struct WorkerHandle {
-    child: Child,
-    /// Payloads to the dedicated writer thread (which owns the pipe and
+    /// The spawned OS process; `None` for external workers that joined
+    /// over `mrsub worker --connect` (nothing to reap — dropping the
+    /// stream is the only lever).
+    child: Option<Child>,
+    /// Payloads to the dedicated writer thread (which owns the stream and
     /// does the blocking `write`); `None` once closed (shutdown/failure).
     /// Queueing instead of writing inline keeps the coordinator off the
-    /// pipe: a worker that stops *reading* cannot wedge the coordinator —
-    /// the reply timeout still fires and the worker is declared dead.
+    /// stream: a worker that stops *reading* cannot wedge the coordinator
+    /// — the reply timeout still fires and the worker is declared dead.
     tx: Option<mpsc::Sender<Vec<u8>>>,
-    /// Frames from the dedicated reader thread: `(payload, frame_bytes)`.
-    rx: mpsc::Receiver<std::result::Result<(Vec<u8>, usize), WireError>>,
+    /// Frames from the dedicated reader thread.
+    rx: mpsc::Receiver<FrameResult>,
+    /// Force-close handle for the underlying stream (no-op for pipes).
+    control: LinkControl,
+    /// Fires when the writer thread has drained its queue and exited —
+    /// a bounded flush handshake (the `Shutdown` frame in particular)
+    /// consulted at shutdown before the stream is cut.
+    writer_done: mpsc::Receiver<()>,
     /// Simulated machine ids this worker hosts.
     machines: Vec<usize>,
     alive: bool,
@@ -122,9 +163,97 @@ fn worker_error(worker: usize, message: impl Into<String>) -> Error {
     Error::Worker { worker, message: message.into() }
 }
 
+/// The one version-mismatch wording, shared by every handshake site
+/// (socket Hello, pipe Hello, Ready) so the transports never drift.
+fn version_mismatch(version: u16) -> String {
+    format!("wire version mismatch: worker speaks v{version}, coordinator v{WIRE_VERSION}")
+}
+
+/// Diversifies UDS socket paths across pools within one process.
+static POOL_TAG: AtomicU64 = AtomicU64::new(1);
+
+/// Upper bound on the wait for a `Hello` after a stream connects. A real
+/// worker sends it as its very first act, so this only fires for silent
+/// strays (port scanners, health checks) — and bounds how long any single
+/// stray can stall the (serial) accept loop; several strays in a row
+/// still burn the pool deadline, which is why an explicit TCP bind
+/// belongs on a trusted network segment (see README).
+const HELLO_BUDGET: Duration = Duration::from_secs(2);
+
+/// Start the dedicated reader + writer threads over a worker byte stream;
+/// returns the send queue, the receive channel, and a drain signal the
+/// writer fires just before exiting (a *bounded* flush handshake for
+/// shutdown — never a join that could hang the coordinator).
+fn start_io_threads(
+    mut reader: Box<dyn Read + Send>,
+    mut writer: Box<dyn Write + Send>,
+    max_frame: usize,
+) -> (mpsc::Sender<Vec<u8>>, mpsc::Receiver<FrameResult>, mpsc::Receiver<()>) {
+    let (reply_tx, rx) = mpsc::channel();
+    let (tx, payload_rx) = mpsc::channel::<Vec<u8>>();
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || loop {
+        let res = wire::read_frame(&mut reader, max_frame);
+        let stop = res.is_err();
+        if reply_tx.send(res).is_err() || stop {
+            break;
+        }
+    });
+    std::thread::spawn(move || {
+        // exits when the sender is dropped (shutdown/mark_dead) or the
+        // stream breaks; dropping a pipe writer EOFs the worker.
+        while let Ok(payload) = payload_rx.recv() {
+            if wire::write_frame(&mut writer, &payload, max_frame).is_err() {
+                break;
+            }
+        }
+        let _ = done_tx.send(());
+    });
+    (tx, rx, done_rx)
+}
+
+/// A connected-but-not-yet-initialized worker stream (handshake state).
+struct Pending {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<FrameResult>,
+    control: LinkControl,
+    writer_done: mpsc::Receiver<()>,
+}
+
+/// Read and decode the connect-time `Hello` from a pending stream;
+/// returns `(version, worker id, frame bytes)` for the IPC meter.
+fn expect_hello(
+    pending: &Pending,
+    deadline: Instant,
+) -> std::result::Result<(u16, u32, u64), String> {
+    let remaining = deadline.saturating_duration_since(Instant::now()).min(HELLO_BUDGET);
+    let waited_ms = remaining.as_millis();
+    match pending.rx.recv_timeout(remaining) {
+        Ok(Ok((payload, nbytes))) => match FromWorker::decode(&payload) {
+            Ok(FromWorker::Hello { version, worker }) => Ok((version, worker, nbytes as u64)),
+            Ok(other) => Err(format!("expected Hello handshake, got {other:?}")),
+            Err(e) => Err(format!("undecodable handshake frame: {e}")),
+        },
+        Ok(Err(WireError::Truncated { got: 0, .. })) => {
+            Err("stream closed before the Hello handshake (worker crashed?)".into())
+        }
+        Ok(Err(e)) => Err(format!("bad handshake frame: {e}")),
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            Err(format!(
+                "no Hello within {waited_ms} ms of connecting \
+                 (worker connected but went silent)"
+            ))
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            Err("stream closed before the Hello handshake".into())
+        }
+    }
+}
+
 impl ProcessPool {
-    /// Spawn workers, ship each its shards + spec + sample, and complete
-    /// the `Ready` handshake.
+    /// Spawn (or await) workers, complete the `Hello` handshake, ship
+    /// each worker its shards + spec + sample, and complete the `Ready`
+    /// handshake.
     pub fn spawn(
         spec: &OracleSpec,
         shards: &[Vec<ElementId>],
@@ -136,69 +265,230 @@ impl ProcessPool {
             return Err(Error::Config("process pool needs at least one machine".into()));
         }
         let w = opts.workers.clamp(1, m);
-        let exe = match &opts.exe {
-            Some(p) => p.clone(),
-            None => std::env::current_exe()
-                .map_err(|e| Error::Config(format!("cannot locate worker executable: {e}")))?,
-        };
+        let external = opts.transport.external_workers();
+        let listener = Listener::bind(&opts.transport, POOL_TAG.fetch_add(1, Ordering::Relaxed))
+            .map_err(|e| {
+                Error::Config(format!("bind {} listener: {e}", opts.transport))
+            })?;
         let mut machines_of: Vec<Vec<usize>> = vec![Vec::new(); w];
         for i in 0..m {
             machines_of[i % w].push(i);
         }
-        let mut workers: Vec<WorkerHandle> = Vec::with_capacity(w);
-        for (wi, machines) in machines_of.into_iter().enumerate() {
-            let mut cmd = Command::new(&exe);
-            cmd.arg("worker")
-                .stdin(Stdio::piped())
-                .stdout(Stdio::piped())
-                .stderr(Stdio::inherit())
-                .env("MRSUB_MAX_FRAME", opts.max_frame.to_string());
-            for (key, val) in &opts.env {
-                cmd.env(key, val);
+
+        // --- process phase: spawn local workers (unless external) --------
+        let mut children: Vec<Child> = Vec::new(); // index == worker slot
+        let abort = |mut children: Vec<Child>, slots: Vec<Option<Pending>>| {
+            for slot in slots.into_iter().flatten() {
+                slot.control.force_close();
             }
-            let mut child = match cmd.spawn() {
-                Ok(child) => child,
-                Err(e) => {
-                    // reap the workers already spawned — no zombies on a
-                    // partial spawn (process-limit pressure, vanished exe).
-                    for mut prev in workers {
-                        let _ = prev.child.kill();
-                        let _ = prev.child.wait();
-                    }
-                    return Err(worker_error(wi, format!("spawn {}: {e}", exe.display())));
-                }
+            for child in &mut children {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        };
+        if !external {
+            let exe = match &opts.exe {
+                Some(p) => p.clone(),
+                None => std::env::current_exe().map_err(|e| {
+                    Error::Config(format!("cannot locate worker executable: {e}"))
+                })?,
             };
-            let mut stdin = child.stdin.take().expect("stdin piped");
-            let mut stdout = child.stdout.take().expect("stdout piped");
-            let (reply_tx, rx) = mpsc::channel();
-            let (tx, payload_rx) = mpsc::channel::<Vec<u8>>();
-            let max_frame = opts.max_frame;
-            std::thread::spawn(move || loop {
-                let res = wire::read_frame(&mut stdout, max_frame);
-                let stop = res.is_err();
-                if reply_tx.send(res).is_err() || stop {
-                    break;
-                }
-            });
-            std::thread::spawn(move || {
-                // exits when the sender is dropped (shutdown/mark_dead) or
-                // the pipe breaks; dropping stdin EOFs the worker.
-                while let Ok(payload) = payload_rx.recv() {
-                    if wire::write_frame(&mut stdin, &payload, max_frame).is_err() {
-                        break;
+            for wi in 0..w {
+                let mut cmd = Command::new(&exe);
+                cmd.arg("worker")
+                    .stderr(Stdio::inherit())
+                    .env("MRSUB_MAX_FRAME", opts.max_frame.to_string())
+                    .env("MRSUB_WORKER_ID", wi.to_string());
+                match &listener {
+                    None => {
+                        // a stale MRSUB_CONNECT inherited from the
+                        // coordinator's environment would flip a pipe
+                        // worker into socket-dial mode; clear it.
+                        cmd.stdin(Stdio::piped())
+                            .stdout(Stdio::piped())
+                            .env_remove("MRSUB_CONNECT");
+                    }
+                    Some(l) => {
+                        // socket workers keep stdio free; they dial back.
+                        cmd.stdin(Stdio::null())
+                            .stdout(Stdio::inherit())
+                            .env("MRSUB_CONNECT", l.endpoint());
                     }
                 }
-            });
-            workers.push(WorkerHandle { child, tx: Some(tx), rx, machines, alive: true });
+                for (key, val) in &opts.env {
+                    cmd.env(key, val);
+                }
+                match cmd.spawn() {
+                    Ok(child) => children.push(child),
+                    Err(e) => {
+                        // reap the workers already spawned — no zombies on a
+                        // partial spawn (process-limit pressure, vanished exe).
+                        abort(children, Vec::new());
+                        return Err(worker_error(wi, format!("spawn {}: {e}", exe.display())));
+                    }
+                }
+            }
         }
+
+        // --- connection + Hello phase ------------------------------------
+        let deadline = Instant::now() + opts.timeout;
+        let timeout_ms = opts.timeout.as_millis();
+        let mut slots: Vec<Option<Pending>> = (0..w).map(|_| None).collect();
+        // socket Hello frames are consumed here, before the pool exists;
+        // meter them so all transports account handshake bytes alike
+        // (pipe Hellos flow through `recv`, which meters inline).
+        let mut hello_bytes_in: u64 = 0;
+        match &listener {
+            None => {
+                // pipes are wired at spawn: stream `wi` IS worker `wi`.
+                for (wi, child) in children.iter_mut().enumerate() {
+                    let stdin = child.stdin.take().expect("stdin piped");
+                    let stdout = child.stdout.take().expect("stdout piped");
+                    let (tx, rx, writer_done) =
+                        start_io_threads(Box::new(stdout), Box::new(stdin), opts.max_frame);
+                    slots[wi] =
+                        Some(Pending { tx, rx, control: LinkControl::Pipe, writer_done });
+                }
+            }
+            Some(l) => {
+                let mut filled = 0usize;
+                // external mode drops bad joins per-connection; the reason
+                // for the last rejection is folded into the eventual
+                // timeout error so the operator sees *why* a slot stayed
+                // empty (e.g. a stale old-version worker retrying).
+                let mut last_reject: Option<String> = None;
+                while filled < w {
+                    let link = match l.accept_until(deadline) {
+                        Ok(Some(link)) => link,
+                        Ok(None) => {
+                            let missing =
+                                slots.iter().position(Option::is_none).unwrap_or(0);
+                            abort(children, slots);
+                            let mut msg = format!(
+                                "no worker connection within {timeout_ms} ms \
+                                 (connection refused, worker crashed before \
+                                 connecting, or wrong --connect endpoint?)"
+                            );
+                            if let Some(r) = last_reject {
+                                msg.push_str(&format!("; last rejected join: {r}"));
+                            }
+                            return Err(worker_error(missing, msg));
+                        }
+                        Err(e) => {
+                            abort(children, slots);
+                            return Err(worker_error(0, format!("accept failed: {e}")));
+                        }
+                    };
+                    let control = link.control.clone();
+                    let (tx, rx, writer_done) =
+                        start_io_threads(link.reader, link.writer, opts.max_frame);
+                    let pending = Pending { tx, rx, control, writer_done };
+                    match expect_hello(&pending, deadline) {
+                        Ok((version, worker, _)) if version != WIRE_VERSION => {
+                            pending.control.force_close();
+                            if external {
+                                // a stray old-binary join must not tear
+                                // down already-joined workers.
+                                last_reject = Some(version_mismatch(version));
+                                continue;
+                            }
+                            abort(children, slots);
+                            return Err(worker_error(
+                                worker as usize,
+                                version_mismatch(version),
+                            ));
+                        }
+                        Ok((_, worker, nbytes)) => {
+                            let wi = worker as usize;
+                            if wi >= w || slots[wi].is_some() {
+                                pending.control.force_close();
+                                let msg = format!(
+                                    "unexpected worker id {wi} in Hello \
+                                     (pool has {w} slots; duplicate --id?)"
+                                );
+                                if external {
+                                    last_reject = Some(msg);
+                                    continue;
+                                }
+                                abort(children, slots);
+                                return Err(worker_error(wi, msg));
+                            }
+                            hello_bytes_in += nbytes;
+                            slots[wi] = Some(pending);
+                            filled += 1;
+                        }
+                        Err(msg) if external => {
+                            // an open listener on a real network attracts
+                            // strays (port scanners, health checks): a
+                            // stream that dies or garbles before its Hello
+                            // is dropped, not a pool-fatal event — a truly
+                            // missing worker still trips the accept
+                            // deadline above.
+                            pending.control.force_close();
+                            last_reject = Some(msg);
+                        }
+                        Err(msg) => {
+                            // spawned-worker mode: every stream is one of
+                            // ours, so a pre-Hello death is a real worker
+                            // failure — fail fast with the cause.
+                            pending.control.force_close();
+                            let missing =
+                                slots.iter().position(Option::is_none).unwrap_or(0);
+                            abort(children, slots);
+                            return Err(worker_error(missing, msg));
+                        }
+                    }
+                }
+            }
+        }
+        drop(listener); // all workers joined; unlink the UDS path now.
+
+        // --- assemble + pipe-mode Hello + Init/Ready ----------------------
+        let mut children = children.into_iter().map(Some).collect::<Vec<_>>();
+        children.resize_with(w, || None);
+        let workers: Vec<WorkerHandle> = slots
+            .into_iter()
+            .zip(machines_of)
+            .enumerate()
+            .map(|(wi, (pending, machines))| {
+                let p = pending.expect("every slot filled above");
+                WorkerHandle {
+                    child: children[wi].take(),
+                    tx: Some(p.tx),
+                    rx: p.rx,
+                    control: p.control,
+                    writer_done: p.writer_done,
+                    machines,
+                    alive: true,
+                }
+            })
+            .collect();
         let mut pool = ProcessPool {
             workers,
             n_machines: m,
             timeout: opts.timeout,
             max_frame: opts.max_frame,
             bytes_out: 0,
-            bytes_in: 0,
+            bytes_in: hello_bytes_in,
         };
+        if matches!(opts.transport, Transport::Pipe) {
+            // socket hellos were consumed during accept; pipe hellos are
+            // still queued — same handshake, same validation.
+            for wi in 0..pool.workers.len() {
+                match pool.recv(wi)? {
+                    FromWorker::Hello { version, worker }
+                        if version == WIRE_VERSION && worker as usize == wi => {}
+                    FromWorker::Hello { version, .. } if version != WIRE_VERSION => {
+                        return Err(pool.mark_dead(wi, version_mismatch(version)))
+                    }
+                    other => {
+                        return Err(
+                            pool.mark_dead(wi, format!("bad Hello handshake: {other:?}"))
+                        )
+                    }
+                }
+            }
+        }
         for wi in 0..pool.workers.len() {
             let init = ToWorker::Init(WorkerInit {
                 spec: spec.clone(),
@@ -212,13 +502,7 @@ impl ProcessPool {
             match pool.recv(wi)? {
                 FromWorker::Ready { version } if version == WIRE_VERSION => {}
                 FromWorker::Ready { version } => {
-                    return Err(pool.mark_dead(
-                        wi,
-                        format!(
-                            "wire version mismatch: worker speaks v{version}, \
-                             coordinator v{WIRE_VERSION}"
-                        ),
-                    ))
+                    return Err(pool.mark_dead(wi, version_mismatch(version)))
                 }
                 FromWorker::Fail { message } => {
                     return Err(pool.mark_dead(wi, format!("init failed: {message}")))
@@ -284,8 +568,10 @@ impl ProcessPool {
                     calls.2 += c.2;
                 }
                 FromWorker::Fail { message } => return Err(self.mark_dead(wi, message)),
-                FromWorker::Ready { .. } => {
-                    return Err(self.mark_dead(wi, "unexpected Ready mid-round"))
+                other => {
+                    return Err(
+                        self.mark_dead(wi, format!("unexpected mid-round message: {other:?}"))
+                    )
                 }
             }
         }
@@ -301,11 +587,17 @@ impl ProcessPool {
 
     /// Fault injection (tests): kill worker `wi`'s OS process *without*
     /// telling the pool — the next round must surface a structured error,
-    /// exactly as if the process died on its own.
+    /// exactly as if the process died on its own. External workers (no
+    /// child handle) get their stream force-closed instead.
     pub fn kill_worker(&mut self, wi: usize) {
         if let Some(w) = self.workers.get_mut(wi) {
-            let _ = w.child.kill();
-            let _ = w.child.wait();
+            match &mut w.child {
+                Some(child) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                None => w.control.force_close(),
+            }
         }
     }
 
@@ -314,8 +606,8 @@ impl ProcessPool {
     }
 
     /// Queue one frame for the worker's writer thread. Never blocks on the
-    /// pipe; oversized payloads fail here (structured), write failures
-    /// surface at the next `recv` (dead pipe / timeout).
+    /// stream; oversized payloads fail here (structured), write failures
+    /// surface at the next `recv` (dead stream / timeout).
     fn send_payload(&mut self, wi: usize, payload: &[u8]) -> Result<()> {
         if !self.workers[wi].alive {
             return Err(worker_error(wi, "worker is dead (earlier failure)"));
@@ -329,7 +621,7 @@ impl ProcessPool {
             None => false,
         };
         if !queued {
-            return Err(self.mark_dead(wi, "send failed: writer thread gone (pipe broken)"));
+            return Err(self.mark_dead(wi, "send failed: writer thread gone (stream broken)"));
         }
         self.bytes_out += wire::frame_size(payload.len()) as u64;
         Ok(())
@@ -348,7 +640,7 @@ impl ProcessPool {
                 }
             }
             Ok(Err(WireError::Truncated { got: 0, .. })) => {
-                Err(self.mark_dead(wi, "worker closed its pipe (exited or was killed)"))
+                Err(self.mark_dead(wi, "worker closed its stream (exited or was killed)"))
             }
             Ok(Err(e)) => Err(self.mark_dead(wi, format!("bad reply frame: {e}"))),
             Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -361,13 +653,17 @@ impl ProcessPool {
         }
     }
 
-    /// Mark `wi` dead, reap the child, and build the structured error.
+    /// Mark `wi` dead, tear its stream down, reap the child (if any), and
+    /// build the structured error.
     fn mark_dead(&mut self, wi: usize, message: impl Into<String>) -> Error {
         let w = &mut self.workers[wi];
         w.alive = false;
-        w.tx = None; // writer thread exits, dropping the worker's stdin.
-        let _ = w.child.kill();
-        let _ = w.child.wait();
+        w.tx = None; // writer thread exits; on pipes this drops stdin.
+        w.control.force_close();
+        if let Some(child) = &mut w.child {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
         worker_error(wi, message)
     }
 
@@ -375,24 +671,36 @@ impl ProcessPool {
         for w in &mut self.workers {
             if let Some(tx) = w.tx.take() {
                 let _ = tx.send(ToWorker::Shutdown.encode());
-            } // dropping tx ends the writer, closing the pipe: EOF is a
-              // shutdown too.
+            } // dropping tx ends the writer; on pipes that also EOFs the
+              // worker, which is a shutdown too.
         }
         for w in &mut self.workers {
+            let Some(child) = &mut w.child else {
+                // external worker, nothing to reap: wait (bounded) for the
+                // writer to signal it drained the Shutdown frame, so the
+                // close below cannot sever it mid-write — then close our
+                // end so a worker that missed it observes EOF and exits.
+                // A dead worker's writer has already exited and signaled.
+                let _ = w.writer_done.recv_timeout(Duration::from_millis(250));
+                w.control.force_close();
+                continue;
+            };
             let deadline = Instant::now() + Duration::from_millis(250);
             loop {
-                match w.child.try_wait() {
+                match child.try_wait() {
                     Ok(Some(_)) => break,
                     Ok(None) if Instant::now() < deadline => {
                         std::thread::sleep(Duration::from_millis(5));
                     }
                     _ => {
-                        let _ = w.child.kill();
-                        let _ = w.child.wait();
+                        let _ = child.kill();
+                        let _ = child.wait();
                         break;
                     }
                 }
             }
+            // unblock any reader thread still parked on the socket.
+            w.control.force_close();
         }
     }
 }
@@ -408,6 +716,7 @@ impl Drop for ProcessPool {
 struct WorkerRuntime {
     oracle: CountingOracle<std::sync::Arc<dyn Oracle>>,
     counters: std::sync::Arc<OracleCounters>,
+    machines: Vec<usize>,
     shards: Vec<Vec<ElementId>>,
     stores: Vec<GuessStore>,
 }
@@ -417,13 +726,33 @@ fn send_reply(w: &mut dyn Write, msg: &FromWorker, max_frame: usize) -> bool {
 }
 
 /// The worker main loop over arbitrary streams (in-memory in unit tests,
-/// the process pipes in production). Returns the process exit code.
-pub fn run_worker(r: &mut dyn Read, w: &mut dyn Write, max_frame: usize, fault: Option<&str>) -> i32 {
+/// pipes or sockets in production). Sends the connect-time `Hello` (as
+/// worker slot `worker_id`), then serves frames until shutdown. Returns
+/// the process exit code.
+pub fn run_worker(
+    r: &mut dyn Read,
+    w: &mut dyn Write,
+    max_frame: usize,
+    worker_id: u32,
+    fault: Option<&str>,
+) -> i32 {
+    let hello_version = if fault == Some("bad-version") {
+        WIRE_VERSION.wrapping_add(1)
+    } else {
+        WIRE_VERSION
+    };
+    if !send_reply(
+        w,
+        &FromWorker::Hello { version: hello_version, worker: worker_id },
+        max_frame,
+    ) {
+        return 3;
+    }
     let mut rt: Option<WorkerRuntime> = None;
     loop {
         let payload = match wire::read_frame(r, max_frame) {
             Ok((payload, _)) => payload,
-            // clean EOF before a header byte: coordinator closed the pipe.
+            // clean EOF before a header byte: coordinator closed the stream.
             Err(WireError::Truncated { got: 0, .. }) => return 0,
             Err(e) => {
                 send_reply(w, &FromWorker::Fail { message: e.to_string() }, max_frame);
@@ -450,6 +779,7 @@ pub fn run_worker(r: &mut dyn Read, w: &mut dyn Write, max_frame: usize, fault: 
                     rt = Some(WorkerRuntime {
                         oracle: counting,
                         counters,
+                        machines: init.machines.iter().map(|&i| i as usize).collect(),
                         shards: init.shards,
                         stores: vec![GuessStore::default(); n],
                     });
@@ -474,7 +804,7 @@ pub fn run_worker(r: &mut dyn Read, w: &mut dyn Write, max_frame: usize, fault: 
             ToWorker::Round(task) => {
                 match fault {
                     // vanish without a reply: the coordinator sees a
-                    // closed pipe, exactly like an OOM-killed worker.
+                    // closed stream, exactly like an OOM-killed worker.
                     Some("die-mid-round") => return 3,
                     // go silent: the coordinator's worker_timeout_ms must
                     // bound the wait and declare the worker dead.
@@ -519,6 +849,7 @@ pub fn run_worker(r: &mut dyn Read, w: &mut dyn Write, max_frame: usize, fault: 
                     &rt.oracle,
                     &rt.shards,
                     &mut rt.stores,
+                    &rt.machines,
                     &task,
                     &crate::mapreduce::backend::Serial,
                 );
@@ -538,18 +869,98 @@ pub fn run_worker(r: &mut dyn Read, w: &mut dyn Write, max_frame: usize, fault: 
 }
 
 /// Entry point for the hidden `mrsub worker` subcommand: serve the wire
-/// protocol on stdin/stdout until shutdown; returns the exit code.
-pub fn worker_main() -> i32 {
+/// protocol on stdin/stdout (default) or on a dialed-back socket
+/// (`--connect HOST:PORT` / `--connect-uds PATH` / `MRSUB_CONNECT`),
+/// identifying as worker slot `--id N` / `MRSUB_WORKER_ID`. Returns the
+/// process exit code.
+pub fn worker_main(args: &[String]) -> i32 {
     let max_frame = std::env::var("MRSUB_MAX_FRAME")
         .ok()
         .and_then(|v| v.parse::<usize>().ok())
         .unwrap_or(DEFAULT_MAX_FRAME);
     let fault = std::env::var("MRSUB_FAULT").ok();
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    let mut r = stdin.lock();
-    let mut w = stdout.lock();
-    run_worker(&mut r, &mut w, max_frame, fault.as_deref())
+    let mut endpoint = std::env::var("MRSUB_CONNECT").ok();
+    let mut worker_id: u32 = std::env::var("MRSUB_WORKER_ID")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut it = args.iter();
+    while let Some(flag) = it.next() {
+        let mut value = |name: &str| -> Option<String> {
+            let v = it.next();
+            if v.is_none() {
+                eprintln!("mrsub worker: {name} needs a value");
+            }
+            v.cloned()
+        };
+        match flag.as_str() {
+            "--connect" => match value("--connect") {
+                // bare HOST:PORT means TCP; explicit uds:/tcp: pass through.
+                Some(v) if v.starts_with("uds:") || v.starts_with("tcp:") => {
+                    endpoint = Some(v);
+                }
+                Some(v) => endpoint = Some(format!("tcp:{v}")),
+                None => return 2,
+            },
+            "--connect-uds" => match value("--connect-uds") {
+                Some(v) => endpoint = Some(format!("uds:{v}")),
+                None => return 2,
+            },
+            "--id" => match value("--id").and_then(|v| v.parse().ok()) {
+                Some(v) => worker_id = v,
+                None => {
+                    eprintln!("mrsub worker: --id needs a non-negative integer");
+                    return 2;
+                }
+            },
+            other => {
+                eprintln!("mrsub worker: unknown flag {other:?}");
+                return 2;
+            }
+        }
+    }
+    // fault: die before ever connecting — the coordinator's accept
+    // deadline must degrade this into a structured connection error.
+    if fault.as_deref() == Some("no-connect") {
+        return 3;
+    }
+    match endpoint {
+        None => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            let mut r = stdin.lock();
+            let mut w = stdout.lock();
+            run_worker(&mut r, &mut w, max_frame, worker_id, fault.as_deref())
+        }
+        Some(ep) => {
+            // a hand-launched remote worker may beat the coordinator's
+            // bind; retry briefly before giving up with a structured
+            // connection-refused error on stderr.
+            let mut link = None;
+            for attempt in 0..10 {
+                match transport::connect(&ep) {
+                    Ok(l) => {
+                        link = Some(l);
+                        break;
+                    }
+                    Err(e) if attempt == 9 => {
+                        eprintln!("mrsub worker: connect {ep}: {e} (connection refused?)");
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(150)),
+                }
+            }
+            match link {
+                Some(mut link) => run_worker(
+                    &mut *link.reader,
+                    &mut *link.writer,
+                    max_frame,
+                    worker_id,
+                    fault.as_deref(),
+                ),
+                None => 3,
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -583,7 +994,7 @@ mod tests {
     }
 
     #[test]
-    fn worker_loop_serves_init_round_shutdown() {
+    fn worker_loop_serves_hello_init_round_shutdown() {
         let init = ToWorker::Init(WorkerInit {
             spec: spec(),
             machines: vec![0, 1],
@@ -594,12 +1005,17 @@ mod tests {
         let input = framed(&[init, round, ToWorker::Shutdown]);
         let mut r = std::io::Cursor::new(input);
         let mut out = Vec::new();
-        let code = run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, None);
+        let code = run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, 7, None);
         assert_eq!(code, 0);
         let replies = read_replies(&out);
-        assert_eq!(replies.len(), 2);
-        assert!(matches!(replies[0], FromWorker::Ready { version: WIRE_VERSION }));
-        match &replies[1] {
+        assert_eq!(replies.len(), 3);
+        assert!(
+            matches!(replies[0], FromWorker::Hello { version: WIRE_VERSION, worker: 7 }),
+            "first frame must be the connect-time Hello, got {:?}",
+            replies[0]
+        );
+        assert!(matches!(replies[1], FromWorker::Ready { version: WIRE_VERSION }));
+        match &replies[2] {
             FromWorker::RoundDone { replies, calls } => {
                 assert_eq!(replies.len(), 2, "one reply per hosted machine");
                 assert!(calls.0 > 0, "worker-side oracle calls reported");
@@ -610,11 +1026,13 @@ mod tests {
     }
 
     #[test]
-    fn worker_eof_is_clean_exit() {
+    fn worker_eof_is_clean_exit_after_hello() {
         let mut r = std::io::Cursor::new(Vec::new());
         let mut out = Vec::new();
-        assert_eq!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, None), 0);
-        assert!(out.is_empty());
+        assert_eq!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, 0, None), 0);
+        let replies = read_replies(&out);
+        assert_eq!(replies.len(), 1, "only the Hello goes out before EOF");
+        assert!(matches!(replies[0], FromWorker::Hello { .. }));
     }
 
     #[test]
@@ -622,8 +1040,8 @@ mod tests {
         let input = framed(&[ToWorker::Round(RoundTask::MaxSingleton)]);
         let mut r = std::io::Cursor::new(input);
         let mut out = Vec::new();
-        assert_ne!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, None), 0);
-        match &read_replies(&out)[0] {
+        assert_ne!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, 0, None), 0);
+        match &read_replies(&out)[1] {
             FromWorker::Fail { message } => assert!(message.contains("before init")),
             other => panic!("expected Fail, got {other:?}"),
         }
@@ -636,10 +1054,23 @@ mod tests {
         input[len - 1] ^= 0x55; // corrupt the checksum
         let mut r = std::io::Cursor::new(input);
         let mut out = Vec::new();
-        assert_ne!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, None), 0);
-        match &read_replies(&out)[0] {
+        assert_ne!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, 0, None), 0);
+        match &read_replies(&out)[1] {
             FromWorker::Fail { message } => assert!(message.contains("checksum")),
             other => panic!("expected Fail, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_version_fault_poisons_the_hello() {
+        let mut r = std::io::Cursor::new(Vec::new());
+        let mut out = Vec::new();
+        run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, 2, Some("bad-version"));
+        match &read_replies(&out)[0] {
+            FromWorker::Hello { version, worker: 2 } => {
+                assert_ne!(*version, WIRE_VERSION, "faulted Hello must carry a wrong version")
+            }
+            other => panic!("expected Hello, got {other:?}"),
         }
     }
 
@@ -659,26 +1090,30 @@ mod tests {
             &mut std::io::Cursor::new(input.clone()),
             &mut out,
             DEFAULT_MAX_FRAME,
+            0,
             Some("truncate-frame"),
         );
         assert_ne!(code, 0);
-        // first frame (Ready) parses, second is truncated.
+        // first two frames (Hello, Ready) parse, third is truncated.
         let mut cursor = std::io::Cursor::new(out);
+        assert!(wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME).is_ok());
         assert!(wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME).is_ok());
         assert!(matches!(
             wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME),
             Err(WireError::Truncated { .. })
         ));
 
-        // corrupt-checksum: second frame fails the checksum.
+        // corrupt-checksum: third frame fails the checksum.
         let mut out = Vec::new();
         run_worker(
             &mut std::io::Cursor::new(input),
             &mut out,
             DEFAULT_MAX_FRAME,
+            0,
             Some("corrupt-checksum"),
         );
         let mut cursor = std::io::Cursor::new(out);
+        assert!(wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME).is_ok());
         assert!(wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME).is_ok());
         assert!(matches!(
             wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME),

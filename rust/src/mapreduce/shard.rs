@@ -27,15 +27,21 @@ use crate::algorithms::sparse::sparse_worker;
 use crate::algorithms::threshold::{block_max_marginal, threshold_filter};
 use crate::core::ElementId;
 use crate::mapreduce::backend::{self, ExecBackend};
+use crate::mapreduce::machine_seed;
 use crate::mapreduce::wire::{RoundTask, TaskReply};
 use crate::oracle::{Oracle, OracleState, StatePool};
+use crate::util::rng::Rng;
 
 /// Per-machine persistent state across rounds: the per-OPT-guess filtered
 /// shard copies of Algorithm 5 (absent ⇒ the guess still sees the
-/// machine's original shard).
+/// machine's original shard), plus Sample&Prune's permanently pruned
+/// shard (absent ⇒ the machine's original shard).
 #[derive(Debug, Default, Clone)]
 pub struct GuessStore {
     shards: HashMap<u32, Vec<ElementId>>,
+    /// [`RoundTask::PruneSample`]'s machine-resident pruned shard; never
+    /// shipped — only the sampled survivors cross the wire.
+    base: Option<Vec<ElementId>>,
 }
 
 impl GuessStore {
@@ -45,6 +51,12 @@ impl GuessStore {
         self.shards.get(&id).map_or(base, Vec::as_slice)
     }
 
+    /// The machine's effective base shard: the permanently pruned copy
+    /// once a [`RoundTask::PruneSample`] ran, the original `shard` before.
+    pub fn base_shard<'a>(&'a self, shard: &'a [ElementId]) -> &'a [ElementId] {
+        self.base.as_deref().unwrap_or(shard)
+    }
+
     /// Number of persisted guess shards (tests/metrics).
     pub fn len(&self) -> usize {
         self.shards.len()
@@ -52,7 +64,7 @@ impl GuessStore {
 
     /// True iff nothing is persisted.
     pub fn is_empty(&self) -> bool {
-        self.shards.is_empty()
+        self.shards.is_empty() && self.base.is_none()
     }
 }
 
@@ -91,6 +103,21 @@ pub enum Prepared {
     },
     /// See [`RoundTask::Batch`].
     Batch(Vec<Prepared>),
+    /// See [`RoundTask::PruneSample`].
+    PruneSample {
+        /// Rehydrated base state `G`.
+        state: Box<dyn OracleState>,
+        /// Permanent pruning threshold.
+        floor: f64,
+        /// Current shipping threshold.
+        tau: f64,
+        /// Central-budget share per machine.
+        per_share: usize,
+        /// Round-derived RNG seed.
+        seed: u64,
+        /// Round index (RNG stream id component).
+        round: u32,
+    },
 }
 
 /// Rehydrate a task's broadcast states by replaying each `base` into a
@@ -117,21 +144,45 @@ pub fn prepare(oracle: &dyn Oracle, task: &RoundTask) -> Prepared {
         RoundTask::Batch(tasks) => {
             Prepared::Batch(tasks.iter().map(|t| prepare(oracle, t)).collect())
         }
+        RoundTask::PruneSample { base, floor, tau, per_share, seed, round } => {
+            Prepared::PruneSample {
+                state: replay(base),
+                floor: *floor,
+                tau: *tau,
+                per_share: *per_share,
+                seed: *seed,
+                round: *round,
+            }
+        }
     }
 }
 
-/// Pure per-machine evaluation (no mutation; parallel-safe).
+/// One machine's round result: the reply shipped to the coordinator plus
+/// any machine-resident effect that must *not* cross the wire (the
+/// pruned shard of [`RoundTask::PruneSample`] stays where it lives).
+pub struct Computed {
+    /// The reply shipped to the coordinator.
+    pub reply: TaskReply,
+    /// Replacement base shard to persist machine-side, if any.
+    pub pruned: Option<Vec<ElementId>>,
+}
+
+/// Pure per-machine evaluation (no mutation; parallel-safe). `machine`
+/// is the machine's *global* id — randomized tasks derive their RNG
+/// stream from it, so outputs are backend-independent.
 pub fn compute(
     states: &StatePool<'_>,
     prep: &Prepared,
     shard: &[ElementId],
     store: &GuessStore,
-) -> TaskReply {
+    machine: usize,
+) -> Computed {
+    let reply_only = |reply: TaskReply| Computed { reply, pruned: None };
     match prep {
         Prepared::Filter { state, tau } => {
-            TaskReply::Ids(threshold_filter(state.as_ref(), shard, *tau))
+            reply_only(TaskReply::Ids(threshold_filter(state.as_ref(), shard, *tau)))
         }
-        Prepared::MultiFilter { persist, guesses, .. } => TaskReply::Multi(
+        Prepared::MultiFilter { persist, guesses, .. } => reply_only(TaskReply::Multi(
             guesses
                 .iter()
                 .map(|(id, state, tau)| {
@@ -139,19 +190,53 @@ pub fn compute(
                     (*id, threshold_filter(state.as_ref(), input, *tau))
                 })
                 .collect(),
-        ),
+        )),
         Prepared::LocalGreedy { k } => {
             let mut st = states.acquire();
             lazy_greedy_extend(&mut *st, shard, *k);
-            TaskReply::Ids(st.selected().to_vec())
+            reply_only(TaskReply::Ids(st.selected().to_vec()))
         }
         Prepared::MaxSingleton => {
             let st = states.acquire();
-            TaskReply::Scalar(block_max_marginal(&*st, shard))
+            reply_only(TaskReply::Scalar(block_max_marginal(&*st, shard)))
         }
-        Prepared::TopSingletons { k, c } => TaskReply::Ids(sparse_worker(states, shard, *k, *c)),
+        Prepared::TopSingletons { k, c } => {
+            reply_only(TaskReply::Ids(sparse_worker(states, shard, *k, *c)))
+        }
         Prepared::Batch(parts) => {
-            TaskReply::Batch(parts.iter().map(|p| compute(states, p, shard, store)).collect())
+            let mut pruned = None;
+            let replies = parts
+                .iter()
+                .map(|p| {
+                    let c = compute(states, p, shard, store, machine);
+                    if c.pruned.is_some() {
+                        pruned = c.pruned;
+                    }
+                    c.reply
+                })
+                .collect();
+            Computed { reply: TaskReply::Batch(replies), pruned }
+        }
+        Prepared::PruneSample { state, floor, tau, per_share, seed, round } => {
+            // permanently prune at the floor (safe for every future τ —
+            // marginals only shrink), ship the elements above τ, sampled
+            // down to the budget share from the per-machine RNG stream.
+            let input = store.base_shard(shard);
+            let kept = threshold_filter(state.as_ref(), input, *floor);
+            let eligible = threshold_filter(state.as_ref(), &kept, *tau);
+            let fit = eligible.len() <= *per_share;
+            let shipped = if fit {
+                eligible
+            } else {
+                let mut rng = Rng::seed_from_u64(machine_seed(*seed, *round as usize, machine));
+                let mut s = eligible;
+                rng.shuffle(&mut s);
+                s.truncate(*per_share);
+                s.sort_unstable();
+                s
+            };
+            let resident = kept.len() as u64;
+            Computed { reply: TaskReply::Pruned { shipped, fit, resident }, pruned: Some(kept) }
         }
     }
 }
@@ -179,25 +264,35 @@ pub fn apply(prep: &Prepared, reply: &TaskReply, store: &mut GuessStore) {
 }
 
 /// Execute one task over every machine: prepare once, compute fanned out
-/// on `exec`, apply serially. `shards[i]`/`stores[i]` is machine `i`.
+/// on `exec`, apply serially. `shards[i]`/`stores[i]` is the machine
+/// with *global* id `machines[i]` (the identity map for the in-process
+/// backends; a worker process passes the subset of machines it hosts, so
+/// per-machine RNG streams agree across backends).
 pub fn run_task_all(
     oracle: &dyn Oracle,
     shards: &[Vec<ElementId>],
     stores: &mut [GuessStore],
+    machines: &[usize],
     task: &RoundTask,
     exec: &dyn ExecBackend,
 ) -> Vec<TaskReply> {
     debug_assert_eq!(shards.len(), stores.len());
+    debug_assert_eq!(shards.len(), machines.len());
     let prep = prepare(oracle, task);
     let states = StatePool::new(oracle);
-    let replies = {
+    let computed = {
         let stores_ro: &[GuessStore] = stores;
         backend::map_indexed(exec, shards.len(), |i| {
-            compute(&states, &prep, &shards[i], &stores_ro[i])
+            compute(&states, &prep, &shards[i], &stores_ro[i], machines[i])
         })
     };
-    for (i, r) in replies.iter().enumerate() {
-        apply(&prep, r, &mut stores[i]);
+    let mut replies = Vec::with_capacity(computed.len());
+    for (i, c) in computed.into_iter().enumerate() {
+        apply(&prep, &c.reply, &mut stores[i]);
+        if let Some(kept) = c.pruned {
+            stores[i].base = Some(kept);
+        }
+        replies.push(c.reply);
     }
     replies
 }
@@ -222,7 +317,7 @@ mod tests {
         let (o, shards, mut stores) = setup();
         let base = vec![3u32, 17];
         let task = RoundTask::Filter { base: base.clone(), tau: 1.5 };
-        let replies = run_task_all(&o, &shards, &mut stores, &task, &Serial);
+        let replies = run_task_all(&o, &shards, &mut stores, &[0, 1, 2], &task, &Serial);
         let mut st = o.state();
         for &e in &base {
             st.insert(e);
@@ -240,7 +335,7 @@ mod tests {
             guesses: vec![GuessFilter { id: 9, base: vec![], tau: 1.0 }],
             drop: vec![],
         };
-        let first = run_task_all(&o, &shards, &mut stores, &task, &Serial);
+        let first = run_task_all(&o, &shards, &mut stores, &[0, 1, 2], &task, &Serial);
         assert!(stores.iter().all(|s| s.len() == 1), "guess shard persisted");
         // second round at a higher tau filters the *persisted* shard.
         let task2 = RoundTask::MultiFilter {
@@ -248,7 +343,7 @@ mod tests {
             guesses: vec![GuessFilter { id: 9, base: vec![0, 1], tau: 2.0 }],
             drop: vec![],
         };
-        let second = run_task_all(&o, &shards, &mut stores, &task2, &Serial);
+        let second = run_task_all(&o, &shards, &mut stores, &[0, 1, 2], &task2, &Serial);
         for (f, s) in first.iter().zip(&second) {
             let f: Vec<_> = f.clone().into_multi();
             let s: Vec<_> = s.clone().into_multi();
@@ -259,7 +354,7 @@ mod tests {
         }
         // drop evicts the persisted shard.
         let task3 = RoundTask::MultiFilter { persist: true, guesses: vec![], drop: vec![9] };
-        run_task_all(&o, &shards, &mut stores, &task3, &Serial);
+        run_task_all(&o, &shards, &mut stores, &[0, 1, 2], &task3, &Serial);
         assert!(stores.iter().all(GuessStore::is_empty));
     }
 
@@ -271,7 +366,7 @@ mod tests {
             RoundTask::LocalGreedy { k: 4 },
             RoundTask::TopSingletons { k: 3, c: 2 },
         ]);
-        let replies = run_task_all(&o, &shards, &mut stores, &task, &Serial);
+        let replies = run_task_all(&o, &shards, &mut stores, &[0, 1, 2], &task, &Serial);
         for r in replies {
             let parts = r.into_batch();
             assert_eq!(parts.len(), 3);
@@ -288,15 +383,92 @@ mod tests {
         let task = RoundTask::Batch(vec![
             RoundTask::Filter { base: vec![5], tau: 1.0 },
             RoundTask::LocalGreedy { k: 5 },
+            // seeded sampling: identical across backends because the RNG
+            // stream derives from the global machine id in the task.
+            RoundTask::PruneSample {
+                base: vec![],
+                floor: 0.2,
+                tau: 0.8,
+                per_share: 4,
+                seed: 31,
+                round: 1,
+            },
         ]);
-        let a = run_task_all(&o, &shards, &mut stores_a, &task, &Serial);
+        let a = run_task_all(&o, &shards, &mut stores_a, &[0, 1, 2], &task, &Serial);
         let b = run_task_all(
             &o,
             &shards,
             &mut stores_b,
+            &[0, 1, 2],
             &task,
             &crate::mapreduce::backend::Rayon { chunk: 1 },
         );
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prune_sample_persists_machine_side_and_ships_survivors() {
+        let (o, shards, mut stores) = setup();
+        let task = RoundTask::PruneSample {
+            base: vec![],
+            floor: 0.5,
+            tau: 1.0,
+            per_share: 5,
+            seed: 9,
+            round: 1,
+        };
+        let replies = run_task_all(&o, &shards, &mut stores, &[0, 1, 2], &task, &Serial);
+        for ((shard, reply), store) in shards.iter().zip(&replies).zip(&stores) {
+            let (shipped, _fit, resident) = reply.clone().into_pruned();
+            assert!(shipped.len() <= 5, "budget share respected");
+            let base = store.base_shard(shard);
+            assert_eq!(resident as usize, base.len(), "reply reports the pruned size");
+            assert!(base.len() <= shard.len(), "pruning only shrinks");
+            for e in &shipped {
+                assert!(base.contains(e), "shipped element {e} must survive the prune");
+            }
+            assert!(!store.is_empty(), "pruned shard persisted machine-side");
+        }
+
+        // round 2 prunes the *persisted* shard against a grown base:
+        // resident sizes can only shrink further.
+        let before: Vec<usize> =
+            stores.iter().zip(&shards).map(|(s, sh)| s.base_shard(sh).len()).collect();
+        let task2 = RoundTask::PruneSample {
+            base: vec![1, 3],
+            floor: 1.0,
+            tau: 2.0,
+            per_share: 5,
+            seed: 9,
+            round: 2,
+        };
+        run_task_all(&o, &shards, &mut stores, &[0, 1, 2], &task2, &Serial);
+        for ((store, shard), prev) in stores.iter().zip(&shards).zip(before) {
+            assert!(store.base_shard(shard).len() <= prev, "resident shard monotone");
+        }
+    }
+
+    #[test]
+    fn prune_sample_rng_stream_depends_on_global_machine_id() {
+        // the same shard computed as machine 0 vs machine 5 must sample
+        // differently (distinct RNG streams), while the same id repeats
+        // exactly — the property that makes worker placement irrelevant.
+        let o = CoverageGen::new(120, 80, 4).build(7);
+        let shard: Vec<ElementId> = (0..120).collect();
+        let store = GuessStore::default();
+        let prep = prepare(&o, &RoundTask::PruneSample {
+            base: vec![],
+            floor: 0.0,
+            tau: 0.1,
+            per_share: 10,
+            seed: 42,
+            round: 3,
+        });
+        let states = StatePool::new(&o);
+        let a0 = compute(&states, &prep, &shard, &store, 0).reply;
+        let a0_again = compute(&states, &prep, &shard, &store, 0).reply;
+        let a5 = compute(&states, &prep, &shard, &store, 5).reply;
+        assert_eq!(a0, a0_again, "same machine id ⇒ same sample");
+        assert_ne!(a0, a5, "different machine id ⇒ different sample");
     }
 }

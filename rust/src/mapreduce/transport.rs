@@ -1,0 +1,405 @@
+//! Byte-stream transports for the shared-nothing process backend.
+//!
+//! The [`crate::mapreduce::wire`] frame codec is transport-agnostic: it
+//! only needs a reliable, ordered byte stream in each direction. This
+//! module provides three such streams and the machinery to establish
+//! them:
+//!
+//! * [`Transport::Pipe`] — the worker's stdin/stdout pipes, set up by the
+//!   coordinator at spawn time. Zero configuration, single host, the
+//!   default.
+//! * [`Transport::Uds`] — a Unix-domain socket. The coordinator binds a
+//!   listener on a private path under the system temp dir; workers
+//!   connect back to it. Same-host only, but the workers are free of the
+//!   coordinator's stdio and can live in different cgroups/namespaces.
+//! * [`Transport::Tcp`] — a TCP listener, loopback (`127.0.0.1:0`) by
+//!   default. With an explicit opt-in bind address
+//!   (`process:N@tcp:HOST:PORT`) the pool spawns **no** local workers and
+//!   instead waits for `N` external `mrsub worker --connect HOST:PORT
+//!   --id I` processes to join — this is how workers span hosts.
+//!
+//! Connection establishment is guarded end to end: the listener accepts
+//! with a hard deadline (a worker that never connects degrades into a
+//! structured [`crate::core::Error::Worker`], exactly like a
+//! connection-refused), and the first frame on every new stream must be a
+//! [`crate::mapreduce::wire::FromWorker::Hello`] carrying the worker's
+//! slot id and wire version — so a wrong-version binary or a stray
+//! connection fails the handshake before any shard data moves.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Which byte-stream transport the process backend's coordinator and
+/// workers speak [`crate::mapreduce::wire`] over. Parsed from the
+/// `process:N@<transport>` backend syntax; [`Transport::Pipe`] when the
+/// suffix is omitted.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum Transport {
+    /// stdin/stdout pipes of the spawned worker (the default).
+    #[default]
+    Pipe,
+    /// Unix-domain socket under the system temp dir; workers connect back.
+    Uds,
+    /// TCP. `bind: None` = loopback listener + locally spawned workers;
+    /// `bind: Some(addr)` = listen on `addr` and wait for external
+    /// `mrsub worker --connect` processes instead of spawning any.
+    Tcp {
+        /// Explicit listen address (`HOST:PORT`); `None` = `127.0.0.1:0`.
+        bind: Option<String>,
+    },
+}
+
+impl Transport {
+    /// Parse the `@`-suffix of a `process:N@<suffix>` backend string:
+    /// `"pipe"`, `"uds"`, `"tcp"`, or `"tcp:HOST:PORT"`.
+    pub fn parse_suffix(s: &str) -> Option<Transport> {
+        match s {
+            "pipe" => Some(Transport::Pipe),
+            "uds" => Some(Transport::Uds),
+            "tcp" => Some(Transport::Tcp { bind: None }),
+            _ => s.strip_prefix("tcp:").and_then(|addr| {
+                let addr = addr.trim();
+                // require a HOST:PORT shape so `tcp:` alone is rejected;
+                // port 0 (ephemeral) is rejected too — external workers
+                // could never discover the port the kernel picked.
+                addr.rsplit_once(':')
+                    .filter(|(h, p)| {
+                        !h.is_empty() && p.parse::<u16>().is_ok_and(|port| port != 0)
+                    })
+                    .map(|_| Transport::Tcp { bind: Some(addr.to_string()) })
+            }),
+        }
+    }
+
+    /// The `@`-suffix this transport round-trips through
+    /// [`Transport::parse_suffix`]; empty for the default pipe transport
+    /// (so `process:N` labels stay stable across versions).
+    pub fn label_suffix(&self) -> String {
+        match self {
+            Transport::Pipe => String::new(),
+            Transport::Uds => "@uds".into(),
+            Transport::Tcp { bind: None } => "@tcp".into(),
+            Transport::Tcp { bind: Some(addr) } => format!("@tcp:{addr}"),
+        }
+    }
+
+    /// True for the socket transports (worker connects back to a
+    /// coordinator listener; pipes are wired at spawn instead).
+    pub fn is_socket(&self) -> bool {
+        !matches!(self, Transport::Pipe)
+    }
+
+    /// True iff the pool should *not* spawn local workers and instead
+    /// wait for external `mrsub worker --connect` joins (explicit TCP
+    /// bind address).
+    pub fn external_workers(&self) -> bool {
+        matches!(self, Transport::Tcp { bind: Some(_) })
+    }
+}
+
+impl fmt::Display for Transport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Transport::Pipe => write!(f, "pipe"),
+            Transport::Uds => write!(f, "uds"),
+            Transport::Tcp { bind: None } => write!(f, "tcp"),
+            Transport::Tcp { bind: Some(addr) } => write!(f, "tcp:{addr}"),
+        }
+    }
+}
+
+/// One established worker byte stream: a reader and a writer half (for
+/// the dedicated per-worker reader/writer threads) plus a control handle
+/// that can force-close the stream out from under them.
+pub struct WorkerLink {
+    /// Read half (frames worker → coordinator).
+    pub reader: Box<dyn Read + Send>,
+    /// Write half (frames coordinator → worker).
+    pub writer: Box<dyn Write + Send>,
+    /// Force-close handle (see [`LinkControl`]).
+    pub control: LinkControl,
+}
+
+/// Transport-specific handle for tearing a live stream down from the
+/// coordinator side. Pipes close when their ends drop; sockets need an
+/// explicit `shutdown` so a reader thread blocked in `read` (and the
+/// worker's own read loop) observe EOF immediately. Streams are
+/// `Arc`-shared because socket handles have no `Clone` (only
+/// `try_clone`), and `shutdown` needs only `&self`.
+#[derive(Clone)]
+pub enum LinkControl {
+    /// Pipe streams close with their owners; nothing to do.
+    Pipe,
+    /// Shut down both halves of the TCP stream.
+    Tcp(Arc<TcpStream>),
+    /// Shut down both halves of the Unix-domain stream.
+    Uds(Arc<UnixStream>),
+}
+
+impl LinkControl {
+    /// Force-close the stream (both directions). Errors are ignored — the
+    /// stream may already be gone, which is the desired end state.
+    pub fn force_close(&self) {
+        match self {
+            LinkControl::Pipe => {}
+            LinkControl::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            LinkControl::Uds(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl fmt::Debug for LinkControl {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LinkControl::Pipe => write!(f, "LinkControl::Pipe"),
+            LinkControl::Tcp(_) => write!(f, "LinkControl::Tcp"),
+            LinkControl::Uds(_) => write!(f, "LinkControl::Uds"),
+        }
+    }
+}
+
+/// A bound coordinator listener for the socket transports, plus the
+/// endpoint string workers connect back to (the `MRSUB_CONNECT` /
+/// `--connect` value).
+pub enum Listener {
+    /// Unix-domain listener; the path is unlinked on drop.
+    Uds {
+        /// The bound listener.
+        listener: UnixListener,
+        /// Socket path (cleaned up on drop).
+        path: PathBuf,
+    },
+    /// TCP listener.
+    Tcp {
+        /// The bound listener.
+        listener: TcpListener,
+        /// The resolved local address (real port even when bound to `:0`).
+        addr: SocketAddr,
+    },
+}
+
+impl Listener {
+    /// Bind a listener for `transport`; `None` for [`Transport::Pipe`].
+    /// The `tag` diversifies the UDS socket path so concurrent pools in
+    /// one process don't collide.
+    pub fn bind(transport: &Transport, tag: u64) -> std::io::Result<Option<Listener>> {
+        match transport {
+            Transport::Pipe => Ok(None),
+            Transport::Uds => {
+                let path = std::env::temp_dir()
+                    .join(format!("mrsub-{}-{tag:x}.sock", std::process::id()));
+                // a stale path from a crashed earlier run would fail the bind.
+                let _ = std::fs::remove_file(&path);
+                let listener = UnixListener::bind(&path)?;
+                listener.set_nonblocking(true)?;
+                Ok(Some(Listener::Uds { listener, path }))
+            }
+            Transport::Tcp { bind } => {
+                let addr = bind.as_deref().unwrap_or("127.0.0.1:0");
+                let listener = TcpListener::bind(addr)?;
+                let addr = listener.local_addr()?;
+                listener.set_nonblocking(true)?;
+                Ok(Some(Listener::Tcp { listener, addr }))
+            }
+        }
+    }
+
+    /// The endpoint string a worker dials: `uds:<path>` or
+    /// `tcp:<host>:<port>` (the scheme [`connect`] parses).
+    pub fn endpoint(&self) -> String {
+        match self {
+            Listener::Uds { path, .. } => format!("uds:{}", path.display()),
+            Listener::Tcp { addr, .. } => format!("tcp:{addr}"),
+        }
+    }
+
+    /// Accept one worker connection, waiting until `deadline`. Returns
+    /// `Ok(None)` on deadline expiry (the caller turns that into a
+    /// structured worker error naming the missing worker).
+    pub fn accept_until(&self, deadline: Instant) -> std::io::Result<Option<WorkerLink>> {
+        loop {
+            let res = match self {
+                Listener::Uds { listener, .. } => listener
+                    .accept()
+                    .map(|(s, _)| link_from_uds(s)),
+                Listener::Tcp { listener, .. } => listener
+                    .accept()
+                    .map(|(s, _)| link_from_tcp(s)),
+            };
+            match res {
+                Ok(link) => return link.map(Some),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Uds { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+fn link_from_tcp(s: TcpStream) -> std::io::Result<WorkerLink> {
+    s.set_nonblocking(false)?;
+    s.set_nodelay(true)?;
+    let reader = s.try_clone()?;
+    let writer = s.try_clone()?;
+    Ok(WorkerLink {
+        reader: Box::new(reader),
+        writer: Box::new(writer),
+        control: LinkControl::Tcp(Arc::new(s)),
+    })
+}
+
+fn link_from_uds(s: UnixStream) -> std::io::Result<WorkerLink> {
+    s.set_nonblocking(false)?;
+    let reader = s.try_clone()?;
+    let writer = s.try_clone()?;
+    Ok(WorkerLink {
+        reader: Box::new(reader),
+        writer: Box::new(writer),
+        control: LinkControl::Uds(Arc::new(s)),
+    })
+}
+
+/// Worker side: dial a coordinator endpoint (`uds:<path>` or
+/// `tcp:<host>:<port>`, the scheme emitted by [`Listener::endpoint`]).
+pub fn connect(endpoint: &str) -> std::io::Result<WorkerLink> {
+    if let Some(path) = endpoint.strip_prefix("uds:") {
+        return link_from_uds(UnixStream::connect(path)?);
+    }
+    if let Some(addr) = endpoint.strip_prefix("tcp:") {
+        return link_from_tcp(TcpStream::connect(addr)?);
+    }
+    Err(std::io::Error::new(
+        std::io::ErrorKind::InvalidInput,
+        format!("bad connect endpoint {endpoint:?} (want uds:<path> or tcp:<host>:<port>)"),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_suffixes_roundtrip() {
+        for (s, t) in [
+            ("pipe", Transport::Pipe),
+            ("uds", Transport::Uds),
+            ("tcp", Transport::Tcp { bind: None }),
+            ("tcp:127.0.0.1:9000", Transport::Tcp { bind: Some("127.0.0.1:9000".into()) }),
+        ] {
+            let parsed = Transport::parse_suffix(s).unwrap();
+            assert_eq!(parsed, t, "{s}");
+            let suffix = parsed.label_suffix();
+            if !suffix.is_empty() {
+                assert_eq!(Transport::parse_suffix(&suffix[1..]), Some(t));
+            }
+        }
+        assert_eq!(Transport::parse_suffix("shm"), None);
+        assert_eq!(Transport::parse_suffix("tcp:"), None);
+        assert_eq!(Transport::parse_suffix("tcp:nohost"), None);
+        assert_eq!(Transport::parse_suffix("tcp::123"), None);
+        assert_eq!(Transport::parse_suffix("tcp:host:notaport"), None);
+        // ephemeral port 0 would be undiscoverable by external workers.
+        assert_eq!(Transport::parse_suffix("tcp:host:0"), None);
+    }
+
+    #[test]
+    fn external_worker_semantics() {
+        assert!(!Transport::Pipe.external_workers());
+        assert!(!Transport::Uds.external_workers());
+        assert!(!Transport::Tcp { bind: None }.external_workers());
+        assert!(Transport::Tcp { bind: Some("0.0.0.0:7070".into()) }.external_workers());
+        assert!(Transport::Uds.is_socket());
+        assert!(!Transport::Pipe.is_socket());
+    }
+
+    #[test]
+    fn uds_listener_accepts_and_moves_bytes() {
+        let l = Listener::bind(&Transport::Uds, 0xA11CE).unwrap().unwrap();
+        let endpoint = l.endpoint();
+        let t = std::thread::spawn(move || {
+            let mut link = connect(&endpoint).unwrap();
+            link.writer.write_all(b"ping").unwrap();
+            link.writer.flush().unwrap();
+            let mut buf = [0u8; 4];
+            link.reader.read_exact(&mut buf).unwrap();
+            buf
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut link = l.accept_until(deadline).unwrap().expect("worker connected");
+        let mut buf = [0u8; 4];
+        link.reader.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+        link.writer.write_all(b"pong").unwrap();
+        link.writer.flush().unwrap();
+        assert_eq!(&t.join().unwrap(), b"pong");
+    }
+
+    #[test]
+    fn tcp_listener_loopback_roundtrip_and_force_close() {
+        let l = Listener::bind(&Transport::Tcp { bind: None }, 1).unwrap().unwrap();
+        let endpoint = l.endpoint();
+        assert!(endpoint.starts_with("tcp:127.0.0.1:"));
+        let t = std::thread::spawn(move || {
+            let mut link = connect(&endpoint).unwrap();
+            link.writer.write_all(b"x").unwrap();
+            link.writer.flush().unwrap();
+            // after force_close on the coordinator side, reads see EOF.
+            let mut buf = [0u8; 1];
+            link.reader.read(&mut buf).unwrap_or(0)
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut link = l.accept_until(deadline).unwrap().expect("connected");
+        let mut buf = [0u8; 1];
+        link.reader.read_exact(&mut buf).unwrap();
+        link.control.force_close();
+        assert_eq!(t.join().unwrap(), 0, "peer observes EOF after force_close");
+    }
+
+    #[test]
+    fn accept_deadline_expires_to_none() {
+        let l = Listener::bind(&Transport::Tcp { bind: None }, 2).unwrap().unwrap();
+        let start = Instant::now();
+        let got = l.accept_until(Instant::now() + Duration::from_millis(60)).unwrap();
+        assert!(got.is_none(), "no connection must time out");
+        assert!(start.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn connect_rejects_bad_scheme() {
+        assert!(connect("smoke:signals").is_err());
+    }
+
+    #[test]
+    fn uds_socket_path_cleaned_up_on_drop() {
+        let l = Listener::bind(&Transport::Uds, 0xDEAD).unwrap().unwrap();
+        let path = match &l {
+            Listener::Uds { path, .. } => path.clone(),
+            _ => unreachable!(),
+        };
+        assert!(path.exists());
+        drop(l);
+        assert!(!path.exists(), "socket path must be unlinked on drop");
+    }
+}

@@ -1,7 +1,10 @@
 //! Versioned wire format for the shared-nothing process backend.
 //!
 //! The coordinator and its worker processes (`mrsub worker`) speak a
-//! length-prefixed, checksummed binary framing over stdin/stdout pipes:
+//! length-prefixed, checksummed binary framing over a byte stream — a
+//! stdin/stdout pipe, a Unix-domain socket, or a TCP connection (the
+//! transport is chosen by [`crate::mapreduce::transport::Transport`]; the
+//! framing below is byte-identical on all of them):
 //!
 //! ```text
 //! [magic "MRSB"][version u16 LE][len u32 LE][payload…][fnv1a-32 LE]
@@ -36,7 +39,12 @@ use crate::mapreduce::CommSize;
 use crate::oracle::spec::OracleSpec;
 
 /// Protocol version; bump on any layout or message change (see module docs).
-pub const WIRE_VERSION: u16 = 1;
+///
+/// v2: connect-time [`FromWorker::Hello`] handshake (required by the
+/// socket transports, spoken on pipes too), plus the
+/// [`RoundTask::PruneSample`] / [`TaskReply::Pruned`] pair that moves
+/// Sample&Prune's pruning round worker-side.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Frame magic: "MRSB" (MapReduce-Submodular Backend).
 pub const FRAME_MAGIC: [u8; 4] = *b"MRSB";
@@ -445,6 +453,28 @@ pub enum RoundTask {
     /// Several programs in one synchronous round (Theorem 8 runs the dense
     /// and sparse workers in the same physical round).
     Batch(Vec<RoundTask>),
+    /// One Sample&Prune round (Kumar et al.): permanently prune the
+    /// machine's current shard to the elements with marginal ≥ `floor`
+    /// w.r.t. the rehydrated `base`, then ship the elements ≥ `tau` —
+    /// whole if they fit `per_share`, else a uniform sample of that size
+    /// drawn from the per-machine RNG stream
+    /// `machine_seed(seed, round, machine)`. The pruned shard persists
+    /// machine-side ([`crate::mapreduce::shard::GuessStore`]); only the
+    /// shipped elements cross the wire.
+    PruneSample {
+        /// Broadcast partial solution `G`, insertion order.
+        base: Vec<ElementId>,
+        /// Permanent pruning threshold (safe for every future τ).
+        floor: f64,
+        /// Current shipping threshold.
+        tau: f64,
+        /// Central-budget share per machine (sample size when oversized).
+        per_share: usize,
+        /// Round-derived RNG seed (coordinator-chosen).
+        seed: u64,
+        /// Round index, part of the per-machine RNG stream id.
+        round: u32,
+    },
 }
 
 impl RoundTask {
@@ -484,6 +514,15 @@ impl RoundTask {
                     t.encode(enc);
                 }
             }
+            RoundTask::PruneSample { base, floor, tau, per_share, seed, round } => {
+                enc.u8(7);
+                enc.ids(base);
+                enc.f64(*floor);
+                enc.f64(*tau);
+                enc.usize(*per_share);
+                enc.u64(*seed);
+                enc.u32(*round);
+            }
         }
     }
 
@@ -511,6 +550,14 @@ impl RoundTask {
                 }
                 RoundTask::Batch(tasks)
             }
+            7 => RoundTask::PruneSample {
+                base: dec.ids()?,
+                floor: dec.f64()?,
+                tau: dec.f64()?,
+                per_share: dec.usize()?,
+                seed: dec.u64()?,
+                round: dec.u32()?,
+            },
             t => return Err(WireError::Malformed(format!("unknown RoundTask tag {t}"))),
         })
     }
@@ -524,6 +571,7 @@ impl RoundTask {
             RoundTask::MaxSingleton => "max-singleton",
             RoundTask::TopSingletons { .. } => "top-singletons",
             RoundTask::Batch(_) => "batch",
+            RoundTask::PruneSample { .. } => "prune-sample",
         }
     }
 }
@@ -543,6 +591,7 @@ pub fn reply_matches(task: &RoundTask, reply: &TaskReply) -> bool {
             tasks.len() == replies.len()
                 && tasks.iter().zip(replies).all(|(t, r)| reply_matches(t, r))
         }
+        (RoundTask::PruneSample { .. }, TaskReply::Pruned { .. }) => true,
         _ => false,
     }
 }
@@ -558,6 +607,18 @@ pub enum TaskReply {
     Multi(Vec<(u32, Vec<ElementId>)>),
     /// One reply per sub-task of a `Batch`.
     Batch(Vec<TaskReply>),
+    /// A [`RoundTask::PruneSample`] result: the shipped elements plus
+    /// whether every eligible element fit the per-machine budget share
+    /// (the pruned shard itself stays machine-resident).
+    Pruned {
+        /// Elements shipped to the central machine, ascending ids.
+        shipped: Vec<ElementId>,
+        /// True iff nothing was sampled away (`eligible ≤ per_share`).
+        fit: bool,
+        /// Size of the machine-resident pruned shard after this round
+        /// (memory accounting only — the shard itself never ships).
+        resident: u64,
+    },
 }
 
 impl TaskReply {
@@ -587,6 +648,12 @@ impl TaskReply {
                     r.encode(enc);
                 }
             }
+            TaskReply::Pruned { shipped, fit, resident } => {
+                enc.u8(5);
+                enc.ids(shipped);
+                enc.bool(*fit);
+                enc.u64(*resident);
+            }
         }
     }
 
@@ -611,6 +678,11 @@ impl TaskReply {
                 }
                 TaskReply::Batch(replies)
             }
+            5 => TaskReply::Pruned {
+                shipped: dec.ids()?,
+                fit: dec.bool()?,
+                resident: dec.u64()?,
+            },
             t => return Err(WireError::Malformed(format!("unknown TaskReply tag {t}"))),
         })
     }
@@ -660,6 +732,17 @@ impl TaskReply {
             }
         }
     }
+
+    /// Extract `Pruned`, defaulting to empty/fit on shape mismatch.
+    pub fn into_pruned(self) -> (Vec<ElementId>, bool, u64) {
+        match self {
+            TaskReply::Pruned { shipped, fit, resident } => (shipped, fit, resident),
+            other => {
+                debug_assert!(false, "expected Pruned reply, got {other:?}");
+                (Vec::new(), true, 0)
+            }
+        }
+    }
 }
 
 impl CommSize for TaskReply {
@@ -669,6 +752,7 @@ impl CommSize for TaskReply {
             TaskReply::Scalar(_) => 1,
             TaskReply::Multi(parts) => parts.iter().map(|(_, ids)| ids.len()).sum(),
             TaskReply::Batch(replies) => replies.iter().map(|r| r.comm_size()).sum(),
+            TaskReply::Pruned { shipped, .. } => shipped.len(),
         }
     }
 }
@@ -756,7 +840,19 @@ impl ToWorker {
 /// Worker → coordinator messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum FromWorker {
-    /// Init handshake: the worker is up, speaking `version`.
+    /// Connect-time handshake, the very first frame on every transport:
+    /// identifies which worker slot this byte stream belongs to (socket
+    /// transports accept connections in arbitrary order) and the wire
+    /// version the worker speaks. Version mismatches fail here, before
+    /// any shard data moves.
+    Hello {
+        /// The worker binary's [`WIRE_VERSION`].
+        version: u16,
+        /// Worker slot id (`--id` / `MRSUB_WORKER_ID`; spawn order).
+        worker: u32,
+    },
+    /// Init handshake: the worker rebuilt its oracle and is ready for
+    /// rounds, speaking `version`.
     Ready {
         /// The worker binary's [`WIRE_VERSION`].
         version: u16,
@@ -800,6 +896,11 @@ impl FromWorker {
                 enc.u8(3);
                 enc.str(message);
             }
+            FromWorker::Hello { version, worker } => {
+                enc.u8(4);
+                enc.u16(*version);
+                enc.u32(*worker);
+            }
         }
         enc.buf
     }
@@ -821,6 +922,7 @@ impl FromWorker {
                 }
             }
             3 => FromWorker::Fail { message: dec.str()? },
+            4 => FromWorker::Hello { version: dec.u16()?, worker: dec.u32()? },
             t => return Err(WireError::Malformed(format!("unknown FromWorker tag {t}"))),
         };
         dec.finish()?;
@@ -839,7 +941,7 @@ mod tests {
     }
 
     fn arb_task(g: &mut Gen, depth: usize) -> RoundTask {
-        let hi = if depth == 0 { 7 } else { 6 };
+        let hi = if depth == 0 { 8 } else { 7 };
         match g.usize_in(1, hi) {
             1 => RoundTask::Filter { base: arb_ids(g, 20), tau: g.f64_in(-3.0, 3.0) },
             2 => {
@@ -859,6 +961,14 @@ mod tests {
             3 => RoundTask::LocalGreedy { k: g.usize_in(0, 100) },
             4 => RoundTask::MaxSingleton,
             5 => RoundTask::TopSingletons { k: g.usize_in(1, 50), c: g.usize_in(1, 8) },
+            6 => RoundTask::PruneSample {
+                base: arb_ids(g, 15),
+                floor: g.f64_in(0.0, 2.0),
+                tau: g.f64_in(0.0, 5.0),
+                per_share: g.usize_in(1, 200),
+                seed: g.u64_in(1 << 40),
+                round: g.usize_in(0, 64) as u32,
+            },
             _ => {
                 let n = g.usize_in(0, 4);
                 RoundTask::Batch((0..n).map(|_| arb_task(g, depth + 1)).collect())
@@ -867,7 +977,7 @@ mod tests {
     }
 
     fn arb_reply(g: &mut Gen, depth: usize) -> TaskReply {
-        let hi = if depth == 0 { 5 } else { 4 };
+        let hi = if depth == 0 { 6 } else { 5 };
         match g.usize_in(1, hi) {
             1 => TaskReply::Ids(arb_ids(g, 30)),
             2 => TaskReply::Scalar(g.f64_in(-1e9, 1e9)),
@@ -875,6 +985,11 @@ mod tests {
                 let n = g.usize_in(0, 5);
                 TaskReply::Multi((0..n).map(|i| (i as u32, arb_ids(g, 10))).collect())
             }
+            4 => TaskReply::Pruned {
+                shipped: arb_ids(g, 20),
+                fit: g.bool_with(0.5),
+                resident: g.u64_in(1 << 20),
+            },
             _ => {
                 let n = g.usize_in(0, 4);
                 TaskReply::Batch((0..n).map(|_| arb_reply(g, depth + 1)).collect())

@@ -6,9 +6,13 @@ use std::time::{Duration, Instant};
 /// Timing summary over iterations.
 #[derive(Debug, Clone, Copy)]
 pub struct Timing {
+    /// Samples measured.
     pub iters: usize,
+    /// Fastest sample.
     pub min: Duration,
+    /// Median sample.
     pub median: Duration,
+    /// Mean over all samples.
     pub mean: Duration,
 }
 

@@ -9,9 +9,13 @@ use std::collections::BTreeMap;
 /// A parsed scalar value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
 }
 

@@ -11,9 +11,15 @@ use crate::util::rng::Rng;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Kernel {
     /// `exp(−γ·dist²)`.
-    Rbf { gamma: f64 },
+    Rbf {
+        /// Kernel bandwidth γ.
+        gamma: f64,
+    },
     /// `1 / (1 + γ·dist)`.
-    Inverse { gamma: f64 },
+    Inverse {
+        /// Kernel decay γ.
+        gamma: f64,
+    },
 }
 
 /// `n` candidate points and `d` demand points uniform in the unit square.

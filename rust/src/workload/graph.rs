@@ -12,9 +12,15 @@ use crate::util::rng::Rng;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum GraphKind {
     /// G(n, p): each edge present independently with probability p.
-    ErdosRenyi { p: f64 },
+    ErdosRenyi {
+        /// Edge probability.
+        p: f64,
+    },
     /// Preferential attachment: each new vertex attaches `m` edges.
-    BarabasiAlbert { attach: usize },
+    BarabasiAlbert {
+        /// Edges attached per new vertex.
+        attach: usize,
+    },
 }
 
 /// Graph workload generator over `n` vertices.

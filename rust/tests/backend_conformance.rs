@@ -1,18 +1,23 @@
 //! Cross-backend conformance suite for the shared-nothing process
-//! backend (and the in-process backends it must match).
+//! backend (and the in-process backends it must match), across every
+//! transport.
 //!
 //! **Conformance half:** every algorithm × oracle family × backend triple
 //! must produce bit-identical selections and objective values against the
-//! `Serial` reference. For the process backend this exercises the whole
-//! shared-nothing path end to end: shards and oracle specs serialized
-//! over pipes, worker-side oracle reconstruction, typed round dispatch,
-//! and reply collection.
+//! `Serial` reference — with the process backend exercised over all three
+//! transports (`process:N@pipe`, `process:N@uds`, `process:N@tcp`). This
+//! covers the whole shared-nothing path end to end: shards and oracle
+//! specs serialized over the byte stream, the connect-time `Hello`
+//! handshake, worker-side oracle reconstruction, typed round dispatch
+//! (including Sample&Prune's seeded `PruneSample` round), and reply
+//! collection.
 //!
 //! **Fault-injection half:** a worker killed mid-round, a truncated reply
 //! frame, a corrupted checksum, an oversized shard/frame, a hung worker,
-//! and a wire-version mismatch must each surface as a *structured*
-//! [`Error::Worker`]/[`Error::Config`] — never a panic — and must not
-//! poison subsequent clean runs.
+//! a wire-version mismatch, and a worker that never connects must each
+//! surface as a *structured* [`Error::Worker`]/[`Error::Config`] — never
+//! a panic — and must not poison subsequent clean runs. The matrix runs
+//! per transport.
 //!
 //! Process-count stability: run with `--test-threads=1` (the
 //! `./verify.sh conformance` mode) for deterministic worker-process
@@ -34,6 +39,7 @@ use mrsub::algorithms::MrAlgorithm;
 use mrsub::core::Error;
 use mrsub::mapreduce::backend::BackendKind;
 use mrsub::mapreduce::process::{PoolOptions, ProcessPool};
+use mrsub::mapreduce::transport::Transport;
 use mrsub::mapreduce::wire::RoundTask;
 use mrsub::mapreduce::ClusterConfig;
 use mrsub::oracle::spec::OracleSpec;
@@ -49,6 +55,16 @@ use mrsub::workload::{Instance, WorkloadGen};
 /// runs (the test harness binary itself has no `worker` subcommand).
 fn worker_exe() -> PathBuf {
     PathBuf::from(env!("CARGO_BIN_EXE_mrsub"))
+}
+
+fn process(workers: usize, transport: Transport) -> BackendKind {
+    BackendKind::Process { workers, transport }
+}
+
+/// Every transport the pool itself can establish (the external-join TCP
+/// mode is exercised separately — it needs hand-launched workers).
+fn transports() -> Vec<Transport> {
+    vec![Transport::Pipe, Transport::Uds, Transport::Tcp { bind: None }]
 }
 
 fn cfg(seed: u64, backend: BackendKind) -> ClusterConfig {
@@ -100,24 +116,30 @@ fn algorithms(inst: &Instance, k: usize) -> Vec<Box<dyn MrAlgorithm>> {
 
 /// The tentpole contract: every algorithm × family × backend produces
 /// **bit-identical selections** (element for element, in order) and
-/// objective values against `Serial`.
+/// objective values against `Serial` — the process backend over all
+/// three transports.
 #[test]
 fn every_algorithm_family_backend_triple_matches_serial() {
     let k = 6;
     let seed = 0xC0DE;
-    let backends =
-        [BackendKind::Serial, BackendKind::Rayon { chunk: 2 }, BackendKind::Process { workers: 2 }];
+    let backends = [
+        BackendKind::Serial,
+        BackendKind::Rayon { chunk: 2 },
+        process(2, Transport::Pipe),
+        process(2, Transport::Uds),
+        process(2, Transport::Tcp { bind: None }),
+    ];
     for inst in families(seed) {
         for alg in algorithms(&inst, k) {
-            let run_on = |backend: BackendKind| {
-                let mut c = cfg(seed, backend);
+            let run_on = |backend: &BackendKind| {
+                let mut c = cfg(seed, backend.clone());
                 c.oracle_spec = inst.spec.clone();
                 alg.run(inst.oracle.as_ref(), k, &c).unwrap_or_else(|e| {
                     panic!("{} on {} [{}]: {e}", alg.name(), inst.name, backend.label())
                 })
             };
-            let reference = run_on(backends[0]);
-            for &backend in &backends[1..] {
+            let reference = run_on(&backends[0]);
+            for backend in &backends[1..] {
                 let got = run_on(backend);
                 assert_eq!(
                     got.metrics.rounds.len(),
@@ -151,9 +173,10 @@ fn every_algorithm_family_backend_triple_matches_serial() {
 }
 
 /// Selections (not just values) are element-for-element identical, and
-/// process-backend runs actually move bytes over the wire.
+/// process-backend runs actually move bytes over the wire — on every
+/// transport, metered identically.
 #[test]
-fn process_backend_selections_identical_and_ipc_metered() {
+fn process_backend_selections_identical_and_ipc_metered_per_transport() {
     let k = 6;
     let seed = 7;
     let inst = PlantedCoverageGen::dense(6, 300, 600).generate(seed);
@@ -161,31 +184,42 @@ fn process_backend_selections_identical_and_ipc_metered() {
     // wire path is guaranteed to carry the greedy work.
     let alg = RandGreeDi;
     let serial = alg.run(inst.oracle.as_ref(), k, &cfg(seed, BackendKind::Serial)).unwrap();
-
-    let mut pcfg = cfg(seed, BackendKind::Process { workers: 3 });
-    pcfg.oracle_spec = inst.spec.clone();
-    let process = alg.run(inst.oracle.as_ref(), k, &pcfg).unwrap();
-
-    assert_eq!(
-        process.solution.elements, serial.solution.elements,
-        "process backend must reproduce the serial selection sequence"
-    );
-    assert_eq!(process.solution.value.to_bits(), serial.solution.value.to_bits());
-    let (out_bytes, in_bytes) = process.metrics.total_ipc_bytes();
-    assert!(out_bytes > 0, "the round task must ship over the wire");
-    assert!(in_bytes > 0, "local-greedy selections must come back over the wire");
     assert_eq!(serial.metrics.total_ipc_bytes(), (0, 0), "serial runs move no IPC bytes");
-    // the round's oracle traffic happened worker-side but is still
-    // visible in the coordinator's per-round metrics.
-    let greedy_round = process
-        .metrics
-        .rounds
-        .iter()
-        .find(|r| r.name == "r1:local-greedy")
-        .expect("local-greedy round recorded");
-    assert!(greedy_round.oracle_calls > 0, "worker-side calls merged into metrics");
-    assert!(greedy_round.ipc_bytes_out > 0);
-    assert!(greedy_round.ipc_bytes_in > 0);
+
+    let mut ipc_per_transport = Vec::new();
+    for transport in transports() {
+        let label = format!("process:3{}", transport.label_suffix());
+        let mut pcfg = cfg(seed, process(3, transport));
+        pcfg.oracle_spec = inst.spec.clone();
+        let run = alg.run(inst.oracle.as_ref(), k, &pcfg).unwrap();
+
+        assert_eq!(
+            run.solution.elements, serial.solution.elements,
+            "[{label}] must reproduce the serial selection sequence"
+        );
+        assert_eq!(run.solution.value.to_bits(), serial.solution.value.to_bits());
+        let (out_bytes, in_bytes) = run.metrics.total_ipc_bytes();
+        assert!(out_bytes > 0, "[{label}] the round task must ship over the wire");
+        assert!(in_bytes > 0, "[{label}] selections must come back over the wire");
+        // the round's oracle traffic happened worker-side but is still
+        // visible in the coordinator's per-round metrics.
+        let greedy_round = run
+            .metrics
+            .rounds
+            .iter()
+            .find(|r| r.name == "r1:local-greedy")
+            .expect("local-greedy round recorded");
+        assert!(greedy_round.oracle_calls > 0, "[{label}] worker-side calls merged");
+        assert!(greedy_round.ipc_bytes_out > 0);
+        assert!(greedy_round.ipc_bytes_in > 0);
+        ipc_per_transport.push((label, out_bytes, in_bytes));
+    }
+    // identical frames cross every transport: the byte meters must agree
+    // (the wire layer is transport-agnostic by construction).
+    let (_, out0, in0) = &ipc_per_transport[0];
+    for (label, out_b, in_b) in &ipc_per_transport[1..] {
+        assert_eq!((out_b, in_b), (out0, in0), "[{label}] IPC meter diverged across transports");
+    }
 }
 
 /// Worker reuse across rounds: Algorithm 5 with t thresholds runs all its
@@ -196,7 +230,7 @@ fn multi_round_reuses_workers_across_thresholds() {
     let inst = PlantedCoverageGen::dense(6, 240, 480).generate(seed);
     let opt = inst.known_opt.unwrap();
     let t = 3;
-    let mut pcfg = cfg(seed, BackendKind::Process { workers: 2 });
+    let mut pcfg = cfg(seed, process(2, Transport::Pipe));
     pcfg.oracle_spec = inst.spec.clone();
     let res = MultiRound::known(t, opt).run(inst.oracle.as_ref(), 6, &pcfg).unwrap();
     // every threshold's worker half-round carried IPC traffic.
@@ -218,10 +252,53 @@ fn multi_round_reuses_workers_across_thresholds() {
     assert_eq!(res.solution.elements, serial.solution.elements);
 }
 
+/// The PR-3 ROADMAP gap, closed: Sample&Prune's seeded pruning rounds run
+/// worker-side (the per-machine RNG seed travels inside the task), carry
+/// IPC bytes on the process backend, and stay bit-identical to `Serial`
+/// on every transport.
+#[test]
+fn sample_prune_prune_rounds_run_worker_side_on_every_transport() {
+    let k = 8;
+    let seed = 21;
+    let inst = CoverageGen::new(400, 200, 4).generate(seed);
+    let alg = SamplePrune::new(0.25);
+    let serial = alg.run(inst.oracle.as_ref(), k, &cfg(seed, BackendKind::Serial)).unwrap();
+    let prune_rounds =
+        serial.metrics.rounds.iter().filter(|r| r.name.ends_with("a:prune+sample")).count();
+    assert!(prune_rounds > 0, "instance must exercise the pruning schedule");
+
+    for transport in transports() {
+        let label = format!("process:2{}", transport.label_suffix());
+        let mut pcfg = cfg(seed, process(2, transport));
+        pcfg.oracle_spec = inst.spec.clone();
+        let run = alg.run(inst.oracle.as_ref(), k, &pcfg).unwrap();
+        assert_eq!(
+            run.solution.elements, serial.solution.elements,
+            "[{label}] seeded sampling must be backend-independent"
+        );
+        assert_eq!(run.solution.value.to_bits(), serial.solution.value.to_bits());
+        for r in &run.metrics.rounds {
+            if r.name.ends_with("a:prune+sample") {
+                assert!(
+                    r.ipc_bytes_out > 0 && r.ipc_bytes_in > 0,
+                    "[{label}] prune round {} must execute worker-side",
+                    r.name
+                );
+            }
+        }
+    }
+}
+
 // --- fault injection --------------------------------------------------------
 
-fn pool_for_faults(fault: Option<&str>, max_frame: usize, timeout_ms: u64) -> mrsub::core::Result<ProcessPool> {
-    let spec = OracleSpec::Coverage { n: 120, universe: 80, avg_degree: 3, weighted: false, seed: 5 };
+fn pool_for_faults(
+    fault: Option<&str>,
+    transport: Transport,
+    max_frame: usize,
+    timeout_ms: u64,
+) -> mrsub::core::Result<ProcessPool> {
+    let spec =
+        OracleSpec::Coverage { n: 120, universe: 80, avg_degree: 3, weighted: false, seed: 5 };
     let shards: Vec<Vec<u32>> = vec![(0..40).collect(), (40..80).collect(), (80..120).collect()];
     let sample: Vec<u32> = (0..120).step_by(7).collect();
     let mut env = Vec::new();
@@ -230,6 +307,7 @@ fn pool_for_faults(fault: Option<&str>, max_frame: usize, timeout_ms: u64) -> mr
     }
     ProcessPool::spawn(&spec, &shards, &sample, &PoolOptions {
         workers: 2,
+        transport,
         timeout: std::time::Duration::from_millis(timeout_ms),
         max_frame,
         exe: Some(worker_exe()),
@@ -248,68 +326,169 @@ fn assert_worker_error<T: std::fmt::Debug>(res: mrsub::core::Result<T>, needle: 
 }
 
 #[test]
-fn killed_worker_mid_round_degrades_cleanly() {
-    let mut pool = pool_for_faults(None, 64 << 20, 60_000).expect("clean spawn");
-    // sanity: a round works before the kill.
-    let (replies, stats) = pool.round(&RoundTask::MaxSingleton).unwrap();
-    assert_eq!(replies.len(), 3);
-    assert!(stats.bytes_out > 0 && stats.bytes_in > 0);
-    // kill one worker out from under the pool; the next round must fail
-    // with a structured error, not a panic or a hang.
-    pool.kill_worker(1);
-    let res = pool.round(&RoundTask::MaxSingleton);
-    assert!(
-        matches!(res, Err(Error::Worker { .. })),
-        "expected Err(Worker), got {res:?}"
-    );
+fn killed_worker_mid_round_degrades_cleanly_on_every_transport() {
+    for transport in transports() {
+        let label = transport.to_string();
+        let mut pool =
+            pool_for_faults(None, transport, 64 << 20, 60_000).expect("clean spawn");
+        // sanity: a round works before the kill.
+        let (replies, stats) = pool.round(&RoundTask::MaxSingleton).unwrap();
+        assert_eq!(replies.len(), 3, "[{label}]");
+        assert!(stats.bytes_out > 0 && stats.bytes_in > 0, "[{label}]");
+        // kill one worker out from under the pool; the next round must
+        // fail with a structured error, not a panic or a hang.
+        pool.kill_worker(1);
+        let res = pool.round(&RoundTask::MaxSingleton);
+        assert!(
+            matches!(res, Err(Error::Worker { .. })),
+            "[{label}] expected Err(Worker), got {res:?}"
+        );
+    }
 }
 
 #[test]
-fn die_mid_round_fault_is_a_structured_error() {
-    let mut pool = pool_for_faults(Some("die-mid-round"), 64 << 20, 60_000).expect("init is clean");
-    assert_worker_error(pool.round(&RoundTask::MaxSingleton), "pipe");
+fn die_mid_round_fault_is_a_structured_error_on_every_transport() {
+    for transport in transports() {
+        let mut pool = pool_for_faults(Some("die-mid-round"), transport, 64 << 20, 60_000)
+            .expect("init is clean");
+        assert_worker_error(pool.round(&RoundTask::MaxSingleton), "stream");
+    }
 }
 
 #[test]
-fn truncated_reply_frame_is_a_structured_error() {
-    let mut pool = pool_for_faults(Some("truncate-frame"), 64 << 20, 60_000).expect("init is clean");
-    assert_worker_error(pool.round(&RoundTask::MaxSingleton), "truncated");
+fn truncated_reply_frame_is_a_structured_error_on_every_transport() {
+    for transport in transports() {
+        let mut pool = pool_for_faults(Some("truncate-frame"), transport, 64 << 20, 60_000)
+            .expect("init is clean");
+        assert_worker_error(pool.round(&RoundTask::MaxSingleton), "truncated");
+    }
 }
 
 #[test]
-fn corrupt_checksum_is_a_structured_error() {
-    let mut pool =
-        pool_for_faults(Some("corrupt-checksum"), 64 << 20, 60_000).expect("init is clean");
-    assert_worker_error(pool.round(&RoundTask::MaxSingleton), "checksum");
+fn corrupt_checksum_is_a_structured_error_on_every_transport() {
+    for transport in transports() {
+        let mut pool = pool_for_faults(Some("corrupt-checksum"), transport, 64 << 20, 60_000)
+            .expect("init is clean");
+        assert_worker_error(pool.round(&RoundTask::MaxSingleton), "checksum");
+    }
 }
 
 #[test]
-fn hung_worker_is_bounded_by_timeout() {
-    // init handshake is fast, so a 1.5s timeout is comfortably above spawn
-    // cost yet far below the injected 20s hang — if the timeout machinery
-    // failed, the round would take ~20s and trip the elapsed bound.
-    let mut pool = pool_for_faults(Some("hang-round"), 64 << 20, 1_500).expect("init is clean");
-    let start = std::time::Instant::now();
-    assert_worker_error(pool.round(&RoundTask::MaxSingleton), "no reply");
-    assert!(
-        start.elapsed() < std::time::Duration::from_secs(15),
-        "timeout must bound the wait, took {:?}",
-        start.elapsed()
-    );
+fn hung_worker_is_bounded_by_timeout_on_every_transport() {
+    for transport in transports() {
+        // init handshake is fast, so a 1.5s timeout is comfortably above
+        // spawn cost yet far below the injected 20s hang — if the timeout
+        // machinery failed, the round would take ~20s and trip the bound.
+        let mut pool = pool_for_faults(Some("hang-round"), transport, 64 << 20, 1_500)
+            .expect("init is clean");
+        let start = std::time::Instant::now();
+        assert_worker_error(pool.round(&RoundTask::MaxSingleton), "no reply");
+        assert!(
+            start.elapsed() < std::time::Duration::from_secs(15),
+            "timeout must bound the wait, took {:?}",
+            start.elapsed()
+        );
+    }
 }
 
 #[test]
-fn version_mismatch_fails_the_handshake() {
-    let res = pool_for_faults(Some("bad-version"), 64 << 20, 60_000);
-    assert_worker_error(res.map(|_| ()), "version");
+fn version_mismatch_fails_the_handshake_on_every_transport() {
+    for transport in transports() {
+        let res = pool_for_faults(Some("bad-version"), transport, 64 << 20, 60_000);
+        assert_worker_error(res.map(|_| ()), "version");
+    }
 }
 
 #[test]
-fn oversized_shard_rejected_by_frame_cap() {
-    // a 120-element init shard cannot fit a 64-byte frame cap: the spawn
-    // fails with a structured send error before any round runs.
-    let res = pool_for_faults(None, 64, 60_000);
-    assert_worker_error(res.map(|_| ()), "max-frame");
+fn oversized_shard_rejected_by_frame_cap_on_every_transport() {
+    for transport in transports() {
+        // a 120-element init shard cannot fit a 64-byte frame cap: the
+        // spawn fails with a structured send error before any round runs.
+        let res = pool_for_faults(None, transport, 64, 60_000);
+        assert_worker_error(res.map(|_| ()), "max-frame");
+    }
+}
+
+/// A worker that dies before ever joining: on the socket transports the
+/// accept deadline expires into a structured connection error; on pipes
+/// the closed stream fails the `Hello`.
+#[test]
+fn worker_that_never_connects_is_a_structured_error() {
+    for transport in [Transport::Uds, Transport::Tcp { bind: None }] {
+        let res = pool_for_faults(Some("no-connect"), transport, 64 << 20, 1_500);
+        assert_worker_error(res.map(|_| ()), "connect");
+    }
+    let res = pool_for_faults(Some("no-connect"), Transport::Pipe, 64 << 20, 1_500);
+    assert_worker_error(res.map(|_| ()), "stream");
+}
+
+/// `mrsub worker --connect` against a dead endpoint exits nonzero with a
+/// connection-refused style error instead of hanging (the README
+/// troubleshooting flow).
+#[test]
+fn worker_connect_to_dead_endpoint_fails_fast() {
+    // reserve a port and release it so nothing is listening there —
+    // unlike a fixed well-known port, this cannot collide with a local
+    // service that would accept the dial and hang the worker.
+    let addr = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").expect("probe bind");
+        probe.local_addr().unwrap().to_string()
+    };
+    let status = std::process::Command::new(worker_exe())
+        .args(["worker", "--connect", &addr])
+        .stdin(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .status()
+        .expect("spawn worker");
+    assert!(!status.success(), "dialing a dead endpoint must fail");
+}
+
+/// The remote-join flow end to end: an explicit TCP bind address makes
+/// the pool spawn nothing and wait for external `mrsub worker --connect
+/// HOST:PORT --id I` processes — exactly what a multi-host deployment
+/// runs by hand.
+#[test]
+fn external_tcp_workers_join_by_hand() {
+    // reserve a port, then release it for the pool to bind.
+    let port = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").expect("probe bind");
+        probe.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    // launch the "remote" workers first; their connect retries cover the
+    // window until the coordinator binds.
+    let mut external: Vec<std::process::Child> = (0..2)
+        .map(|id| {
+            std::process::Command::new(worker_exe())
+                .args(["worker", "--connect", &addr, "--id", &id.to_string()])
+                .stdin(std::process::Stdio::null())
+                .spawn()
+                .expect("spawn external worker")
+        })
+        .collect();
+
+    let spec =
+        OracleSpec::Coverage { n: 120, universe: 80, avg_degree: 3, weighted: false, seed: 5 };
+    let shards: Vec<Vec<u32>> = vec![(0..60).collect(), (60..120).collect()];
+    let sample: Vec<u32> = (0..120).step_by(9).collect();
+    let pool = ProcessPool::spawn(&spec, &shards, &sample, &PoolOptions {
+        workers: 2,
+        transport: Transport::Tcp { bind: Some(addr) },
+        timeout: std::time::Duration::from_secs(30),
+        max_frame: 64 << 20,
+        exe: Some(worker_exe()),
+        env: Vec::new(),
+    });
+    let mut pool = pool.expect("external workers must join the pool");
+    assert_eq!(pool.workers(), 2);
+    let (replies, stats) = pool.round(&RoundTask::LocalGreedy { k: 4 }).unwrap();
+    assert_eq!(replies.len(), 2);
+    assert!(stats.bytes_in > 0);
+    drop(pool); // shutdown: external workers exit on their own.
+    for child in &mut external {
+        let code = child.wait().expect("external worker reaped");
+        assert!(code.success(), "external worker must exit cleanly, got {code:?}");
+    }
 }
 
 /// A faulted run must not poison the coordinator: its metrics stay
@@ -321,18 +500,23 @@ fn fault_does_not_poison_subsequent_runs() {
     // RandGreeDi's round 1 is unconditionally a typed shard round, so the
     // injected fault is guaranteed to be exercised.
     let alg = RandGreeDi;
+    for transport in transports() {
+        let label = transport.to_string();
+        let mut bad = cfg(seed, process(2, transport.clone()));
+        bad.oracle_spec = inst.spec.clone();
+        bad.worker_env = vec![("MRSUB_FAULT".to_string(), "die-mid-round".to_string())];
+        let res = alg.run(inst.oracle.as_ref(), 6, &bad);
+        assert!(
+            matches!(res, Err(Error::Worker { .. })),
+            "[{label}] faulted run must error: {res:?}"
+        );
 
-    let mut bad = cfg(seed, BackendKind::Process { workers: 2 });
-    bad.oracle_spec = inst.spec.clone();
-    bad.worker_env = vec![("MRSUB_FAULT".to_string(), "die-mid-round".to_string())];
-    let res = alg.run(inst.oracle.as_ref(), 6, &bad);
-    assert!(matches!(res, Err(Error::Worker { .. })), "faulted run must error: {res:?}");
-
-    // clean run right after: identical to serial, as if nothing happened.
-    let mut good = cfg(seed, BackendKind::Process { workers: 2 });
-    good.oracle_spec = inst.spec.clone();
-    let clean = alg.run(inst.oracle.as_ref(), 6, &good).unwrap();
-    let serial = alg.run(inst.oracle.as_ref(), 6, &cfg(seed, BackendKind::Serial)).unwrap();
-    assert_eq!(clean.solution.elements, serial.solution.elements);
-    assert_eq!(clean.solution.value.to_bits(), serial.solution.value.to_bits());
+        // clean run right after: identical to serial, as if nothing happened.
+        let mut good = cfg(seed, process(2, transport));
+        good.oracle_spec = inst.spec.clone();
+        let clean = alg.run(inst.oracle.as_ref(), 6, &good).unwrap();
+        let serial = alg.run(inst.oracle.as_ref(), 6, &cfg(seed, BackendKind::Serial)).unwrap();
+        assert_eq!(clean.solution.elements, serial.solution.elements, "[{label}]");
+        assert_eq!(clean.solution.value.to_bits(), serial.solution.value.to_bits());
+    }
 }

@@ -195,8 +195,8 @@ fn serial_and_rayon_backends_agree_on_outputs_and_metrics() {
             .max(1e-6);
         for alg in all_algorithms(opt_hint) {
             let mut reference: Option<mrsub::coordinator::ExperimentRecord> = None;
-            for backend in backends {
-                let rec = run_experiment(&inst, alg.as_ref(), k, &cfg(13, backend))
+            for backend in &backends {
+                let rec = run_experiment(&inst, alg.as_ref(), k, &cfg(13, backend.clone()))
                     .expect("experiment");
                 match &reference {
                     None => reference = Some(rec),

@@ -180,7 +180,11 @@ fn lemma_1_bound_holds_on_all_in_process_backends() {
             BackendKind::Rayon { chunk: 1 },
             BackendKind::Rayon { chunk: 3 },
         ] {
-            let cfg = ClusterConfig { seed, backend: Some(backend), ..ClusterConfig::default() };
+            let cfg = ClusterConfig {
+                seed,
+                backend: Some(backend.clone()),
+                ..ClusterConfig::default()
+            };
             let res = TwoRoundKnownOpt::new(g).run(&inst.oracle, k, &cfg).unwrap();
             assert!(
                 res.solution.value >= 0.5 * g - 1e-9,
@@ -205,8 +209,11 @@ fn lemma_3_bound_holds_on_all_in_process_backends() {
         let opt = inst.known_opt.unwrap();
         for t in [1usize, 3] {
             for backend in [BackendKind::Serial, BackendKind::Rayon { chunk: 2 }] {
-                let cfg =
-                    ClusterConfig { seed, backend: Some(backend), ..ClusterConfig::default() };
+                let cfg = ClusterConfig {
+                    seed,
+                    backend: Some(backend.clone()),
+                    ..ClusterConfig::default()
+                };
                 let res = MultiRound::known(t, opt).run(&inst.oracle, 10, &cfg).unwrap();
                 let ratio = res.solution.value / opt;
                 assert!(

@@ -43,6 +43,9 @@ case "$mode" in
         cargo test -q
         cargo fmt --check
         cargo clippy --all-targets -- -D warnings
+        # docs are CI-enforced: broken intra-doc links and missing docs
+        # (lib.rs carries #![warn(missing_docs)]) fail the build.
+        RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
         ;;
     *)
         echo "usage: ./verify.sh [fast|conformance]" >&2
