@@ -31,7 +31,13 @@
 //!                          # an explicit @tcp:HOST:PORT listens there and
 //!                          # waits for external `mrsub worker --connect`s)
 //! chunk = 1                # rayon work-claim granularity
-//! worker_timeout_ms = 30000  # process backend: per-reply + connect bound
+//! worker_timeout_ms = 30000  # process backend: per-round reply bound
+//! connect_timeout_ms = 5000  # process backend: connection-establishment
+//!                          # bound (default min(worker_timeout_ms, 30s))
+//! recovery = "fail"        # process backend worker-death policy:
+//!                          # fail | requeue[:R] — requeue re-places a dead
+//!                          # worker's machines on survivors, tolerating R
+//!                          # worker deaths per run (default 1)
 //! max_frame_mb = 64        # process backend: wire frame payload cap
 //! enforce_memory = false
 //! machines = 0             # 0 = paper default ceil(sqrt(n/k))
@@ -52,6 +58,7 @@ use crate::algorithms::two_round::TwoRoundKnownOpt;
 use crate::algorithms::{AlgResult, MrAlgorithm};
 use crate::core::{Error, Result};
 use crate::mapreduce::backend::BackendKind;
+use crate::mapreduce::process::RecoveryPolicy;
 use crate::mapreduce::ClusterConfig;
 use crate::util::minitoml::{Document, Table};
 use crate::workload::adversarial::AdversarialGen;
@@ -155,6 +162,26 @@ impl RunConfig {
                 })?;
                 cluster.worker_timeout_ms = ClusterConfig::validate_worker_timeout_ms(ms)
                     .map_err(|e| Error::Config(format!("[cluster]: {e}")))?;
+            }
+            if let Some(v) = t.get("connect_timeout_ms") {
+                let ms = v.as_u64().ok_or_else(|| {
+                    Error::Config("[cluster]: invalid integer \"connect_timeout_ms\"".into())
+                })?;
+                cluster.connect_timeout_ms = Some(
+                    ClusterConfig::validate_connect_timeout_ms(ms)
+                        .map_err(|e| Error::Config(format!("[cluster]: {e}")))?,
+                );
+            }
+            if let Some(v) = t.get("recovery") {
+                let name = v.as_str().ok_or_else(|| {
+                    Error::Config("[cluster]: invalid string \"recovery\"".into())
+                })?;
+                cluster.recovery = RecoveryPolicy::parse(name).ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown recovery policy {name:?} \
+                         (fail | requeue[:R] with R >= 1)"
+                    ))
+                })?;
             }
             if let Some(v) = t.get("max_frame_mb") {
                 let mb = v.as_usize().ok_or_else(|| {
@@ -570,11 +597,62 @@ mod tests {
         assert!(RunConfig::parse(&text("worker_timeout_ms = 0")).is_err());
         assert!(RunConfig::parse(&text("worker_timeout_ms = 99999999")).is_err());
 
+        // the connect bound is its own knob with the same bounds discipline.
+        let cfg = RunConfig::parse(&text(
+            "backend = \"process:2\"\nworker_timeout_ms = 600000\nconnect_timeout_ms = 2000",
+        ))
+        .unwrap();
+        assert_eq!(cfg.cluster.connect_timeout_ms, Some(2000));
+        assert_eq!(cfg.cluster.effective_connect_timeout_ms(), 2000);
+        assert!(RunConfig::parse(&text("connect_timeout_ms = 0")).is_err());
+        assert!(RunConfig::parse(&text("connect_timeout_ms = 99999999")).is_err());
+        assert!(RunConfig::parse(&text("connect_timeout_ms = \"fast\"")).is_err());
+
+        // unset: derived from worker_timeout_ms, capped at the 30s default
+        // so a compute-sized round timeout doesn't grant sloppy connects.
+        let cfg = RunConfig::parse(&text("worker_timeout_ms = 5000")).unwrap();
+        assert_eq!(cfg.cluster.connect_timeout_ms, None);
+        assert_eq!(cfg.cluster.effective_connect_timeout_ms(), 5000);
+        let cfg = RunConfig::parse(&text("worker_timeout_ms = 600000")).unwrap();
+        assert_eq!(cfg.cluster.effective_connect_timeout_ms(), 30_000);
+
         // frame cap in MiB, same bounds discipline.
         let cfg = RunConfig::parse(&text("max_frame_mb = 8")).unwrap();
         assert_eq!(cfg.cluster.max_frame_bytes, 8 << 20);
         assert!(RunConfig::parse(&text("max_frame_mb = 0")).is_err());
         assert!(RunConfig::parse(&text("max_frame_mb = 100000")).is_err());
+    }
+
+    #[test]
+    fn cluster_recovery_policy_parsed() {
+        let text = |cluster: &str| {
+            format!(
+                r#"
+                k = 5
+                [instance]
+                kind = "coverage"
+                n = 40
+                universe = 30
+                avg_degree = 3
+                [algorithm]
+                kind = "greedy"
+                [cluster]
+                {cluster}
+            "#
+            )
+        };
+        let cfg = RunConfig::parse(&text("backend = \"process:2\"")).unwrap();
+        assert_eq!(cfg.cluster.recovery, RecoveryPolicy::Fail, "fail-fast is the default");
+        let cfg = RunConfig::parse(&text("recovery = \"fail\"")).unwrap();
+        assert_eq!(cfg.cluster.recovery, RecoveryPolicy::Fail);
+        let cfg = RunConfig::parse(&text("recovery = \"requeue\"")).unwrap();
+        assert_eq!(cfg.cluster.recovery, RecoveryPolicy::Requeue { budget: 1 });
+        let cfg = RunConfig::parse(&text("recovery = \"requeue:4\"")).unwrap();
+        assert_eq!(cfg.cluster.recovery, RecoveryPolicy::Requeue { budget: 4 });
+        // bad policies are config errors, not silent defaults.
+        assert!(RunConfig::parse(&text("recovery = \"requeue:0\"")).is_err());
+        assert!(RunConfig::parse(&text("recovery = \"retry\"")).is_err());
+        assert!(RunConfig::parse(&text("recovery = 3")).is_err(), "non-string rejected");
     }
 
     #[test]

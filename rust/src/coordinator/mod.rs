@@ -59,6 +59,11 @@ pub struct ExperimentRecord {
     pub ipc_bytes_out: u64,
     /// Wire-frame bytes workers → coordinator.
     pub ipc_bytes_in: u64,
+    /// Worker deaths recovered from during the run (elastic process
+    /// backend under `--recovery requeue:R`).
+    pub recoveries: u64,
+    /// Frame bytes reshipped to surviving workers for machine adoption.
+    pub reshipped_bytes: u64,
     /// End-to-end wall time (ms).
     pub wall_ms: f64,
     /// Full per-round metrics.
@@ -94,6 +99,8 @@ impl ExperimentRecord {
             ("oracle_batches", Json::Num(self.oracle_batches as f64)),
             ("ipc_bytes_out", Json::Num(self.ipc_bytes_out as f64)),
             ("ipc_bytes_in", Json::Num(self.ipc_bytes_in as f64)),
+            ("recoveries", Json::Num(self.recoveries as f64)),
+            ("reshipped_bytes", Json::Num(self.reshipped_bytes as f64)),
             ("wall_ms", Json::Num(self.wall_ms)),
             ("metrics", self.metrics.to_json()),
         ])
@@ -134,6 +141,8 @@ pub fn run_experiment(
     // compute rounds exclude the r0 partition record.
     let rounds = result.metrics.rounds.iter().filter(|r| !r.name.starts_with("r0:")).count();
     let (ipc_bytes_out, ipc_bytes_in) = result.metrics.total_ipc_bytes();
+    let recoveries = result.metrics.total_recoveries();
+    let reshipped_bytes = result.metrics.total_reshipped_bytes();
 
     Ok(ExperimentRecord {
         algorithm: alg.name(),
@@ -153,6 +162,8 @@ pub fn run_experiment(
         oracle_batches,
         ipc_bytes_out,
         ipc_bytes_in,
+        recoveries,
+        reshipped_bytes,
         wall_ms,
         metrics: result.metrics,
     })

@@ -36,6 +36,7 @@ use mrsub::config::{GreedyAlg, RunConfig};
 use mrsub::coordinator::{render_table, run_experiment, write_json, BENCH_SCHEMA_VERSION};
 use mrsub::core::{threshold_bound, ElementId, Error, Result};
 use mrsub::mapreduce::backend::BackendKind;
+use mrsub::mapreduce::process::RecoveryPolicy;
 use mrsub::mapreduce::ClusterConfig;
 use mrsub::oracle::modular::ModularOracle;
 use mrsub::oracle::spec::OracleSpec;
@@ -106,12 +107,25 @@ fn backend_flag(args: &Args) -> Result<Option<BackendKind>> {
 }
 
 /// Apply the process-backend tuning flags (`--worker-timeout-ms`,
-/// `--max-frame-mb`) to a cluster config; bounds are shared with the TOML
-/// parser via [`ClusterConfig`]'s validators.
+/// `--connect-timeout-ms`, `--max-frame-mb`, `--recovery`) to a cluster
+/// config; bounds are shared with the TOML parser via [`ClusterConfig`]'s
+/// validators.
 fn apply_cluster_flags(args: &Args, cfg: &mut ClusterConfig) -> Result<()> {
     let timeout: u64 = args.get("worker_timeout_ms", cfg.worker_timeout_ms)?;
     cfg.worker_timeout_ms =
         ClusterConfig::validate_worker_timeout_ms(timeout).map_err(cli_err)?;
+    if args.get_str("connect_timeout_ms").is_some() {
+        let connect: u64 = args.get("connect_timeout_ms", 0)?;
+        cfg.connect_timeout_ms =
+            Some(ClusterConfig::validate_connect_timeout_ms(connect).map_err(cli_err)?);
+    }
+    if let Some(policy) = args.get_str("recovery") {
+        cfg.recovery = RecoveryPolicy::parse(policy).ok_or_else(|| {
+            cli_err(format!(
+                "unknown recovery policy {policy:?} (fail | requeue[:R] with R >= 1)"
+            ))
+        })?;
+    }
     let default_mb = cfg.max_frame_bytes >> 20;
     let mb: usize = args.get("max_frame_mb", default_mb)?;
     cfg.max_frame_bytes = ClusterConfig::validate_max_frame_mb(mb).map_err(cli_err)? << 20;
@@ -121,7 +135,8 @@ fn apply_cluster_flags(args: &Args, cfg: &mut ClusterConfig) -> Result<()> {
 const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|engine-check|worker> [--flag value]...
   run           --config <file.toml>
   demo          [--k 20] [--n 20000] [--seed 7] [--backend serial|rayon|process:N[@pipe|@uds|@tcp[:addr]]]
-                [--chunk 1] [--worker-timeout-ms 30000] [--max-frame-mb 64]
+                [--chunk 1] [--worker-timeout-ms 30000] [--connect-timeout-ms 30000]
+                [--recovery fail|requeue[:R]] [--max-frame-mb 64]
   sweep-t       [--t-max 6] [--k 20] [--seed 7]
   adversarial   [--t-max 5] [--k 60]
   bench         [--n 4096] [--k 32] [--seed 11]

@@ -28,7 +28,7 @@ use crate::oracle::spec::OracleSpec;
 use crate::oracle::OracleCounters;
 use backend::{BackendKind, ExecBackend};
 use partition::{default_machines, partition_and_sample, sample_probability, Partitioned};
-use process::{PoolOptions, ProcessPool};
+use process::{PoolOptions, ProcessPool, RecoveryPolicy};
 use shard::GuessStore;
 use wire::{RoundTask, TaskReply};
 
@@ -62,8 +62,18 @@ pub struct ClusterConfig {
     /// ignored by the in-process backends. Not serialized.
     pub oracle_spec: Option<OracleSpec>,
     /// Per-reply worker wait bound (ms) for the process backend; a worker
-    /// silent for longer is declared dead with a structured error.
+    /// silent for longer mid-round is declared dead with a structured
+    /// error.
     pub worker_timeout_ms: u64,
+    /// Connection-establishment bound (ms) for the process backend's
+    /// socket transports (accept + `Hello`). `None` derives
+    /// `min(worker_timeout_ms, 30_000)` — so sizing `worker_timeout_ms`
+    /// for slow rounds doesn't also inflate the connect deadline.
+    pub connect_timeout_ms: Option<u64>,
+    /// Worker-death handling for the process backend: fail fast
+    /// (default), or re-queue a dead worker's machines onto survivors
+    /// within a bounded retry budget (`--recovery requeue:R`).
+    pub recovery: RecoveryPolicy,
     /// Hard cap on a single wire frame's payload (process backend).
     pub max_frame_bytes: usize,
     /// Worker executable override; `None` re-executes the current binary.
@@ -87,6 +97,8 @@ impl Default for ClusterConfig {
             call_counter: None,
             oracle_spec: None,
             worker_timeout_ms: 30_000,
+            connect_timeout_ms: None,
+            recovery: RecoveryPolicy::Fail,
             max_frame_bytes: wire::DEFAULT_MAX_FRAME,
             worker_exe: None,
             worker_env: Vec::new(),
@@ -101,6 +113,9 @@ impl ClusterConfig {
     /// Inclusive accepted range for the wire frame cap in MiB (TOML + CLI).
     pub const MAX_FRAME_MB_BOUNDS: (usize, usize) = (1, 4096);
 
+    /// Inclusive accepted range for `connect_timeout_ms` (TOML + CLI).
+    pub const CONNECT_TIMEOUT_MS_BOUNDS: (u64, u64) = (1, 3_600_000);
+
     /// Validate a `worker_timeout_ms` value against the shared bounds.
     pub fn validate_worker_timeout_ms(ms: u64) -> std::result::Result<u64, String> {
         let (lo, hi) = Self::WORKER_TIMEOUT_MS_BOUNDS;
@@ -108,6 +123,23 @@ impl ClusterConfig {
             return Err(format!("worker_timeout_ms {ms} out of bounds ({lo}..={hi})"));
         }
         Ok(ms)
+    }
+
+    /// Validate a `connect_timeout_ms` value against the shared bounds.
+    pub fn validate_connect_timeout_ms(ms: u64) -> std::result::Result<u64, String> {
+        let (lo, hi) = Self::CONNECT_TIMEOUT_MS_BOUNDS;
+        if ms < lo || ms > hi {
+            return Err(format!("connect_timeout_ms {ms} out of bounds ({lo}..={hi})"));
+        }
+        Ok(ms)
+    }
+
+    /// The effective connect deadline: the explicit `connect_timeout_ms`
+    /// when set, else `min(worker_timeout_ms, 30_000)` — a round timeout
+    /// sized for slow compute must not also grant an hour to a worker
+    /// that will never connect.
+    pub fn effective_connect_timeout_ms(&self) -> u64 {
+        self.connect_timeout_ms.unwrap_or_else(|| self.worker_timeout_ms.min(30_000))
     }
 
     /// Validate a frame-cap value in MiB against the shared bounds.
@@ -248,6 +280,7 @@ impl MrCluster {
             sample_size,
             (0, 0, 0),
             (0, 0),
+            (0, 0),
             std::time::Duration::ZERO,
         )?;
         Ok(cluster)
@@ -335,6 +368,7 @@ impl MrCluster {
             total_sent,
             calls,
             (0, 0),
+            (0, 0),
             start.elapsed(),
         )?;
         Ok(outputs)
@@ -379,12 +413,14 @@ impl MrCluster {
         let start = Instant::now();
         let calls0 = self.calls_snapshot();
         let mut ipc = (0u64, 0u64);
+        let mut recovery = (0u64, 0u64);
         let mut remote_calls = (0u64, 0u64, 0u64);
         let replies = if self.cfg.backend_kind().process_workers().is_some() {
             self.ensure_pool()?;
             let pool = self.pool.as_mut().expect("pool spawned above");
             let (replies, stats) = pool.round(task)?;
             ipc = (stats.bytes_out, stats.bytes_in);
+            recovery = (stats.recoveries, stats.reshipped_bytes);
             // merge worker-side oracle traffic so MrMetrics stays coherent:
             // through the shared counter when one is wired (the snapshot
             // delta below then picks it up), directly into the round stat
@@ -419,6 +455,7 @@ impl MrCluster {
             total_sent,
             calls,
             ipc,
+            recovery,
             start.elapsed(),
         )?;
         Ok(replies)
@@ -444,9 +481,13 @@ impl MrCluster {
             workers,
             transport,
             timeout: Duration::from_millis(self.cfg.worker_timeout_ms.max(1)),
+            connect_timeout: Duration::from_millis(
+                self.cfg.effective_connect_timeout_ms().max(1),
+            ),
             max_frame: self.cfg.max_frame_bytes,
             exe: self.cfg.worker_exe.clone(),
             env: self.cfg.worker_env.clone(),
+            recovery: self.cfg.recovery,
         };
         self.pool = Some(ProcessPool::spawn(&spec, &self.shards, &self.sample, &opts)?);
         Ok(())
@@ -463,7 +504,7 @@ impl MrCluster {
         let calls0 = self.calls_snapshot();
         let out = f();
         let calls = delta(calls0, self.calls_snapshot());
-        self.record_round(name, 0, 0, 0, received, calls, (0, 0), start.elapsed())?;
+        self.record_round(name, 0, 0, 0, received, calls, (0, 0), (0, 0), start.elapsed())?;
         Ok(out)
     }
 
@@ -496,6 +537,7 @@ impl MrCluster {
             central_recv,
             calls,
             (0, 0),
+            (0, 0),
             start.elapsed(),
         )?;
         Ok(out)
@@ -524,6 +566,7 @@ impl MrCluster {
         central_recv: usize,
         calls: (u64, u64, u64),
         ipc: (u64, u64),
+        recovery: (u64, u64),
         wall: std::time::Duration,
     ) -> Result<()> {
         let (oracle_calls, batched_calls, oracle_batches) = calls;
@@ -538,6 +581,8 @@ impl MrCluster {
             oracle_batches,
             ipc_bytes_out: ipc.0,
             ipc_bytes_in: ipc.1,
+            recoveries: recovery.0,
+            reshipped_bytes: recovery.1,
             wall,
         });
         if self.cfg.enforce_memory && name != "r0:partition+sample" {

@@ -27,10 +27,11 @@
 //! connections arrive in arbitrary order) and its [`WIRE_VERSION`]; a
 //! version mismatch or an unknown slot fails here, before any shard data
 //! moves. [`ToWorker::Init`] → [`FromWorker::Ready`] then completes setup
-//! exactly as on pipes. Connection establishment is bounded by the same
-//! `worker_timeout_ms` that bounds round replies: a worker that never
-//! connects (crashed, connection refused, wrong endpoint) degrades into a
-//! structured [`Error::Worker`] when the accept deadline expires.
+//! exactly as on pipes. Connection establishment is bounded by its own
+//! `connect_timeout_ms` (round replies have a separate, compute-sized
+//! `worker_timeout_ms`): a worker that never connects (crashed,
+//! connection refused, wrong endpoint) degrades into a structured
+//! [`Error::Worker`] when the accept deadline expires.
 //!
 //! ## Round protocol
 //!
@@ -42,24 +43,41 @@
 //! identically on every transport — the per-round IPC byte counts land in
 //! `RoundStat::ipc_bytes_*`.
 //!
-//! ## Failure surface
+//! ## Failure surface and elasticity
 //!
 //! Every failure mode — worker killed mid-round, truncated or corrupted
 //! reply frame, oversized frame, handshake version mismatch, refused or
-//! dropped connection, worker-side error — is a structured
-//! [`Error::Worker`] (never a panic, never a poisoned coordinator): the
-//! pool marks the worker dead, force-closes its stream, reaps the child
-//! (when it spawned one), and the algorithm's `run` surfaces `Err`. Each
-//! worker gets a dedicated reader thread *and* writer thread, so the
+//! dropped connection, worker-side error — is detected structurally
+//! (never a panic, never a poisoned coordinator): the pool marks the
+//! worker dead, force-closes its stream, and reaps the child (when it
+//! spawned one). What happens next is the [`RecoveryPolicy`]:
+//!
+//! * [`RecoveryPolicy::Fail`] (default): the round surfaces a structured
+//!   [`Error::Worker`] and the algorithm's `run` returns `Err`.
+//! * [`RecoveryPolicy::Requeue`]: the dead worker's simulated machines
+//!   are **re-queued onto surviving workers** — the pool ships each
+//!   adopter a [`RoundTask::AdoptMachines`] carrying the orphaned
+//!   machines' spawn-time shards, the store-mutating task history to
+//!   replay (rebuilding pruned bases and persistent guess shards
+//!   deterministically), and the in-flight round task to re-run for just
+//!   those machines. The round then completes as if nothing happened,
+//!   with selections bit-identical to `Serial` (asserted per transport by
+//!   the conformance suite). A bounded budget of worker deaths is
+//!   tolerated per pool lifetime; exhausting it — or losing the last
+//!   worker — still fails with a structured [`Error::Worker`].
+//!
+//! Each worker gets a dedicated reader thread *and* writer thread, so the
 //! coordinator itself never blocks on a stream — a worker that stops
 //! replying *or* stops reading is bounded by `worker_timeout_ms`, never a
-//! coordinator hang. Reply shapes are validated against the task
+//! coordinator hang; connection establishment is bounded separately by
+//! `connect_timeout_ms`. Reply shapes are validated against the task
 //! ([`wire::reply_matches`]) before use.
 //!
 //! The `MRSUB_FAULT` environment variable (set by the conformance suite
-//! via `worker_env`) injects worker-side faults: `die-mid-round`,
+//! via `worker_env`) injects worker-side faults with the syntax
+//! `kind[:nth][@worker]` (see [`FaultSpec`]): `die-mid-round`,
 //! `hang-round`, `truncate-frame`, `corrupt-checksum`, `bad-version`,
-//! `no-connect`.
+//! `no-connect`, `die-on-prune`.
 
 use std::io::{Read, Write};
 use std::path::PathBuf;
@@ -78,6 +96,48 @@ use crate::mapreduce::wire::{
 use crate::oracle::spec::OracleSpec;
 use crate::oracle::{CountingOracle, Oracle, OracleCounters};
 
+/// What the pool does when a worker dies mid-run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// Any worker failure aborts the run with a structured
+    /// [`Error::Worker`] — the default, and the pre-elastic behavior.
+    #[default]
+    Fail,
+    /// Re-queue a dead worker's machines onto surviving workers (via
+    /// [`RoundTask::AdoptMachines`]), tolerating up to `budget` worker
+    /// deaths over the pool's lifetime. Exhausting the budget, or losing
+    /// the last worker, still yields a structured [`Error::Worker`].
+    Requeue {
+        /// Worker deaths tolerated per pool lifetime (≥ 1).
+        budget: usize,
+    },
+}
+
+impl RecoveryPolicy {
+    /// Parse a config/CLI value: `"fail"`, `"requeue"` (budget 1), or
+    /// `"requeue:R"` with `R ≥ 1`. Unknown strings (including
+    /// `"requeue:0"` — a zero budget is spelled `"fail"`) are `None`.
+    pub fn parse(s: &str) -> Option<RecoveryPolicy> {
+        match s {
+            "fail" => Some(RecoveryPolicy::Fail),
+            "requeue" => Some(RecoveryPolicy::Requeue { budget: 1 }),
+            _ => s
+                .strip_prefix("requeue:")
+                .and_then(|r| r.trim().parse::<usize>().ok())
+                .filter(|&b| b >= 1)
+                .map(|budget| RecoveryPolicy::Requeue { budget }),
+        }
+    }
+
+    /// Display label; round-trips through [`RecoveryPolicy::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            RecoveryPolicy::Fail => "fail".into(),
+            RecoveryPolicy::Requeue { budget } => format!("requeue:{budget}"),
+        }
+    }
+}
+
 /// Pool construction knobs (derived from `ClusterConfig` by the cluster).
 #[derive(Debug, Clone)]
 pub struct PoolOptions {
@@ -85,9 +145,13 @@ pub struct PoolOptions {
     pub workers: usize,
     /// Coordinator ↔ worker byte-stream transport.
     pub transport: Transport,
-    /// Per-reply wait bound; also bounds connection establishment. A
-    /// worker silent for longer is declared dead.
+    /// Per-reply wait bound: a worker silent for longer mid-round is
+    /// declared dead.
     pub timeout: Duration,
+    /// Connection-establishment bound (socket accept loop + `Hello`),
+    /// split from `timeout` so slow rounds don't force sloppy connect
+    /// deadlines.
+    pub connect_timeout: Duration,
     /// Hard cap on a single frame's payload.
     pub max_frame: usize,
     /// Worker executable; `None` = `std::env::current_exe()` (the normal
@@ -96,6 +160,9 @@ pub struct PoolOptions {
     pub exe: Option<PathBuf>,
     /// Extra environment for workers (fault injection uses `MRSUB_FAULT`).
     pub env: Vec<(String, String)>,
+    /// Worker-death handling: fail fast, or re-queue machines onto
+    /// surviving workers within a bounded retry budget.
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for PoolOptions {
@@ -104,9 +171,11 @@ impl Default for PoolOptions {
             workers: 1,
             transport: Transport::Pipe,
             timeout: Duration::from_millis(30_000),
+            connect_timeout: Duration::from_millis(30_000),
             max_frame: DEFAULT_MAX_FRAME,
             exe: None,
             env: Vec::new(),
+            recovery: RecoveryPolicy::Fail,
         }
     }
 }
@@ -120,6 +189,11 @@ pub struct RoundIpcStats {
     pub bytes_in: u64,
     /// Worker-side oracle calls `(total, batched, batches)` this round.
     pub calls: (u64, u64, u64),
+    /// Worker deaths recovered from this round ([`RecoveryPolicy::Requeue`]).
+    pub recoveries: u64,
+    /// Frame bytes of [`RoundTask::AdoptMachines`] reshipments this round
+    /// (a subset of `bytes_out`).
+    pub reshipped_bytes: u64,
 }
 
 /// Frames from a reader thread: `(payload, frame_bytes)` or a wire error.
@@ -157,10 +231,34 @@ pub struct ProcessPool {
     max_frame: usize,
     bytes_out: u64,
     bytes_in: u64,
+    /// Spawn-time shards, kept coordinator-side as the reship source for
+    /// [`RoundTask::AdoptMachines`] (machine-resident *derived* state is
+    /// rebuilt by replaying `history`, never reshipped). Empty under
+    /// [`RecoveryPolicy::Fail`] — the default policy pays no memory for a
+    /// recovery path it never takes.
+    shards: Vec<Vec<ElementId>>,
+    /// Store-mutating tasks of completed rounds, in round order — the
+    /// deterministic replay an adopted machine rebuilds its
+    /// [`GuessStore`] from (see [`RoundTask::mutates_store`]).
+    history: Vec<RoundTask>,
+    recovery: RecoveryPolicy,
+    /// Worker deaths already recovered from (checked against the budget).
+    deaths_spent: usize,
+    /// Lifetime recovery-event count (per-round deltas land in stats).
+    recoveries: u64,
+    /// Lifetime `AdoptMachines` frame bytes.
+    reshipped_bytes: u64,
 }
 
 fn worker_error(worker: usize, message: impl Into<String>) -> Error {
     Error::Worker { worker, message: message.into() }
+}
+
+/// Accumulate a worker's `(total, batched, batches)` oracle-call delta.
+fn merge_calls(acc: &mut (u64, u64, u64), c: (u64, u64, u64)) {
+    acc.0 += c.0;
+    acc.1 += c.1;
+    acc.2 += c.2;
 }
 
 /// The one version-mismatch wording, shared by every handshake site
@@ -331,8 +429,10 @@ impl ProcessPool {
         }
 
         // --- connection + Hello phase ------------------------------------
-        let deadline = Instant::now() + opts.timeout;
-        let timeout_ms = opts.timeout.as_millis();
+        // bounded by the dedicated connect timeout, not the (possibly much
+        // larger, compute-sized) per-round reply timeout.
+        let deadline = Instant::now() + opts.connect_timeout;
+        let timeout_ms = opts.connect_timeout.as_millis();
         let mut slots: Vec<Option<Pending>> = (0..w).map(|_| None).collect();
         // socket Hello frames are consumed here, before the pool exists;
         // meter them so all transports account handshake bytes alike
@@ -470,6 +570,15 @@ impl ProcessPool {
             max_frame: opts.max_frame,
             bytes_out: 0,
             bytes_in: hello_bytes_in,
+            shards: match opts.recovery {
+                RecoveryPolicy::Requeue { .. } => shards.to_vec(),
+                RecoveryPolicy::Fail => Vec::new(),
+            },
+            history: Vec::new(),
+            recovery: opts.recovery,
+            deaths_spent: 0,
+            recoveries: 0,
+            reshipped_bytes: 0,
         };
         if matches!(opts.transport, Transport::Pipe) {
             // socket hellos were consumed during accept; pipe hellos are
@@ -532,48 +641,139 @@ impl ProcessPool {
 
     /// Execute one round on every worker; returns per-machine replies (in
     /// machine order) plus the round's IPC stats.
+    ///
+    /// Under [`RecoveryPolicy::Requeue`], a worker death mid-round does
+    /// not abort: the dead worker's machines are adopted by survivors
+    /// (shards + store-replay reshipped, the in-flight task re-run for
+    /// just those machines) and the round completes with the same
+    /// per-machine replies a fault-free run produces.
     pub fn round(&mut self, task: &RoundTask) -> Result<(Vec<TaskReply>, RoundIpcStats)> {
+        // A pool that failed structurally in an earlier round stays
+        // failed: machines stranded on dead workers (fail policy,
+        // exhausted budget, lost last worker) can never answer, so keep
+        // surfacing the structured error instead of panicking on the
+        // missing replies.
+        let assigned: usize =
+            self.workers.iter().filter(|w| w.alive).map(|w| w.machines.len()).sum();
+        if assigned != self.n_machines {
+            let wi = self.workers.iter().position(|w| !w.alive).unwrap_or(0);
+            return Err(worker_error(wi, "worker is dead (earlier failure)"));
+        }
         let (out0, in0) = (self.bytes_out, self.bytes_in);
+        let (rec0, reship0) = (self.recoveries, self.reshipped_bytes);
         // one encode; every worker receives byte-identical frames.
         let payload = ToWorker::Round(task.clone()).encode();
-        for wi in 0..self.workers.len() {
-            self.send_payload(wi, &payload)?;
-        }
         let mut out: Vec<Option<TaskReply>> = (0..self.n_machines).map(|_| None).collect();
         let mut calls = (0u64, 0u64, 0u64);
+        // machines whose round result was lost to a worker death and must
+        // be re-placed (stays empty under the fail policy, which returns
+        // instead).
+        let mut orphans: Vec<usize> = Vec::new();
+
+        // --- broadcast ---------------------------------------------------
+        let mut awaiting: Vec<usize> = Vec::new();
         for wi in 0..self.workers.len() {
-            match self.recv(wi)? {
-                FromWorker::RoundDone { replies, calls: c } => {
-                    let hosted = self.workers[wi].machines.len();
-                    if replies.len() != hosted {
-                        return Err(self.mark_dead(
-                            wi,
-                            format!("returned {} replies for {hosted} machines", replies.len()),
-                        ));
-                    }
-                    if let Some(bad) =
-                        replies.iter().find(|r| !wire::reply_matches(task, r))
-                    {
-                        let msg = format!(
-                            "reply shape mismatch for {} task: {bad:?}",
-                            task.label()
-                        );
-                        return Err(self.mark_dead(wi, msg));
-                    }
+            if !self.workers[wi].alive {
+                continue; // died in an earlier round; hosts no machines.
+            }
+            match self.send_payload(wi, &payload) {
+                Ok(()) => awaiting.push(wi),
+                Err(e) => self.on_worker_death(wi, e, &mut orphans)?,
+            }
+        }
+
+        // --- join replies (worker order) ---------------------------------
+        for wi in awaiting {
+            let hosted = self.workers[wi].machines.len();
+            match self.recv_round_done(wi, task, hosted, self.timeout) {
+                Ok((replies, c)) => {
                     for (slot, reply) in replies.into_iter().enumerate() {
                         out[self.workers[wi].machines[slot]] = Some(reply);
                     }
-                    calls.0 += c.0;
-                    calls.1 += c.1;
-                    calls.2 += c.2;
+                    merge_calls(&mut calls, c);
                 }
-                FromWorker::Fail { message } => return Err(self.mark_dead(wi, message)),
-                other => {
-                    return Err(
-                        self.mark_dead(wi, format!("unexpected mid-round message: {other:?}"))
-                    )
+                Err(e) => self.on_worker_death(wi, e, &mut orphans)?,
+            }
+        }
+
+        // --- recovery: detect → re-queue → adopt → replay → re-run -------
+        // The adopter must replay the whole store-mutating history before
+        // answering, so its reply deadline scales with the replay length
+        // instead of misdiagnosing a long (legitimate) replay as a death.
+        let adoption_timeout = self.timeout.saturating_mul(self.history.len() as u32 + 2);
+        while !orphans.is_empty() {
+            let batch = std::mem::take(&mut orphans);
+            let assignment = self.assign_orphans(&batch)?;
+            let mut adopting: Vec<(usize, Vec<usize>)> = Vec::new();
+            for (wi, machines) in assignment {
+                let adopt = RoundTask::AdoptMachines {
+                    machines: machines.iter().map(|&m| m as u32).collect(),
+                    shards: machines.iter().map(|&m| self.shards[m].clone()).collect(),
+                    replay: self.history.clone(),
+                    pending: Box::new(task.clone()),
+                };
+                let adopt_payload = ToWorker::Round(adopt).encode();
+                if adopt_payload.len() > self.max_frame {
+                    // a coordinator-side sizing problem, not a worker
+                    // death: killing the healthy adopter here would
+                    // cascade the same oversized frame through every
+                    // survivor and burn the whole budget.
+                    return Err(worker_error(
+                        wi,
+                        format!(
+                            "adoption reship of {} machine(s) exceeds the max-frame \
+                             cap ({} > {} bytes) — raise max_frame_mb",
+                            machines.len(),
+                            adopt_payload.len(),
+                            self.max_frame
+                        ),
+                    ));
+                }
+                let frame = wire::frame_size(adopt_payload.len()) as u64;
+                match self.send_payload(wi, &adopt_payload) {
+                    Ok(()) => {
+                        self.reshipped_bytes += frame;
+                        adopting.push((wi, machines));
+                    }
+                    Err(e) => {
+                        // the adopter itself just died: the machines it was
+                        // about to adopt rejoin the orphans next to its own.
+                        orphans.extend(machines);
+                        self.on_worker_death(wi, e, &mut orphans)?;
+                    }
                 }
             }
+            for (wi, machines) in adopting {
+                // an adoption reply is shaped like the in-flight task
+                // ([`wire::reply_matches`] on `AdoptMachines` delegates to
+                // its pending), so validate directly against `task`.
+                match self.recv_round_done(wi, task, machines.len(), adoption_timeout) {
+                    Ok((replies, c)) => {
+                        for (slot, reply) in replies.into_iter().enumerate() {
+                            // a machine whose pre-death reply already
+                            // landed keeps it — determinism makes the
+                            // adopted re-run byte-identical anyway.
+                            let m = machines[slot];
+                            if out[m].is_none() {
+                                out[m] = Some(reply);
+                            }
+                        }
+                        merge_calls(&mut calls, c);
+                        self.workers[wi].machines.extend(machines);
+                    }
+                    Err(e) => {
+                        orphans.extend(machines);
+                        self.on_worker_death(wi, e, &mut orphans)?;
+                    }
+                }
+            }
+        }
+
+        if matches!(self.recovery, RecoveryPolicy::Requeue { .. }) && task.mutates_store() {
+            // completed rounds with machine-resident effects feed the
+            // replay history future adoptions rebuild state from (not
+            // tracked under the fail policy, which never adopts).
+            self.history.push(task.clone());
         }
         let replies: Vec<TaskReply> =
             out.into_iter().map(|r| r.expect("every machine is assigned a worker")).collect();
@@ -581,8 +781,102 @@ impl ProcessPool {
             bytes_out: self.bytes_out - out0,
             bytes_in: self.bytes_in - in0,
             calls,
+            recoveries: self.recoveries - rec0,
+            reshipped_bytes: self.reshipped_bytes - reship0,
         };
         Ok((replies, stats))
+    }
+
+    /// Collect one worker's `RoundDone` within `timeout`, validating the
+    /// reply count and each reply's shape against `shape` (the round task
+    /// the replies answer — for adoptions, the in-flight `pending` task).
+    fn recv_round_done(
+        &mut self,
+        wi: usize,
+        shape: &RoundTask,
+        expected: usize,
+        timeout: Duration,
+    ) -> Result<(Vec<TaskReply>, (u64, u64, u64))> {
+        match self.recv_within(wi, timeout)? {
+            FromWorker::RoundDone { replies, calls } => {
+                if replies.len() != expected {
+                    return Err(self.mark_dead(
+                        wi,
+                        format!("returned {} replies for {expected} machines", replies.len()),
+                    ));
+                }
+                if let Some(bad) = replies.iter().find(|r| !wire::reply_matches(shape, r)) {
+                    let msg = format!("reply shape mismatch for {} task: {bad:?}", shape.label());
+                    return Err(self.mark_dead(wi, msg));
+                }
+                Ok((replies, calls))
+            }
+            FromWorker::Fail { message } => Err(self.mark_dead(wi, message)),
+            other => {
+                Err(self.mark_dead(wi, format!("unexpected mid-round message: {other:?}")))
+            }
+        }
+    }
+
+    /// A worker failed mid-round (already marked dead by the send/recv
+    /// path). Under [`RecoveryPolicy::Fail`], propagate the structured
+    /// error; under [`RecoveryPolicy::Requeue`] with budget left, consume
+    /// one death and move the worker's machines onto the orphan list.
+    fn on_worker_death(&mut self, wi: usize, err: Error, orphans: &mut Vec<usize>) -> Result<()> {
+        match self.recovery {
+            RecoveryPolicy::Fail => Err(err),
+            RecoveryPolicy::Requeue { budget } => {
+                if self.deaths_spent >= budget {
+                    return Err(worker_error(
+                        wi,
+                        format!(
+                            "recovery budget exhausted \
+                             ({budget} worker death(s) already re-queued): {err}"
+                        ),
+                    ));
+                }
+                self.deaths_spent += 1;
+                self.recoveries += 1;
+                let machines = std::mem::take(&mut self.workers[wi].machines);
+                orphans.extend(machines);
+                Ok(())
+            }
+        }
+    }
+
+    /// Deterministically place orphaned machines on surviving workers:
+    /// each orphan goes to the currently least-loaded survivor (ties to
+    /// the lowest worker index). Errs structurally when no survivor is
+    /// left.
+    fn assign_orphans(&self, orphans: &[usize]) -> Result<Vec<(usize, Vec<usize>)>> {
+        let mut load: Vec<(usize, usize)> = self
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.alive)
+            .map(|(wi, w)| (wi, w.machines.len()))
+            .collect();
+        if load.is_empty() {
+            return Err(worker_error(
+                0,
+                format!(
+                    "no surviving workers to adopt {} re-queued machine(s) \
+                     (last worker died)",
+                    orphans.len()
+                ),
+            ));
+        }
+        let mut groups: Vec<(usize, Vec<usize>)> =
+            load.iter().map(|&(wi, _)| (wi, Vec::new())).collect();
+        for &m in orphans {
+            let pos = (0..load.len())
+                .min_by_key(|&i| (load[i].1, load[i].0))
+                .expect("nonempty survivor set");
+            load[pos].1 += 1;
+            groups[pos].1.push(m);
+        }
+        groups.retain(|(_, ms)| !ms.is_empty());
+        Ok(groups)
     }
 
     /// Fault injection (tests): kill worker `wi`'s OS process *without*
@@ -628,10 +922,16 @@ impl ProcessPool {
     }
 
     fn recv(&mut self, wi: usize) -> Result<FromWorker> {
+        self.recv_within(wi, self.timeout)
+    }
+
+    /// [`ProcessPool::recv`] with an explicit wait bound (adoption replies
+    /// get a replay-scaled deadline).
+    fn recv_within(&mut self, wi: usize, timeout: Duration) -> Result<FromWorker> {
         if !self.workers[wi].alive {
             return Err(worker_error(wi, "worker is dead (earlier failure)"));
         }
-        match self.workers[wi].rx.recv_timeout(self.timeout) {
+        match self.workers[wi].rx.recv_timeout(timeout) {
             Ok(Ok((payload, nbytes))) => {
                 self.bytes_in += nbytes as u64;
                 match FromWorker::decode(&payload) {
@@ -644,7 +944,7 @@ impl ProcessPool {
             }
             Ok(Err(e)) => Err(self.mark_dead(wi, format!("bad reply frame: {e}"))),
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                let ms = self.timeout.as_millis();
+                let ms = timeout.as_millis();
                 Err(self.mark_dead(wi, format!("no reply within {ms} ms (worker hung?)")))
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -725,10 +1025,141 @@ fn send_reply(w: &mut dyn Write, msg: &FromWorker, max_frame: usize) -> bool {
     wire::write_frame(w, &msg.encode(), max_frame).is_ok()
 }
 
+/// Parsed `MRSUB_FAULT` spec: `kind[:nth][@worker]` — e.g.
+/// `die-mid-round`, `die-mid-round:2`, `die-on-prune:2@1`. `nth`
+/// (default 1, 1-based) selects which occurrence of the triggering event
+/// fires the fault — `Round` frames for the round faults, pruning rounds
+/// for `die-on-prune`. `@worker` scopes the fault to one worker slot, so
+/// the recovery tests can kill a single worker out of a live pool while
+/// its siblings survive to adopt the orphaned machines.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Fault kind: `die-mid-round`, `hang-round`, `truncate-frame`,
+    /// `corrupt-checksum`, `bad-version`, `no-connect`, `die-on-prune`.
+    pub kind: String,
+    /// 1-based occurrence of the triggering event that fires the fault.
+    pub nth: u32,
+    /// Worker slot the fault applies to; `None` = every worker.
+    pub worker: Option<u32>,
+}
+
+impl FaultSpec {
+    /// Parse the `MRSUB_FAULT` syntax. Never fails: unknown kinds simply
+    /// never fire, and a malformed `@worker`/`:nth` part degrades to the
+    /// untargeted/first-occurrence default.
+    pub fn parse(s: &str) -> FaultSpec {
+        let (body, worker) = match s.rsplit_once('@') {
+            Some((b, w)) => (b, w.trim().parse().ok()),
+            None => (s, None),
+        };
+        let (kind, nth) = match body.rsplit_once(':') {
+            Some((k, n)) => match n.trim().parse::<u32>() {
+                Ok(n) => (k, n.max(1)),
+                Err(_) => (body, 1),
+            },
+            None => (body, 1),
+        };
+        FaultSpec { kind: kind.to_string(), nth, worker }
+    }
+
+    /// Whether this fault fires for worker slot `worker_id`.
+    pub fn applies_to(&self, worker_id: u32) -> bool {
+        self.worker.map_or(true, |w| w == worker_id)
+    }
+}
+
+/// Execute a round-scoped injected fault if it fires this round; returns
+/// the worker exit code to die with, `None` to proceed normally.
+fn fire_round_fault(
+    f: &FaultSpec,
+    task: &RoundTask,
+    rounds_seen: u32,
+    prunes_seen: u32,
+    w: &mut dyn Write,
+    max_frame: usize,
+) -> Option<i32> {
+    let fires = match f.kind.as_str() {
+        "die-mid-round" | "hang-round" | "truncate-frame" | "corrupt-checksum" => {
+            rounds_seen == f.nth
+        }
+        "die-on-prune" => task.contains_prune() && prunes_seen == f.nth,
+        _ => false,
+    };
+    if !fires {
+        return None;
+    }
+    match f.kind.as_str() {
+        // go silent: the coordinator's worker_timeout_ms must bound the
+        // wait and declare the worker dead.
+        "hang-round" => std::thread::sleep(Duration::from_secs(20)),
+        "truncate-frame" => {
+            let reply = FromWorker::RoundDone { replies: Vec::new(), calls: (0, 0, 0) };
+            let mut framed = Vec::new();
+            let _ = wire::write_frame(&mut framed, &reply.encode(), max_frame);
+            let half = framed.len() / 2;
+            let _ = w.write_all(&framed[..half]);
+            let _ = w.flush();
+        }
+        "corrupt-checksum" => {
+            let reply = FromWorker::RoundDone { replies: Vec::new(), calls: (0, 0, 0) };
+            let mut framed = Vec::new();
+            let _ = wire::write_frame(&mut framed, &reply.encode(), max_frame);
+            if let Some(last) = framed.last_mut() {
+                *last ^= 0xFF;
+            }
+            let _ = w.write_all(&framed);
+            let _ = w.flush();
+        }
+        // die-mid-round / die-on-prune: vanish without a reply — the
+        // coordinator sees a closed stream, like an OOM-killed worker.
+        _ => {}
+    }
+    Some(3)
+}
+
+/// Worker-side adoption ([`RoundTask::AdoptMachines`]): append the
+/// orphaned machines, rebuild their machine-resident state by replaying
+/// the store-mutating history — deterministic, because RNG streams key on
+/// *global* machine ids and every randomized task carries its seed — then
+/// run the in-flight `pending` task for just the adopted machines,
+/// returning one reply per adopted machine.
+fn adopt_machines(
+    rt: &mut WorkerRuntime,
+    machines: Vec<u32>,
+    shards: Vec<Vec<ElementId>>,
+    replay: Vec<RoundTask>,
+    pending: &RoundTask,
+) -> Vec<TaskReply> {
+    let n0 = rt.machines.len();
+    let adopted = machines.len();
+    rt.machines.extend(machines.iter().map(|&i| i as usize));
+    rt.shards.extend(shards);
+    rt.stores.extend(std::iter::repeat_with(GuessStore::default).take(adopted));
+    for t in &replay {
+        let _ = shard::run_task_all(
+            &rt.oracle,
+            &rt.shards[n0..],
+            &mut rt.stores[n0..],
+            &rt.machines[n0..],
+            t,
+            &crate::mapreduce::backend::Serial,
+        );
+    }
+    shard::run_task_all(
+        &rt.oracle,
+        &rt.shards[n0..],
+        &mut rt.stores[n0..],
+        &rt.machines[n0..],
+        pending,
+        &crate::mapreduce::backend::Serial,
+    )
+}
+
 /// The worker main loop over arbitrary streams (in-memory in unit tests,
 /// pipes or sockets in production). Sends the connect-time `Hello` (as
-/// worker slot `worker_id`), then serves frames until shutdown. Returns
-/// the process exit code.
+/// worker slot `worker_id`), then serves frames — including
+/// [`RoundTask::AdoptMachines`] adoptions from the elastic pool — until
+/// shutdown. Returns the process exit code.
 pub fn run_worker(
     r: &mut dyn Read,
     w: &mut dyn Write,
@@ -736,7 +1167,9 @@ pub fn run_worker(
     worker_id: u32,
     fault: Option<&str>,
 ) -> i32 {
-    let hello_version = if fault == Some("bad-version") {
+    let fault = fault.map(FaultSpec::parse).filter(|f| f.applies_to(worker_id));
+    let faulted = |kind: &str| fault.as_ref().is_some_and(|f| f.kind == kind);
+    let hello_version = if faulted("bad-version") {
         WIRE_VERSION.wrapping_add(1)
     } else {
         WIRE_VERSION
@@ -749,6 +1182,8 @@ pub fn run_worker(
         return 3;
     }
     let mut rt: Option<WorkerRuntime> = None;
+    let mut rounds_seen = 0u32;
+    let mut prunes_seen = 0u32;
     loop {
         let payload = match wire::read_frame(r, max_frame) {
             Ok((payload, _)) => payload,
@@ -783,7 +1218,7 @@ pub fn run_worker(
                         shards: init.shards,
                         stores: vec![GuessStore::default(); n],
                     });
-                    let version = if fault == Some("bad-version") {
+                    let version = if faulted("bad-version") {
                         WIRE_VERSION.wrapping_add(1)
                     } else {
                         WIRE_VERSION
@@ -802,39 +1237,15 @@ pub fn run_worker(
                 }
             },
             ToWorker::Round(task) => {
-                match fault {
-                    // vanish without a reply: the coordinator sees a
-                    // closed stream, exactly like an OOM-killed worker.
-                    Some("die-mid-round") => return 3,
-                    // go silent: the coordinator's worker_timeout_ms must
-                    // bound the wait and declare the worker dead.
-                    Some("hang-round") => {
-                        std::thread::sleep(Duration::from_secs(20));
-                        return 3;
+                rounds_seen += 1;
+                if task.contains_prune() {
+                    prunes_seen += 1;
+                }
+                if let Some(f) = &fault {
+                    let fired = fire_round_fault(f, &task, rounds_seen, prunes_seen, w, max_frame);
+                    if let Some(code) = fired {
+                        return code;
                     }
-                    Some("truncate-frame") => {
-                        let reply =
-                            FromWorker::RoundDone { replies: Vec::new(), calls: (0, 0, 0) };
-                        let mut framed = Vec::new();
-                        let _ = wire::write_frame(&mut framed, &reply.encode(), max_frame);
-                        let half = framed.len() / 2;
-                        let _ = w.write_all(&framed[..half]);
-                        let _ = w.flush();
-                        return 3;
-                    }
-                    Some("corrupt-checksum") => {
-                        let reply =
-                            FromWorker::RoundDone { replies: Vec::new(), calls: (0, 0, 0) };
-                        let mut framed = Vec::new();
-                        let _ = wire::write_frame(&mut framed, &reply.encode(), max_frame);
-                        if let Some(last) = framed.last_mut() {
-                            *last ^= 0xFF;
-                        }
-                        let _ = w.write_all(&framed);
-                        let _ = w.flush();
-                        return 3;
-                    }
-                    _ => {}
                 }
                 let Some(rt) = rt.as_mut() else {
                     send_reply(
@@ -845,14 +1256,19 @@ pub fn run_worker(
                     return 3;
                 };
                 let before = rt.counters.snapshot();
-                let replies = shard::run_task_all(
-                    &rt.oracle,
-                    &rt.shards,
-                    &mut rt.stores,
-                    &rt.machines,
-                    &task,
-                    &crate::mapreduce::backend::Serial,
-                );
+                let replies = match task {
+                    RoundTask::AdoptMachines { machines, shards, replay, pending } => {
+                        adopt_machines(rt, machines, shards, replay, &pending)
+                    }
+                    task => shard::run_task_all(
+                        &rt.oracle,
+                        &rt.shards,
+                        &mut rt.stores,
+                        &rt.machines,
+                        &task,
+                        &crate::mapreduce::backend::Serial,
+                    ),
+                };
                 let after = rt.counters.snapshot();
                 let calls = (
                     after.0.saturating_sub(before.0),
@@ -921,7 +1337,11 @@ pub fn worker_main(args: &[String]) -> i32 {
     }
     // fault: die before ever connecting — the coordinator's accept
     // deadline must degrade this into a structured connection error.
-    if fault.as_deref() == Some("no-connect") {
+    let no_connect = fault
+        .as_deref()
+        .map(FaultSpec::parse)
+        .is_some_and(|f| f.kind == "no-connect" && f.applies_to(worker_id));
+    if no_connect {
         return 3;
     }
     match endpoint {
@@ -1119,6 +1539,183 @@ mod tests {
             wire::read_frame(&mut cursor, DEFAULT_MAX_FRAME),
             Err(WireError::BadChecksum { .. })
         ));
+    }
+
+    #[test]
+    fn fault_spec_parses_kind_occurrence_and_target() {
+        let f = FaultSpec::parse("die-mid-round");
+        assert_eq!(f, FaultSpec { kind: "die-mid-round".into(), nth: 1, worker: None });
+        assert!(f.applies_to(0) && f.applies_to(7));
+
+        let f = FaultSpec::parse("die-mid-round:3");
+        assert_eq!(f.nth, 3);
+        let f = FaultSpec::parse("die-on-prune:2@1");
+        assert_eq!(f, FaultSpec { kind: "die-on-prune".into(), nth: 2, worker: Some(1) });
+        assert!(f.applies_to(1));
+        assert!(!f.applies_to(0));
+
+        // degenerate forms degrade instead of failing.
+        assert_eq!(FaultSpec::parse("hang-round:x").kind, "hang-round:x");
+        assert_eq!(FaultSpec::parse("no-connect@zzz").worker, None);
+        assert_eq!(FaultSpec::parse("truncate-frame:0").nth, 1);
+    }
+
+    #[test]
+    fn targeted_fault_spares_other_workers() {
+        let init = ToWorker::Init(WorkerInit {
+            spec: spec(),
+            machines: vec![0],
+            shards: vec![(0..60).collect()],
+            sample: vec![],
+        });
+        let round = ToWorker::Round(RoundTask::MaxSingleton);
+        let input = framed(&[init, round, ToWorker::Shutdown]);
+
+        // fault targets worker 1: worker 0 serves the round normally…
+        let mut out = Vec::new();
+        let code = run_worker(
+            &mut std::io::Cursor::new(input.clone()),
+            &mut out,
+            DEFAULT_MAX_FRAME,
+            0,
+            Some("die-mid-round@1"),
+        );
+        assert_eq!(code, 0, "untargeted worker must be unaffected");
+        assert_eq!(read_replies(&out).len(), 3, "Hello + Ready + RoundDone");
+
+        // …while worker 1 dies on the round frame without replying.
+        let mut out = Vec::new();
+        let code = run_worker(
+            &mut std::io::Cursor::new(input),
+            &mut out,
+            DEFAULT_MAX_FRAME,
+            1,
+            Some("die-mid-round@1"),
+        );
+        assert_ne!(code, 0);
+        assert_eq!(read_replies(&out).len(), 2, "Hello + Ready only");
+    }
+
+    #[test]
+    fn occurrence_counter_delays_the_fault() {
+        let init = ToWorker::Init(WorkerInit {
+            spec: spec(),
+            machines: vec![0],
+            shards: vec![(0..60).collect()],
+            sample: vec![],
+        });
+        let round = ToWorker::Round(RoundTask::MaxSingleton);
+        let input = framed(&[init, round.clone(), round, ToWorker::Shutdown]);
+        let mut out = Vec::new();
+        let code = run_worker(
+            &mut std::io::Cursor::new(input),
+            &mut out,
+            DEFAULT_MAX_FRAME,
+            0,
+            Some("die-mid-round:2"),
+        );
+        assert_ne!(code, 0);
+        // Hello + Ready + first RoundDone, then death on round 2.
+        assert_eq!(read_replies(&out).len(), 3);
+    }
+
+    #[test]
+    fn adoption_replay_matches_native_hosting() {
+        // A machine adopted mid-run (original shard + replayed history +
+        // re-run pending task) must be indistinguishable from a machine
+        // hosted since spawn — the bit-identity-under-recovery contract at
+        // the worker level.
+        let shard0: Vec<ElementId> = (0..30).collect();
+        let shard1: Vec<ElementId> = (30..60).collect();
+        let prune1 = RoundTask::PruneSample {
+            base: vec![],
+            floor: 0.1,
+            tau: 0.5,
+            per_share: 6,
+            seed: 17,
+            round: 1,
+        };
+        // the pending task reads the machine-resident pruned base, so it
+        // only matches if the replay rebuilt the store correctly.
+        let prune2 = RoundTask::PruneSample {
+            base: vec![2, 40],
+            floor: 0.3,
+            tau: 0.9,
+            per_share: 4,
+            seed: 23,
+            round: 2,
+        };
+
+        // reference: one worker hosts both machines from the start.
+        let input = framed(&[
+            ToWorker::Init(WorkerInit {
+                spec: spec(),
+                machines: vec![0, 1],
+                shards: vec![shard0.clone(), shard1.clone()],
+                sample: vec![],
+            }),
+            ToWorker::Round(prune1.clone()),
+            ToWorker::Round(prune2.clone()),
+            ToWorker::Shutdown,
+        ]);
+        let mut out = Vec::new();
+        assert_eq!(
+            run_worker(&mut std::io::Cursor::new(input), &mut out, DEFAULT_MAX_FRAME, 0, None),
+            0
+        );
+        let reference = read_replies(&out);
+        let FromWorker::RoundDone { replies: ref_round2, .. } = &reference[3] else {
+            panic!("expected the prune2 RoundDone, got {:?}", reference[3]);
+        };
+        let want_machine1 = ref_round2[1].clone();
+
+        // elastic: the worker hosts machine 0 only; machine 1 arrives by
+        // adoption, with prune1 in the replay and prune2 as pending.
+        let adopt = RoundTask::AdoptMachines {
+            machines: vec![1],
+            shards: vec![shard1],
+            replay: vec![prune1.clone()],
+            pending: Box::new(prune2),
+        };
+        let input = framed(&[
+            ToWorker::Init(WorkerInit {
+                spec: spec(),
+                machines: vec![0],
+                shards: vec![shard0],
+                sample: vec![],
+            }),
+            ToWorker::Round(prune1),
+            ToWorker::Round(adopt),
+            ToWorker::Shutdown,
+        ]);
+        let mut out = Vec::new();
+        assert_eq!(
+            run_worker(&mut std::io::Cursor::new(input), &mut out, DEFAULT_MAX_FRAME, 0, None),
+            0
+        );
+        let elastic = read_replies(&out);
+        let FromWorker::RoundDone { replies: adopt_replies, .. } = &elastic[3] else {
+            panic!("expected the adoption RoundDone, got {:?}", elastic[3]);
+        };
+        assert_eq!(adopt_replies.len(), 1, "one reply per adopted machine");
+        assert_eq!(
+            adopt_replies[0], want_machine1,
+            "adopted machine must reproduce the natively-hosted reply bit for bit"
+        );
+    }
+
+    #[test]
+    fn recovery_policy_parse_label_roundtrip() {
+        assert_eq!(RecoveryPolicy::parse("fail"), Some(RecoveryPolicy::Fail));
+        assert_eq!(RecoveryPolicy::parse("requeue"), Some(RecoveryPolicy::Requeue { budget: 1 }));
+        assert_eq!(RecoveryPolicy::parse("requeue:3"), Some(RecoveryPolicy::Requeue { budget: 3 }));
+        assert_eq!(RecoveryPolicy::parse("requeue:0"), None, "zero budget is spelled fail");
+        assert_eq!(RecoveryPolicy::parse("retry"), None);
+        assert_eq!(RecoveryPolicy::parse("requeue:-1"), None);
+        for p in [RecoveryPolicy::Fail, RecoveryPolicy::Requeue { budget: 7 }] {
+            assert_eq!(RecoveryPolicy::parse(&p.label()), Some(p));
+        }
+        assert_eq!(RecoveryPolicy::default(), RecoveryPolicy::Fail);
     }
 
     #[test]

@@ -154,6 +154,14 @@ pub fn prepare(oracle: &dyn Oracle, task: &RoundTask) -> Prepared {
                 round: *round,
             }
         }
+        RoundTask::AdoptMachines { pending, .. } => {
+            // Adoption is a pool-level control message, consumed by the
+            // process-backend worker loop before task dispatch; in-process
+            // machines cannot die, so the interpreter degrades it to its
+            // in-flight task rather than panicking.
+            debug_assert!(false, "AdoptMachines must not reach the shard interpreter");
+            prepare(oracle, pending)
+        }
     }
 }
 

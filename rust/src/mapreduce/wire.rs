@@ -44,7 +44,11 @@ use crate::oracle::spec::OracleSpec;
 /// socket transports, spoken on pipes too), plus the
 /// [`RoundTask::PruneSample`] / [`TaskReply::Pruned`] pair that moves
 /// Sample&Prune's pruning round worker-side.
-pub const WIRE_VERSION: u16 = 2;
+///
+/// v3: [`RoundTask::AdoptMachines`] — the elastic-pool recovery message
+/// that reships a dead worker's machines (shards + store-mutating replay
+/// history + the in-flight task) onto a surviving worker.
+pub const WIRE_VERSION: u16 = 3;
 
 /// Frame magic: "MRSB" (MapReduce-Submodular Backend).
 pub const FRAME_MAGIC: [u8; 4] = *b"MRSB";
@@ -475,6 +479,28 @@ pub enum RoundTask {
         /// Round index, part of the per-machine RNG stream id.
         round: u32,
     },
+    /// Elastic-pool recovery (process backend only): a surviving worker
+    /// adopts a dead worker's simulated machines. The worker appends the
+    /// machines with their *original* (spawn-time) shards, replays the
+    /// store-mutating task history in order — rebuilding the
+    /// machine-resident state (persistent `MultiFilter` shards, seeded
+    /// `PruneSample` pruned bases) deterministically, because every
+    /// randomized task carries its RNG seed and streams derive from
+    /// *global* machine ids — and then runs the in-flight `pending` task
+    /// for just the adopted machines, replying one `pending`-shaped
+    /// [`TaskReply`] per adopted machine. Never reaches the in-process
+    /// interpreter: in-process machines cannot die.
+    AdoptMachines {
+        /// Global ids of the machines being adopted, in adoption order.
+        machines: Vec<u32>,
+        /// One spawn-time shard per adopted machine (same order).
+        shards: Vec<Vec<ElementId>>,
+        /// Store-mutating tasks of all completed rounds, in round order
+        /// (see [`RoundTask::mutates_store`]); replayed effects-only.
+        replay: Vec<RoundTask>,
+        /// The in-flight round task, re-run for the adopted machines.
+        pending: Box<RoundTask>,
+    },
 }
 
 impl RoundTask {
@@ -523,6 +549,19 @@ impl RoundTask {
                 enc.u64(*seed);
                 enc.u32(*round);
             }
+            RoundTask::AdoptMachines { machines, shards, replay, pending } => {
+                enc.u8(8);
+                enc.ids(machines);
+                enc.u32(shards.len() as u32);
+                for s in shards {
+                    enc.ids(s);
+                }
+                enc.u32(replay.len() as u32);
+                for t in replay {
+                    t.encode(enc);
+                }
+                pending.encode(enc);
+            }
         }
     }
 
@@ -558,6 +597,31 @@ impl RoundTask {
                 seed: dec.u64()?,
                 round: dec.u32()?,
             },
+            8 => {
+                let machines = dec.ids()?;
+                let n = dec.u32()? as usize;
+                if n != machines.len() {
+                    return Err(WireError::Malformed(format!(
+                        "adopt: {n} shards for {} machines",
+                        machines.len()
+                    )));
+                }
+                let mut shards = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    shards.push(dec.ids()?);
+                }
+                let r = dec.u32()? as usize;
+                let mut replay = Vec::with_capacity(r.min(1024));
+                for _ in 0..r {
+                    replay.push(RoundTask::decode(dec)?);
+                }
+                RoundTask::AdoptMachines {
+                    machines,
+                    shards,
+                    replay,
+                    pending: Box::new(RoundTask::decode(dec)?),
+                }
+            }
             t => return Err(WireError::Malformed(format!("unknown RoundTask tag {t}"))),
         })
     }
@@ -572,6 +636,33 @@ impl RoundTask {
             RoundTask::TopSingletons { .. } => "top-singletons",
             RoundTask::Batch(_) => "batch",
             RoundTask::PruneSample { .. } => "prune-sample",
+            RoundTask::AdoptMachines { .. } => "adopt-machines",
+        }
+    }
+
+    /// True iff executing this task leaves machine-resident state behind
+    /// ([`crate::mapreduce::shard::GuessStore`]): persistent or dropping
+    /// `MultiFilter`s and the permanently-pruning `PruneSample`. The
+    /// elastic pool records exactly these into its replay history —
+    /// adopted machines rebuild their stores by re-running them in order.
+    pub fn mutates_store(&self) -> bool {
+        match self {
+            RoundTask::MultiFilter { persist, drop, .. } => *persist || !drop.is_empty(),
+            RoundTask::PruneSample { .. } => true,
+            RoundTask::Batch(tasks) => tasks.iter().any(RoundTask::mutates_store),
+            _ => false,
+        }
+    }
+
+    /// True iff this task performs a Sample&Prune pruning round (directly,
+    /// inside a `Batch`, or as the `pending` of an adoption) — the hook
+    /// the `die-on-prune` fault injection keys on.
+    pub fn contains_prune(&self) -> bool {
+        match self {
+            RoundTask::PruneSample { .. } => true,
+            RoundTask::Batch(tasks) => tasks.iter().any(RoundTask::contains_prune),
+            RoundTask::AdoptMachines { pending, .. } => pending.contains_prune(),
+            _ => false,
         }
     }
 }
@@ -592,6 +683,9 @@ pub fn reply_matches(task: &RoundTask, reply: &TaskReply) -> bool {
                 && tasks.iter().zip(replies).all(|(t, r)| reply_matches(t, r))
         }
         (RoundTask::PruneSample { .. }, TaskReply::Pruned { .. }) => true,
+        // an adoption reply carries the re-run in-flight task's results,
+        // one per adopted machine — each shaped like `pending`.
+        (RoundTask::AdoptMachines { pending, .. }, reply) => reply_matches(pending, reply),
         _ => false,
     }
 }
@@ -941,7 +1035,9 @@ mod tests {
     }
 
     fn arb_task(g: &mut Gen, depth: usize) -> RoundTask {
-        let hi = if depth == 0 { 8 } else { 7 };
+        // the two recursive variants (Batch, AdoptMachines) only at depth 0
+        // so generation terminates.
+        let hi = if depth == 0 { 9 } else { 7 };
         match g.usize_in(1, hi) {
             1 => RoundTask::Filter { base: arb_ids(g, 20), tau: g.f64_in(-3.0, 3.0) },
             2 => {
@@ -969,9 +1065,21 @@ mod tests {
                 seed: g.u64_in(1 << 40),
                 round: g.usize_in(0, 64) as u32,
             },
-            _ => {
+            7 => {
                 let n = g.usize_in(0, 4);
                 RoundTask::Batch((0..n).map(|_| arb_task(g, depth + 1)).collect())
+            }
+            _ => {
+                let n = g.usize_in(1, 4);
+                let machines: Vec<u32> = (0..n).map(|i| i as u32 * 3).collect();
+                let shards = (0..n).map(|_| arb_ids(g, 12)).collect();
+                let r = g.usize_in(0, 3);
+                RoundTask::AdoptMachines {
+                    machines,
+                    shards,
+                    replay: (0..r).map(|_| arb_task(g, depth + 1)).collect(),
+                    pending: Box::new(arb_task(g, depth + 1)),
+                }
             }
         }
     }
@@ -1103,6 +1211,64 @@ mod tests {
             Err(WireError::FrameTooLarge { len: 256, max: 64 }) => {}
             other => panic!("expected FrameTooLarge, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn adopt_machines_roundtrips_and_classifies() {
+        let prune = RoundTask::PruneSample {
+            base: vec![1, 2],
+            floor: 0.5,
+            tau: 1.0,
+            per_share: 4,
+            seed: 9,
+            round: 2,
+        };
+        let adopt = RoundTask::AdoptMachines {
+            machines: vec![3, 7],
+            shards: vec![vec![1, 2, 3], vec![4, 5]],
+            replay: vec![prune.clone()],
+            pending: Box::new(RoundTask::LocalGreedy { k: 5 }),
+        };
+        let mut enc = Enc::new();
+        adopt.encode(&mut enc);
+        let mut dec = Dec::new(&enc.buf);
+        assert_eq!(RoundTask::decode(&mut dec).unwrap(), adopt);
+        dec.finish().unwrap();
+
+        // store-mutation classification drives the replay history.
+        assert!(prune.mutates_store());
+        assert!(!RoundTask::LocalGreedy { k: 3 }.mutates_store());
+        assert!(!RoundTask::MaxSingleton.mutates_store());
+        assert!(RoundTask::Batch(vec![RoundTask::MaxSingleton, prune.clone()]).mutates_store());
+        assert!(!adopt.mutates_store(), "adoption itself is not replayed");
+        let mf = |persist: bool, drop: Vec<u32>| RoundTask::MultiFilter {
+            persist,
+            guesses: vec![],
+            drop,
+        };
+        assert!(mf(true, vec![]).mutates_store());
+        assert!(mf(false, vec![1]).mutates_store());
+        assert!(!mf(false, vec![]).mutates_store());
+
+        // prune detection descends into Batch and pending.
+        assert!(prune.contains_prune());
+        assert!(RoundTask::Batch(vec![RoundTask::MaxSingleton, prune.clone()]).contains_prune());
+        assert!(!adopt.contains_prune(), "pending is local-greedy here");
+        let adopt_prune = RoundTask::AdoptMachines {
+            machines: vec![0],
+            shards: vec![vec![]],
+            replay: vec![],
+            pending: Box::new(prune),
+        };
+        assert!(adopt_prune.contains_prune());
+
+        // an adoption reply is validated against its pending task's shape.
+        assert!(reply_matches(&adopt, &TaskReply::Ids(vec![1])));
+        assert!(!reply_matches(&adopt, &TaskReply::Scalar(1.0)));
+        assert!(reply_matches(
+            &adopt_prune,
+            &TaskReply::Pruned { shipped: vec![], fit: true, resident: 0 }
+        ));
     }
 
     #[test]

@@ -32,6 +32,12 @@ pub struct RoundStat {
     pub ipc_bytes_out: u64,
     /// Wire-frame bytes workers → coordinator this round.
     pub ipc_bytes_in: u64,
+    /// Worker deaths recovered from this round (elastic process backend
+    /// under `--recovery requeue:R`; 0 everywhere else).
+    pub recoveries: u64,
+    /// Frame bytes reshipped to surviving workers for machine adoption
+    /// this round (a subset of `ipc_bytes_out`).
+    pub reshipped_bytes: u64,
     /// Wall-clock time of the simulated round.
     pub wall: Duration,
 }
@@ -50,6 +56,8 @@ impl RoundStat {
             ("oracle_batches", Json::Num(self.oracle_batches as f64)),
             ("ipc_bytes_out", Json::Num(self.ipc_bytes_out as f64)),
             ("ipc_bytes_in", Json::Num(self.ipc_bytes_in as f64)),
+            ("recoveries", Json::Num(self.recoveries as f64)),
+            ("reshipped_bytes", Json::Num(self.reshipped_bytes as f64)),
             ("wall_us", Json::Num(self.wall.as_micros() as f64)),
         ])
     }
@@ -116,6 +124,17 @@ impl MrMetrics {
         )
     }
 
+    /// Total worker deaths recovered from across rounds (elastic process
+    /// backend under `requeue`; 0 for fault-free or in-process runs).
+    pub fn total_recoveries(&self) -> u64 {
+        self.rounds.iter().map(|r| r.recoveries).sum()
+    }
+
+    /// Total frame bytes reshipped for machine adoption across rounds.
+    pub fn total_reshipped_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.reshipped_bytes).sum()
+    }
+
     /// Total simulated wall time.
     pub fn total_wall(&self) -> Duration {
         self.rounds.iter().map(|r| r.wall).sum()
@@ -165,6 +184,8 @@ mod tests {
             oracle_batches: 2,
             ipc_bytes_out: 100,
             ipc_bytes_in: 50,
+            recoveries: 1,
+            reshipped_bytes: 40,
             wall: Duration::from_micros(100),
         }
     }
@@ -186,6 +207,8 @@ mod tests {
         assert_eq!(m.total_batched_calls(), 12);
         assert_eq!(m.total_oracle_batches(), 4);
         assert_eq!(m.total_ipc_bytes(), (200, 100));
+        assert_eq!(m.total_recoveries(), 2);
+        assert_eq!(m.total_reshipped_bytes(), 80);
         assert_eq!(m.total_wall(), Duration::from_micros(200));
         assert!(m.machine_budget() >= (1000f64 * 10.0).sqrt() as usize);
     }

@@ -19,6 +19,14 @@
 //! a panic — and must not poison subsequent clean runs. The matrix runs
 //! per transport.
 //!
+//! **Recovery half:** under `--recovery requeue:R` the same worker kills
+//! must instead be *absorbed* — orphaned machines re-queued onto
+//! survivors, machine-resident state replayed, the in-flight round
+//! re-run — with final selections still bit-identical to `Serial`
+//! ("kill ⇒ recover ⇒ identical output"), including kills that land
+//! mid-`PruneSample` and two sequential deaths. Exhausting the budget or
+//! losing the last worker stays a structured [`Error::Worker`].
+//!
 //! Process-count stability: run with `--test-threads=1` (the
 //! `./verify.sh conformance` mode) for deterministic worker-process
 //! lifecycles; the assertions themselves are scheduling-independent.
@@ -38,7 +46,7 @@ use mrsub::algorithms::two_round::TwoRoundKnownOpt;
 use mrsub::algorithms::MrAlgorithm;
 use mrsub::core::Error;
 use mrsub::mapreduce::backend::BackendKind;
-use mrsub::mapreduce::process::{PoolOptions, ProcessPool};
+use mrsub::mapreduce::process::{PoolOptions, ProcessPool, RecoveryPolicy};
 use mrsub::mapreduce::transport::Transport;
 use mrsub::mapreduce::wire::RoundTask;
 use mrsub::mapreduce::ClusterConfig;
@@ -309,10 +317,32 @@ fn pool_for_faults(
         workers: 2,
         transport,
         timeout: std::time::Duration::from_millis(timeout_ms),
+        connect_timeout: std::time::Duration::from_millis(timeout_ms),
         max_frame,
         exe: Some(worker_exe()),
         env,
+        ..PoolOptions::default()
     })
+}
+
+/// A 3-worker pool (one simulated machine each) under the given recovery
+/// policy — the fixture for the elastic-recovery matrix.
+fn recovery_pool(recovery: RecoveryPolicy, transport: Transport) -> ProcessPool {
+    let spec =
+        OracleSpec::Coverage { n: 120, universe: 80, avg_degree: 3, weighted: false, seed: 5 };
+    let shards: Vec<Vec<u32>> = vec![(0..40).collect(), (40..80).collect(), (80..120).collect()];
+    let sample: Vec<u32> = (0..120).step_by(7).collect();
+    ProcessPool::spawn(&spec, &shards, &sample, &PoolOptions {
+        workers: 3,
+        transport,
+        timeout: std::time::Duration::from_secs(60),
+        connect_timeout: std::time::Duration::from_secs(60),
+        max_frame: 64 << 20,
+        exe: Some(worker_exe()),
+        env: Vec::new(),
+        recovery,
+    })
+    .expect("clean spawn")
 }
 
 fn assert_worker_error<T: std::fmt::Debug>(res: mrsub::core::Result<T>, needle: &str) {
@@ -475,9 +505,11 @@ fn external_tcp_workers_join_by_hand() {
         workers: 2,
         transport: Transport::Tcp { bind: Some(addr) },
         timeout: std::time::Duration::from_secs(30),
+        connect_timeout: std::time::Duration::from_secs(30),
         max_frame: 64 << 20,
         exe: Some(worker_exe()),
         env: Vec::new(),
+        ..PoolOptions::default()
     });
     let mut pool = pool.expect("external workers must join the pool");
     assert_eq!(pool.workers(), 2);
@@ -488,6 +520,168 @@ fn external_tcp_workers_join_by_hand() {
     for child in &mut external {
         let code = child.wait().expect("external worker reaped");
         assert!(code.success(), "external worker must exit cleanly, got {code:?}");
+    }
+}
+
+// --- elastic recovery (requeue policy) --------------------------------------
+
+/// The recovery half of the fault matrix, end to end: a worker killed
+/// mid-run under `--recovery requeue:R` is **recovered from** — its
+/// machines are adopted by survivors (shards + store replay reshipped,
+/// the in-flight round re-run) and the final selections are bit-identical
+/// to `Serial`, on every transport. This upgrades the fault contract from
+/// "kill ⇒ structured error" to "kill ⇒ recover ⇒ identical output".
+#[test]
+fn killed_worker_recovers_bit_identical_on_every_transport() {
+    let k = 6;
+    let seed = 0xE1A5;
+    let inst = PlantedCoverageGen::dense(6, 300, 600).generate(seed);
+    // (algorithm, fault): RandGreeDi dies on its one typed round;
+    // multi-round guessing dies on its *second* typed round, after a
+    // persistent MultiFilter landed in the replay history.
+    let cases: Vec<(Box<dyn MrAlgorithm>, &str)> = vec![
+        (Box::new(RandGreeDi), "die-mid-round@1"),
+        (Box::new(MultiRound::guessing(2, 0.25)), "die-mid-round:2@1"),
+    ];
+    for (alg, fault) in cases {
+        let serial = alg.run(inst.oracle.as_ref(), k, &cfg(seed, BackendKind::Serial)).unwrap();
+        for transport in transports() {
+            let label = format!("{} [{}] {fault}", alg.name(), transport);
+            let mut pcfg = cfg(seed, process(3, transport));
+            pcfg.oracle_spec = inst.spec.clone();
+            pcfg.recovery = RecoveryPolicy::Requeue { budget: 2 };
+            pcfg.worker_env = vec![("MRSUB_FAULT".to_string(), fault.to_string())];
+            let run = alg.run(inst.oracle.as_ref(), k, &pcfg).unwrap_or_else(|e| {
+                panic!("[{label}] recovery must absorb the kill: {e}")
+            });
+            assert_eq!(
+                run.solution.elements, serial.solution.elements,
+                "[{label}] selections must survive recovery bit for bit"
+            );
+            assert_eq!(run.solution.value.to_bits(), serial.solution.value.to_bits());
+            assert_eq!(
+                run.metrics.total_recoveries(),
+                1,
+                "[{label}] exactly one worker death should be metered"
+            );
+            assert!(
+                run.metrics.total_reshipped_bytes() > 0,
+                "[{label}] adoption must reship shards over the wire"
+            );
+        }
+    }
+}
+
+/// Kill during a seeded `PruneSample` round — the hardest case: the dead
+/// worker held machine-resident *pruned* shards that never crossed the
+/// wire. Recovery must rebuild them by replaying the earlier pruning
+/// round (same seeds, same global machine ids) before re-running the
+/// in-flight one, and still match `Serial` exactly.
+#[test]
+fn kill_during_prune_sample_recovers_bit_identical() {
+    let k = 8;
+    let seed = 21;
+    let inst = CoverageGen::new(400, 200, 4).generate(seed);
+    let alg = SamplePrune::new(0.25);
+    let serial = alg.run(inst.oracle.as_ref(), k, &cfg(seed, BackendKind::Serial)).unwrap();
+    let prune_rounds =
+        serial.metrics.rounds.iter().filter(|r| r.name.ends_with("a:prune+sample")).count();
+    assert!(
+        prune_rounds >= 2,
+        "instance must run >= 2 pruning rounds so the kill lands after \
+         machine-resident state exists (got {prune_rounds})"
+    );
+
+    for transport in transports() {
+        let label = format!("process:3{}", transport.label_suffix());
+        let mut pcfg = cfg(seed, process(3, transport));
+        pcfg.oracle_spec = inst.spec.clone();
+        pcfg.recovery = RecoveryPolicy::Requeue { budget: 1 };
+        // worker 1 dies on its second pruning round: its pruned shards
+        // exist only in its memory and must be reconstructed by replay.
+        pcfg.worker_env = vec![("MRSUB_FAULT".to_string(), "die-on-prune:2@1".to_string())];
+        let run = alg
+            .run(inst.oracle.as_ref(), k, &pcfg)
+            .unwrap_or_else(|e| panic!("[{label}] recovery must absorb the kill: {e}"));
+        assert_eq!(
+            run.solution.elements, serial.solution.elements,
+            "[{label}] replayed pruned shards must reproduce the serial selections"
+        );
+        assert_eq!(run.solution.value.to_bits(), serial.solution.value.to_bits());
+        assert_eq!(run.metrics.total_recoveries(), 1, "[{label}]");
+        assert!(run.metrics.total_reshipped_bytes() > 0, "[{label}]");
+    }
+}
+
+/// Two sequential worker deaths in different rounds are both absorbed
+/// under `requeue:2`, with replies (including machine-resident prune
+/// state carried across the deaths) identical to an undisturbed pool.
+#[test]
+fn two_sequential_worker_deaths_recover_under_budget() {
+    let prune = |round: u32| RoundTask::PruneSample {
+        base: vec![3, 50],
+        floor: 0.1,
+        tau: 0.4,
+        per_share: 8,
+        seed: 77,
+        round,
+    };
+    for transport in transports() {
+        let label = transport.to_string();
+        let mut elastic = recovery_pool(RecoveryPolicy::Requeue { budget: 2 }, transport.clone());
+        let mut reference = recovery_pool(RecoveryPolicy::Fail, transport);
+
+        let (r1e, _) = elastic.round(&prune(1)).unwrap();
+        let (r1r, _) = reference.round(&prune(1)).unwrap();
+        assert_eq!(r1e, r1r, "[{label}] clean round agrees");
+
+        elastic.kill_worker(0);
+        let (r2e, s2) = elastic.round(&prune(2)).expect("first death recovered");
+        let (r2r, _) = reference.round(&prune(2)).unwrap();
+        assert_eq!(r2e, r2r, "[{label}] round 2 replies survive death #1");
+        assert_eq!(s2.recoveries, 1, "[{label}]");
+        assert!(s2.reshipped_bytes > 0, "[{label}]");
+
+        elastic.kill_worker(1);
+        let (r3e, s3) = elastic.round(&prune(3)).expect("second death recovered");
+        let (r3r, _) = reference.round(&prune(3)).unwrap();
+        assert_eq!(r3e, r3r, "[{label}] round 3 replies survive death #2");
+        assert_eq!(s3.recoveries, 1, "[{label}]");
+    }
+}
+
+/// Exhausting the `requeue:R` budget still fails structurally — the
+/// (R+1)-th death is an [`Error::Worker`] naming the exhausted budget.
+#[test]
+fn recovery_budget_exhaustion_is_a_structured_error() {
+    for transport in transports() {
+        let label = transport.to_string();
+        let mut pool = recovery_pool(RecoveryPolicy::Requeue { budget: 1 }, transport);
+        let (replies, _) = pool.round(&RoundTask::MaxSingleton).unwrap();
+        assert_eq!(replies.len(), 3, "[{label}]");
+        pool.kill_worker(0);
+        let (replies, stats) =
+            pool.round(&RoundTask::MaxSingleton).expect("first death is within budget");
+        assert_eq!(replies.len(), 3, "[{label}] recovered round still answers all machines");
+        assert_eq!(stats.recoveries, 1, "[{label}]");
+        pool.kill_worker(1);
+        assert_worker_error(pool.round(&RoundTask::MaxSingleton), "budget");
+        // a pool poisoned by the unrecovered failure stays a structured
+        // error on reuse — never a panic on the stranded machines.
+        assert_worker_error(pool.round(&RoundTask::MaxSingleton), "dead");
+    }
+}
+
+/// Losing the last worker is unrecoverable regardless of budget: there is
+/// nobody left to adopt the machines.
+#[test]
+fn last_worker_death_is_structured_even_under_requeue() {
+    for transport in transports() {
+        let mut pool = recovery_pool(RecoveryPolicy::Requeue { budget: 5 }, transport);
+        for wi in 0..3 {
+            pool.kill_worker(wi);
+        }
+        assert_worker_error(pool.round(&RoundTask::MaxSingleton), "surviving");
     }
 }
 

@@ -8,7 +8,10 @@
 //! 2. the committed fixture `tests/fixtures/bench_report_v2.json` is a
 //!    frozen example of the current schema, and this test deserializes it
 //!    and checks every required key — so a schema change forces a
-//!    deliberate fixture + version bump in the same commit.
+//!    deliberate fixture + version bump in the same commit;
+//! 3. `./verify.sh ci` generates a *fresh* smoke report and re-runs the
+//!    same validation on it via the `MRSUB_BENCH_REPORT` env var — so the
+//!    live report writer cannot drift from the committed schema either.
 
 use mrsub::coordinator::BENCH_SCHEMA_VERSION;
 use mrsub::util::json::Json;
@@ -19,30 +22,22 @@ fn require<'a>(obj: &'a Json, key: &str) -> &'a Json {
     obj.get(key).unwrap_or_else(|| panic!("report missing required key {key:?}"))
 }
 
-#[test]
-fn committed_fixture_matches_current_schema_version() {
-    let report = Json::parse(FIXTURE).expect("fixture must be valid JSON");
-    let version = require(&report, "schema_version")
+/// The one schema definition, applied to the committed fixture and to any
+/// freshly generated report (`MRSUB_BENCH_REPORT`).
+fn validate_report(report: &Json) {
+    let version = require(report, "schema_version")
         .as_usize()
         .expect("schema_version must be an integer");
     assert_eq!(
         version as u32, BENCH_SCHEMA_VERSION,
-        "fixture schema_version diverged from BENCH_SCHEMA_VERSION — \
+        "report schema_version diverged from BENCH_SCHEMA_VERSION — \
          bump both (and the fixture contents) together"
     );
-}
-
-#[test]
-fn fixture_carries_every_required_field() {
-    let report = Json::parse(FIXTURE).unwrap();
     for key in ["schema_version", "n", "k", "seed"] {
-        assert!(
-            require(&report, key).as_f64().is_some(),
-            "{key} must be numeric"
-        );
+        assert!(require(report, key).as_f64().is_some(), "{key} must be numeric");
     }
 
-    let Json::Arr(hotpath) = require(&report, "hotpath") else {
+    let Json::Arr(hotpath) = require(report, "hotpath") else {
         panic!("hotpath must be an array");
     };
     assert!(!hotpath.is_empty());
@@ -55,7 +50,7 @@ fn fixture_carries_every_required_field() {
         }
     }
 
-    let Json::Arr(cluster) = require(&report, "cluster") else {
+    let Json::Arr(cluster) = require(report, "cluster") else {
         panic!("cluster must be an array");
     };
     assert!(!cluster.is_empty());
@@ -93,6 +88,29 @@ fn fixture_carries_every_required_field() {
     }
     assert!(
         saw_process_row,
-        "fixture must exemplify a process-backend row (IPC overhead vs rayon)"
+        "report must exemplify a process-backend row (IPC overhead vs rayon)"
     );
+}
+
+#[test]
+fn committed_fixture_matches_current_schema() {
+    // version pin + required fields in one pass (validate_report leads
+    // with the schema_version assertion).
+    validate_report(&Json::parse(FIXTURE).expect("fixture must be valid JSON"));
+}
+
+/// CI hook: `./verify.sh ci` runs a small `mrsub bench` smoke and points
+/// `MRSUB_BENCH_REPORT` at the fresh report; the live writer must satisfy
+/// the exact schema the committed fixture freezes. A no-op (trivially
+/// green) when the env var is absent, so plain `cargo test` runs don't
+/// need a pre-built report.
+#[test]
+fn env_supplied_report_matches_committed_schema() {
+    let Some(path) = std::env::var_os("MRSUB_BENCH_REPORT") else {
+        return;
+    };
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+    let report = Json::parse(&text).expect("generated bench report must be valid JSON");
+    validate_report(&report);
 }

@@ -6,6 +6,11 @@
 #   ./verify.sh conformance  backend-conformance matrix, single-threaded
 #                            (stable worker-process counts for the
 #                            shared-nothing process backend)
+#   ./verify.sh ci           full (superset of fast) + conformance, then
+#                            an `mrsub bench` smoke whose JSON report is
+#                            validated against the committed bench-report
+#                            schema (written to BENCH_smoke.json — the CI
+#                            pipeline uploads it as an artifact)
 #
 # The default build is offline-clean (no crates.io deps, `xla` feature off).
 set -euo pipefail
@@ -16,11 +21,22 @@ mode="${1:-full}"
 # Fail if #[ignore]d tests silently accumulate: an ignored test is a
 # disabled assertion, and disabling one must be a visible, justified act.
 # Annotate the same line with `// ALLOW-IGNORE: <reason>` to allow one.
+#
+# Same discipline for #[allow(dead_code)] in the mapreduce layer: the
+# elastic-recovery machinery is easy to strand during refactors, and a
+# dead-code allow is exactly how stranded code hides. Justify one with
+# `// ALLOW-DEAD: <reason>` on the same line.
 check_ignores() {
     local found
     found=$(grep -rn '#\[ignore' rust/ examples/ 2>/dev/null | grep -v 'ALLOW-IGNORE' || true)
     if [ -n "$found" ]; then
         echo "verify: FAIL — #[ignore]d tests without an ALLOW-IGNORE justification:"
+        echo "$found"
+        exit 1
+    fi
+    found=$(grep -rn '#\[allow(dead_code' rust/src/mapreduce/ 2>/dev/null | grep -v 'ALLOW-DEAD' || true)
+    if [ -n "$found" ]; then
+        echo "verify: FAIL — #[allow(dead_code)] in rust/src/mapreduce/ without an ALLOW-DEAD justification:"
         echo "$found"
         exit 1
     fi
@@ -47,8 +63,24 @@ case "$mode" in
         # (lib.rs carries #![warn(missing_docs)]) fail the build.
         RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
         ;;
+    ci)
+        # `full` is a strict superset of `fast` (build + tests + lints),
+        # so ci = full + conformance + bench smoke.
+        "$0" full
+        "$0" conformance
+        # Bench smoke: tiny sizes, one oracle family, serial vs the
+        # shared-nothing process backend — enough to (a) keep the report
+        # schema honest against the committed fixture and (b) seed the
+        # BENCH_*.json perf trajectory as a per-commit CI artifact.
+        echo "verify: ci bench smoke"
+        ./target/release/mrsub bench --n 256 --k 8 --iters 2 \
+            --families coverage --backends serial,process:2 \
+            --sizes 300x6 --output BENCH_smoke.json
+        MRSUB_BENCH_REPORT="$PWD/BENCH_smoke.json" \
+            cargo test --test bench_report_schema
+        ;;
     *)
-        echo "usage: ./verify.sh [fast|conformance]" >&2
+        echo "usage: ./verify.sh [fast|conformance|ci]" >&2
         exit 2
         ;;
 esac
