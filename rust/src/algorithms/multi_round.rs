@@ -20,7 +20,7 @@
 use super::threshold::{merge_sorted, threshold_greedy};
 use super::{finish, AlgResult, MrAlgorithm};
 use crate::core::{threshold_bound, ElementId, Result, Solution};
-use crate::mapreduce::wire::{GuessFilter, RoundTask, TaskReply};
+use crate::mapreduce::wire::{GuessFilter, RoundTask};
 use crate::mapreduce::{ClusterConfig, MrCluster};
 use crate::oracle::{Oracle, OracleState};
 
@@ -101,9 +101,16 @@ impl MrAlgorithm for MultiRound {
                 // Extra initial round: global max singleton v => OPT ∈ [v, k·v].
                 // Typed shard round (block-marginal scan; worker-side on
                 // the process backend).
-                let maxes =
-                    cluster.shard_round("r0b:max-singleton", 0, oracle, &RoundTask::MaxSingleton)?;
-                let v = maxes.iter().map(TaskReply::as_scalar).fold(0.0f64, f64::max);
+                let mut v = 0.0f64;
+                cluster.shard_round_streamed(
+                    "r0b:max-singleton",
+                    cluster.sample().len()
+                        + cluster.shards().iter().map(Vec::len).max().unwrap_or(0),
+                    oracle,
+                    &RoundTask::MaxSingleton,
+                    // streamed merge: fold each machine's max as it arrives.
+                    &mut |_, reply| v = v.max(reply.as_scalar()),
+                )?;
                 if v <= 0.0 {
                     return Ok(AlgResult {
                         solution: Solution::empty(),
@@ -199,24 +206,37 @@ impl MrAlgorithm for MultiRound {
                     .collect(),
                 drop: drop_ids,
             };
-            let replies = cluster.shard_round_explicit(
+            let mut sent_total = 0usize;
+            let mut bad_id: Option<u32> = None;
+            let replies = cluster.shard_round_streamed(
                 &format!("r{l}a:sample-greedy+filter"),
                 max_resident,
                 oracle,
                 &task,
+                // streamed merge: survivor accounting and id validation run
+                // as each machine's reply arrives, overlapping workers
+                // still computing on the pipelined process join. The
+                // survivor vectors themselves are moved (not copied) out
+                // of the machine-ordered result below.
+                &mut |_, reply| {
+                    for (gi, filtered) in reply.as_multi() {
+                        if *gi as usize >= guesses.len() {
+                            bad_id = Some(*gi);
+                        }
+                        sent_total += filtered.len();
+                    }
+                },
             )?;
-            let mut sent_total = 0usize;
+            // ids cross a trust boundary on the process backend: an
+            // unknown id is a worker bug, surfaced structurally.
+            if let Some(gi) = bad_id {
+                return Err(crate::core::Error::Runtime(format!(
+                    "multi-filter reply carried unknown guess id {gi}"
+                )));
+            }
             for (i, reply) in replies.into_iter().enumerate() {
                 for (gi, filtered) in reply.into_multi() {
-                    // ids cross a trust boundary on the process backend:
-                    // an unknown id is a worker bug, surfaced structurally.
-                    let Some(guess) = guesses.get_mut(gi as usize) else {
-                        return Err(crate::core::Error::Runtime(format!(
-                            "multi-filter reply carried unknown guess id {gi}"
-                        )));
-                    };
-                    sent_total += filtered.len();
-                    guess.shards[i] = filtered;
+                    guesses[gi as usize].shards[i] = filtered;
                 }
             }
 

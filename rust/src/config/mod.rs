@@ -25,12 +25,15 @@
 //! [cluster]
 //! sample_factor = 4.0
 //! parallel = true          # legacy switch; superseded by `backend`
-//! backend = "rayon"        # serial | rayon | process:N[@pipe|@uds|@tcp[:addr]]
+//! backend = "rayon"        # serial | rayon |
+//!                          # process:N[@pipe|@uds|@uds+arena|@tcp[:addr]]
 //!                          # (execution substrate; @-suffix picks the
 //!                          # process-backend transport, pipe by default —
-//!                          # an explicit @tcp:HOST:PORT listens there and
+//!                          # @uds+arena adds zero-copy shard mapping, an
+//!                          # explicit @tcp:HOST:PORT listens there and
 //!                          # waits for external `mrsub worker --connect`s)
-//! chunk = 1                # rayon work-claim granularity
+//! chunk = 0                # rayon work-claim granularity; 0 = auto
+//!                          # (machines / (threads*4), clamped to 1..=64)
 //! worker_timeout_ms = 30000  # process backend: per-round reply bound
 //! connect_timeout_ms = 5000  # process backend: connection-establishment
 //!                          # bound (default min(worker_timeout_ms, 30s))
@@ -148,13 +151,13 @@ impl RunConfig {
             cluster.enforce_memory = opt_bool(t, "enforce_memory", false);
             cluster.parallel = opt_bool(t, "parallel", true);
             if let Some(name) = t.get("backend").and_then(|v| v.as_str()) {
-                let chunk = opt_usize(t, "chunk", 1);
-                cluster.backend = Some(BackendKind::parse(name, chunk).ok_or_else(|| {
-                    Error::Config(format!(
-                        "unknown backend {name:?} (serial | rayon | \
-                         process:N[@pipe|@uds|@tcp[:HOST:PORT]] with N >= 1)"
-                    ))
-                })?);
+                // chunk 0 = the auto work-claim heuristic (machines/threads);
+                // an explicit `chunk = N` stays an override.
+                let chunk = opt_usize(t, "chunk", 0);
+                cluster.backend = Some(
+                    BackendKind::parse(name, chunk)
+                        .map_err(|e| Error::Config(format!("[cluster]: {e}")))?,
+                );
             }
             if let Some(v) = t.get("worker_timeout_ms") {
                 let ms = v.as_u64().ok_or_else(|| {
@@ -556,10 +559,20 @@ mod tests {
         assert_eq!(cfg.cluster.backend, Some(BackendKind::Serial));
         let cfg = RunConfig::parse(&text("backend = \"rayon\"\nchunk = 4")).unwrap();
         assert_eq!(cfg.cluster.backend, Some(BackendKind::Rayon { chunk: 4 }));
+        // bare "rayon" without a chunk = the auto heuristic sentinel.
+        let cfg = RunConfig::parse(&text("backend = \"rayon\"")).unwrap();
+        assert_eq!(cfg.cluster.backend, Some(BackendKind::Rayon { chunk: 0 }));
         // explicit backend beats the legacy flag.
         let cfg = RunConfig::parse(&text("parallel = true\nbackend = \"serial\"")).unwrap();
         assert_eq!(cfg.cluster.backend_kind(), BackendKind::Serial);
-        assert!(RunConfig::parse(&text("backend = \"gpu\"")).is_err());
+        // unknown backends are structured errors naming the valid set.
+        match RunConfig::parse(&text("backend = \"gpu\"")) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("gpu"), "{msg}");
+                assert!(msg.contains("serial | rayon"), "{msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
     }
 
     #[test]
@@ -691,9 +704,22 @@ mod tests {
                 transport: Transport::Tcp { bind: Some("0.0.0.0:7070".into()) },
             })
         );
-        // unknown / malformed transports are config errors, not defaults.
-        assert!(RunConfig::parse(&text("backend = \"process:2@shm\"")).is_err());
+        let cfg = RunConfig::parse(&text("backend = \"process:2@uds+arena\"")).unwrap();
+        assert_eq!(
+            cfg.cluster.backend,
+            Some(BackendKind::Process { workers: 2, transport: Transport::UdsArena })
+        );
+        // unknown / malformed transports are config errors naming the
+        // valid transport set, not silent defaults.
+        match RunConfig::parse(&text("backend = \"process:2@shm\"")) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("shm"), "{msg}");
+                assert!(msg.contains("uds+arena"), "{msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
         assert!(RunConfig::parse(&text("backend = \"process:2@tcp:\"")).is_err());
+        assert!(RunConfig::parse(&text("backend = \"process:0@uds\"")).is_err());
     }
 
     #[test]
@@ -706,6 +732,7 @@ mod tests {
             BackendKind::Rayon { chunk: 4 },
             BackendKind::Process { workers: 2, transport: Transport::Pipe },
             BackendKind::Process { workers: 2, transport: Transport::Uds },
+            BackendKind::Process { workers: 2, transport: Transport::UdsArena },
             BackendKind::Process { workers: 3, transport: Transport::Tcp { bind: None } },
             BackendKind::Process {
                 workers: 3,

@@ -19,7 +19,7 @@ use crate::workload::Instance;
 /// (`"schema_version"`). Bump whenever a report field is added, removed,
 /// or changes meaning; `tests/bench_report_schema.rs` pins the committed
 /// fixture against this so report consumers cannot break silently.
-pub const BENCH_SCHEMA_VERSION: u32 = 2;
+pub const BENCH_SCHEMA_VERSION: u32 = 3;
 
 /// One algorithm × instance execution, fully accounted.
 #[derive(Debug, Clone)]
@@ -64,6 +64,9 @@ pub struct ExperimentRecord {
     pub recoveries: u64,
     /// Frame bytes reshipped to surviving workers for machine adoption.
     pub reshipped_bytes: u64,
+    /// Shard/sample payload bytes workers resolved from the mmap'd arena
+    /// instead of wire frames (`@uds+arena` runs; 0 on every wire path).
+    pub mapped_bytes: u64,
     /// End-to-end wall time (ms).
     pub wall_ms: f64,
     /// Full per-round metrics.
@@ -101,6 +104,7 @@ impl ExperimentRecord {
             ("ipc_bytes_in", Json::Num(self.ipc_bytes_in as f64)),
             ("recoveries", Json::Num(self.recoveries as f64)),
             ("reshipped_bytes", Json::Num(self.reshipped_bytes as f64)),
+            ("mapped_bytes", Json::Num(self.mapped_bytes as f64)),
             ("wall_ms", Json::Num(self.wall_ms)),
             ("metrics", self.metrics.to_json()),
         ])
@@ -143,6 +147,7 @@ pub fn run_experiment(
     let (ipc_bytes_out, ipc_bytes_in) = result.metrics.total_ipc_bytes();
     let recoveries = result.metrics.total_recoveries();
     let reshipped_bytes = result.metrics.total_reshipped_bytes();
+    let mapped_bytes = result.metrics.total_mapped_bytes();
 
     Ok(ExperimentRecord {
         algorithm: alg.name(),
@@ -164,6 +169,7 @@ pub fn run_experiment(
         ipc_bytes_in,
         recoveries,
         reshipped_bytes,
+        mapped_bytes,
         wall_ms,
         metrics: result.metrics,
     })
@@ -224,6 +230,173 @@ pub fn write_json(path: &str, records: &[ExperimentRecord]) -> Result<()> {
     let arr = Json::Arr(records.iter().map(ExperimentRecord::to_json).collect());
     std::fs::write(path, arr.to_string_pretty())
         .map_err(|e| crate::core::Error::Runtime(format!("write {path}: {e}")))
+}
+
+/// Outcome of comparing a fresh `mrsub bench` report against a committed
+/// baseline (`mrsub bench-diff`, `./verify.sh bench-diff`).
+#[derive(Debug, Clone)]
+pub struct BenchDiff {
+    /// Gated metrics that regressed beyond tolerance (human-readable,
+    /// one per metric × row).
+    pub regressions: Vec<String>,
+    /// Non-gating observations: rows present on one side only, improved
+    /// metrics, and the within-tolerance summary.
+    pub notes: Vec<String>,
+    /// The baseline declared itself `"provisional": true` — e.g. it was
+    /// hand-seeded before a machine-measured baseline existed — so
+    /// regressions are reported but do not gate.
+    pub provisional: bool,
+    /// Relative tolerance the comparison ran with.
+    pub tolerance: f64,
+}
+
+impl BenchDiff {
+    /// Whether this diff should fail a gate: at least one regression and
+    /// a non-provisional baseline.
+    pub fn failed(&self) -> bool {
+        !self.provisional && !self.regressions.is_empty()
+    }
+
+    /// JSON form (uploaded as a CI artifact).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("tolerance", Json::Num(self.tolerance)),
+            ("provisional", Json::Bool(self.provisional)),
+            ("failed", Json::Bool(self.failed())),
+            (
+                "regressions",
+                Json::Arr(self.regressions.iter().cloned().map(Json::Str).collect()),
+            ),
+            ("notes", Json::Arr(self.notes.iter().cloned().map(Json::Str).collect())),
+        ])
+    }
+
+    /// Render as the text block `bench-diff` prints.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "bench-diff (tolerance {:.0}%{}):\n",
+            self.tolerance * 100.0,
+            if self.provisional { ", baseline provisional — report-only" } else { "" }
+        ));
+        if self.regressions.is_empty() {
+            out.push_str("  no regressions beyond tolerance\n");
+        }
+        for r in &self.regressions {
+            out.push_str(&format!("  REGRESSION: {r}\n"));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+}
+
+/// Identity of a cluster-sweep row: the sweep axes, not the measurements.
+fn cluster_row_key(row: &Json) -> String {
+    let fam = row.get("family").and_then(Json::as_str).unwrap_or("?");
+    let backend = row.get("backend").and_then(Json::as_str).unwrap_or("?");
+    let n = row.get("n").and_then(Json::as_f64).unwrap_or(0.0);
+    let k = row.get("k").and_then(Json::as_f64).unwrap_or(0.0);
+    format!("{fam}/{backend}/n={n}/k={k}")
+}
+
+/// Per-round IPC bytes of a cluster row (out + in over compute rounds) —
+/// the deterministic communication gate; wall-clock is too noisy to gate
+/// across machines.
+fn row_ipc_per_round(row: &Json) -> Option<f64> {
+    let out = row.get("ipc_bytes_out")?.as_f64()?;
+    let inb = row.get("ipc_bytes_in")?.as_f64()?;
+    let rounds = row.get("rounds")?.as_f64()?;
+    if rounds <= 0.0 {
+        return None;
+    }
+    Some((out + inb) / rounds)
+}
+
+/// Compare a fresh bench report against a committed baseline.
+///
+/// Gates (each at relative `tolerance`, default 15% in the CLI):
+/// - **hotpath**: `batched_elems_per_s` per family must not drop;
+/// - **cluster**: per-round IPC bytes (`(out+in)/rounds`) per
+///   family × backend × size must not grow.
+///
+/// Rows are matched by identity axes; rows present on only one side are
+/// noted, not gated (families and backends are allowed to evolve). A
+/// baseline with `"provisional": true` reports but never fails —
+/// committing a hand-seeded baseline must not brick CI on machines with
+/// different absolute throughput.
+pub fn bench_diff(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
+    let provisional = matches!(baseline.get("provisional"), Some(Json::Bool(true)));
+    let mut diff = BenchDiff {
+        regressions: Vec::new(),
+        notes: Vec::new(),
+        provisional,
+        tolerance,
+    };
+
+    let rows = |report: &Json, key: &str| -> Vec<Json> {
+        match report.get(key) {
+            Some(Json::Arr(v)) => v.clone(),
+            _ => Vec::new(),
+        }
+    };
+
+    // hotpath: batched-marginal throughput per family must hold up.
+    let base_hot = rows(baseline, "hotpath");
+    let cur_hot = rows(current, "hotpath");
+    for b in &base_hot {
+        let fam = b.get("family").and_then(Json::as_str).unwrap_or("?").to_string();
+        let Some(c) = cur_hot
+            .iter()
+            .find(|c| c.get("family").and_then(Json::as_str) == Some(fam.as_str()))
+        else {
+            diff.notes.push(format!("hotpath family {fam:?} absent from current report"));
+            continue;
+        };
+        let (Some(bv), Some(cv)) = (
+            b.get("batched_elems_per_s").and_then(Json::as_f64),
+            c.get("batched_elems_per_s").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        if bv > 0.0 && cv < bv * (1.0 - tolerance) {
+            diff.regressions.push(format!(
+                "hotpath {fam}: batched throughput {cv:.3e} el/s is {:.1}% below baseline {bv:.3e}",
+                100.0 * (1.0 - cv / bv)
+            ));
+        } else if bv > 0.0 && cv > bv * (1.0 + tolerance) {
+            diff.notes.push(format!(
+                "hotpath {fam}: batched throughput improved {bv:.3e} -> {cv:.3e} el/s"
+            ));
+        }
+    }
+
+    // cluster: per-round IPC bytes per sweep point must not grow.
+    let base_cluster = rows(baseline, "cluster");
+    let cur_cluster = rows(current, "cluster");
+    for b in &base_cluster {
+        let key = cluster_row_key(b);
+        let Some(c) = cur_cluster.iter().find(|c| cluster_row_key(c) == key) else {
+            diff.notes.push(format!("cluster row {key} absent from current report"));
+            continue;
+        };
+        let (Some(bv), Some(cv)) = (row_ipc_per_round(b), row_ipc_per_round(c)) else {
+            continue;
+        };
+        if bv > 0.0 && cv > bv * (1.0 + tolerance) {
+            diff.regressions.push(format!(
+                "cluster {key}: per-round IPC {cv:.0} B is {:.1}% above baseline {bv:.0} B",
+                100.0 * (cv / bv - 1.0)
+            ));
+        } else if bv > 0.0 && cv < bv * (1.0 - tolerance) {
+            diff.notes.push(format!(
+                "cluster {key}: per-round IPC improved {bv:.0} -> {cv:.0} B"
+            ));
+        }
+    }
+
+    diff
 }
 
 #[cfg(test)]
@@ -301,6 +474,81 @@ mod tests {
         let json = rec.to_json();
         assert!(json.get("batched_oracle_calls").is_some());
         assert!(json.get("oracle_batches").is_some());
+    }
+
+    fn report(batched: f64, ipc_out: f64, provisional: bool) -> Json {
+        let mut fields = vec![
+            (
+                "hotpath",
+                Json::Arr(vec![Json::obj([
+                    ("family", Json::Str("coverage".into())),
+                    ("batched_elems_per_s", Json::Num(batched)),
+                ])]),
+            ),
+            (
+                "cluster",
+                Json::Arr(vec![Json::obj([
+                    ("family", Json::Str("coverage".into())),
+                    ("backend", Json::Str("process:2@uds".into())),
+                    ("n", Json::Num(8000.0)),
+                    ("k", Json::Num(20.0)),
+                    ("ipc_bytes_out", Json::Num(ipc_out)),
+                    ("ipc_bytes_in", Json::Num(1000.0)),
+                    ("rounds", Json::Num(2.0)),
+                ])]),
+            ),
+        ];
+        if provisional {
+            fields.push(("provisional", Json::Bool(true)));
+        }
+        Json::obj(fields)
+    }
+
+    #[test]
+    fn bench_diff_passes_within_tolerance() {
+        let base = report(1.0e8, 10_000.0, false);
+        let cur = report(0.95e8, 10_500.0, false);
+        let d = bench_diff(&base, &cur, 0.15);
+        assert!(!d.failed(), "{:?}", d.regressions);
+        assert!(d.regressions.is_empty());
+    }
+
+    #[test]
+    fn bench_diff_gates_throughput_drop_and_ipc_growth() {
+        let base = report(1.0e8, 10_000.0, false);
+        let cur = report(0.5e8, 20_000.0, false);
+        let d = bench_diff(&base, &cur, 0.15);
+        assert!(d.failed());
+        assert_eq!(d.regressions.len(), 2, "{:?}", d.regressions);
+        assert!(d.regressions[0].contains("batched throughput"));
+        assert!(d.regressions[1].contains("per-round IPC"));
+        // the artifact JSON round-trips.
+        let j = d.to_json();
+        assert!(Json::parse(&j.to_string_pretty()).is_ok());
+        assert!(d.render().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn bench_diff_provisional_baseline_reports_but_never_fails() {
+        let base = report(1.0e8, 10_000.0, true);
+        let cur = report(0.5e8, 20_000.0, false);
+        let d = bench_diff(&base, &cur, 0.15);
+        assert!(d.provisional);
+        assert!(!d.failed(), "provisional baselines must be report-only");
+        assert_eq!(d.regressions.len(), 2);
+        assert!(d.render().contains("report-only"));
+    }
+
+    #[test]
+    fn bench_diff_missing_rows_are_notes_not_gates() {
+        let base = report(1.0e8, 10_000.0, false);
+        let cur = Json::obj([
+            ("hotpath", Json::Arr(vec![])),
+            ("cluster", Json::Arr(vec![])),
+        ]);
+        let d = bench_diff(&base, &cur, 0.15);
+        assert!(!d.failed());
+        assert_eq!(d.notes.len(), 2, "{:?}", d.notes);
     }
 
     #[test]

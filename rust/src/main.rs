@@ -13,6 +13,10 @@
 //!                                  batched-vs-scalar hot path × families,
 //!                                  plus backend × family × (n,k) cluster
 //!                                  sweep; writes the JSON report
+//! mrsub bench-diff --baseline B.json --current C.json [--tolerance 0.15]
+//!                  [--output diff.json]
+//!                                  regression gate against a committed
+//!                                  baseline (throughput + per-round IPC)
 //! mrsub engine-check [--artifacts DIR]
 //!                                  PJRT artifacts + HLO-oracle cross-check
 //!                                  (requires the `xla` build feature)
@@ -33,7 +37,9 @@ use mrsub::algorithms::threshold::FILTER_BLOCK;
 use mrsub::algorithms::two_round::TwoRoundKnownOpt;
 use mrsub::algorithms::MrAlgorithm;
 use mrsub::config::{GreedyAlg, RunConfig};
-use mrsub::coordinator::{render_table, run_experiment, write_json, BENCH_SCHEMA_VERSION};
+use mrsub::coordinator::{
+    bench_diff, render_table, run_experiment, write_json, BENCH_SCHEMA_VERSION,
+};
 use mrsub::core::{threshold_bound, ElementId, Error, Result};
 use mrsub::mapreduce::backend::BackendKind;
 use mrsub::mapreduce::process::RecoveryPolicy;
@@ -90,18 +96,15 @@ impl Args {
 }
 
 /// Parse an optional `--backend serial|rayon|process:N[@transport]
-/// [--chunk N]` pair.
+/// [--chunk N]` pair. `--chunk 0` (the default) selects the rayon
+/// work-claim heuristic; unknown backends surface the parser's structured
+/// error naming the valid set.
 fn backend_flag(args: &Args) -> Result<Option<BackendKind>> {
     match args.get_str("backend") {
         None => Ok(None),
         Some(name) => {
-            let chunk = args.get("chunk", 1usize)?;
-            BackendKind::parse(name, chunk).map(Some).ok_or_else(|| {
-                cli_err(format!(
-                    "unknown backend {name:?} (serial | rayon | \
-                     process:N[@pipe|@uds|@tcp[:HOST:PORT]] with N >= 1)"
-                ))
-            })
+            let chunk = args.get("chunk", 0usize)?;
+            BackendKind::parse(name, chunk).map(Some).map_err(cli_err)
         }
     }
 }
@@ -132,17 +135,27 @@ fn apply_cluster_flags(args: &Args, cfg: &mut ClusterConfig) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|engine-check|worker> [--flag value]...
+const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff|engine-check|worker> [--flag value]...
   run           --config <file.toml>
-  demo          [--k 20] [--n 20000] [--seed 7] [--backend serial|rayon|process:N[@pipe|@uds|@tcp[:addr]]]
-                [--chunk 1] [--worker-timeout-ms 30000] [--connect-timeout-ms 30000]
+  demo          [--k 20] [--n 20000] [--seed 7]
+                [--backend serial|rayon|process:N[@pipe|@uds|@uds+arena|@tcp[:addr]]]
+                [--chunk 0 (auto)] [--worker-timeout-ms 30000] [--connect-timeout-ms 30000]
                 [--recovery fail|requeue[:R]] [--max-frame-mb 64]
+                (@uds+arena maps shards zero-copy via an fd-passed memfd;
+                falls back to the plain uds wire path off Linux or on
+                arena-build failure)
   sweep-t       [--t-max 6] [--k 20] [--seed 7]
   adversarial   [--t-max 5] [--k 60]
   bench         [--n 4096] [--k 32] [--seed 11]
                 [--families coverage,zipf,facility,cut,concave,modular,adversarial]
                 [--backends serial,rayon,process:4@uds] [--backend process:4]
                 [--sizes 8000x20,32000x40] [--output bench_report.json]
+  bench-diff    --baseline BENCH_baseline.json --current bench_report.json
+                [--tolerance 0.15] [--output bench_diff.json]
+                compares batched-marginal throughput and per-round IPC
+                bytes against the committed baseline; exits nonzero on a
+                regression beyond tolerance (report-only when the baseline
+                is marked \"provisional\": true)
   engine-check  [--artifacts <dir>]   (xla feature builds only)
   worker        [--connect HOST:PORT] [--connect-uds PATH] [--id N]
                 shared-nothing process-backend worker. Normally spawned by
@@ -181,6 +194,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "sweep-t" => cmd_sweep_t(args.get("t_max", 6)?, args.get("k", 20)?, args.get("seed", 7)?),
         "adversarial" => cmd_adversarial(args.get("t_max", 5)?, args.get("k", 60)?),
         "bench" => cmd_bench(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "engine-check" => cmd_engine_check(args.get_str("artifacts")),
         other => {
             eprintln!("{USAGE}");
@@ -373,11 +387,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .unwrap_or("serial,rayon");
     let backends: Vec<BackendKind> = backends_spec
         .split(',')
-        .map(|s| {
-            let chunk = 1;
-            BackendKind::parse(s.trim(), chunk)
-                .ok_or_else(|| cli_err(format!("unknown backend {s:?}")))
-        })
+        .map(|s| BackendKind::parse(s.trim(), 0).map_err(cli_err))
         .collect::<Result<_>>()?;
     if backends.len() < 2 {
         eprintln!("(note: pass >= 2 --backends for a cross-backend comparison)");
@@ -460,6 +470,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     ("oracle_batches", Json::Num(rec.oracle_batches as f64)),
                     ("ipc_bytes_out", Json::Num(rec.ipc_bytes_out as f64)),
                     ("ipc_bytes_in", Json::Num(rec.ipc_bytes_in as f64)),
+                    ("mapped_bytes", Json::Num(rec.mapped_bytes as f64)),
                     ("rounds", Json::Num(rec.rounds as f64)),
                 ]));
             }
@@ -477,6 +488,42 @@ fn cmd_bench(args: &Args) -> Result<()> {
     std::fs::write(&output, report.to_string_pretty())
         .map_err(|e| Error::Runtime(format!("write {output}: {e}")))?;
     println!("\nbench report written to {output}");
+    Ok(())
+}
+
+/// `mrsub bench-diff`: gate a fresh bench report against a committed
+/// baseline. Exits nonzero (via the returned error) when a gated metric
+/// regressed beyond tolerance and the baseline is not provisional.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let baseline_path =
+        args.get_str("baseline").ok_or_else(|| cli_err("bench-diff needs --baseline"))?;
+    let current_path =
+        args.get_str("current").ok_or_else(|| cli_err("bench-diff needs --current"))?;
+    let tolerance: f64 = args.get("tolerance", 0.15)?;
+    if !(0.0..1.0).contains(&tolerance) {
+        return Err(cli_err(format!("--tolerance {tolerance} out of bounds (0.0..1.0)")));
+    }
+    let read = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| cli_err(format!("read {path}: {e}")))?;
+        Json::parse(&text).map_err(|e| cli_err(format!("parse {path}: {e}")))
+    };
+    let baseline = read(baseline_path)?;
+    let current = read(current_path)?;
+    let diff = bench_diff(&baseline, &current, tolerance);
+    print!("{}", diff.render());
+    if let Some(out) = args.get_str("output") {
+        std::fs::write(out, diff.to_json().to_string_pretty())
+            .map_err(|e| Error::Runtime(format!("write {out}: {e}")))?;
+        println!("diff written to {out}");
+    }
+    if diff.failed() {
+        return Err(Error::Runtime(format!(
+            "bench-diff: {} regression(s) beyond {:.0}% tolerance",
+            diff.regressions.len(),
+            tolerance * 100.0
+        )));
+    }
     Ok(())
 }
 

@@ -1,0 +1,480 @@
+//! Zero-copy shard arena for same-host workers (`process:N@uds+arena`).
+//!
+//! The coordinator serializes every machine's spawn-time shard plus the
+//! broadcast sample **once** into an anonymous `memfd` region, then passes
+//! the file descriptor over the Unix-domain socket (`SCM_RIGHTS`) to each
+//! worker right after it connects. Workers `mmap` the region read-only and
+//! hand out `&'static [ElementId]` slices straight into the mapping — so
+//! `Init` and `AdoptMachines` stop reshipping shard bytes over the wire
+//! entirely (they carry machine *ids*; the data is already mapped). The
+//! elided bytes are metered separately as `mapped_bytes` in
+//! [`crate::mapreduce::process::RoundIpcStats`].
+//!
+//! Layout (little about it is clever on purpose — both sides are the same
+//! binary on the same host, so native-endian `u32` words are exact):
+//!
+//! ```text
+//! word 0   ARENA_MAGIC ("MRSA")
+//! word 1   ARENA_VERSION
+//! word 2   n_machines
+//! word 3   sample_off   (u32-word offset from file start)
+//! word 4   sample_len   (elements)
+//! word 5.. per-machine (off, len) pairs, machine id order, 2·n words
+//! ...      payload: sample ids, then each machine's shard ids
+//! ```
+//!
+//! Failure is never fatal to the pool: if the arena cannot be built or a
+//! descriptor cannot be passed, the coordinator transparently falls back
+//! to the ordinary wire path (shards inside `Init`), identical to plain
+//! `@uds`. A worker that was *told* the arena is active
+//! (`MRSUB_ARENA=1`) but cannot receive or validate the mapping fails
+//! structurally instead — a half-configured pool must not limp along.
+//!
+//! The worker-side mapping is intentionally leaked (`&'static`): it lives
+//! exactly as long as the worker process, and unmapping would invalidate
+//! shard slices held by the interpreter.
+
+use std::io;
+
+use crate::core::ElementId;
+
+/// First arena word: `"MRSA"` read as a native-endian u32 on x86-64.
+pub const ARENA_MAGIC: u32 = 0x4153_524D;
+
+/// Arena layout version; bump on any layout change (validated at map time).
+pub const ARENA_VERSION: u32 = 1;
+
+/// Header words before the per-machine table.
+const HEADER_WORDS: usize = 5;
+
+/// Serialize shards + sample into the word layout above.
+fn layout_words(shards: &[Vec<ElementId>], sample: &[ElementId]) -> Vec<u32> {
+    let table = 2 * shards.len();
+    let payload: usize = sample.len() + shards.iter().map(Vec::len).sum::<usize>();
+    let mut words = Vec::with_capacity(HEADER_WORDS + table + payload);
+    words.extend_from_slice(&[
+        ARENA_MAGIC,
+        ARENA_VERSION,
+        shards.len() as u32,
+        (HEADER_WORDS + table) as u32,
+        sample.len() as u32,
+    ]);
+    // machine table, then payload: sample first, shards in machine order.
+    let mut off = HEADER_WORDS + table + sample.len();
+    for s in shards {
+        words.push(off as u32);
+        words.push(s.len() as u32);
+        off += s.len();
+    }
+    words.extend_from_slice(sample);
+    for s in shards {
+        words.extend_from_slice(s);
+    }
+    words
+}
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::*;
+    use std::fs::File;
+    use std::io::{Seek, SeekFrom, Write};
+    use std::os::fd::{AsRawFd, FromRawFd, OwnedFd};
+    use std::os::unix::net::UnixStream;
+    use std::time::Duration;
+
+    // Hand-declared glibc symbols — the workspace is offline-clean (no
+    // libc crate). Layouts below are the x86-64/aarch64 Linux ABI.
+    const MFD_CLOEXEC: u32 = 1;
+    const PROT_READ: i32 = 1;
+    const MAP_SHARED: i32 = 1;
+    const SOL_SOCKET: i32 = 1;
+    const SCM_RIGHTS: i32 = 1;
+
+    #[repr(C)]
+    struct IoVec {
+        base: *mut u8,
+        len: usize,
+    }
+
+    /// `struct msghdr` (64-bit Linux): `msg_namelen` is 32-bit, so
+    /// `repr(C)` inserts the ABI's 4 pad bytes before `iov` itself.
+    #[repr(C)]
+    struct MsgHdr {
+        name: *mut u8,
+        namelen: u32,
+        iov: *mut IoVec,
+        iovlen: usize,
+        control: *mut u8,
+        controllen: usize,
+        flags: i32,
+    }
+
+    /// One-fd control message: `cmsghdr` (16 bytes on 64-bit) + the fd,
+    /// padded to the 8-byte cmsg alignment (CMSG_SPACE(4) = 24).
+    #[repr(C, align(8))]
+    struct CmsgOneFd {
+        len: usize, // CMSG_LEN(4) = 20
+        level: i32,
+        ty: i32,
+        fd: i32,
+        _pad: i32,
+    }
+
+    extern "C" {
+        fn memfd_create(name: *const u8, flags: u32) -> i32;
+        fn mmap(addr: *mut u8, len: usize, prot: i32, flags: i32, fd: i32, off: i64) -> *mut u8;
+        fn sendmsg(fd: i32, msg: *const MsgHdr, flags: i32) -> isize;
+        fn recvmsg(fd: i32, msg: *mut MsgHdr, flags: i32) -> isize;
+    }
+
+    /// Coordinator-side arena: an anonymous memfd holding every machine's
+    /// spawn shard plus the broadcast sample. Kept open for the pool's
+    /// lifetime; each worker gets a duplicated descriptor via
+    /// [`Arena::send_fd`].
+    pub struct Arena {
+        file: File,
+        payload_words: usize,
+    }
+
+    impl Arena {
+        /// Build the arena region. Any failure here is reported as a plain
+        /// I/O error; callers fall back to the wire path.
+        pub fn build(shards: &[Vec<ElementId>], sample: &[ElementId]) -> io::Result<Arena> {
+            let raw = unsafe { memfd_create(b"mrsub-arena\0".as_ptr(), MFD_CLOEXEC) };
+            if raw < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            // SAFETY: memfd_create returned a fresh descriptor we own.
+            let mut file = unsafe { File::from_raw_fd(raw) };
+            let words = layout_words(shards, sample);
+            let payload_words: usize = sample.len() + shards.iter().map(Vec::len).sum::<usize>();
+            let mut bytes = Vec::with_capacity(words.len() * 4);
+            for w in &words {
+                bytes.extend_from_slice(&w.to_ne_bytes());
+            }
+            file.write_all(&bytes)?;
+            file.flush()?;
+            Ok(Arena { file, payload_words })
+        }
+
+        /// Elements (shard + sample ids) stored in the region — the data a
+        /// wire `Init` would otherwise reship to every worker.
+        pub fn payload_words(&self) -> usize {
+            self.payload_words
+        }
+
+        /// Pass the arena descriptor over `stream` (`SCM_RIGHTS` with a
+        /// 1-byte carrier, the first coordinator→worker byte on the
+        /// socket — sent before any wire frame is queued).
+        pub fn send_fd(&self, stream: &UnixStream) -> io::Result<()> {
+            let mut carrier = [b'A'];
+            let mut iov = IoVec { base: carrier.as_mut_ptr(), len: 1 };
+            let mut cmsg = CmsgOneFd {
+                len: std::mem::size_of::<usize>() + 8 + 4, // CMSG_LEN(4)
+                level: SOL_SOCKET,
+                ty: SCM_RIGHTS,
+                fd: self.file.as_raw_fd(),
+                _pad: 0,
+            };
+            let msg = MsgHdr {
+                name: std::ptr::null_mut(),
+                namelen: 0,
+                iov: &mut iov,
+                iovlen: 1,
+                control: (&mut cmsg as *mut CmsgOneFd).cast(),
+                controllen: std::mem::size_of::<CmsgOneFd>(),
+                flags: 0,
+            };
+            // SAFETY: every pointer in `msg` outlives the call.
+            let sent = unsafe { sendmsg(stream.as_raw_fd(), &msg, 0) };
+            if sent != 1 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+    }
+
+    /// Worker side: receive the arena descriptor (the 1-byte
+    /// `SCM_RIGHTS` carrier is the first byte the coordinator sends on an
+    /// arena-mode socket). `timeout` bounds the wait.
+    pub fn recv_fd(stream: &UnixStream, timeout: Duration) -> io::Result<OwnedFd> {
+        let old = stream.read_timeout()?;
+        stream.set_read_timeout(Some(timeout))?;
+        let res = recv_fd_inner(stream);
+        stream.set_read_timeout(old)?;
+        res
+    }
+
+    fn recv_fd_inner(stream: &UnixStream) -> io::Result<OwnedFd> {
+        let mut carrier = [0u8; 1];
+        let mut iov = IoVec { base: carrier.as_mut_ptr(), len: 1 };
+        let mut cmsg = CmsgOneFd {
+            len: 0,
+            level: 0,
+            ty: 0,
+            fd: -1,
+            _pad: 0,
+        };
+        let mut msg = MsgHdr {
+            name: std::ptr::null_mut(),
+            namelen: 0,
+            iov: &mut iov,
+            iovlen: 1,
+            control: (&mut cmsg as *mut CmsgOneFd).cast(),
+            controllen: std::mem::size_of::<CmsgOneFd>(),
+            flags: 0,
+        };
+        // SAFETY: every pointer in `msg` outlives the call.
+        let got = unsafe { recvmsg(stream.as_raw_fd(), &mut msg, 0) };
+        if got != 1 {
+            return Err(io::Error::last_os_error());
+        }
+        let min_len = std::mem::size_of::<usize>() + 8 + 4;
+        if cmsg.len < min_len || cmsg.level != SOL_SOCKET || cmsg.ty != SCM_RIGHTS || cmsg.fd < 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "arena handshake carried no SCM_RIGHTS descriptor",
+            ));
+        }
+        // SAFETY: the kernel installed a fresh descriptor for this process.
+        Ok(unsafe { OwnedFd::from_raw_fd(cmsg.fd) })
+    }
+
+    /// A validated read-only view of a mapped arena. `Copy` because the
+    /// mapping is leaked for the process lifetime — slices are `'static`.
+    #[derive(Clone, Copy, Debug)]
+    pub struct ArenaMap {
+        words: &'static [u32],
+        n_machines: usize,
+    }
+
+    impl ArenaMap {
+        /// `mmap` the received descriptor and validate the layout. The
+        /// mapping (and the descriptor's `File`) are leaked on success.
+        pub fn from_fd(fd: OwnedFd) -> io::Result<ArenaMap> {
+            let mut file = File::from(fd);
+            let bytes = file.seek(SeekFrom::End(0))? as usize;
+            if bytes < HEADER_WORDS * 4 || bytes % 4 != 0 {
+                return Err(bad_arena("region smaller than the arena header"));
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), bytes, PROT_READ, MAP_SHARED, file.as_raw_fd(), 0)
+            };
+            if ptr.is_null() || ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            // SAFETY: the mapping is page-aligned (so u32-aligned), `bytes`
+            // long, read-only, and never unmapped (leaked below).
+            let words: &'static [u32] =
+                unsafe { std::slice::from_raw_parts(ptr.cast::<u32>(), bytes / 4) };
+            std::mem::forget(file); // keep the fd so the memfd outlives us
+            let map = ArenaMap { words, n_machines: words[2] as usize };
+            map.validate()?;
+            Ok(map)
+        }
+
+        fn validate(&self) -> io::Result<()> {
+            let w = self.words;
+            if w[0] != ARENA_MAGIC {
+                return Err(bad_arena("bad arena magic"));
+            }
+            if w[1] != ARENA_VERSION {
+                return Err(bad_arena("arena layout version mismatch"));
+            }
+            let table_end = HEADER_WORDS + 2 * self.n_machines;
+            if table_end > w.len() {
+                return Err(bad_arena("machine table exceeds the region"));
+            }
+            let span = |off: u32, len: u32| {
+                let (off, len) = (off as usize, len as usize);
+                off >= table_end && off.checked_add(len).is_some_and(|end| end <= w.len())
+            };
+            if !span(w[3], w[4]) {
+                return Err(bad_arena("sample span exceeds the region"));
+            }
+            for m in 0..self.n_machines {
+                let at = HEADER_WORDS + 2 * m;
+                if !span(w[at], w[at + 1]) {
+                    return Err(bad_arena("shard span exceeds the region"));
+                }
+            }
+            Ok(())
+        }
+
+        /// Spawn-time shard of global machine `machine`; `None` when the
+        /// id is out of range (a coordinator bug surfaced structurally).
+        pub fn shard(&self, machine: u32) -> Option<&'static [ElementId]> {
+            let m = machine as usize;
+            if m >= self.n_machines {
+                return None;
+            }
+            let at = HEADER_WORDS + 2 * m;
+            let (off, len) = (self.words[at] as usize, self.words[at + 1] as usize);
+            Some(&self.words[off..off + len])
+        }
+
+        /// The broadcast sample `S`.
+        pub fn sample(&self) -> &'static [ElementId] {
+            let (off, len) = (self.words[3] as usize, self.words[4] as usize);
+            &self.words[off..off + len]
+        }
+
+        /// Number of machines the arena carries shards for.
+        pub fn machines(&self) -> usize {
+            self.n_machines
+        }
+    }
+
+    fn bad_arena(msg: &str) -> io::Error {
+        io::Error::new(io::ErrorKind::InvalidData, format!("arena map: {msg}"))
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod imp {
+    //! Portable facade: every entry point reports `Unsupported`, so the
+    //! pool's transparent wire-path fallback engages and `@uds+arena`
+    //! degrades to plain `@uds` semantics off Linux.
+    use super::*;
+    use std::os::fd::OwnedFd;
+    use std::os::unix::net::UnixStream;
+    use std::time::Duration;
+
+    fn unsupported() -> io::Error {
+        io::Error::new(io::ErrorKind::Unsupported, "shard arena requires Linux memfd")
+    }
+
+    /// Coordinator-side arena (unsupported on this platform).
+    pub struct Arena;
+
+    impl Arena {
+        /// Always fails off Linux; the pool falls back to the wire path.
+        pub fn build(_shards: &[Vec<ElementId>], _sample: &[ElementId]) -> io::Result<Arena> {
+            Err(unsupported())
+        }
+
+        /// Unreachable off Linux (no `Arena` value can be built).
+        pub fn payload_words(&self) -> usize {
+            0
+        }
+
+        /// Unreachable off Linux (no `Arena` value can be built).
+        pub fn send_fd(&self, _stream: &UnixStream) -> io::Result<()> {
+            Err(unsupported())
+        }
+    }
+
+    /// Worker side (unsupported on this platform).
+    pub fn recv_fd(_stream: &UnixStream, _timeout: Duration) -> io::Result<OwnedFd> {
+        Err(unsupported())
+    }
+
+    /// Mapped-arena view (unsupported on this platform).
+    #[derive(Clone, Copy, Debug)]
+    pub struct ArenaMap;
+
+    impl ArenaMap {
+        /// Always fails off Linux.
+        pub fn from_fd(_fd: OwnedFd) -> io::Result<ArenaMap> {
+            Err(unsupported())
+        }
+
+        /// Unreachable off Linux (no `ArenaMap` value can be built).
+        pub fn shard(&self, _machine: u32) -> Option<&'static [ElementId]> {
+            None
+        }
+
+        /// Unreachable off Linux (no `ArenaMap` value can be built).
+        pub fn sample(&self) -> &'static [ElementId] {
+            &[]
+        }
+
+        /// Unreachable off Linux (no `ArenaMap` value can be built).
+        pub fn machines(&self) -> usize {
+            0
+        }
+    }
+}
+
+pub use imp::{recv_fd, Arena, ArenaMap};
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use std::os::unix::net::UnixStream;
+    use std::time::Duration;
+
+    #[test]
+    fn build_pass_map_roundtrip() {
+        let shards = vec![vec![1u32, 5, 9], vec![], vec![2, 4, 6, 8]];
+        let sample = vec![3u32, 7];
+        let arena = Arena::build(&shards, &sample).expect("memfd arena");
+        assert_eq!(arena.payload_words(), 9, "3 + 0 + 4 shard ids plus 2 sample ids");
+
+        let (coord, worker) = UnixStream::pair().unwrap();
+        arena.send_fd(&coord).expect("sendmsg");
+        let fd = recv_fd(&worker, Duration::from_secs(5)).expect("recvmsg");
+        let map = ArenaMap::from_fd(fd).expect("map + validate");
+
+        assert_eq!(map.machines(), 3);
+        assert_eq!(map.sample(), &sample[..]);
+        for (i, shard) in shards.iter().enumerate() {
+            assert_eq!(map.shard(i as u32), Some(&shard[..]), "machine {i}");
+        }
+        assert_eq!(map.shard(3), None, "out-of-range machine id");
+    }
+
+    #[test]
+    fn arena_outlives_coordinator_side_drop() {
+        // the worker's mapping must stay valid after the coordinator
+        // closes its descriptor (memfd is refcounted by open fds + maps).
+        let shards = vec![vec![10u32, 20, 30]];
+        let arena = Arena::build(&shards, &[42]).unwrap();
+        let (coord, worker) = UnixStream::pair().unwrap();
+        arena.send_fd(&coord).unwrap();
+        drop(arena);
+        drop(coord);
+        let fd = recv_fd(&worker, Duration::from_secs(5)).unwrap();
+        let map = ArenaMap::from_fd(fd).unwrap();
+        assert_eq!(map.shard(0), Some(&[10u32, 20, 30][..]));
+        assert_eq!(map.sample(), &[42u32]);
+    }
+
+    #[test]
+    fn garbage_region_is_rejected_not_trusted() {
+        // a plain temp file mmaps fine, but fails arena validation: wrong
+        // magic, then truncated spans.
+        use std::io::Write;
+        use std::os::fd::OwnedFd;
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("mrsub-arena-garbage-{}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&[0u8; 64]).unwrap();
+        let f = std::fs::File::open(&path).unwrap();
+        let err = ArenaMap::from_fd(OwnedFd::from(f)).unwrap_err();
+        assert!(err.to_string().contains("arena"), "{err}");
+
+        // header claims a shard span far past the end of the region.
+        let mut words: Vec<u32> = vec![ARENA_MAGIC, ARENA_VERSION, 1, 7, 0, 1 << 20, 8];
+        let mut bytes = Vec::new();
+        for w in words.drain(..) {
+            bytes.extend_from_slice(&w.to_ne_bytes());
+        }
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&bytes).unwrap();
+        let f = std::fs::File::open(&path).unwrap();
+        let err = ArenaMap::from_fd(OwnedFd::from(f)).unwrap_err();
+        assert!(err.to_string().contains("span"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recv_fd_times_out_without_a_sender() {
+        let (_coord, worker) = UnixStream::pair().unwrap();
+        let err = recv_fd(&worker, Duration::from_millis(50)).unwrap_err();
+        assert!(
+            matches!(err.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut),
+            "{err:?}"
+        );
+    }
+}

@@ -68,13 +68,15 @@ impl ExecBackend for Serial {
 /// Persistent-thread-pool execution with `chunk`-granular work claiming.
 #[derive(Debug, Clone, Copy)]
 pub struct Rayon {
-    /// Indices claimed per atomic cursor bump (>= 1). 1 = max balancing.
+    /// Indices claimed per atomic cursor bump. `0` = auto: derive the
+    /// chunk from the machine count and the pool width per round (see
+    /// [`auto_chunk`]). Explicit `chunk=N` (N ≥ 1) pins it.
     pub chunk: usize,
 }
 
 impl Default for Rayon {
     fn default() -> Self {
-        Rayon { chunk: 1 }
+        Rayon { chunk: 0 }
     }
 }
 
@@ -84,8 +86,20 @@ impl ExecBackend for Rayon {
     }
 
     fn for_each(&self, n: usize, work: &(dyn Fn(usize) + Sync)) {
-        pool::run_indexed(n, self.chunk, work);
+        let chunk = if self.chunk == 0 { auto_chunk(n) } else { self.chunk };
+        pool::run_indexed(n, chunk, work);
     }
+}
+
+/// The auto work-claim chunk for an `n`-machine round: one cursor bump
+/// per ~4 claims per thread, clamped to `[1, 64]`. The bench sweeps show
+/// chunk=1 is right up to a few machines per thread (per-machine oracle
+/// work dwarfs the dispatch), while many cheap machines per thread want
+/// coarser claims to amortize the atomic cursor; 4 claims/thread keeps
+/// enough slack for load balancing on skewed shards.
+pub fn auto_chunk(n: usize) -> usize {
+    let threads = pool::num_threads().max(1);
+    (n / (threads * 4)).clamp(1, 64)
 }
 
 /// Control-plane stand-in for the shared-nothing process backend.
@@ -145,20 +159,27 @@ impl BackendKind {
     pub fn build(&self) -> Arc<dyn ExecBackend> {
         match self {
             BackendKind::Serial => Arc::new(Serial),
-            BackendKind::Rayon { chunk } => Arc::new(Rayon { chunk: (*chunk).max(1) }),
+            BackendKind::Rayon { chunk } => Arc::new(Rayon { chunk: *chunk }),
             BackendKind::Process { .. } => Arc::new(ProcessCtl),
         }
     }
 
+    /// The valid backend names, for error messages — kept next to the
+    /// parser so the two cannot drift.
+    pub const NAMES: &'static str =
+        "serial | rayon | rayon(chunk=N) | process:N[@pipe|@uds|@uds+arena|@tcp[:HOST:PORT]] \
+         with N >= 1";
+
     /// Parse a config/CLI backend name: `"serial"`, `"rayon"`,
     /// `"process"`, `"process:N"` (N ≥ 1 worker processes),
-    /// `"process:N@pipe"` / `"process:N@uds"` / `"process:N@tcp"` /
-    /// `"process:N@tcp:HOST:PORT"` (transport selection; see
-    /// [`Transport`]), plus the round-trippable [`BackendKind::label`]
-    /// forms (`"rayon(chunk=N)"`). `chunk` applies to the bare
-    /// `"rayon"`/`"process"` forms. `"process:0"` and unknown transport
-    /// suffixes are rejected (`None`).
-    pub fn parse(name: &str, chunk: usize) -> Option<BackendKind> {
+    /// `"process:N@pipe"` / `"process:N@uds"` / `"process:N@uds+arena"` /
+    /// `"process:N@tcp"` / `"process:N@tcp:HOST:PORT"` (transport
+    /// selection; see [`Transport`]), plus the round-trippable
+    /// [`BackendKind::label`] forms (`"rayon(chunk=N)"`). `chunk` applies
+    /// to the bare `"rayon"`/`"process"` forms (for rayon, `0` = the
+    /// [`auto_chunk`] heuristic). Unknown names, `"process:0"`, and bad
+    /// transport suffixes return a structured error naming the valid set.
+    pub fn parse(name: &str, chunk: usize) -> Result<BackendKind, String> {
         if let Some(rest) = name.strip_prefix("process:") {
             let (workers, transport) = match rest.split_once('@') {
                 Some((w, t)) => (w, Transport::parse_suffix(t)?),
@@ -169,20 +190,37 @@ impl BackendKind {
                 .parse::<usize>()
                 .ok()
                 .filter(|&w| w > 0)
-                .map(|workers| BackendKind::Process { workers, transport });
+                .map(|workers| BackendKind::Process { workers, transport })
+                .ok_or_else(|| {
+                    format!(
+                        "bad worker count in backend {name:?} (valid backends: {})",
+                        BackendKind::NAMES
+                    )
+                });
         }
         if let Some(rest) = name.strip_prefix("rayon(chunk=") {
-            let inner = rest.strip_suffix(')')?;
-            return inner.parse::<usize>().ok().map(|c| BackendKind::Rayon { chunk: c.max(1) });
+            return rest
+                .strip_suffix(')')
+                .and_then(|inner| inner.parse::<usize>().ok())
+                .map(|c| BackendKind::Rayon { chunk: c })
+                .ok_or_else(|| {
+                    format!(
+                        "bad chunk in backend {name:?} (valid backends: {})",
+                        BackendKind::NAMES
+                    )
+                });
         }
         match name {
-            "serial" => Some(BackendKind::Serial),
-            "rayon" => Some(BackendKind::Rayon { chunk: chunk.max(1) }),
-            "process" => Some(BackendKind::Process {
+            "serial" => Ok(BackendKind::Serial),
+            "rayon" => Ok(BackendKind::Rayon { chunk }),
+            "process" => Ok(BackendKind::Process {
                 workers: chunk.max(1),
                 transport: Transport::Pipe,
             }),
-            _ => None,
+            _ => Err(format!(
+                "unknown backend {name:?} (valid backends: {})",
+                BackendKind::NAMES
+            )),
         }
     }
 
@@ -190,10 +228,12 @@ impl BackendKind {
     /// [`BackendKind::parse`] (asserted by tests), so labels written into
     /// bench reports and TOML configs can be read back verbatim. The
     /// default pipe transport is elided (`process:N`, not
-    /// `process:N@pipe`) so pre-transport labels stay stable.
+    /// `process:N@pipe`) and the auto chunk is elided (`rayon`, not
+    /// `rayon(chunk=0)`) so default labels stay stable.
     pub fn label(&self) -> String {
         match self {
             BackendKind::Serial => "serial".into(),
+            BackendKind::Rayon { chunk: 0 } => "rayon".into(),
             BackendKind::Rayon { chunk } => format!("rayon(chunk={chunk})"),
             BackendKind::Process { workers, transport } => {
                 format!("process:{workers}{}", transport.label_suffix())
@@ -291,14 +331,36 @@ mod tests {
 
     #[test]
     fn kind_parse_and_label_roundtrip() {
-        assert_eq!(BackendKind::parse("serial", 9), Some(BackendKind::Serial));
-        assert_eq!(BackendKind::parse("rayon", 4), Some(BackendKind::Rayon { chunk: 4 }));
-        assert_eq!(BackendKind::parse("rayon", 0), Some(BackendKind::Rayon { chunk: 1 }));
-        assert_eq!(BackendKind::parse("cuda", 1), None);
+        assert_eq!(BackendKind::parse("serial", 9), Ok(BackendKind::Serial));
+        assert_eq!(BackendKind::parse("rayon", 4), Ok(BackendKind::Rayon { chunk: 4 }));
+        // chunk 0 = the auto heuristic, preserved through parsing.
+        assert_eq!(BackendKind::parse("rayon", 0), Ok(BackendKind::Rayon { chunk: 0 }));
+        let err = BackendKind::parse("cuda", 1).unwrap_err();
+        assert!(err.contains(BackendKind::NAMES), "{err}");
         assert_eq!(BackendKind::Serial.label(), "serial");
+        assert_eq!(BackendKind::Rayon { chunk: 0 }.label(), "rayon");
         assert_eq!(BackendKind::Rayon { chunk: 4 }.label(), "rayon(chunk=4)");
         assert!(!BackendKind::Serial.is_parallel());
         assert!(BackendKind::Rayon { chunk: 1 }.is_parallel());
+    }
+
+    #[test]
+    fn auto_chunk_scales_with_machines_within_bounds() {
+        // tiny rounds: max balancing.
+        assert_eq!(auto_chunk(0), 1);
+        assert_eq!(auto_chunk(1), 1);
+        // huge rounds: clamped so balancing never fully disappears.
+        assert_eq!(auto_chunk(usize::MAX), 64);
+        // monotone in n for a fixed pool width.
+        let threads = crate::util::pool::num_threads().max(1);
+        assert!(auto_chunk(threads * 4) >= 1);
+        assert!(auto_chunk(threads * 512) >= auto_chunk(threads * 4));
+        // auto (chunk=0) and explicit chunks agree on outputs.
+        let auto = Rayon::default();
+        assert_eq!(auto.chunk, 0);
+        let got = map_indexed(&auto, 257, |i| i * 3);
+        let want: Vec<usize> = (0..257).map(|i| i * 3).collect();
+        assert_eq!(got, want);
     }
 
     fn process_kind(workers: usize, transport: Transport) -> BackendKind {
@@ -309,13 +371,15 @@ mod tests {
     fn process_kind_parse_label_and_rejections() {
         assert_eq!(
             BackendKind::parse("process:4", 1),
-            Some(process_kind(4, Transport::Pipe))
+            Ok(process_kind(4, Transport::Pipe))
         );
-        assert_eq!(BackendKind::parse("process", 3), Some(process_kind(3, Transport::Pipe)));
-        // process:0 is meaningless and must be rejected, not clamped.
-        assert_eq!(BackendKind::parse("process:0", 1), None);
-        assert_eq!(BackendKind::parse("process:", 1), None);
-        assert_eq!(BackendKind::parse("process:x", 1), None);
+        assert_eq!(BackendKind::parse("process", 3), Ok(process_kind(3, Transport::Pipe)));
+        // process:0 is meaningless and must be rejected, not clamped —
+        // and the error names the valid set.
+        for bad in ["process:0", "process:", "process:x"] {
+            let err = BackendKind::parse(bad, 1).unwrap_err();
+            assert!(err.contains(BackendKind::NAMES), "{bad}: {err}");
+        }
         assert_eq!(process_kind(4, Transport::Pipe).label(), "process:4");
         assert!(process_kind(1, Transport::Pipe).is_parallel());
         assert_eq!(process_kind(2, Transport::Pipe).process_workers(), Some(2));
@@ -328,24 +392,33 @@ mod tests {
     fn process_transport_suffixes_parse() {
         assert_eq!(
             BackendKind::parse("process:2@pipe", 1),
-            Some(process_kind(2, Transport::Pipe))
+            Ok(process_kind(2, Transport::Pipe))
         );
         assert_eq!(
             BackendKind::parse("process:2@uds", 1),
-            Some(process_kind(2, Transport::Uds))
+            Ok(process_kind(2, Transport::Uds))
+        );
+        assert_eq!(
+            BackendKind::parse("process:2@uds+arena", 1),
+            Ok(process_kind(2, Transport::UdsArena))
         );
         assert_eq!(
             BackendKind::parse("process:3@tcp", 1),
-            Some(process_kind(3, Transport::Tcp { bind: None }))
+            Ok(process_kind(3, Transport::Tcp { bind: None }))
         );
         assert_eq!(
             BackendKind::parse("process:3@tcp:0.0.0.0:7070", 1),
-            Some(process_kind(3, Transport::Tcp { bind: Some("0.0.0.0:7070".into()) }))
+            Ok(process_kind(3, Transport::Tcp { bind: Some("0.0.0.0:7070".into()) }))
         );
-        // bad worker counts / transports are rejected, not defaulted.
-        assert_eq!(BackendKind::parse("process:0@uds", 1), None);
-        assert_eq!(BackendKind::parse("process:2@shm", 1), None);
-        assert_eq!(BackendKind::parse("process:2@tcp:", 1), None);
+        // bad worker counts / transports are rejected, not defaulted —
+        // with transport errors naming the valid transport set.
+        assert!(BackendKind::parse("process:0@uds", 1).is_err());
+        let err = BackendKind::parse("process:2@shm", 1).unwrap_err();
+        assert!(
+            err.contains(crate::mapreduce::transport::TRANSPORT_SUFFIXES),
+            "{err}"
+        );
+        assert!(BackendKind::parse("process:2@tcp:", 1).is_err());
         assert_eq!(
             process_kind(2, Transport::Uds).process_transport(),
             Some(&Transport::Uds)
@@ -356,17 +429,21 @@ mod tests {
     fn every_label_roundtrips_through_parse() {
         for kind in [
             BackendKind::Serial,
+            BackendKind::Rayon { chunk: 0 },
             BackendKind::Rayon { chunk: 1 },
             BackendKind::Rayon { chunk: 7 },
             process_kind(1, Transport::Pipe),
             process_kind(16, Transport::Pipe),
             process_kind(2, Transport::Uds),
+            process_kind(2, Transport::UdsArena),
             process_kind(4, Transport::Tcp { bind: None }),
             process_kind(4, Transport::Tcp { bind: Some("127.0.0.1:9100".into()) }),
         ] {
+            // the chunk context param only applies to the bare "rayon"
+            // form; 0 keeps the auto label ("rayon") a fixed point.
             assert_eq!(
-                BackendKind::parse(&kind.label(), 999),
-                Some(kind.clone()),
+                BackendKind::parse(&kind.label(), 0),
+                Ok(kind.clone()),
                 "label {:?} must parse back to its kind",
                 kind.label()
             );

@@ -12,6 +12,7 @@
 //! the budgets. Per-round accounting includes oracle calls split into
 //! batched (block-marginal) vs scalar traffic.
 
+pub mod arena;
 pub mod backend;
 pub mod partition;
 pub mod process;
@@ -29,7 +30,7 @@ use crate::oracle::OracleCounters;
 use backend::{BackendKind, ExecBackend};
 use partition::{default_machines, partition_and_sample, sample_probability, Partitioned};
 use process::{PoolOptions, ProcessPool, RecoveryPolicy};
-use shard::GuessStore;
+use shard::{GuessStore, StateCache};
 use wire::{RoundTask, TaskReply};
 
 /// Cluster construction parameters.
@@ -152,11 +153,11 @@ impl ClusterConfig {
     }
 
     /// The effective backend selector: the explicit `backend` field when
-    /// set, else the legacy `parallel` flag mapped to `Rayon{chunk:1}` /
-    /// `Serial`.
+    /// set, else the legacy `parallel` flag mapped to `Rayon{chunk:0}`
+    /// (the auto work-claim heuristic) / `Serial`.
     pub fn backend_kind(&self) -> BackendKind {
         self.backend.clone().unwrap_or(if self.parallel {
-            BackendKind::Rayon { chunk: 1 }
+            BackendKind::Rayon { chunk: 0 }
         } else {
             BackendKind::Serial
         })
@@ -240,6 +241,11 @@ pub struct MrCluster {
     /// Per-machine persistent guess stores for typed shard rounds on the
     /// in-process backends (worker processes keep their own).
     stores: Vec<GuessStore>,
+    /// Persistent broadcast-state cache for the in-process interpreter:
+    /// Algorithm 5's growing solution `G` is extended incrementally
+    /// between rounds instead of replayed from scratch (worker processes
+    /// keep their own cache; replies are bit-identical either way).
+    cache: StateCache,
     /// Shared-nothing worker pool; lazily spawned on the first typed
     /// shard round when the backend is [`BackendKind::Process`].
     pool: Option<ProcessPool>,
@@ -263,6 +269,7 @@ impl MrCluster {
         let mut cluster = MrCluster {
             cfg: cfg.clone(),
             stores: vec![GuessStore::default(); shards.len()],
+            cache: StateCache::default(),
             shards,
             sample,
             metrics: MrMetrics { rounds: Vec::new(), n, k, machines: m, sample_size },
@@ -279,7 +286,7 @@ impl MrCluster {
             n + (m + 1) * sample_size,
             sample_size,
             (0, 0, 0),
-            (0, 0),
+            (0, 0, 0),
             (0, 0),
             std::time::Duration::ZERO,
         )?;
@@ -367,7 +374,7 @@ impl MrCluster {
             total_sent,
             total_sent,
             calls,
-            (0, 0),
+            (0, 0, 0),
             (0, 0),
             start.elapsed(),
         )?;
@@ -410,16 +417,39 @@ impl MrCluster {
         oracle: &dyn crate::oracle::Oracle,
         task: &RoundTask,
     ) -> Result<Vec<TaskReply>> {
+        self.shard_round_streamed(name, max_resident, oracle, task, &mut |_, _| {})
+    }
+
+    /// Streaming form of [`MrCluster::shard_round_explicit`]:
+    /// `on_reply(machine, reply)` fires once per machine as its reply
+    /// lands — in arrival order on the process backend's pipelined join,
+    /// in machine order on the in-process backends — so multi-round
+    /// drivers overlap central-machine merging with worker compute still
+    /// in flight. The returned vector is machine-ordered either way, and
+    /// identical to what the non-streamed form returns.
+    pub fn shard_round_streamed(
+        &mut self,
+        name: &str,
+        max_resident: usize,
+        oracle: &dyn crate::oracle::Oracle,
+        task: &RoundTask,
+        on_reply: &mut dyn FnMut(usize, &TaskReply),
+    ) -> Result<Vec<TaskReply>> {
         let start = Instant::now();
         let calls0 = self.calls_snapshot();
-        let mut ipc = (0u64, 0u64);
+        let mut ipc = (0u64, 0u64, 0u64);
         let mut recovery = (0u64, 0u64);
         let mut remote_calls = (0u64, 0u64, 0u64);
         let replies = if self.cfg.backend_kind().process_workers().is_some() {
+            let fresh_pool = self.pool.is_none();
             self.ensure_pool()?;
             let pool = self.pool.as_mut().expect("pool spawned above");
-            let (replies, stats) = pool.round(task)?;
-            ipc = (stats.bytes_out, stats.bytes_in);
+            // Init-time arena elisions accumulate in the pool's lifetime
+            // counter during spawn; attribute them to the round that
+            // spawned the pool so they land in exactly one RoundStat.
+            let spawn_mapped = if fresh_pool { pool.total_mapped_bytes() } else { 0 };
+            let (replies, stats) = pool.round_with(task, on_reply)?;
+            ipc = (stats.bytes_out, stats.bytes_in, spawn_mapped + stats.mapped_bytes);
             recovery = (stats.recoveries, stats.reshipped_bytes);
             // merge worker-side oracle traffic so MrMetrics stays coherent:
             // through the shared counter when one is wired (the snapshot
@@ -433,14 +463,19 @@ impl MrCluster {
         } else {
             // in-process: machine i IS global machine i.
             let machine_ids: Vec<usize> = (0..self.shards.len()).collect();
-            shard::run_task_all(
+            let replies = shard::run_task_all_cached(
                 oracle,
                 &self.shards,
                 &mut self.stores,
                 &machine_ids,
                 task,
                 self.exec.as_ref(),
-            )
+                &mut self.cache,
+            );
+            for (i, r) in replies.iter().enumerate() {
+                on_reply(i, r);
+            }
+            replies
         };
         let total_sent: usize = replies.iter().map(CommSize::comm_size).sum();
         let mut calls = delta(calls0, self.calls_snapshot());
@@ -504,7 +539,7 @@ impl MrCluster {
         let calls0 = self.calls_snapshot();
         let out = f();
         let calls = delta(calls0, self.calls_snapshot());
-        self.record_round(name, 0, 0, 0, received, calls, (0, 0), (0, 0), start.elapsed())?;
+        self.record_round(name, 0, 0, 0, received, calls, (0, 0, 0), (0, 0), start.elapsed())?;
         Ok(out)
     }
 
@@ -536,7 +571,7 @@ impl MrCluster {
             total_sent,
             central_recv,
             calls,
-            (0, 0),
+            (0, 0, 0),
             (0, 0),
             start.elapsed(),
         )?;
@@ -565,7 +600,7 @@ impl MrCluster {
         total_sent: usize,
         central_recv: usize,
         calls: (u64, u64, u64),
-        ipc: (u64, u64),
+        ipc: (u64, u64, u64),
         recovery: (u64, u64),
         wall: std::time::Duration,
     ) -> Result<()> {
@@ -583,6 +618,7 @@ impl MrCluster {
             ipc_bytes_in: ipc.1,
             recoveries: recovery.0,
             reshipped_bytes: recovery.1,
+            mapped_bytes: ipc.2,
             wall,
         });
         if self.cfg.enforce_memory && name != "r0:partition+sample" {

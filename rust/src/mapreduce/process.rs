@@ -33,15 +33,33 @@
 //! connection refused, wrong endpoint) degrades into a structured
 //! [`Error::Worker`] when the accept deadline expires.
 //!
+//! ## Zero-copy shard arena (`@uds+arena`)
+//!
+//! On the `uds+arena` transport the coordinator packs every machine's
+//! shard plus the broadcast sample into one read-only memfd region
+//! ([`crate::mapreduce::arena`]) *before* spawning workers, and passes
+//! the file descriptor over the Unix socket (`SCM_RIGHTS`) the moment
+//! each worker connects — before any frame moves. Workers `mmap` the
+//! region and resolve shards by global machine id, so `Init` and
+//! [`RoundTask::AdoptMachines`] ship O(1) framing instead of re-encoding
+//! shard payloads: the elided bytes are metered separately as
+//! [`RoundIpcStats::mapped_bytes`]. If the arena cannot be built (no
+//! memfd — e.g. a non-Linux host), the pool transparently falls back to
+//! the wire path and behaves exactly like plain `@uds`; pipe and TCP
+//! transports never use the arena.
+//!
 //! ## Round protocol
 //!
 //! A round writes one `Round(task)` frame to every worker (all workers
-//! compute concurrently), then joins the replies in worker order. Replies
-//! carry per-machine [`TaskReply`]s plus the worker-side oracle-call delta,
-//! which the coordinator merges into its [`OracleCounters`] so
-//! `MrMetrics` sees one coherent count. All frame traffic is metered
-//! identically on every transport — the per-round IPC byte counts land in
-//! `RoundStat::ipc_bytes_*`.
+//! compute concurrently), then joins the replies **in arrival order**
+//! (pipelined): [`ProcessPool::round_with`] streams each machine's
+//! [`TaskReply`] to the caller the moment it lands, so the coordinator
+//! overlaps round `t+1`'s partition/threshold accounting with the slower
+//! workers still computing round `t`. Replies also carry the worker-side
+//! oracle-call delta, which the coordinator merges into its
+//! [`OracleCounters`] so `MrMetrics` sees one coherent count. All frame
+//! traffic is metered identically on every transport — the per-round IPC
+//! byte counts land in `RoundStat::ipc_bytes_*`.
 //!
 //! ## Failure surface and elasticity
 //!
@@ -87,7 +105,8 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::core::{ElementId, Error, Result};
-use crate::mapreduce::shard::{self, GuessStore};
+use crate::mapreduce::arena::{self, Arena, ArenaMap};
+use crate::mapreduce::shard::{self, GuessStore, ShardData, StateCache};
 use crate::mapreduce::transport::{self, LinkControl, Listener, Transport};
 use crate::mapreduce::wire::{
     self, FromWorker, RoundTask, TaskReply, ToWorker, WireError, WorkerInit, DEFAULT_MAX_FRAME,
@@ -194,6 +213,11 @@ pub struct RoundIpcStats {
     /// Frame bytes of [`RoundTask::AdoptMachines`] reshipments this round
     /// (a subset of `bytes_out`).
     pub reshipped_bytes: u64,
+    /// Shard/sample payload bytes resolved from the mmap'd arena instead
+    /// of shipped as frames this round (4 bytes per elided element id);
+    /// always `0` on the wire path. *Not* a subset of `bytes_out` — these
+    /// bytes never crossed the stream.
+    pub mapped_bytes: u64,
 }
 
 /// Frames from a reader thread: `(payload, frame_bytes)` or a wire error.
@@ -248,6 +272,23 @@ pub struct ProcessPool {
     recoveries: u64,
     /// Lifetime `AdoptMachines` frame bytes.
     reshipped_bytes: u64,
+    /// The shared shard arena, when `@uds+arena` built one. Held for the
+    /// pool lifetime so the memfd outlives every worker's mapping path;
+    /// `None` means the wire path (other transports, or arena fallback).
+    arena: Option<Arena>,
+    /// Lifetime arena-resolved payload bytes (the `Init`/adoption shard
+    /// and sample bytes that never crossed a stream).
+    mapped_bytes: u64,
+}
+
+/// Mutable join state threaded through the pipelined reply loop.
+struct RoundProgress {
+    /// Per-machine replies, filled in arrival order.
+    out: Vec<Option<TaskReply>>,
+    /// Merged worker-side oracle-call deltas `(total, batched, batches)`.
+    calls: (u64, u64, u64),
+    /// Machines orphaned by worker deaths, awaiting re-placement.
+    orphans: Vec<usize>,
 }
 
 fn worker_error(worker: usize, message: impl Into<String>) -> Error {
@@ -364,6 +405,16 @@ impl ProcessPool {
         }
         let w = opts.workers.clamp(1, m);
         let external = opts.transport.external_workers();
+        // Build the shared shard arena before any worker exists, so the
+        // fd can be passed at connect time. A build failure (no memfd —
+        // non-Linux host) is a transparent fallback, not an error: the
+        // env flag stays unset, Init ships shards as frames, and the
+        // pool behaves exactly like plain `@uds` (mapped_bytes stays 0).
+        let shared = if opts.transport.wants_arena() {
+            Arena::build(shards, sample).ok()
+        } else {
+            None
+        };
         let listener = Listener::bind(&opts.transport, POOL_TAG.fetch_add(1, Ordering::Relaxed))
             .map_err(|e| {
                 Error::Config(format!("bind {} listener: {e}", opts.transport))
@@ -397,6 +448,15 @@ impl ProcessPool {
                     .stderr(Stdio::inherit())
                     .env("MRSUB_MAX_FRAME", opts.max_frame.to_string())
                     .env("MRSUB_WORKER_ID", wi.to_string());
+                if shared.is_some() {
+                    // the worker blocks on the fd-pass before its Hello.
+                    cmd.env("MRSUB_ARENA", "1");
+                } else {
+                    // a stale flag inherited from the environment would
+                    // wedge a wire-path worker waiting for an fd that
+                    // never comes; clear it.
+                    cmd.env_remove("MRSUB_ARENA");
+                }
                 match &listener {
                     None => {
                         // a stale MRSUB_CONNECT inherited from the
@@ -483,6 +543,25 @@ impl ProcessPool {
                     let (tx, rx, writer_done) =
                         start_io_threads(link.reader, link.writer, opts.max_frame);
                     let pending = Pending { tx, rx, control, writer_done };
+                    if let Some(a) = &shared {
+                        // pass the arena fd as the stream's very first
+                        // byte (the worker maps it before sending its
+                        // Hello); no frames are queued yet, so the
+                        // carrier cannot interleave with the writer
+                        // thread.
+                        let sent = match &pending.control {
+                            LinkControl::Uds(s) => a.send_fd(s),
+                            _ => Err(std::io::Error::new(
+                                std::io::ErrorKind::Unsupported,
+                                "arena needs a UDS stream",
+                            )),
+                        };
+                        if let Err(e) = sent {
+                            pending.control.force_close();
+                            abort(children, slots);
+                            return Err(worker_error(0, format!("arena fd-pass failed: {e}")));
+                        }
+                    }
                     match expect_hello(&pending, deadline) {
                         Ok((version, worker, _)) if version != WIRE_VERSION => {
                             pending.control.force_close();
@@ -579,6 +658,8 @@ impl ProcessPool {
             deaths_spent: 0,
             recoveries: 0,
             reshipped_bytes: 0,
+            arena: shared,
+            mapped_bytes: 0,
         };
         if matches!(opts.transport, Transport::Pipe) {
             // socket hellos were consumed during accept; pipe hellos are
@@ -598,13 +679,40 @@ impl ProcessPool {
                 }
             }
         }
+        let use_arena = pool.arena.is_some();
         for wi in 0..pool.workers.len() {
-            let init = ToWorker::Init(WorkerInit {
-                spec: spec.clone(),
-                machines: pool.workers[wi].machines.iter().map(|&i| i as u32).collect(),
-                shards: pool.workers[wi].machines.iter().map(|&i| shards[i].clone()).collect(),
-                sample: sample.to_vec(),
-            });
+            let machines: Vec<u32> =
+                pool.workers[wi].machines.iter().map(|&i| i as u32).collect();
+            let init = if use_arena {
+                // the worker resolves shards from its mapping; meter the
+                // elided payload so the wire-vs-mapped split is visible.
+                let words: usize = pool.workers[wi]
+                    .machines
+                    .iter()
+                    .map(|&i| shards[i].len())
+                    .sum::<usize>()
+                    + sample.len();
+                pool.mapped_bytes += 4 * words as u64;
+                ToWorker::Init(WorkerInit {
+                    spec: spec.clone(),
+                    machines,
+                    shards: Vec::new(),
+                    sample: Vec::new(),
+                    arena: true,
+                })
+            } else {
+                ToWorker::Init(WorkerInit {
+                    spec: spec.clone(),
+                    machines,
+                    shards: pool.workers[wi]
+                        .machines
+                        .iter()
+                        .map(|&i| shards[i].clone())
+                        .collect(),
+                    sample: sample.to_vec(),
+                    arena: false,
+                })
+            };
             pool.send(wi, &init)?;
         }
         for wi in 0..pool.workers.len() {
@@ -639,6 +747,19 @@ impl ProcessPool {
         (self.bytes_out, self.bytes_in)
     }
 
+    /// Total shard/sample payload bytes resolved from the arena mapping
+    /// since spawn (includes the `Init` elisions, which predate round 1).
+    pub fn total_mapped_bytes(&self) -> u64 {
+        self.mapped_bytes
+    }
+
+    /// Whether the zero-copy arena is active (built *and* fd-passed); on
+    /// the fallback or non-arena transports this is `false` and every
+    /// payload crosses the wire.
+    pub fn arena_active(&self) -> bool {
+        self.arena.is_some()
+    }
+
     /// Execute one round on every worker; returns per-machine replies (in
     /// machine order) plus the round's IPC stats.
     ///
@@ -648,6 +769,24 @@ impl ProcessPool {
     /// just those machines) and the round completes with the same
     /// per-machine replies a fault-free run produces.
     pub fn round(&mut self, task: &RoundTask) -> Result<(Vec<TaskReply>, RoundIpcStats)> {
+        self.round_with(task, &mut |_, _| {})
+    }
+
+    /// [`ProcessPool::round`] with a streaming hook: `on_reply(machine,
+    /// reply)` fires the moment a machine's reply arrives (arrival order,
+    /// not machine order), letting the caller overlap the next round's
+    /// coordinator-side accounting with workers still computing this one.
+    /// The returned vector is identical to [`ProcessPool::round`]'s — the
+    /// hook only changes *when* the caller sees each reply, never the
+    /// replies themselves, so bit-identity is unaffected. Each machine's
+    /// reply is surfaced exactly once (a recovered machine's adopted
+    /// re-run does not re-fire the hook when the original reply landed
+    /// before the death).
+    pub fn round_with(
+        &mut self,
+        task: &RoundTask,
+        on_reply: &mut dyn FnMut(usize, &TaskReply),
+    ) -> Result<(Vec<TaskReply>, RoundIpcStats)> {
         // A pool that failed structurally in an earlier round stays
         // failed: machines stranded on dead workers (fail policy,
         // exhausted budget, lost last worker) can never answer, so keep
@@ -661,54 +800,54 @@ impl ProcessPool {
         }
         let (out0, in0) = (self.bytes_out, self.bytes_in);
         let (rec0, reship0) = (self.recoveries, self.reshipped_bytes);
+        let map0 = self.mapped_bytes;
         // one encode; every worker receives byte-identical frames.
         let payload = ToWorker::Round(task.clone()).encode();
-        let mut out: Vec<Option<TaskReply>> = (0..self.n_machines).map(|_| None).collect();
-        let mut calls = (0u64, 0u64, 0u64);
-        // machines whose round result was lost to a worker death and must
-        // be re-placed (stays empty under the fail policy, which returns
-        // instead).
-        let mut orphans: Vec<usize> = Vec::new();
+        let mut progress = RoundProgress {
+            out: (0..self.n_machines).map(|_| None).collect(),
+            calls: (0, 0, 0),
+            // machines whose round result was lost to a worker death and
+            // must be re-placed (stays empty under the fail policy, which
+            // returns instead).
+            orphans: Vec::new(),
+        };
 
         // --- broadcast ---------------------------------------------------
-        let mut awaiting: Vec<usize> = Vec::new();
+        let mut awaiting: Vec<(usize, Vec<usize>)> = Vec::new();
         for wi in 0..self.workers.len() {
             if !self.workers[wi].alive {
                 continue; // died in an earlier round; hosts no machines.
             }
             match self.send_payload(wi, &payload) {
-                Ok(()) => awaiting.push(wi),
-                Err(e) => self.on_worker_death(wi, e, &mut orphans)?,
+                Ok(()) => awaiting.push((wi, self.workers[wi].machines.clone())),
+                Err(e) => self.on_worker_death(wi, e, &mut progress.orphans)?,
             }
         }
 
-        // --- join replies (worker order) ---------------------------------
-        for wi in awaiting {
-            let hosted = self.workers[wi].machines.len();
-            match self.recv_round_done(wi, task, hosted, self.timeout) {
-                Ok((replies, c)) => {
-                    for (slot, reply) in replies.into_iter().enumerate() {
-                        out[self.workers[wi].machines[slot]] = Some(reply);
-                    }
-                    merge_calls(&mut calls, c);
-                }
-                Err(e) => self.on_worker_death(wi, e, &mut orphans)?,
-            }
-        }
+        // --- join replies (arrival order: the pipelined scheduler) -------
+        self.join_replies(awaiting, task, self.timeout, false, &mut progress, on_reply)?;
 
         // --- recovery: detect → re-queue → adopt → replay → re-run -------
         // The adopter must replay the whole store-mutating history before
         // answering, so its reply deadline scales with the replay length
         // instead of misdiagnosing a long (legitimate) replay as a death.
         let adoption_timeout = self.timeout.saturating_mul(self.history.len() as u32 + 2);
-        while !orphans.is_empty() {
-            let batch = std::mem::take(&mut orphans);
+        while !progress.orphans.is_empty() {
+            let batch = std::mem::take(&mut progress.orphans);
             let assignment = self.assign_orphans(&batch)?;
             let mut adopting: Vec<(usize, Vec<usize>)> = Vec::new();
             for (wi, machines) in assignment {
+                let use_arena = self.arena.is_some();
                 let adopt = RoundTask::AdoptMachines {
                     machines: machines.iter().map(|&m| m as u32).collect(),
-                    shards: machines.iter().map(|&m| self.shards[m].clone()).collect(),
+                    // arena adopters resolve shards from their mapping:
+                    // the reship carries replay + pending only.
+                    shards: if use_arena {
+                        Vec::new()
+                    } else {
+                        machines.iter().map(|&m| self.shards[m].clone()).collect()
+                    },
+                    arena: use_arena,
                     replay: self.history.clone(),
                     pending: Box::new(task.clone()),
                 };
@@ -733,40 +872,22 @@ impl ProcessPool {
                 match self.send_payload(wi, &adopt_payload) {
                     Ok(()) => {
                         self.reshipped_bytes += frame;
+                        if use_arena {
+                            let words: usize =
+                                machines.iter().map(|&m| self.shards[m].len()).sum();
+                            self.mapped_bytes += 4 * words as u64;
+                        }
                         adopting.push((wi, machines));
                     }
                     Err(e) => {
                         // the adopter itself just died: the machines it was
                         // about to adopt rejoin the orphans next to its own.
-                        orphans.extend(machines);
-                        self.on_worker_death(wi, e, &mut orphans)?;
+                        progress.orphans.extend(machines);
+                        self.on_worker_death(wi, e, &mut progress.orphans)?;
                     }
                 }
             }
-            for (wi, machines) in adopting {
-                // an adoption reply is shaped like the in-flight task
-                // ([`wire::reply_matches`] on `AdoptMachines` delegates to
-                // its pending), so validate directly against `task`.
-                match self.recv_round_done(wi, task, machines.len(), adoption_timeout) {
-                    Ok((replies, c)) => {
-                        for (slot, reply) in replies.into_iter().enumerate() {
-                            // a machine whose pre-death reply already
-                            // landed keeps it — determinism makes the
-                            // adopted re-run byte-identical anyway.
-                            let m = machines[slot];
-                            if out[m].is_none() {
-                                out[m] = Some(reply);
-                            }
-                        }
-                        merge_calls(&mut calls, c);
-                        self.workers[wi].machines.extend(machines);
-                    }
-                    Err(e) => {
-                        orphans.extend(machines);
-                        self.on_worker_death(wi, e, &mut orphans)?;
-                    }
-                }
-            }
+            self.join_replies(adopting, task, adoption_timeout, true, &mut progress, on_reply)?;
         }
 
         if matches!(self.recovery, RecoveryPolicy::Requeue { .. }) && task.mutates_store() {
@@ -775,29 +896,136 @@ impl ProcessPool {
             // tracked under the fail policy, which never adopts).
             self.history.push(task.clone());
         }
-        let replies: Vec<TaskReply> =
-            out.into_iter().map(|r| r.expect("every machine is assigned a worker")).collect();
+        let replies: Vec<TaskReply> = progress
+            .out
+            .into_iter()
+            .map(|r| r.expect("every machine is assigned a worker"))
+            .collect();
         let stats = RoundIpcStats {
             bytes_out: self.bytes_out - out0,
             bytes_in: self.bytes_in - in0,
-            calls,
+            calls: progress.calls,
             recoveries: self.recoveries - rec0,
             reshipped_bytes: self.reshipped_bytes - reship0,
+            mapped_bytes: self.mapped_bytes - map0,
         };
         Ok((replies, stats))
     }
 
-    /// Collect one worker's `RoundDone` within `timeout`, validating the
-    /// reply count and each reply's shape against `shape` (the round task
-    /// the replies answer — for adoptions, the in-flight `pending` task).
-    fn recv_round_done(
+    /// Pipelined reply join: poll every listed worker and consume each
+    /// `RoundDone` the moment it arrives (arrival order, not worker
+    /// order), streaming per-machine replies into `progress.out` and the
+    /// caller's hook. Arrival order cannot affect the result — replies
+    /// land in per-machine slots and call deltas are commutative sums. A
+    /// worker silent past `timeout` (rolling: any arrival resets the
+    /// clock) is declared dead exactly as the serial join did; `adopting`
+    /// marks the adoption pass, whose workers own their listed machines
+    /// only once their reply lands.
+    fn join_replies(
+        &mut self,
+        mut pending: Vec<(usize, Vec<usize>)>,
+        shape: &RoundTask,
+        timeout: Duration,
+        adopting: bool,
+        progress: &mut RoundProgress,
+        on_reply: &mut dyn FnMut(usize, &TaskReply),
+    ) -> Result<()> {
+        let ms = timeout.as_millis();
+        let mut last_arrival = Instant::now();
+        while !pending.is_empty() {
+            let mut progressed = false;
+            let mut i = 0;
+            while i < pending.len() {
+                let polled = match self.poll_frame(pending[i].0) {
+                    None => {
+                        i += 1;
+                        continue;
+                    }
+                    Some(p) => p,
+                };
+                progressed = true;
+                let (wi, machines) = pending.swap_remove(i);
+                let done =
+                    polled.and_then(|msg| self.check_round_done(wi, msg, shape, machines.len()));
+                match done {
+                    Ok((replies, c)) => {
+                        for (slot, reply) in replies.into_iter().enumerate() {
+                            // a machine whose pre-death reply already
+                            // landed keeps it — determinism makes the
+                            // adopted re-run byte-identical anyway.
+                            let m = machines[slot];
+                            if progress.out[m].is_none() {
+                                on_reply(m, &reply);
+                                progress.out[m] = Some(reply);
+                            }
+                        }
+                        merge_calls(&mut progress.calls, c);
+                        if adopting {
+                            self.workers[wi].machines.extend(machines);
+                        }
+                    }
+                    Err(e) => {
+                        if adopting {
+                            progress.orphans.extend(machines);
+                        }
+                        self.on_worker_death(wi, e, &mut progress.orphans)?;
+                    }
+                }
+            }
+            if progressed {
+                last_arrival = Instant::now();
+            } else if last_arrival.elapsed() >= timeout {
+                // every still-pending worker blew the reply deadline.
+                for (wi, machines) in std::mem::take(&mut pending) {
+                    let e =
+                        self.mark_dead(wi, format!("no reply within {ms} ms (worker hung?)"));
+                    if adopting {
+                        progress.orphans.extend(machines);
+                    }
+                    self.on_worker_death(wi, e, &mut progress.orphans)?;
+                }
+            } else {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-blocking receive of one frame from worker `wi` (the pipelined
+    /// join's poll step): `None` when nothing has arrived yet, `Some(Err)`
+    /// when the stream broke (the worker is marked dead on the way out).
+    fn poll_frame(&mut self, wi: usize) -> Option<Result<FromWorker>> {
+        match self.workers[wi].rx.try_recv() {
+            Ok(Ok((payload, nbytes))) => {
+                self.bytes_in += nbytes as u64;
+                match FromWorker::decode(&payload) {
+                    Ok(msg) => Some(Ok(msg)),
+                    Err(e) => Some(Err(self.mark_dead(wi, format!("undecodable reply: {e}")))),
+                }
+            }
+            Ok(Err(WireError::Truncated { got: 0, .. })) => Some(Err(
+                self.mark_dead(wi, "worker closed its stream (exited or was killed)"),
+            )),
+            Ok(Err(e)) => Some(Err(self.mark_dead(wi, format!("bad reply frame: {e}")))),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(
+                self.mark_dead(wi, "worker reader disconnected (process gone)"),
+            )),
+        }
+    }
+
+    /// Validate one worker's in-round message as the `RoundDone` answering
+    /// `shape` (for adoptions, the in-flight `pending` task —
+    /// [`wire::reply_matches`] on `AdoptMachines` delegates to it),
+    /// checking the reply count and each reply's shape.
+    fn check_round_done(
         &mut self,
         wi: usize,
+        msg: FromWorker,
         shape: &RoundTask,
         expected: usize,
-        timeout: Duration,
     ) -> Result<(Vec<TaskReply>, (u64, u64, u64))> {
-        match self.recv_within(wi, timeout)? {
+        match msg {
             FromWorker::RoundDone { replies, calls } => {
                 if replies.len() != expected {
                     return Err(self.mark_dead(
@@ -1017,8 +1245,33 @@ struct WorkerRuntime {
     oracle: CountingOracle<std::sync::Arc<dyn Oracle>>,
     counters: std::sync::Arc<OracleCounters>,
     machines: Vec<usize>,
-    shards: Vec<Vec<ElementId>>,
+    /// Owned (wire path) or arena-mapped (zero-copy path) per machine.
+    shards: Vec<ShardData>,
     stores: Vec<GuessStore>,
+    /// Cross-round broadcast-state cache: Algorithm 5's per-guess `G`
+    /// states persist here between rounds instead of being replayed from
+    /// scratch (see [`StateCache`]).
+    cache: StateCache,
+}
+
+/// Resolve a machine list against the arena mapping; a machine the arena
+/// does not cover is a structural error (coordinator/worker disagree on
+/// the region layout), never a silent empty shard.
+fn arena_shards(
+    map: &ArenaMap,
+    machines: &[u32],
+) -> std::result::Result<Vec<ShardData>, String> {
+    machines
+        .iter()
+        .map(|&m| {
+            map.shard(m).map(ShardData::Mapped).ok_or_else(|| {
+                format!(
+                    "arena has no shard for machine {m} (mapping covers {} machines)",
+                    map.machines()
+                )
+            })
+        })
+        .collect()
 }
 
 fn send_reply(w: &mut dyn Write, msg: &FromWorker, max_frame: usize) -> bool {
@@ -1126,7 +1379,7 @@ fn fire_round_fault(
 fn adopt_machines(
     rt: &mut WorkerRuntime,
     machines: Vec<u32>,
-    shards: Vec<Vec<ElementId>>,
+    shards: Vec<ShardData>,
     replay: Vec<RoundTask>,
     pending: &RoundTask,
 ) -> Vec<TaskReply> {
@@ -1135,23 +1388,28 @@ fn adopt_machines(
     rt.machines.extend(machines.iter().map(|&i| i as usize));
     rt.shards.extend(shards);
     rt.stores.extend(std::iter::repeat_with(GuessStore::default).take(adopted));
+    // the replay's bases differ from the cached (current-round) states;
+    // checkout resets and replays as needed, then the pending re-run
+    // advances the cache right back — bit-identity is unaffected.
     for t in &replay {
-        let _ = shard::run_task_all(
+        let _ = shard::run_task_all_cached(
             &rt.oracle,
             &rt.shards[n0..],
             &mut rt.stores[n0..],
             &rt.machines[n0..],
             t,
             &crate::mapreduce::backend::Serial,
+            &mut rt.cache,
         );
     }
-    shard::run_task_all(
+    shard::run_task_all_cached(
         &rt.oracle,
         &rt.shards[n0..],
         &mut rt.stores[n0..],
         &rt.machines[n0..],
         pending,
         &crate::mapreduce::backend::Serial,
+        &mut rt.cache,
     )
 }
 
@@ -1159,13 +1417,31 @@ fn adopt_machines(
 /// pipes or sockets in production). Sends the connect-time `Hello` (as
 /// worker slot `worker_id`), then serves frames — including
 /// [`RoundTask::AdoptMachines`] adoptions from the elastic pool — until
-/// shutdown. Returns the process exit code.
+/// shutdown. Returns the process exit code. Wire-path form of
+/// [`run_worker_mapped`] (no arena).
 pub fn run_worker(
     r: &mut dyn Read,
     w: &mut dyn Write,
     max_frame: usize,
     worker_id: u32,
     fault: Option<&str>,
+) -> i32 {
+    run_worker_mapped(r, w, max_frame, worker_id, fault, None)
+}
+
+/// [`run_worker`] with an optional pre-received arena mapping: on the
+/// `@uds+arena` transport, [`worker_main`] receives the arena fd before
+/// the first frame, maps it, and hands the mapping in here; arena-flagged
+/// `Init`/`AdoptMachines` frames then resolve shards from the mapping
+/// (zero-copy) instead of decoding them. An arena-flagged frame without a
+/// mapping is a structural `Fail`, never a silent empty shard.
+pub fn run_worker_mapped(
+    r: &mut dyn Read,
+    w: &mut dyn Write,
+    max_frame: usize,
+    worker_id: u32,
+    fault: Option<&str>,
+    arena_map: Option<ArenaMap>,
 ) -> i32 {
     let fault = fault.map(FaultSpec::parse).filter(|f| f.applies_to(worker_id));
     let faulted = |kind: &str| fault.as_ref().is_some_and(|f| f.kind == kind);
@@ -1208,15 +1484,33 @@ pub fn run_worker(
         match msg {
             ToWorker::Init(init) => match init.spec.build() {
                 Ok(oracle) => {
+                    let shards = if init.arena {
+                        let resolved = match &arena_map {
+                            Some(map) => arena_shards(map, &init.machines),
+                            None => Err("arena-flagged Init but no arena mapping \
+                                         (transport without fd-passing?)"
+                                .into()),
+                        };
+                        match resolved {
+                            Ok(s) => s,
+                            Err(message) => {
+                                send_reply(w, &FromWorker::Fail { message }, max_frame);
+                                return 3;
+                            }
+                        }
+                    } else {
+                        init.shards.into_iter().map(ShardData::Owned).collect()
+                    };
                     let counting = CountingOracle::new(oracle);
                     let counters = counting.counter();
-                    let n = init.shards.len();
+                    let n = shards.len();
                     rt = Some(WorkerRuntime {
                         oracle: counting,
                         counters,
                         machines: init.machines.iter().map(|&i| i as usize).collect(),
-                        shards: init.shards,
+                        shards,
                         stores: vec![GuessStore::default(); n],
+                        cache: StateCache::default(),
                     });
                     let version = if faulted("bad-version") {
                         WIRE_VERSION.wrapping_add(1)
@@ -1257,16 +1551,33 @@ pub fn run_worker(
                 };
                 let before = rt.counters.snapshot();
                 let replies = match task {
-                    RoundTask::AdoptMachines { machines, shards, replay, pending } => {
-                        adopt_machines(rt, machines, shards, replay, &pending)
+                    RoundTask::AdoptMachines { machines, shards, arena, replay, pending } => {
+                        let data = if arena {
+                            let resolved = match &arena_map {
+                                Some(map) => arena_shards(map, &machines),
+                                None => Err("arena-flagged adoption but no arena mapping"
+                                    .into()),
+                            };
+                            match resolved {
+                                Ok(s) => s,
+                                Err(message) => {
+                                    send_reply(w, &FromWorker::Fail { message }, max_frame);
+                                    return 3;
+                                }
+                            }
+                        } else {
+                            shards.into_iter().map(ShardData::Owned).collect()
+                        };
+                        adopt_machines(rt, machines, data, replay, &pending)
                     }
-                    task => shard::run_task_all(
+                    task => shard::run_task_all_cached(
                         &rt.oracle,
                         &rt.shards,
                         &mut rt.stores,
                         &rt.machines,
                         &task,
                         &crate::mapreduce::backend::Serial,
+                        &mut rt.cache,
                     ),
                 };
                 let after = rt.counters.snapshot();
@@ -1370,13 +1681,35 @@ pub fn worker_main(args: &[String]) -> i32 {
                 }
             }
             match link {
-                Some(mut link) => run_worker(
-                    &mut *link.reader,
-                    &mut *link.writer,
-                    max_frame,
-                    worker_id,
-                    fault.as_deref(),
-                ),
+                Some(mut link) => {
+                    // arena handshake: the coordinator passes the memfd
+                    // as the stream's first byte, before any frame; map
+                    // it now so arena-flagged Inits can resolve shards.
+                    let want_arena =
+                        std::env::var("MRSUB_ARENA").is_ok_and(|v| v == "1");
+                    let arena_map = match (&link.control, want_arena) {
+                        (LinkControl::Uds(s), true) => {
+                            match arena::recv_fd(s, Duration::from_secs(30))
+                                .and_then(ArenaMap::from_fd)
+                            {
+                                Ok(map) => Some(map),
+                                Err(e) => {
+                                    eprintln!("mrsub worker: arena mapping failed: {e}");
+                                    return 3;
+                                }
+                            }
+                        }
+                        _ => None,
+                    };
+                    run_worker_mapped(
+                        &mut *link.reader,
+                        &mut *link.writer,
+                        max_frame,
+                        worker_id,
+                        fault.as_deref(),
+                        arena_map,
+                    )
+                }
                 None => 3,
             }
         }
@@ -1420,6 +1753,7 @@ mod tests {
             machines: vec![0, 1],
             shards: vec![(0..30).collect(), (30..60).collect()],
             sample: vec![1, 2, 3],
+            arena: false,
         });
         let round = ToWorker::Round(RoundTask::LocalGreedy { k: 3 });
         let input = framed(&[init, round, ToWorker::Shutdown]);
@@ -1502,6 +1836,7 @@ mod tests {
             machines: vec![0],
             shards: vec![(0..60).collect()],
             sample: vec![],
+            arena: false,
         });
         let round = ToWorker::Round(RoundTask::MaxSingleton);
         let input = framed(&[init.clone(), round.clone()]);
@@ -1567,6 +1902,7 @@ mod tests {
             machines: vec![0],
             shards: vec![(0..60).collect()],
             sample: vec![],
+            arena: false,
         });
         let round = ToWorker::Round(RoundTask::MaxSingleton);
         let input = framed(&[init, round, ToWorker::Shutdown]);
@@ -1603,6 +1939,7 @@ mod tests {
             machines: vec![0],
             shards: vec![(0..60).collect()],
             sample: vec![],
+            arena: false,
         });
         let round = ToWorker::Round(RoundTask::MaxSingleton);
         let input = framed(&[init, round.clone(), round, ToWorker::Shutdown]);
@@ -1653,6 +1990,7 @@ mod tests {
                 machines: vec![0, 1],
                 shards: vec![shard0.clone(), shard1.clone()],
                 sample: vec![],
+                arena: false,
             }),
             ToWorker::Round(prune1.clone()),
             ToWorker::Round(prune2.clone()),
@@ -1674,6 +2012,7 @@ mod tests {
         let adopt = RoundTask::AdoptMachines {
             machines: vec![1],
             shards: vec![shard1],
+            arena: false,
             replay: vec![prune1.clone()],
             pending: Box::new(prune2),
         };
@@ -1683,6 +2022,7 @@ mod tests {
                 machines: vec![0],
                 shards: vec![shard0],
                 sample: vec![],
+                arena: false,
             }),
             ToWorker::Round(prune1),
             ToWorker::Round(adopt),
@@ -1726,6 +2066,7 @@ mod tests {
             machines: vec![3, 7],
             shards: vec![vec![1, 2], vec![3]],
             sample: vec![9],
+            arena: false,
         };
         let msg = ToWorker::Init(init.clone());
         match ToWorker::decode(&msg.encode()).unwrap() {
@@ -1737,5 +2078,96 @@ mod tests {
         init.spec.encode(&mut enc);
         let mut dec = Dec::new(&enc.buf);
         assert_eq!(OracleSpec::decode(&mut dec).unwrap(), init.spec);
+    }
+
+    #[test]
+    fn arena_init_without_mapping_fails_structurally() {
+        // an arena-flagged Init reaching a worker that never received the
+        // fd (pipe/TCP, or a lost fd-pass) must Fail, not serve garbage.
+        let init = ToWorker::Init(WorkerInit {
+            spec: spec(),
+            machines: vec![0],
+            shards: Vec::new(),
+            sample: Vec::new(),
+            arena: true,
+        });
+        let input = framed(&[init]);
+        let mut r = std::io::Cursor::new(input);
+        let mut out = Vec::new();
+        assert_ne!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, 0, None), 0);
+        match &read_replies(&out)[1] {
+            FromWorker::Fail { message } => {
+                assert!(message.contains("no arena mapping"), "got: {message}")
+            }
+            other => panic!("expected Fail, got {other:?}"),
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn arena_worker_round_matches_wire_worker_round() {
+        // the zero-copy contract at the worker level: an arena-resolved
+        // worker must produce byte-identical RoundDone frames to a worker
+        // that decoded the same shards off the wire.
+        use std::os::unix::net::UnixStream;
+        let shards: Vec<Vec<ElementId>> = vec![(0..30).collect(), (30..60).collect()];
+        let sample: Vec<ElementId> = vec![1, 2, 3];
+        let round = ToWorker::Round(RoundTask::Batch(vec![
+            RoundTask::LocalGreedy { k: 3 },
+            RoundTask::PruneSample {
+                base: vec![],
+                floor: 0.1,
+                tau: 0.5,
+                per_share: 6,
+                seed: 17,
+                round: 1,
+            },
+        ]));
+
+        // wire reference.
+        let wire_init = ToWorker::Init(WorkerInit {
+            spec: spec(),
+            machines: vec![0, 1],
+            shards: shards.clone(),
+            sample: sample.clone(),
+            arena: false,
+        });
+        let input = framed(&[wire_init, round.clone(), ToWorker::Shutdown]);
+        let mut out = Vec::new();
+        assert_eq!(
+            run_worker(&mut std::io::Cursor::new(input), &mut out, DEFAULT_MAX_FRAME, 0, None),
+            0
+        );
+        let wire_replies = read_replies(&out);
+
+        // arena path: build, fd-pass over a socketpair, map, serve.
+        let a = Arena::build(&shards, &sample).expect("memfd arena");
+        let (tx, rx) = UnixStream::pair().unwrap();
+        a.send_fd(&tx).unwrap();
+        let map = ArenaMap::from_fd(
+            arena::recv_fd(&rx, Duration::from_secs(5)).unwrap(),
+        )
+        .unwrap();
+        let arena_init = ToWorker::Init(WorkerInit {
+            spec: spec(),
+            machines: vec![0, 1],
+            shards: Vec::new(),
+            sample: Vec::new(),
+            arena: true,
+        });
+        let input = framed(&[arena_init, round, ToWorker::Shutdown]);
+        let mut out = Vec::new();
+        assert_eq!(
+            run_worker_mapped(
+                &mut std::io::Cursor::new(input),
+                &mut out,
+                DEFAULT_MAX_FRAME,
+                0,
+                None,
+                Some(map),
+            ),
+            0
+        );
+        assert_eq!(read_replies(&out), wire_replies, "arena and wire workers must agree");
     }
 }

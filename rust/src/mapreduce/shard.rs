@@ -32,6 +32,28 @@ use crate::mapreduce::wire::{RoundTask, TaskReply};
 use crate::oracle::{Oracle, OracleState, StatePool};
 use crate::util::rng::Rng;
 
+/// A machine's resident shard: owned (decoded off a wire frame) or
+/// borrowed zero-copy from the process-lifetime arena mapping
+/// ([`crate::mapreduce::arena::ArenaMap`] — the `@uds+arena` transport).
+/// Both read identically through [`AsRef`]; the interpreter never needs
+/// to know which one it holds.
+#[derive(Debug, Clone)]
+pub enum ShardData {
+    /// Decoded from a wire frame; the worker owns the allocation.
+    Owned(Vec<ElementId>),
+    /// Borrowed from the mmap'd arena (alive for the process lifetime).
+    Mapped(&'static [ElementId]),
+}
+
+impl AsRef<[ElementId]> for ShardData {
+    fn as_ref(&self) -> &[ElementId] {
+        match self {
+            ShardData::Owned(v) => v,
+            ShardData::Mapped(s) => s,
+        }
+    }
+}
+
 /// Per-machine persistent state across rounds: the per-OPT-guess filtered
 /// shard copies of Algorithm 5 (absent ⇒ the guess still sees the
 /// machine's original shard), plus Sample&Prune's permanently pruned
@@ -120,33 +142,129 @@ pub enum Prepared {
     },
 }
 
-/// Rehydrate a task's broadcast states by replaying each `base` into a
-/// fresh oracle state in insertion order — the same replay on every
-/// backend, so the resulting marginals are bit-identical everywhere.
-pub fn prepare(oracle: &dyn Oracle, task: &RoundTask) -> Prepared {
-    let replay = |base: &[ElementId]| -> Box<dyn OracleState> {
-        let mut st = oracle.state();
-        for &e in base {
+/// Cache key: which broadcast state a slot rehydrates. Algorithm 5's
+/// per-guess `G` states key on the guess id; the single-state tasks
+/// (`Filter`, `PruneSample`) each get one well-known slot.
+type CacheKey = (u8, u32);
+const TAG_FILTER: u8 = 0;
+const TAG_GUESS: u8 = 1;
+const TAG_PRUNE: u8 = 2;
+
+/// Cross-round rehydration cache for the broadcast oracle states.
+///
+/// Without it, every round replays each task's `base` (the partial
+/// solution `G`) into a *fresh* state — Algorithm 5's threshold sequence
+/// re-inserts an ever-growing `G` from scratch, `1 + 2t` times. The cache
+/// keeps last round's state per guess; since successive rounds only ever
+/// *extend* `G` (insertion order is part of the wire contract), the next
+/// round usually inserts just the new suffix. A base that is not an
+/// extension of the cached one falls back to `reset()` + full replay,
+/// which the [`crate::oracle::OracleState`] contract makes
+/// indistinguishable from a fresh state — so cached and uncached rounds
+/// are bit-identical by construction, and the conformance suite
+/// re-asserts it end to end.
+#[derive(Default)]
+pub struct StateCache {
+    slots: HashMap<CacheKey, Box<dyn OracleState>>,
+}
+
+impl StateCache {
+    /// Take the slot's state advanced to exactly `base`: extend in place
+    /// when `base` extends the cached insertion order, otherwise reset
+    /// and replay. A missing slot builds from a fresh `oracle.state()`.
+    fn checkout(
+        &mut self,
+        oracle: &dyn Oracle,
+        key: CacheKey,
+        base: &[ElementId],
+    ) -> Box<dyn OracleState> {
+        let mut st = match self.slots.remove(&key) {
+            Some(st) => st,
+            None => oracle.state(),
+        };
+        if !base.starts_with(st.selected()) {
+            st.reset();
+        }
+        let done = st.selected().len();
+        for &e in &base[done..] {
             st.insert(e);
         }
         st
-    };
+    }
+
+    /// Return a round's broadcast states to their slots for the next
+    /// round to extend. Tasks without broadcast state are no-ops.
+    fn check_in(&mut self, prep: Prepared) {
+        match prep {
+            Prepared::Filter { state, .. } => {
+                self.slots.insert((TAG_FILTER, 0), state);
+            }
+            Prepared::MultiFilter { guesses, .. } => {
+                for (id, state, _) in guesses {
+                    self.slots.insert((TAG_GUESS, id), state);
+                }
+            }
+            Prepared::PruneSample { state, .. } => {
+                self.slots.insert((TAG_PRUNE, 0), state);
+            }
+            Prepared::Batch(parts) => {
+                for p in parts {
+                    self.check_in(p);
+                }
+            }
+            Prepared::LocalGreedy { .. } | Prepared::MaxSingleton | Prepared::TopSingletons { .. } => {}
+        }
+    }
+
+    /// Number of cached states (tests/metrics).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True iff no state is cached.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+/// Rehydrate a task's broadcast states by replaying each `base` into a
+/// fresh oracle state in insertion order — the same replay on every
+/// backend, so the resulting marginals are bit-identical everywhere.
+/// Uncached form of [`prepare_with`] (a throwaway cache).
+pub fn prepare(oracle: &dyn Oracle, task: &RoundTask) -> Prepared {
+    prepare_with(oracle, task, &mut StateCache::default())
+}
+
+/// [`prepare`] against a persistent [`StateCache`]: broadcast states are
+/// checked out of (and, after the round, returned to) per-guess slots,
+/// turning Algorithm 5's repeated full-`G` replays into suffix inserts.
+pub fn prepare_with(oracle: &dyn Oracle, task: &RoundTask, cache: &mut StateCache) -> Prepared {
     match task {
-        RoundTask::Filter { base, tau } => Prepared::Filter { state: replay(base), tau: *tau },
-        RoundTask::MultiFilter { persist, guesses, drop } => Prepared::MultiFilter {
-            persist: *persist,
-            guesses: guesses.iter().map(|g| (g.id, replay(&g.base), g.tau)).collect(),
-            drop: drop.clone(),
-        },
+        RoundTask::Filter { base, tau } => {
+            Prepared::Filter { state: cache.checkout(oracle, (TAG_FILTER, 0), base), tau: *tau }
+        }
+        RoundTask::MultiFilter { persist, guesses, drop } => {
+            for id in drop {
+                cache.slots.remove(&(TAG_GUESS, *id));
+            }
+            Prepared::MultiFilter {
+                persist: *persist,
+                guesses: guesses
+                    .iter()
+                    .map(|g| (g.id, cache.checkout(oracle, (TAG_GUESS, g.id), &g.base), g.tau))
+                    .collect(),
+                drop: drop.clone(),
+            }
+        }
         RoundTask::LocalGreedy { k } => Prepared::LocalGreedy { k: *k },
         RoundTask::MaxSingleton => Prepared::MaxSingleton,
         RoundTask::TopSingletons { k, c } => Prepared::TopSingletons { k: *k, c: *c },
         RoundTask::Batch(tasks) => {
-            Prepared::Batch(tasks.iter().map(|t| prepare(oracle, t)).collect())
+            Prepared::Batch(tasks.iter().map(|t| prepare_with(oracle, t, cache)).collect())
         }
         RoundTask::PruneSample { base, floor, tau, per_share, seed, round } => {
             Prepared::PruneSample {
-                state: replay(base),
+                state: cache.checkout(oracle, (TAG_PRUNE, 0), base),
                 floor: *floor,
                 tau: *tau,
                 per_share: *per_share,
@@ -160,7 +278,7 @@ pub fn prepare(oracle: &dyn Oracle, task: &RoundTask) -> Prepared {
             // machines cannot die, so the interpreter degrades it to its
             // in-flight task rather than panicking.
             debug_assert!(false, "AdoptMachines must not reach the shard interpreter");
-            prepare(oracle, pending)
+            prepare_with(oracle, pending, cache)
         }
     }
 }
@@ -275,23 +393,43 @@ pub fn apply(prep: &Prepared, reply: &TaskReply, store: &mut GuessStore) {
 /// on `exec`, apply serially. `shards[i]`/`stores[i]` is the machine
 /// with *global* id `machines[i]` (the identity map for the in-process
 /// backends; a worker process passes the subset of machines it hosts, so
-/// per-machine RNG streams agree across backends).
-pub fn run_task_all(
+/// per-machine RNG streams agree across backends). Shards are anything
+/// slice-like — owned vectors or arena-mapped [`ShardData`].
+/// Uncached form of [`run_task_all_cached`] (a throwaway cache).
+pub fn run_task_all<S: AsRef<[ElementId]> + Sync>(
     oracle: &dyn Oracle,
-    shards: &[Vec<ElementId>],
+    shards: &[S],
     stores: &mut [GuessStore],
     machines: &[usize],
     task: &RoundTask,
     exec: &dyn ExecBackend,
 ) -> Vec<TaskReply> {
+    run_task_all_cached(oracle, shards, stores, machines, task, exec, &mut StateCache::default())
+}
+
+/// [`run_task_all`] against a persistent [`StateCache`]: the round's
+/// broadcast states come out of (and go back into) the cache, so callers
+/// that keep one cache per oracle — `MrCluster` and the worker runtime —
+/// pay suffix inserts instead of full `G` replays on Algorithm 5's
+/// threshold sequence. Replies are bit-identical with or without the
+/// cache (see [`StateCache`]).
+pub fn run_task_all_cached<S: AsRef<[ElementId]> + Sync>(
+    oracle: &dyn Oracle,
+    shards: &[S],
+    stores: &mut [GuessStore],
+    machines: &[usize],
+    task: &RoundTask,
+    exec: &dyn ExecBackend,
+    cache: &mut StateCache,
+) -> Vec<TaskReply> {
     debug_assert_eq!(shards.len(), stores.len());
     debug_assert_eq!(shards.len(), machines.len());
-    let prep = prepare(oracle, task);
+    let prep = prepare_with(oracle, task, cache);
     let states = StatePool::new(oracle);
     let computed = {
         let stores_ro: &[GuessStore] = stores;
         backend::map_indexed(exec, shards.len(), |i| {
-            compute(&states, &prep, &shards[i], &stores_ro[i], machines[i])
+            compute(&states, &prep, shards[i].as_ref(), &stores_ro[i], machines[i])
         })
     };
     let mut replies = Vec::with_capacity(computed.len());
@@ -302,6 +440,7 @@ pub fn run_task_all(
         }
         replies.push(c.reply);
     }
+    cache.check_in(prep);
     replies
 }
 
@@ -454,6 +593,77 @@ mod tests {
         for ((store, shard), prev) in stores.iter().zip(&shards).zip(before) {
             assert!(store.base_shard(shard).len() <= prev, "resident shard monotone");
         }
+    }
+
+    #[test]
+    fn cached_rounds_are_bit_identical_to_uncached() {
+        // An Algorithm-5-shaped sequence: growing bases (suffix-extend
+        // path), then a shrunk base (reset path), then a dropped guess.
+        let (o, shards, mut stores_a) = setup();
+        let mut stores_b = stores_a.clone();
+        let mut cache = StateCache::default();
+        let g = |id: u32, base: Vec<ElementId>, tau: f64| GuessFilter { id, base, tau };
+        let seq = vec![
+            RoundTask::MultiFilter {
+                persist: true,
+                guesses: vec![g(1, vec![], 2.0), g(2, vec![], 1.0)],
+                drop: vec![],
+            },
+            RoundTask::MultiFilter {
+                persist: true,
+                guesses: vec![g(1, vec![4, 9], 1.5), g(2, vec![4], 0.8)],
+                drop: vec![],
+            },
+            // guess 1 extends again; guess 2's base is NOT an extension
+            // (forces the reset-and-replay path).
+            RoundTask::MultiFilter {
+                persist: true,
+                guesses: vec![g(1, vec![4, 9, 50], 1.1), g(2, vec![7, 4], 0.6)],
+                drop: vec![],
+            },
+            RoundTask::Filter { base: vec![2, 11], tau: 0.9 },
+            RoundTask::Filter { base: vec![2, 11, 60], tau: 0.7 },
+            RoundTask::MultiFilter { persist: true, guesses: vec![], drop: vec![1, 2] },
+        ];
+        for task in &seq {
+            let a = run_task_all(&o, &shards, &mut stores_a, &[0, 1, 2], task, &Serial);
+            let b = run_task_all_cached(
+                &o,
+                &shards,
+                &mut stores_b,
+                &[0, 1, 2],
+                task,
+                &Serial,
+                &mut cache,
+            );
+            assert_eq!(a, b, "cached round diverged on task {}", task.label());
+        }
+        assert!(!cache.is_empty(), "Filter state stays cached");
+        assert_eq!(cache.len(), 1, "dropped guesses evict their slots");
+    }
+
+    #[test]
+    fn mapped_shards_compute_identically_to_owned() {
+        let (o, shards, mut stores_a) = setup();
+        let mut stores_b = stores_a.clone();
+        let mapped: Vec<ShardData> = shards
+            .iter()
+            .map(|s| ShardData::Mapped(Box::leak(s.clone().into_boxed_slice())))
+            .collect();
+        let task = RoundTask::Batch(vec![
+            RoundTask::LocalGreedy { k: 4 },
+            RoundTask::PruneSample {
+                base: vec![],
+                floor: 0.2,
+                tau: 0.8,
+                per_share: 4,
+                seed: 31,
+                round: 1,
+            },
+        ]);
+        let a = run_task_all(&o, &shards, &mut stores_a, &[0, 1, 2], &task, &Serial);
+        let b = run_task_all(&o, &mapped, &mut stores_b, &[0, 1, 2], &task, &Serial);
+        assert_eq!(a, b, "shard representation must be invisible to the interpreter");
     }
 
     #[test]

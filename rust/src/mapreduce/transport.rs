@@ -45,6 +45,12 @@ pub enum Transport {
     Pipe,
     /// Unix-domain socket under the system temp dir; workers connect back.
     Uds,
+    /// [`Transport::Uds`] plus the zero-copy shard arena
+    /// ([`crate::mapreduce::arena`]): the coordinator fd-passes a memfd
+    /// region over the socket and workers map shards instead of decoding
+    /// them. Falls back transparently to plain `@uds` wire semantics when
+    /// the arena cannot be built (non-Linux, memfd failure).
+    UdsArena,
     /// TCP. `bind: None` = loopback listener + locally spawned workers;
     /// `bind: Some(addr)` = listen on `addr` and wait for external
     /// `mrsub worker --connect` processes instead of spawning any.
@@ -54,25 +60,43 @@ pub enum Transport {
     },
 }
 
+/// The valid transport suffixes, for error messages — kept next to the
+/// parser so the two cannot drift.
+pub const TRANSPORT_SUFFIXES: &str = "pipe | uds | uds+arena | tcp | tcp:HOST:PORT";
+
 impl Transport {
     /// Parse the `@`-suffix of a `process:N@<suffix>` backend string:
-    /// `"pipe"`, `"uds"`, `"tcp"`, or `"tcp:HOST:PORT"`.
-    pub fn parse_suffix(s: &str) -> Option<Transport> {
+    /// `"pipe"`, `"uds"`, `"uds+arena"`, `"tcp"`, or `"tcp:HOST:PORT"`.
+    /// Unknown or malformed suffixes return a structured error naming the
+    /// valid set (surfaced verbatim by the CLI and the TOML parser).
+    pub fn parse_suffix(s: &str) -> Result<Transport, String> {
         match s {
-            "pipe" => Some(Transport::Pipe),
-            "uds" => Some(Transport::Uds),
-            "tcp" => Some(Transport::Tcp { bind: None }),
-            _ => s.strip_prefix("tcp:").and_then(|addr| {
-                let addr = addr.trim();
-                // require a HOST:PORT shape so `tcp:` alone is rejected;
-                // port 0 (ephemeral) is rejected too — external workers
-                // could never discover the port the kernel picked.
-                addr.rsplit_once(':')
-                    .filter(|(h, p)| {
+            "pipe" => Ok(Transport::Pipe),
+            "uds" => Ok(Transport::Uds),
+            "uds+arena" => Ok(Transport::UdsArena),
+            "tcp" => Ok(Transport::Tcp { bind: None }),
+            _ => {
+                if let Some(addr) = s.strip_prefix("tcp:") {
+                    let addr = addr.trim();
+                    // require a HOST:PORT shape so `tcp:` alone is
+                    // rejected; port 0 (ephemeral) is rejected too —
+                    // external workers could never discover the port the
+                    // kernel picked.
+                    let ok = addr.rsplit_once(':').is_some_and(|(h, p)| {
                         !h.is_empty() && p.parse::<u16>().is_ok_and(|port| port != 0)
-                    })
-                    .map(|_| Transport::Tcp { bind: Some(addr.to_string()) })
-            }),
+                    });
+                    if ok {
+                        return Ok(Transport::Tcp { bind: Some(addr.to_string()) });
+                    }
+                    return Err(format!(
+                        "bad tcp transport suffix {s:?}: want tcp:HOST:PORT with a \
+                         nonzero port (valid transports: {TRANSPORT_SUFFIXES})"
+                    ));
+                }
+                Err(format!(
+                    "unknown transport suffix {s:?} (valid transports: {TRANSPORT_SUFFIXES})"
+                ))
+            }
         }
     }
 
@@ -83,9 +107,15 @@ impl Transport {
         match self {
             Transport::Pipe => String::new(),
             Transport::Uds => "@uds".into(),
+            Transport::UdsArena => "@uds+arena".into(),
             Transport::Tcp { bind: None } => "@tcp".into(),
             Transport::Tcp { bind: Some(addr) } => format!("@tcp:{addr}"),
         }
+    }
+
+    /// True iff this transport attempts the zero-copy shard arena.
+    pub fn wants_arena(&self) -> bool {
+        matches!(self, Transport::UdsArena)
     }
 
     /// True for the socket transports (worker connects back to a
@@ -107,6 +137,7 @@ impl fmt::Display for Transport {
         match self {
             Transport::Pipe => write!(f, "pipe"),
             Transport::Uds => write!(f, "uds"),
+            Transport::UdsArena => write!(f, "uds+arena"),
             Transport::Tcp { bind: None } => write!(f, "tcp"),
             Transport::Tcp { bind: Some(addr) } => write!(f, "tcp:{addr}"),
         }
@@ -194,7 +225,7 @@ impl Listener {
     pub fn bind(transport: &Transport, tag: u64) -> std::io::Result<Option<Listener>> {
         match transport {
             Transport::Pipe => Ok(None),
-            Transport::Uds => {
+            Transport::Uds | Transport::UdsArena => {
                 let path = std::env::temp_dir()
                     .join(format!("mrsub-{}-{tag:x}.sock", std::process::id()));
                 // a stale path from a crashed earlier run would fail the bind.
@@ -305,6 +336,7 @@ mod tests {
         for (s, t) in [
             ("pipe", Transport::Pipe),
             ("uds", Transport::Uds),
+            ("uds+arena", Transport::UdsArena),
             ("tcp", Transport::Tcp { bind: None }),
             ("tcp:127.0.0.1:9000", Transport::Tcp { bind: Some("127.0.0.1:9000".into()) }),
         ] {
@@ -312,26 +344,49 @@ mod tests {
             assert_eq!(parsed, t, "{s}");
             let suffix = parsed.label_suffix();
             if !suffix.is_empty() {
-                assert_eq!(Transport::parse_suffix(&suffix[1..]), Some(t));
+                assert_eq!(Transport::parse_suffix(&suffix[1..]), Ok(t));
             }
         }
-        assert_eq!(Transport::parse_suffix("shm"), None);
-        assert_eq!(Transport::parse_suffix("tcp:"), None);
-        assert_eq!(Transport::parse_suffix("tcp:nohost"), None);
-        assert_eq!(Transport::parse_suffix("tcp::123"), None);
-        assert_eq!(Transport::parse_suffix("tcp:host:notaport"), None);
-        // ephemeral port 0 would be undiscoverable by external workers.
-        assert_eq!(Transport::parse_suffix("tcp:host:0"), None);
+    }
+
+    #[test]
+    fn bad_suffixes_name_the_valid_set() {
+        for s in [
+            "shm",
+            "tcp:",
+            "tcp:nohost",
+            "tcp::123",
+            "tcp:host:notaport",
+            // ephemeral port 0 would be undiscoverable by external workers.
+            "tcp:host:0",
+            "uds+shm",
+        ] {
+            let err = Transport::parse_suffix(s).unwrap_err();
+            assert!(
+                err.contains(TRANSPORT_SUFFIXES),
+                "error for {s:?} must name the valid transports, got: {err}"
+            );
+        }
     }
 
     #[test]
     fn external_worker_semantics() {
         assert!(!Transport::Pipe.external_workers());
         assert!(!Transport::Uds.external_workers());
+        assert!(!Transport::UdsArena.external_workers());
         assert!(!Transport::Tcp { bind: None }.external_workers());
         assert!(Transport::Tcp { bind: Some("0.0.0.0:7070".into()) }.external_workers());
         assert!(Transport::Uds.is_socket());
+        assert!(Transport::UdsArena.is_socket());
         assert!(!Transport::Pipe.is_socket());
+        assert!(Transport::UdsArena.wants_arena());
+        assert!(!Transport::Uds.wants_arena());
+    }
+
+    #[test]
+    fn uds_arena_binds_a_unix_listener() {
+        let l = Listener::bind(&Transport::UdsArena, 0xBEEF).unwrap().unwrap();
+        assert!(l.endpoint().starts_with("uds:"), "{}", l.endpoint());
     }
 
     #[test]

@@ -48,7 +48,13 @@ use crate::oracle::spec::OracleSpec;
 /// v3: [`RoundTask::AdoptMachines`] — the elastic-pool recovery message
 /// that reships a dead worker's machines (shards + store-mutating replay
 /// history + the in-flight task) onto a surviving worker.
-pub const WIRE_VERSION: u16 = 3;
+///
+/// v4: the zero-copy shard arena (`process:N@uds+arena`,
+/// [`crate::mapreduce::arena`]). [`WorkerInit`] and
+/// [`RoundTask::AdoptMachines`] carry an `arena` flag; when set, shard
+/// and sample payloads are *elided* from the frame — workers read them
+/// from the fd-passed memfd mapping by global machine id instead.
+pub const WIRE_VERSION: u16 = 4;
 
 /// Frame magic: "MRSB" (MapReduce-Submodular Backend).
 pub const FRAME_MAGIC: [u8; 4] = *b"MRSB";
@@ -493,8 +499,14 @@ pub enum RoundTask {
     AdoptMachines {
         /// Global ids of the machines being adopted, in adoption order.
         machines: Vec<u32>,
-        /// One spawn-time shard per adopted machine (same order).
+        /// One spawn-time shard per adopted machine (same order). Empty
+        /// when `arena` is set: the adopter reads spawn shards from its
+        /// memfd mapping by global machine id, and no shard bytes cross
+        /// the wire.
         shards: Vec<Vec<ElementId>>,
+        /// Shards live in the fd-passed arena mapping (wire v4,
+        /// `@uds+arena`); `shards` above is elided from the frame.
+        arena: bool,
         /// Store-mutating tasks of all completed rounds, in round order
         /// (see [`RoundTask::mutates_store`]); replayed effects-only.
         replay: Vec<RoundTask>,
@@ -549,12 +561,17 @@ impl RoundTask {
                 enc.u64(*seed);
                 enc.u32(*round);
             }
-            RoundTask::AdoptMachines { machines, shards, replay, pending } => {
+            RoundTask::AdoptMachines { machines, shards, arena, replay, pending } => {
                 enc.u8(8);
                 enc.ids(machines);
-                enc.u32(shards.len() as u32);
-                for s in shards {
-                    enc.ids(s);
+                enc.bool(*arena);
+                if !*arena {
+                    enc.u32(shards.len() as u32);
+                    for s in shards {
+                        enc.ids(s);
+                    }
+                } else {
+                    debug_assert!(shards.is_empty(), "arena adoptions elide shard payloads");
                 }
                 enc.u32(replay.len() as u32);
                 for t in replay {
@@ -599,17 +616,23 @@ impl RoundTask {
             },
             8 => {
                 let machines = dec.ids()?;
-                let n = dec.u32()? as usize;
-                if n != machines.len() {
-                    return Err(WireError::Malformed(format!(
-                        "adopt: {n} shards for {} machines",
-                        machines.len()
-                    )));
-                }
-                let mut shards = Vec::with_capacity(n.min(4096));
-                for _ in 0..n {
-                    shards.push(dec.ids()?);
-                }
+                let arena = dec.bool()?;
+                let shards = if arena {
+                    Vec::new()
+                } else {
+                    let n = dec.u32()? as usize;
+                    if n != machines.len() {
+                        return Err(WireError::Malformed(format!(
+                            "adopt: {n} shards for {} machines",
+                            machines.len()
+                        )));
+                    }
+                    let mut shards = Vec::with_capacity(n.min(4096));
+                    for _ in 0..n {
+                        shards.push(dec.ids()?);
+                    }
+                    shards
+                };
                 let r = dec.u32()? as usize;
                 let mut replay = Vec::with_capacity(r.min(1024));
                 for _ in 0..r {
@@ -618,6 +641,7 @@ impl RoundTask {
                 RoundTask::AdoptMachines {
                     machines,
                     shards,
+                    arena,
                     replay,
                     pending: Box::new(RoundTask::decode(dec)?),
                 }
@@ -805,6 +829,19 @@ impl TaskReply {
         }
     }
 
+    /// Borrowing view of `Multi`, defaulting to empty on shape mismatch
+    /// (for streamed-reply consumers that only need to inspect parts as
+    /// they arrive).
+    pub fn as_multi(&self) -> &[(u32, Vec<ElementId>)] {
+        match self {
+            TaskReply::Multi(parts) => parts,
+            other => {
+                debug_assert!(false, "expected Multi reply, got {other:?}");
+                &[]
+            }
+        }
+    }
+
     /// Extract `Multi`, defaulting to empty on shape mismatch.
     pub fn into_multi(self) -> Vec<(u32, Vec<ElementId>)> {
         match self {
@@ -861,10 +898,16 @@ pub struct WorkerInit {
     pub spec: OracleSpec,
     /// Simulated machine ids this worker hosts.
     pub machines: Vec<u32>,
-    /// One shard per hosted machine (same order as `machines`).
+    /// One shard per hosted machine (same order as `machines`). Empty
+    /// when `arena` is set: the worker reads shards from its fd-passed
+    /// memfd mapping by global machine id (wire v4, `@uds+arena`).
     pub shards: Vec<Vec<ElementId>>,
-    /// The broadcast sample `S`.
+    /// The broadcast sample `S`. Empty when `arena` is set (read from
+    /// the mapping).
     pub sample: Vec<ElementId>,
+    /// Shard + sample payloads live in the fd-passed arena mapping; the
+    /// fields above are elided from the frame.
+    pub arena: bool,
 }
 
 /// Coordinator → worker messages.
@@ -887,11 +930,19 @@ impl ToWorker {
                 enc.u8(1);
                 init.spec.encode(&mut enc);
                 enc.ids(&init.machines);
-                enc.u32(init.shards.len() as u32);
-                for s in &init.shards {
-                    enc.ids(s);
+                enc.bool(init.arena);
+                if !init.arena {
+                    enc.u32(init.shards.len() as u32);
+                    for s in &init.shards {
+                        enc.ids(s);
+                    }
+                    enc.ids(&init.sample);
+                } else {
+                    debug_assert!(
+                        init.shards.is_empty() && init.sample.is_empty(),
+                        "arena inits elide shard/sample payloads"
+                    );
                 }
-                enc.ids(&init.sample);
             }
             ToWorker::Round(task) => {
                 enc.u8(2);
@@ -909,18 +960,24 @@ impl ToWorker {
             1 => {
                 let spec = OracleSpec::decode(&mut dec)?;
                 let machines = dec.ids()?;
-                let n = dec.u32()? as usize;
-                if n != machines.len() {
-                    return Err(WireError::Malformed(format!(
-                        "init: {n} shards for {} machines",
-                        machines.len()
-                    )));
-                }
-                let mut shards = Vec::with_capacity(n);
-                for _ in 0..n {
-                    shards.push(dec.ids()?);
-                }
-                ToWorker::Init(WorkerInit { spec, machines, shards, sample: dec.ids()? })
+                let arena = dec.bool()?;
+                let (shards, sample) = if arena {
+                    (Vec::new(), Vec::new())
+                } else {
+                    let n = dec.u32()? as usize;
+                    if n != machines.len() {
+                        return Err(WireError::Malformed(format!(
+                            "init: {n} shards for {} machines",
+                            machines.len()
+                        )));
+                    }
+                    let mut shards = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        shards.push(dec.ids()?);
+                    }
+                    (shards, dec.ids()?)
+                };
+                ToWorker::Init(WorkerInit { spec, machines, shards, sample, arena })
             }
             2 => ToWorker::Round(RoundTask::decode(&mut dec)?),
             3 => ToWorker::Shutdown,
@@ -1072,11 +1129,15 @@ mod tests {
             _ => {
                 let n = g.usize_in(1, 4);
                 let machines: Vec<u32> = (0..n).map(|i| i as u32 * 3).collect();
-                let shards = (0..n).map(|_| arb_ids(g, 12)).collect();
+                // arena adoptions carry no shard payloads at all.
+                let arena = g.bool_with(0.5);
+                let shards =
+                    if arena { Vec::new() } else { (0..n).map(|_| arb_ids(g, 12)).collect() };
                 let r = g.usize_in(0, 3);
                 RoundTask::AdoptMachines {
                     machines,
                     shards,
+                    arena,
                     replay: (0..r).map(|_| arb_task(g, depth + 1)).collect(),
                     pending: Box::new(arb_task(g, depth + 1)),
                 }
@@ -1226,6 +1287,7 @@ mod tests {
         let adopt = RoundTask::AdoptMachines {
             machines: vec![3, 7],
             shards: vec![vec![1, 2, 3], vec![4, 5]],
+            arena: false,
             replay: vec![prune.clone()],
             pending: Box::new(RoundTask::LocalGreedy { k: 5 }),
         };
@@ -1257,6 +1319,7 @@ mod tests {
         let adopt_prune = RoundTask::AdoptMachines {
             machines: vec![0],
             shards: vec![vec![]],
+            arena: false,
             replay: vec![],
             pending: Box::new(prune),
         };
@@ -1269,6 +1332,77 @@ mod tests {
             &adopt_prune,
             &TaskReply::Pruned { shipped: vec![], fit: true, resident: 0 }
         ));
+    }
+
+    #[test]
+    fn arena_frames_elide_shard_payloads() {
+        use crate::oracle::spec::OracleSpec;
+        let spec = OracleSpec::Coverage {
+            n: 4096,
+            universe: 2048,
+            avg_degree: 4,
+            weighted: false,
+            seed: 7,
+        };
+        let big_shards: Vec<Vec<ElementId>> = (0..8).map(|m| vec![m as u32; 4096]).collect();
+        let big_sample: Vec<ElementId> = (0..2048).collect();
+        let machines: Vec<u32> = (0..8).collect();
+
+        let wire_init = ToWorker::Init(WorkerInit {
+            spec: spec.clone(),
+            machines: machines.clone(),
+            shards: big_shards.clone(),
+            sample: big_sample,
+            arena: false,
+        })
+        .encode();
+        let arena_init = ToWorker::Init(WorkerInit {
+            spec,
+            machines,
+            shards: Vec::new(),
+            sample: Vec::new(),
+            arena: true,
+        })
+        .encode();
+        // the arena form is O(1): spec + machine ids + the flag, not the
+        // tens of KiB of shard/sample payload.
+        assert!(
+            arena_init.len() < 256 && wire_init.len() > 100_000,
+            "arena init {} bytes vs wire init {} bytes",
+            arena_init.len(),
+            wire_init.len()
+        );
+        // both forms round-trip exactly.
+        for payload in [&wire_init, &arena_init] {
+            let back = ToWorker::decode(payload).unwrap();
+            assert_eq!(back.encode(), **payload);
+        }
+
+        let wire_adopt = RoundTask::AdoptMachines {
+            machines: vec![1, 3],
+            shards: big_shards[..2].to_vec(),
+            arena: false,
+            replay: vec![],
+            pending: Box::new(RoundTask::MaxSingleton),
+        };
+        let arena_adopt = RoundTask::AdoptMachines {
+            machines: vec![1, 3],
+            shards: Vec::new(),
+            arena: true,
+            replay: vec![],
+            pending: Box::new(RoundTask::MaxSingleton),
+        };
+        let size = |t: &RoundTask| {
+            let mut enc = Enc::new();
+            t.encode(&mut enc);
+            enc.buf.len()
+        };
+        assert!(size(&arena_adopt) < 64 && size(&wire_adopt) > 16_000);
+        let mut enc = Enc::new();
+        arena_adopt.encode(&mut enc);
+        let mut dec = Dec::new(&enc.buf);
+        assert_eq!(RoundTask::decode(&mut dec).unwrap(), arena_adopt);
+        dec.finish().unwrap();
     }
 
     #[test]

@@ -38,6 +38,11 @@ pub struct RoundStat {
     /// Frame bytes reshipped to surviving workers for machine adoption
     /// this round (a subset of `ipc_bytes_out`).
     pub reshipped_bytes: u64,
+    /// Shard/sample payload bytes workers resolved from the mmap'd shard
+    /// arena instead of receiving as frames this round (`@uds+arena`
+    /// only; *not* a subset of `ipc_bytes_out` — these bytes never
+    /// crossed the wire).
+    pub mapped_bytes: u64,
     /// Wall-clock time of the simulated round.
     pub wall: Duration,
 }
@@ -58,6 +63,7 @@ impl RoundStat {
             ("ipc_bytes_in", Json::Num(self.ipc_bytes_in as f64)),
             ("recoveries", Json::Num(self.recoveries as f64)),
             ("reshipped_bytes", Json::Num(self.reshipped_bytes as f64)),
+            ("mapped_bytes", Json::Num(self.mapped_bytes as f64)),
             ("wall_us", Json::Num(self.wall.as_micros() as f64)),
         ])
     }
@@ -135,6 +141,12 @@ impl MrMetrics {
         self.rounds.iter().map(|r| r.reshipped_bytes).sum()
     }
 
+    /// Total payload bytes resolved from the shard arena across rounds
+    /// (`@uds+arena` only; 0 on every wire path).
+    pub fn total_mapped_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.mapped_bytes).sum()
+    }
+
     /// Total simulated wall time.
     pub fn total_wall(&self) -> Duration {
         self.rounds.iter().map(|r| r.wall).sum()
@@ -186,6 +198,7 @@ mod tests {
             ipc_bytes_in: 50,
             recoveries: 1,
             reshipped_bytes: 40,
+            mapped_bytes: 16,
             wall: Duration::from_micros(100),
         }
     }
@@ -209,6 +222,7 @@ mod tests {
         assert_eq!(m.total_ipc_bytes(), (200, 100));
         assert_eq!(m.total_recoveries(), 2);
         assert_eq!(m.total_reshipped_bytes(), 80);
+        assert_eq!(m.total_mapped_bytes(), 32);
         assert_eq!(m.total_wall(), Duration::from_micros(200));
         assert!(m.machine_budget() >= (1000f64 * 10.0).sqrt() as usize);
     }

@@ -4,13 +4,23 @@
 //!
 //! **Conformance half:** every algorithm × oracle family × backend triple
 //! must produce bit-identical selections and objective values against the
-//! `Serial` reference — with the process backend exercised over all three
-//! transports (`process:N@pipe`, `process:N@uds`, `process:N@tcp`). This
-//! covers the whole shared-nothing path end to end: shards and oracle
-//! specs serialized over the byte stream, the connect-time `Hello`
-//! handshake, worker-side oracle reconstruction, typed round dispatch
-//! (including Sample&Prune's seeded `PruneSample` round), and reply
-//! collection.
+//! `Serial` reference — with the process backend exercised over every
+//! transport (`process:N@pipe`, `process:N@uds`, `process:N@uds+arena`,
+//! `process:N@tcp`). This covers the whole shared-nothing path end to
+//! end: shards and oracle specs serialized over the byte stream, the
+//! connect-time `Hello` handshake, worker-side oracle reconstruction,
+//! typed round dispatch (including Sample&Prune's seeded `PruneSample`
+//! round), and reply collection.
+//!
+//! **Arena half:** `@uds+arena` runs resolve `Init`/`AdoptMachines` shard
+//! payloads from the fd-passed mmap'd arena instead of wire frames. The
+//! matrix below asserts the zero-copy path is *observationally identical*
+//! to the wire path (same replies, same round frames, same recovery
+//! behaviour) while the byte meters tell them apart: mapped bytes are
+//! metered separately and shipped `Init`/adoption bytes shrink. Off
+//! Linux the arena build falls back to the plain `@uds` wire path
+//! transparently, so every arena test also passes there — the
+//! Linux-only assertions key off `ProcessPool::arena_active`.
 //!
 //! **Fault-injection half:** a worker killed mid-round, a truncated reply
 //! frame, a corrupted checksum, an oversized shard/frame, a hung worker,
@@ -69,10 +79,21 @@ fn process(workers: usize, transport: Transport) -> BackendKind {
     BackendKind::Process { workers, transport }
 }
 
-/// Every transport the pool itself can establish (the external-join TCP
-/// mode is exercised separately — it needs hand-launched workers).
-fn transports() -> Vec<Transport> {
+/// The wire-only transports: shard payloads always cross the stream, so
+/// their byte meters must agree with each other exactly.
+fn wire_transports() -> Vec<Transport> {
     vec![Transport::Pipe, Transport::Uds, Transport::Tcp { bind: None }]
+}
+
+/// Every transport the pool itself can establish (the external-join TCP
+/// mode is exercised separately — it needs hand-launched workers),
+/// including the zero-copy `@uds+arena` variant, which transparently
+/// falls back to the plain `@uds` wire path off Linux — so this matrix
+/// stays portable.
+fn transports() -> Vec<Transport> {
+    let mut all = wire_transports();
+    all.push(Transport::UdsArena);
+    all
 }
 
 fn cfg(seed: u64, backend: BackendKind) -> ClusterConfig {
@@ -124,8 +145,8 @@ fn algorithms(inst: &Instance, k: usize) -> Vec<Box<dyn MrAlgorithm>> {
 
 /// The tentpole contract: every algorithm × family × backend produces
 /// **bit-identical selections** (element for element, in order) and
-/// objective values against `Serial` — the process backend over all
-/// three transports.
+/// objective values against `Serial` — the process backend over every
+/// transport, zero-copy arena included.
 #[test]
 fn every_algorithm_family_backend_triple_matches_serial() {
     let k = 6;
@@ -135,6 +156,7 @@ fn every_algorithm_family_backend_triple_matches_serial() {
         BackendKind::Rayon { chunk: 2 },
         process(2, Transport::Pipe),
         process(2, Transport::Uds),
+        process(2, Transport::UdsArena),
         process(2, Transport::Tcp { bind: None }),
     ];
     for inst in families(seed) {
@@ -197,6 +219,7 @@ fn process_backend_selections_identical_and_ipc_metered_per_transport() {
     let mut ipc_per_transport = Vec::new();
     for transport in transports() {
         let label = format!("process:3{}", transport.label_suffix());
+        let arena = transport.wants_arena();
         let mut pcfg = cfg(seed, process(3, transport));
         pcfg.oracle_spec = inst.spec.clone();
         let run = alg.run(inst.oracle.as_ref(), k, &pcfg).unwrap();
@@ -209,6 +232,16 @@ fn process_backend_selections_identical_and_ipc_metered_per_transport() {
         let (out_bytes, in_bytes) = run.metrics.total_ipc_bytes();
         assert!(out_bytes > 0, "[{label}] the round task must ship over the wire");
         assert!(in_bytes > 0, "[{label}] selections must come back over the wire");
+        // the mapped meter is the arena's signature: zero on every wire
+        // transport, positive exactly when the arena actually engaged
+        // (its spawn-time Init elision is attributed to the spawning
+        // round's metrics).
+        let mapped = run.metrics.total_mapped_bytes();
+        if arena && cfg!(target_os = "linux") {
+            assert!(mapped > 0, "[{label}] Init payload must resolve from the arena mapping");
+        } else if !arena {
+            assert_eq!(mapped, 0, "[{label}] wire transports resolve nothing from an arena");
+        }
         // the round's oracle traffic happened worker-side but is still
         // visible in the coordinator's per-round metrics.
         let greedy_round = run
@@ -223,7 +256,10 @@ fn process_backend_selections_identical_and_ipc_metered_per_transport() {
         ipc_per_transport.push((label, out_bytes, in_bytes));
     }
     // identical frames cross every transport: the byte meters must agree
-    // (the wire layer is transport-agnostic by construction).
+    // (the wire layer is transport-agnostic by construction). The arena
+    // transport is held to the same equality — its Init elision happens
+    // at spawn, before round metering starts, so per-round task/reply
+    // frames are byte-identical to the wire transports.
     let (_, out0, in0) = &ipc_per_transport[0];
     for (label, out_b, in_b) in &ipc_per_transport[1..] {
         assert_eq!((out_b, in_b), (out0, in0), "[{label}] IPC meter diverged across transports");
@@ -430,8 +466,11 @@ fn version_mismatch_fails_the_handshake_on_every_transport() {
 }
 
 #[test]
-fn oversized_shard_rejected_by_frame_cap_on_every_transport() {
-    for transport in transports() {
+fn oversized_shard_rejected_by_frame_cap_on_every_wire_transport() {
+    // wire transports only: under `@uds+arena` the shard payload never
+    // crosses the stream, so the cap legitimately does not trip — that
+    // flip side is pinned by `frame_cap_applies_to_shipped_bytes_only`.
+    for transport in wire_transports() {
         // a 120-element init shard cannot fit a 64-byte frame cap: the
         // spawn fails with a structured send error before any round runs.
         let res = pool_for_faults(None, transport, 64, 60_000);
@@ -444,7 +483,7 @@ fn oversized_shard_rejected_by_frame_cap_on_every_transport() {
 /// the closed stream fails the `Hello`.
 #[test]
 fn worker_that_never_connects_is_a_structured_error() {
-    for transport in [Transport::Uds, Transport::Tcp { bind: None }] {
+    for transport in [Transport::Uds, Transport::UdsArena, Transport::Tcp { bind: None }] {
         let res = pool_for_faults(Some("no-connect"), transport, 64 << 20, 1_500);
         assert_worker_error(res.map(|_| ()), "connect");
     }
@@ -566,7 +605,8 @@ fn killed_worker_recovers_bit_identical_on_every_transport() {
             );
             assert!(
                 run.metrics.total_reshipped_bytes() > 0,
-                "[{label}] adoption must reship shards over the wire"
+                "[{label}] adoption must ship a reship frame (shards on the wire \
+                 path; replay history + framing under the arena)"
             );
         }
     }
@@ -712,5 +752,127 @@ fn fault_does_not_poison_subsequent_runs() {
         let serial = alg.run(inst.oracle.as_ref(), 6, &cfg(seed, BackendKind::Serial)).unwrap();
         assert_eq!(clean.solution.elements, serial.solution.elements, "[{label}]");
         assert_eq!(clean.solution.value.to_bits(), serial.solution.value.to_bits());
+    }
+}
+
+// --- zero-copy arena (@uds+arena) -------------------------------------------
+
+/// Cross-transport meter equality, arena-aware: an identically configured
+/// pool on `@uds` and `@uds+arena` must produce byte-identical replies,
+/// while the spawn meters split the same payload differently — the wire
+/// pool ships every shard/sample word as `Init` frames, the arena pool
+/// elides exactly those words into `mapped_bytes` (plus the per-shard
+/// length prefixes that vanish with the payload). Subsequent rounds ship
+/// byte-identical frames on both, so the relation between the lifetime
+/// meters is stable, not a spawn-only accident.
+#[test]
+fn arena_init_elides_shard_payloads_into_the_mapping() {
+    let mut uds = pool_for_faults(None, Transport::Uds, 64 << 20, 60_000).expect("clean spawn");
+    let mut arena =
+        pool_for_faults(None, Transport::UdsArena, 64 << 20, 60_000).expect("clean spawn");
+    let (uds_out, uds_in) = uds.total_ipc_bytes();
+    let (arena_out, arena_in) = arena.total_ipc_bytes();
+    let mapped = arena.total_mapped_bytes();
+    assert_eq!(uds.total_mapped_bytes(), 0, "the wire pool never touches an arena");
+    assert_eq!(arena_in, uds_in, "worker Ready replies are arena-independent");
+    if arena.arena_active() {
+        assert!(mapped > 0, "Init must resolve shard + sample payloads from the mapping");
+        assert!(
+            arena_out < uds_out,
+            "arena Init must ship O(1) framing ({arena_out} vs {uds_out} wire bytes)"
+        );
+        // the elided wire bytes are the mapped payload words plus the
+        // (tiny) per-shard length prefixes that disappeared with them:
+        // 3 machines ⇒ at most a few dozen bytes of slack.
+        let elided = uds_out - arena_out;
+        assert!(
+            elided >= mapped && elided <= mapped + 16 * 3,
+            "elided Init bytes ({elided}) must account for the mapped payload ({mapped})"
+        );
+    } else {
+        // non-Linux fallback: metered exactly like plain `@uds`.
+        assert_eq!(mapped, 0, "fallback pools must not report mapped bytes");
+        assert_eq!(arena_out, uds_out, "fallback Init ships the same frames as @uds");
+    }
+
+    // compute on mapped shards is observationally identical to shipped
+    // shards, and per-round frames stay byte-identical either way.
+    let (ru, su) = uds.round(&RoundTask::LocalGreedy { k: 4 }).unwrap();
+    let (ra, sa) = arena.round(&RoundTask::LocalGreedy { k: 4 }).unwrap();
+    assert_eq!(ra, ru, "mapped shards must compute identically to shipped ones");
+    assert_eq!(
+        (sa.bytes_out, sa.bytes_in),
+        (su.bytes_out, su.bytes_in),
+        "round frames are arena-independent"
+    );
+    assert_eq!(sa.mapped_bytes, 0, "a plain round resolves nothing new from the arena");
+}
+
+/// Kill during an mmap'd adoption — the arena recovery path end to end: a
+/// worker dies mid-round while the pool holds an arena, the survivor's
+/// `AdoptMachines` ships replay history + framing only (the orphaned
+/// shards resolve from its mapping), and the recovered replies stay
+/// bit-identical to both an undisturbed pool and the wire recovery path.
+#[test]
+fn kill_during_arena_adoption_recovers_bit_identical() {
+    let prune = |round: u32| RoundTask::PruneSample {
+        base: vec![3, 50],
+        floor: 0.1,
+        tau: 0.4,
+        per_share: 8,
+        seed: 77,
+        round,
+    };
+    let mut arena = recovery_pool(RecoveryPolicy::Requeue { budget: 1 }, Transport::UdsArena);
+    let mut wire = recovery_pool(RecoveryPolicy::Requeue { budget: 1 }, Transport::Uds);
+    let mut reference = recovery_pool(RecoveryPolicy::Fail, Transport::Uds);
+
+    let (r1a, _) = arena.round(&prune(1)).unwrap();
+    let (r1w, _) = wire.round(&prune(1)).unwrap();
+    let (r1r, _) = reference.round(&prune(1)).unwrap();
+    assert_eq!(r1a, r1r, "clean arena round agrees with the wire reference");
+    assert_eq!(r1w, r1r);
+
+    // same kill under both elastic pools: worker 0's machine is adopted
+    // mid-round, with its machine-resident pruned state rebuilt by replay.
+    arena.kill_worker(0);
+    wire.kill_worker(0);
+    let (r2a, sa) = arena.round(&prune(2)).expect("arena adoption must recover");
+    let (r2w, sw) = wire.round(&prune(2)).expect("wire adoption must recover");
+    let (r2r, _) = reference.round(&prune(2)).unwrap();
+    assert_eq!(r2a, r2r, "adoption through the arena mapping must stay bit-identical");
+    assert_eq!(r2w, r2r);
+    assert_eq!((sa.recoveries, sw.recoveries), (1, 1));
+    assert!(sa.reshipped_bytes > 0, "arena adoption still ships replay + framing");
+    if arena.arena_active() {
+        assert!(sa.mapped_bytes > 0, "adopted shards must resolve from the mapping");
+        assert!(
+            sa.reshipped_bytes < sw.reshipped_bytes,
+            "arena adoption ({} bytes) must reship less than the wire path ({} bytes)",
+            sa.reshipped_bytes,
+            sw.reshipped_bytes
+        );
+    } else {
+        assert_eq!(sa.mapped_bytes, 0);
+        assert_eq!(sa.reshipped_bytes, sw.reshipped_bytes, "fallback adoption matches @uds");
+    }
+}
+
+/// The flip side of the frame-cap matrix: the cap guards *shipped* bytes,
+/// so a cap far too small for the 120-element wire `Init` can legitimately
+/// admit the arena `Init` (whose shard payload never crosses the stream).
+/// Whenever the arena build fell back to the wire path instead, the same
+/// structured cap error as `@uds` must surface.
+#[test]
+fn frame_cap_applies_to_shipped_bytes_only() {
+    match pool_for_faults(None, Transport::UdsArena, 256, 60_000) {
+        Ok(pool) => assert!(
+            pool.arena_active(),
+            "a 256-byte cap only fits an Init whose payload lives in the arena"
+        ),
+        Err(e) => assert!(
+            matches!(e, Error::Worker { .. }),
+            "fallback must keep the structured max-frame error, got {e:?}"
+        ),
     }
 }

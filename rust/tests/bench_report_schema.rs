@@ -5,7 +5,7 @@
 //!
 //! 1. every report carries `"schema_version"` =
 //!    [`mrsub::coordinator::BENCH_SCHEMA_VERSION`];
-//! 2. the committed fixture `tests/fixtures/bench_report_v2.json` is a
+//! 2. the committed fixture `tests/fixtures/bench_report_v3.json` is a
 //!    frozen example of the current schema, and this test deserializes it
 //!    and checks every required key — so a schema change forces a
 //!    deliberate fixture + version bump in the same commit;
@@ -16,7 +16,7 @@
 use mrsub::coordinator::BENCH_SCHEMA_VERSION;
 use mrsub::util::json::Json;
 
-const FIXTURE: &str = include_str!("fixtures/bench_report_v2.json");
+const FIXTURE: &str = include_str!("fixtures/bench_report_v3.json");
 
 fn require<'a>(obj: &'a Json, key: &str) -> &'a Json {
     obj.get(key).unwrap_or_else(|| panic!("report missing required key {key:?}"))
@@ -66,6 +66,7 @@ fn validate_report(report: &Json) {
             "oracle_batches",
             "ipc_bytes_out",
             "ipc_bytes_in",
+            "mapped_bytes",
             "rounds",
         ] {
             assert!(require(row, key).as_f64().is_some(), "cluster.{key}");
@@ -73,7 +74,7 @@ fn validate_report(report: &Json) {
         let backend = require(row, "backend").as_str().expect("cluster.backend");
         // backend labels in reports must round-trip into configs.
         assert!(
-            mrsub::mapreduce::backend::BackendKind::parse(backend, 1).is_some(),
+            mrsub::mapreduce::backend::BackendKind::parse(backend, 1).is_ok(),
             "backend label {backend:?} must be parseable"
         );
         if backend.starts_with("process:") {

@@ -11,6 +11,11 @@
 #                            validated against the committed bench-report
 #                            schema (written to BENCH_smoke.json — the CI
 #                            pipeline uploads it as an artifact)
+#   ./verify.sh bench-diff   run a bench matching the committed
+#                            BENCH_baseline.json axes and gate batched
+#                            throughput + per-round IPC bytes against it
+#                            (>15% regression fails unless the baseline is
+#                            provisional; diff lands in BENCH_diff.json)
 #
 # The default build is offline-clean (no crates.io deps, `xla` feature off).
 set -euo pipefail
@@ -79,8 +84,23 @@ case "$mode" in
         MRSUB_BENCH_REPORT="$PWD/BENCH_smoke.json" \
             cargo test --test bench_report_schema
         ;;
+    bench-diff)
+        check_ignores
+        cargo build --release
+        # Match the committed baseline's sweep axes (families × backends ×
+        # sizes) so every baseline row finds a current-row partner; rows
+        # missing on either side are notes, not gates.
+        echo "verify: bench-diff against BENCH_baseline.json"
+        ./target/release/mrsub bench --n 4096 --k 32 --iters 3 --seed 11 \
+            --families coverage,modular \
+            --backends serial,process:2@uds,process:2@uds+arena \
+            --sizes 8000x20 --output BENCH_current.json
+        ./target/release/mrsub bench-diff \
+            --baseline BENCH_baseline.json --current BENCH_current.json \
+            --tolerance 0.15 --output BENCH_diff.json
+        ;;
     *)
-        echo "usage: ./verify.sh [fast|conformance|ci]" >&2
+        echo "usage: ./verify.sh [fast|conformance|ci|bench-diff]" >&2
         exit 2
         ;;
 esac
