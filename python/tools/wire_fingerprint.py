@@ -1,0 +1,337 @@
+#!/usr/bin/env python3
+"""Python mirror of the Rust wire-layout fingerprint.
+
+``rust/src/analysis/fingerprint.rs`` computes an FNV-1a 64 fingerprint over
+the comment-stripped, whitespace-normalized declarations that define the
+wire layout (the ANCHORS list), and the ``wire-drift`` lint compares it
+against the committed ``rust/src/analysis/wire.blessed``. This script
+replicates that computation byte-for-byte so the blessed file can be
+(re)generated or audited without a Rust toolchain:
+
+    python3 python/tools/wire_fingerprint.py            # print fp + version
+    python3 python/tools/wire_fingerprint.py --check    # compare vs blessed
+    python3 python/tools/wire_fingerprint.py --write    # rewrite blessed
+
+Keep ANCHORS, the scanner rules, and the hash folding in lock-step with
+``rust/src/analysis/{scan,fingerprint}.rs`` — the Rust test suite asserts
+the algorithm's behavior, this mirror only re-implements it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+BLESSED_PATH = "rust/src/analysis/wire.blessed"
+
+# (repo-relative file, anchor) in hash order — mirror of fingerprint::ANCHORS.
+ANCHORS = [
+    ("rust/src/mapreduce/wire.rs", "pub const FRAME_MAGIC"),
+    ("rust/src/mapreduce/wire.rs", "const HEADER_LEN"),
+    ("rust/src/mapreduce/wire.rs", "pub struct GuessFilter"),
+    ("rust/src/mapreduce/wire.rs", "pub enum RoundTask"),
+    ("rust/src/mapreduce/wire.rs", "pub enum TaskReply"),
+    ("rust/src/mapreduce/wire.rs", "pub struct WorkerInit"),
+    ("rust/src/mapreduce/wire.rs", "pub enum ToWorker"),
+    ("rust/src/mapreduce/wire.rs", "pub enum FromWorker"),
+    ("rust/src/oracle/spec.rs", "pub enum OracleSpec"),
+]
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(h: int, data: bytes) -> int:
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h
+
+
+# --- scanner (mirror of analysis::scan, `stripped` view only) ---------------
+#
+# `stripped` is the source with comments removed (block-comment newlines
+# preserved) and every literal kept verbatim; the delimiters and escape
+# handling below exist only so `//` or `/*` inside a literal is never
+# mistaken for a comment.
+
+
+def _raw_string_hashes(src: str, i: int) -> int | None:
+    j = i + 1
+    while j < len(src) and src[j] == "#":
+        j += 1
+    return (j - (i + 1)) if j < len(src) and src[j] == '"' else None
+
+
+def _tick_is_lifetime(src: str, i: int) -> bool:
+    if i + 1 >= len(src):
+        return False
+    c = src[i + 1]
+    if not (c.isalpha() or c == "_"):
+        return False
+    return i + 2 >= len(src) or src[i + 2] != "'"
+
+
+def strip_comments(src: str) -> str:
+    out: list[str] = []
+    i, n = 0, len(src)
+    while i < n:
+        c = src[i]
+        if c == "/" and src[i + 1 : i + 2] == "/":
+            i += 2
+            while i < n and src[i] != "\n":
+                i += 1
+        elif c == "/" and src[i + 1 : i + 2] == "*":
+            i += 2
+            depth = 1
+            while i < n and depth > 0:
+                if src[i] == "/" and src[i + 1 : i + 2] == "*":
+                    depth += 1
+                    i += 2
+                elif src[i] == "*" and src[i + 1 : i + 2] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    if src[i] == "\n":
+                        out.append("\n")
+                    i += 1
+        elif c == '"':
+            out.append(c)
+            i += 1
+            while i < n:
+                if src[i] == "\\" and i + 1 < n:
+                    out.append(src[i : i + 2])
+                    i += 2
+                elif src[i] == '"':
+                    out.append('"')
+                    i += 1
+                    break
+                else:
+                    out.append(src[i])
+                    i += 1
+        elif (
+            c == "r"
+            and not (i > 0 and (src[i - 1].isalnum() or src[i - 1] == "_"))
+            and _raw_string_hashes(src, i) is not None
+        ):
+            hashes = _raw_string_hashes(src, i)
+            out.append(src[i : i + hashes + 2])
+            j = i + hashes + 2
+            while j < n:
+                if src[j] == '"' and src[j + 1 : j + 1 + hashes] == "#" * hashes:
+                    out.append(src[j : j + hashes + 1])
+                    j += hashes + 1
+                    break
+                out.append(src[j])
+                j += 1
+            i = j
+        elif c == "'" and not _tick_is_lifetime(src, i):
+            out.append("'")
+            i += 1
+            while i < n:
+                if src[i] == "\\" and i + 1 < n:
+                    out.append(src[i : i + 2])
+                    i += 2
+                elif src[i] == "'":
+                    out.append("'")
+                    i += 1
+                    break
+                elif src[i] == "\n":
+                    break  # unterminated literal: bail, keep the newline
+                else:
+                    out.append(src[i])
+                    i += 1
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+# --- item-span extraction (mirror of scan::extract_item) --------------------
+
+
+def _find_anchor(stripped: str, anchor: str) -> int | None:
+    at = 0
+    while True:
+        pos = stripped.find(anchor, at)
+        if pos < 0:
+            return None
+        end = pos + len(anchor)
+        before_ok = pos == 0 or not (stripped[pos - 1].isalnum() or stripped[pos - 1] == "_")
+        after_ok = end >= len(stripped) or not (
+            stripped[end].isalnum() or stripped[end] == "_"
+        )
+        if before_ok and after_ok:
+            return pos
+        at = end
+
+
+def extract_item(stripped: str, anchor: str) -> str | None:
+    start = _find_anchor(stripped, anchor)
+    if start is None:
+        return None
+    rest = stripped[start:]
+    depth = 0
+    nest = 0  # []/() nesting: `;` inside `[u8; 4]` must not end the item
+    i, n = 0, len(rest)
+    while i < n:
+        c = rest[i]
+        if c == '"':
+            i += 1
+            while i < n:
+                if rest[i] == "\\":
+                    i += 2
+                elif rest[i] == '"':
+                    i += 1
+                    break
+                else:
+                    i += 1
+            continue
+        if c == "r" and not (i > 0 and (rest[i - 1].isalnum() or rest[i - 1] == "_")):
+            hashes = _raw_string_hashes(rest, i)
+            if hashes is not None:
+                j = i + hashes + 2
+                while j < n:
+                    if rest[j] == '"' and rest[j + 1 : j + 1 + hashes] == "#" * hashes:
+                        j += hashes + 1
+                        break
+                    j += 1
+                i = j
+                continue
+        if c == "'" and not _tick_is_lifetime(rest, i):
+            i += 1
+            while i < n:
+                if rest[i] == "\\":
+                    i += 2
+                elif rest[i] == "'":
+                    i += 1
+                    break
+                else:
+                    i += 1
+            continue
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                return rest[: i + 1]
+        elif c in "[(":
+            nest += 1
+        elif c in "])":
+            nest -= 1
+        elif c == ";" and depth == 0 and nest == 0:
+            return rest[: i + 1]
+        i += 1
+    return None
+
+
+# --- fingerprint (mirror of fingerprint.rs) ---------------------------------
+
+
+def tree_fingerprint(root: Path) -> int:
+    cache: dict[str, str] = {}
+    h = FNV_OFFSET
+    for file, anchor in ANCHORS:
+        if file not in cache:
+            cache[file] = strip_comments((root / file).read_text())
+        span = extract_item(cache[file], anchor)
+        if span is None:
+            raise SystemExit(f"wire fingerprint: anchor {anchor!r} not in {file}")
+        normalized = "".join(span.split())
+        h = fnv1a64(h, anchor.encode())
+        h = fnv1a64(h, b"=")
+        h = fnv1a64(h, normalized.encode())
+        h = fnv1a64(h, b"\n")
+    return h
+
+
+def tree_wire_version(root: Path) -> int:
+    file = "rust/src/mapreduce/wire.rs"
+    stripped = strip_comments((root / file).read_text())
+    span = extract_item(stripped, "pub const WIRE_VERSION")
+    if span is None:
+        raise SystemExit(f"wire version: `pub const WIRE_VERSION` not in {file}")
+    normalized = "".join(span.split())
+    parts = normalized.split("=")
+    if len(parts) < 2:
+        raise SystemExit(f"wire version: malformed declaration {normalized!r}")
+    return int(parts[1].rstrip(";"))
+
+
+def read_blessed(root: Path) -> tuple[int, int] | None:
+    path = root / BLESSED_PATH
+    if not path.exists():
+        return None
+    version = fingerprint = None
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        key, _, value = line.partition("=")
+        key, value = key.strip(), value.strip()
+        if key == "wire_version":
+            version = int(value)
+        elif key == "fingerprint":
+            fingerprint = int(value, 16)
+        else:
+            raise SystemExit(f"{BLESSED_PATH}: unknown key {key!r}")
+    if version is None or fingerprint is None:
+        raise SystemExit(f"{BLESSED_PATH}: missing wire_version or fingerprint")
+    return version, fingerprint
+
+
+def write_blessed(root: Path, version: int, fingerprint: int) -> None:
+    # byte-identical to fingerprint::write_blessed.
+    text = (
+        "# Blessed wire-layout fingerprint (`wire-drift` lint, `mrsub check-invariants`).\n"
+        "# Covers the declarations listed in rust/src/analysis/fingerprint.rs. Do not\n"
+        "# edit by hand: bump WIRE_VERSION in rust/src/mapreduce/wire.rs, then run\n"
+        "# `mrsub check-invariants --bless` (refused unless the version moved too).\n"
+        f"wire_version = {version}\n"
+        f"fingerprint = 0x{fingerprint:016x}\n"
+    )
+    (root / BLESSED_PATH).write_text(text)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path, default=Path(__file__).resolve().parents[2])
+    ap.add_argument("--check", action="store_true", help="compare against the blessed file")
+    ap.add_argument("--write", action="store_true", help="rewrite the blessed file")
+    args = ap.parse_args()
+
+    fp = tree_fingerprint(args.root)
+    version = tree_wire_version(args.root)
+    print(f"wire_version = {version}")
+    print(f"fingerprint = 0x{fp:016x}")
+
+    if args.check:
+        blessed = read_blessed(args.root)
+        if blessed is None:
+            print(f"no blessed file at {BLESSED_PATH}", file=sys.stderr)
+            return 1
+        bv, bf = blessed
+        if (bv, bf) != (version, fp):
+            print(
+                f"MISMATCH: blessed wire_version {bv}, fingerprint 0x{bf:016x}",
+                file=sys.stderr,
+            )
+            return 1
+        print("matches blessed")
+    if args.write:
+        blessed = read_blessed(args.root)
+        if blessed is not None and blessed[1] != fp and blessed[0] == version:
+            print(
+                "refusing to bless: wire definitions changed but WIRE_VERSION "
+                f"is still {version}; bump it first",
+                file=sys.stderr,
+            )
+            return 1
+        write_blessed(args.root, version, fp)
+        print(f"wrote {BLESSED_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,277 @@
+//! Wire-layout fingerprinting for the `wire-drift` lint.
+//!
+//! The bit-identity contract's versioning rule — any change to the frame
+//! header, a message tag, or the byte layout of an existing message bumps
+//! [`crate::mapreduce::wire::WIRE_VERSION`] — used to be convention. This
+//! module makes it mechanical: the *declarations* that define the wire
+//! layout (the [`ANCHORS`] list below) are extracted from the
+//! comment-stripped source, whitespace-normalized, and folded through
+//! FNV-1a 64 into a single fingerprint that is committed next to the code
+//! ([`BLESSED_PATH`]). The lint fails when the fingerprint moves without
+//! the version (drift), or the version moves without a re-bless.
+//!
+//! Comment and whitespace edits inside the declarations do **not** change
+//! the fingerprint — only token-level edits do. `WIRE_VERSION`'s own value
+//! is deliberately *excluded* from the hash (it is recorded separately in
+//! the blessed file), so that bumping it never masks a layout change.
+//!
+//! `python/tools/wire_fingerprint.py` mirrors this algorithm byte-for-byte
+//! so the blessed file can be (re)generated without a Rust toolchain; keep
+//! the two implementations in lock-step.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::analysis::scan;
+
+/// Repo-relative path of the committed blessed fingerprint.
+pub const BLESSED_PATH: &str = "rust/src/analysis/wire.blessed";
+
+/// The declarations whose token stream defines the wire layout, in hash
+/// order: `(repo-relative file, anchor)`. The anchor must start the item
+/// (`pub enum …` / `pub const …`) in the comment-stripped source.
+pub const ANCHORS: &[(&str, &str)] = &[
+    ("rust/src/mapreduce/wire.rs", "pub const FRAME_MAGIC"),
+    ("rust/src/mapreduce/wire.rs", "const HEADER_LEN"),
+    ("rust/src/mapreduce/wire.rs", "pub struct GuessFilter"),
+    ("rust/src/mapreduce/wire.rs", "pub enum RoundTask"),
+    ("rust/src/mapreduce/wire.rs", "pub enum TaskReply"),
+    ("rust/src/mapreduce/wire.rs", "pub struct WorkerInit"),
+    ("rust/src/mapreduce/wire.rs", "pub enum ToWorker"),
+    ("rust/src/mapreduce/wire.rs", "pub enum FromWorker"),
+    ("rust/src/oracle/spec.rs", "pub enum OracleSpec"),
+];
+
+/// The committed (version, fingerprint) pair a tree is checked against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blessed {
+    /// `WIRE_VERSION` at bless time.
+    pub version: u16,
+    /// [`tree_fingerprint`] at bless time.
+    pub fingerprint: u64,
+}
+
+fn inv(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01B3;
+
+fn fnv1a64(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Compute the wire fingerprint of the tree at `root`: for every anchor,
+/// extract its item span from the comment-stripped source, remove all
+/// whitespace, and fold `anchor + "=" + span + "\n"` through FNV-1a 64.
+pub fn tree_fingerprint(root: &Path) -> io::Result<u64> {
+    let mut cache: Vec<(&str, String)> = Vec::new();
+    let mut h = FNV_OFFSET;
+    for &(file, anchor) in ANCHORS {
+        if !cache.iter().any(|(f, _)| *f == file) {
+            let src = fs::read_to_string(root.join(file))
+                .map_err(|e| inv(format!("wire fingerprint: read {file}: {e}")))?;
+            cache.push((file, scan::scan(&src).stripped));
+        }
+        let stripped = &cache.iter().find(|(f, _)| *f == file).expect("just cached").1;
+        let span = scan::extract_item(stripped, anchor)
+            .ok_or_else(|| inv(format!("wire fingerprint: anchor {anchor:?} not in {file}")))?;
+        let normalized: String = span.split_whitespace().collect();
+        h = fnv1a64(h, anchor.as_bytes());
+        h = fnv1a64(h, b"=");
+        h = fnv1a64(h, normalized.as_bytes());
+        h = fnv1a64(h, b"\n");
+    }
+    Ok(h)
+}
+
+/// Read the current `WIRE_VERSION` value out of the tree's wire.rs.
+pub fn tree_wire_version(root: &Path) -> io::Result<u16> {
+    let file = "rust/src/mapreduce/wire.rs";
+    let src = fs::read_to_string(root.join(file))
+        .map_err(|e| inv(format!("wire version: read {file}: {e}")))?;
+    let stripped = scan::scan(&src).stripped;
+    let span = scan::extract_item(&stripped, "pub const WIRE_VERSION")
+        .ok_or_else(|| inv(format!("wire version: `pub const WIRE_VERSION` not in {file}")))?;
+    let normalized: String = span.split_whitespace().collect();
+    let value = normalized
+        .split('=')
+        .nth(1)
+        .map(|v| v.trim_end_matches(';'))
+        .ok_or_else(|| inv(format!("wire version: malformed declaration {normalized:?}")))?;
+    value.parse::<u16>().map_err(|_| inv(format!("wire version: not a u16: {value:?}")))
+}
+
+/// Parse the committed blessed file of the tree at `root`.
+pub fn read_blessed(root: &Path) -> io::Result<Blessed> {
+    let text = fs::read_to_string(root.join(BLESSED_PATH))
+        .map_err(|e| inv(format!("no blessed wire fingerprint at {BLESSED_PATH} ({e}); \
+                                  run `mrsub check-invariants --bless`")))?;
+    let mut version: Option<u16> = None;
+    let mut fingerprint: Option<u64> = None;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| inv(format!("{BLESSED_PATH}: malformed line {line:?}")))?;
+        match (key.trim(), value.trim()) {
+            ("wire_version", v) => {
+                version = Some(v.parse().map_err(|_| {
+                    inv(format!("{BLESSED_PATH}: bad wire_version {v:?}"))
+                })?);
+            }
+            ("fingerprint", v) => {
+                let hex = v.strip_prefix("0x").unwrap_or(v);
+                fingerprint = Some(u64::from_str_radix(hex, 16).map_err(|_| {
+                    inv(format!("{BLESSED_PATH}: bad fingerprint {v:?}"))
+                })?);
+            }
+            (k, _) => return Err(inv(format!("{BLESSED_PATH}: unknown key {k:?}"))),
+        }
+    }
+    match (version, fingerprint) {
+        (Some(version), Some(fingerprint)) => Ok(Blessed { version, fingerprint }),
+        _ => Err(inv(format!("{BLESSED_PATH}: missing wire_version or fingerprint"))),
+    }
+}
+
+/// Write the blessed file for the tree at `root`.
+pub fn write_blessed(root: &Path, blessed: Blessed) -> io::Result<()> {
+    let text = format!(
+        "# Blessed wire-layout fingerprint (`wire-drift` lint, `mrsub check-invariants`).\n\
+         # Covers the declarations listed in rust/src/analysis/fingerprint.rs. Do not\n\
+         # edit by hand: bump WIRE_VERSION in rust/src/mapreduce/wire.rs, then run\n\
+         # `mrsub check-invariants --bless` (refused unless the version moved too).\n\
+         wire_version = {}\n\
+         fingerprint = {:#018x}\n",
+        blessed.version, blessed.fingerprint
+    );
+    fs::write(root.join(BLESSED_PATH), text)
+}
+
+/// Re-record the blessed (version, fingerprint) pair for the tree at
+/// `root`. Refused when the fingerprint moved but `WIRE_VERSION` did not —
+/// blessing must never be the path of least resistance around a bump.
+pub fn bless(root: &Path) -> io::Result<String> {
+    let fingerprint = tree_fingerprint(root)?;
+    let version = tree_wire_version(root)?;
+    if let Ok(old) = read_blessed(root) {
+        if old.fingerprint != fingerprint && old.version == version {
+            return Err(inv(format!(
+                "refusing to bless: wire definitions changed but WIRE_VERSION is still \
+                 {version}; bump it in rust/src/mapreduce/wire.rs first"
+            )));
+        }
+        if old.fingerprint == fingerprint && old.version == version {
+            return Ok(format!(
+                "blessed fingerprint already current (wire_version {version}, {fingerprint:#018x})"
+            ));
+        }
+    }
+    write_blessed(root, Blessed { version, fingerprint })?;
+    Ok(format!("blessed wire fingerprint {fingerprint:#018x} at wire_version {version}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_vector() {
+        // FNV-1a 64 of "a" from the standard offset basis.
+        assert_eq!(fnv1a64(FNV_OFFSET, b"a"), 0xAF63_DC4C_8601_EC8C);
+    }
+
+    #[test]
+    fn repo_anchors_all_resolve() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let fp = tree_fingerprint(root).expect("every anchor resolves in the repo tree");
+        assert_ne!(fp, 0);
+        let v = tree_wire_version(root).expect("WIRE_VERSION parses");
+        assert_eq!(v, crate::mapreduce::wire::WIRE_VERSION);
+    }
+
+    #[test]
+    fn fingerprint_ignores_comments_and_whitespace_only() {
+        let dir = std::env::temp_dir()
+            .join(format!("mrsub-fp-{}-{}", std::process::id(), line!()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let write = |wire: &str| {
+            std::fs::create_dir_all(dir.join("rust/src/mapreduce")).unwrap();
+            std::fs::create_dir_all(dir.join("rust/src/oracle")).unwrap();
+            std::fs::write(dir.join("rust/src/mapreduce/wire.rs"), wire).unwrap();
+            std::fs::write(
+                dir.join("rust/src/oracle/spec.rs"),
+                "pub enum OracleSpec { Modular { weights: Vec<f64> } }\n",
+            )
+            .unwrap();
+        };
+        let base = "pub const WIRE_VERSION: u16 = 1;\n\
+                    pub const FRAME_MAGIC: [u8; 4] = *b\"MRSB\";\n\
+                    const HEADER_LEN: usize = 4 + 2 + 4;\n\
+                    pub struct GuessFilter { pub id: u32 }\n\
+                    pub enum RoundTask { Filter { tau: f64 } }\n\
+                    pub enum TaskReply { Ids(Vec<u32>) }\n\
+                    pub struct WorkerInit { pub arena: bool }\n\
+                    pub enum ToWorker { Init }\n\
+                    pub enum FromWorker { Ready }\n";
+        write(base);
+        let fp0 = tree_fingerprint(&dir).unwrap();
+
+        // comment + whitespace churn inside the declarations: no drift.
+        let churned = base
+            .replace(
+                "pub enum RoundTask { Filter { tau: f64 } }",
+                "pub enum RoundTask {\n    // a filter round\n    Filter {\n        tau: f64,\n    },\n}",
+            )
+            .replace("const HEADER_LEN: usize = 4 + 2 + 4;", "const HEADER_LEN:usize=4+2+4;");
+        write(&churned);
+        assert_eq!(tree_fingerprint(&dir).unwrap(), fp0, "comment/whitespace churn drifted");
+
+        // a token-level change (new variant) must drift.
+        write(&base.replace("{ Ids(Vec<u32>) }", "{ Ids(Vec<u32>), Ack }"));
+        assert_ne!(tree_fingerprint(&dir).unwrap(), fp0, "layout change did not drift");
+
+        // bumping WIRE_VERSION alone must NOT drift (version is excluded).
+        write(&base.replace("WIRE_VERSION: u16 = 1", "WIRE_VERSION: u16 = 2"));
+        assert_eq!(tree_fingerprint(&dir).unwrap(), fp0, "version value leaked into the hash");
+        assert_eq!(tree_wire_version(&dir).unwrap(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn blessed_file_roundtrip_and_refusal() {
+        let dir = std::env::temp_dir()
+            .join(format!("mrsub-bless-{}-{}", std::process::id(), line!()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("rust/src/analysis")).unwrap();
+        let b = Blessed { version: 4, fingerprint: 0xDEAD_BEEF_1234_5678 };
+        write_blessed(&dir, b).unwrap();
+        assert_eq!(read_blessed(&dir).unwrap(), b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn comment_edits_do_not_change_the_repo_fingerprint_inputs() {
+        // the RoundTask declaration in the real tree is comment-heavy;
+        // extraction + normalization must give one whitespace-free span.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let src =
+            std::fs::read_to_string(root.join("rust/src/mapreduce/wire.rs")).unwrap();
+        let stripped = scan::scan(&src).stripped;
+        let span = scan::extract_item(&stripped, "pub enum RoundTask").unwrap();
+        let norm: String = span.split_whitespace().collect();
+        assert!(norm.starts_with("pubenumRoundTask{"));
+        assert!(norm.contains("AdoptMachines{"));
+        assert!(!norm.contains("//"), "comments survived stripping");
+    }
+}

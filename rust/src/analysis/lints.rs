@@ -1,0 +1,297 @@
+//! The invariant lint registry: what `mrsub check-invariants` enforces.
+//!
+//! Each lint is a cheap pass over the scanner's per-line code/comment
+//! views ([`crate::analysis::scan`]) — no parsing, no type information —
+//! chosen so every rule is enforceable on the seed tree without
+//! grandfathering. A finding can be silenced only with a *reasoned*
+//! pragma on the offending line or the line directly above:
+//!
+//! ```text
+//! // LINT-ALLOW: <lint-name> <reason>
+//! ```
+//!
+//! (The pre-existing `// ALLOW-IGNORE: <reason>` and `// ALLOW-DEAD:
+//! <reason>` pragmas from verify.sh keep working for their two lints.)
+//! A pragma without a reason does not count — the reason is the review
+//! artifact.
+
+use std::path::Path;
+
+use crate::analysis::scan::{count_token, has_token, Scanned};
+use crate::analysis::{fingerprint, Finding};
+
+/// Registry metadata for one lint (rendered in docs and JSON reports).
+#[derive(Debug, Clone, Copy)]
+pub struct LintInfo {
+    /// Stable lint name — the `LINT-ALLOW:` pragma key.
+    pub name: &'static str,
+    /// What the lint scans, repo-relative.
+    pub scope: &'static str,
+    /// Why the invariant matters.
+    pub rationale: &'static str,
+    /// How to silence one finding, when silencing is legitimate.
+    pub pragma: &'static str,
+}
+
+/// Every lint `mrsub check-invariants` runs, in report order.
+pub const LINTS: &[LintInfo] = &[
+    LintInfo {
+        name: "wire-drift",
+        scope: "rust/src/mapreduce/wire.rs + rust/src/oracle/spec.rs",
+        rationale: "frame/message/OracleSpec layout changes must move WIRE_VERSION and \
+                    re-bless the committed fingerprint together",
+        pragma: "none — run `mrsub check-invariants --bless` after bumping WIRE_VERSION",
+    },
+    LintInfo {
+        name: "determinism",
+        scope: "rust/src/algorithms/, rust/src/oracle/, rust/src/mapreduce/shard.rs \
+                (non-test code)",
+        rationale: "selection-critical code must not iterate hash-seeded containers or \
+                    consume clocks/OS entropy — bit-identity across backends depends on it",
+        pragma: "// LINT-ALLOW: determinism <reason>",
+    },
+    LintInfo {
+        name: "unsafe-safety",
+        scope: "rust/src/mapreduce/, rust/src/runtime/, rust/src/util/pool.rs; \
+                plus rust/src/lib.rs must deny unsafe_op_in_unsafe_fn",
+        rationale: "every unsafe block documents its proof obligation where it stands",
+        pragma: "none — write the `// SAFETY:` comment (≤ 3 lines above the block)",
+    },
+    LintInfo {
+        name: "unsafe-budget",
+        scope: "rust/src/mapreduce/, rust/src/runtime/, rust/src/util/pool.rs",
+        rationale: "unsafe stays confined to the audited files listed in \
+                    rust/src/analysis/lints.rs at their audited block counts",
+        pragma: "none — grow the per-file budget in UNSAFE_BUDGET consciously",
+    },
+    LintInfo {
+        name: "ignored-test",
+        scope: "rust/ + examples/",
+        rationale: "an #[ignore]d test is a disabled assertion; disabling one must be a \
+                    visible, justified act",
+        pragma: "// ALLOW-IGNORE: <reason>  (or // LINT-ALLOW: ignored-test <reason>)",
+    },
+    LintInfo {
+        name: "dead-code",
+        scope: "rust/src/",
+        rationale: "#[allow(dead_code)] is how stranded code hides through refactors",
+        pragma: "// ALLOW-DEAD: <reason>  (or // LINT-ALLOW: dead-code <reason>)",
+    },
+];
+
+/// Per-file unsafe-block budgets (token occurrences of `unsafe` in code).
+/// Files in the unsafe scope but not listed here have a budget of zero.
+/// Growing a budget is a reviewed act: the numbers are the audit trail.
+const UNSAFE_BUDGET: &[(&str, usize)] = &[
+    ("rust/src/mapreduce/arena.rs", 7),
+    ("rust/src/util/pool.rs", 8),
+    ("rust/src/runtime/mod.rs", 1),
+];
+
+/// Hash-order / entropy / clock tokens the determinism lint rejects.
+const DETERMINISM_TOKENS: &[(&str, &str)] = &[
+    ("HashMap", "hash-seeded iteration order"),
+    ("HashSet", "hash-seeded iteration order"),
+    ("thread_rng", "OS-entropy RNG"),
+    ("random", "un-seeded randomness"),
+    ("SystemTime", "wall clock"),
+    ("Instant", "monotonic clock"),
+];
+
+fn in_determinism_scope(path: &str) -> bool {
+    path.starts_with("rust/src/algorithms/")
+        || path.starts_with("rust/src/oracle/")
+        || path == "rust/src/mapreduce/shard.rs"
+}
+
+fn in_unsafe_scope(path: &str) -> bool {
+    path.starts_with("rust/src/mapreduce/")
+        || path.starts_with("rust/src/runtime/")
+        || path == "rust/src/util/pool.rs"
+}
+
+/// A `// LINT-ALLOW: <lint> <reason>` pragma (with a nonempty reason) on
+/// line `idx` or the line directly above.
+fn lint_allowed(scanned: &Scanned, idx: usize, lint: &str) -> bool {
+    let lines = &scanned.lines;
+    let check = |i: usize| -> bool {
+        if let Some(at) = lines[i].comment.find("LINT-ALLOW:") {
+            let rest = lines[i].comment[at + "LINT-ALLOW:".len()..].trim_start();
+            if let Some(reason) = rest.strip_prefix(lint) {
+                // the lint name must end at a word boundary, and the
+                // reason must be nonempty: the reason is the artifact.
+                return reason.starts_with(char::is_whitespace) && !reason.trim().is_empty();
+            }
+        }
+        false
+    };
+    check(idx) || (idx > 0 && check(idx - 1))
+}
+
+/// The legacy same-line pragmas (`ALLOW-IGNORE:` / `ALLOW-DEAD:`) that
+/// verify.sh has always honored; a reason is still required.
+fn legacy_allowed(scanned: &Scanned, idx: usize, key: &str) -> bool {
+    if let Some(at) = scanned.lines[idx].comment.find(key) {
+        return !scanned.lines[idx].comment[at + key.len()..].trim().is_empty();
+    }
+    false
+}
+
+/// A `SAFETY:` comment on line `idx` or within the 3 lines above it.
+fn has_safety_comment(scanned: &Scanned, idx: usize) -> bool {
+    let lo = idx.saturating_sub(3);
+    scanned.lines[lo..=idx].iter().any(|l| l.comment.contains("SAFETY:"))
+}
+
+/// Run every per-file lint on one scanned file.
+pub(crate) fn lint_file(path: &str, scanned: &Scanned, findings: &mut Vec<Finding>) {
+    if in_determinism_scope(path) {
+        lint_determinism(path, scanned, findings);
+    }
+    if in_unsafe_scope(path) {
+        lint_unsafe(path, scanned, findings);
+    }
+    if path == "rust/src/lib.rs" {
+        lint_deny_attr(path, scanned, findings);
+    }
+    lint_pragma_attrs(path, scanned, findings);
+}
+
+fn lint_determinism(path: &str, scanned: &Scanned, findings: &mut Vec<Finding>) {
+    for (idx, line) in scanned.lines.iter().enumerate() {
+        if scanned.in_test[idx] {
+            continue;
+        }
+        for &(tok, why) in DETERMINISM_TOKENS {
+            if has_token(&line.code, tok) && !lint_allowed(scanned, idx, "determinism") {
+                findings.push(Finding::new(
+                    "determinism",
+                    path,
+                    idx + 1,
+                    format!(
+                        "`{tok}` ({why}) in selection-critical code; make it \
+                         deterministic or justify with `// LINT-ALLOW: determinism <reason>`"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn lint_unsafe(path: &str, scanned: &Scanned, findings: &mut Vec<Finding>) {
+    let mut blocks = 0usize;
+    for (idx, line) in scanned.lines.iter().enumerate() {
+        let here = count_token(&line.code, "unsafe");
+        blocks += here;
+        if here > 0 && !has_safety_comment(scanned, idx) {
+            findings.push(Finding::new(
+                "unsafe-safety",
+                path,
+                idx + 1,
+                "`unsafe` without a `// SAFETY:` comment on the same line or the 3 lines \
+                 above it"
+                    .to_string(),
+            ));
+        }
+    }
+    let budget =
+        UNSAFE_BUDGET.iter().find(|(p, _)| *p == path).map_or(0, |&(_, n)| n);
+    if blocks > budget {
+        findings.push(Finding::new(
+            "unsafe-budget",
+            path,
+            1,
+            format!(
+                "{blocks} `unsafe` occurrence(s) exceed this file's budget of {budget}; \
+                 confine unsafe to audited files (grow UNSAFE_BUDGET in \
+                 rust/src/analysis/lints.rs only with review)"
+            ),
+        ));
+    }
+}
+
+fn lint_deny_attr(path: &str, scanned: &Scanned, findings: &mut Vec<Finding>) {
+    let denied = scanned.lines.iter().any(|l| {
+        l.code.contains("deny") && l.code.contains("unsafe_op_in_unsafe_fn")
+    });
+    if !denied {
+        findings.push(Finding::new(
+            "unsafe-safety",
+            path,
+            1,
+            "crate root must carry `#![deny(unsafe_op_in_unsafe_fn)]` so unsafe fn \
+             bodies spell out their unsafe blocks"
+                .to_string(),
+        ));
+    }
+}
+
+fn lint_pragma_attrs(path: &str, scanned: &Scanned, findings: &mut Vec<Finding>) {
+    for (idx, line) in scanned.lines.iter().enumerate() {
+        if line.code.contains("#[ignore")
+            && !legacy_allowed(scanned, idx, "ALLOW-IGNORE:")
+            && !lint_allowed(scanned, idx, "ignored-test")
+        {
+            findings.push(Finding::new(
+                "ignored-test",
+                path,
+                idx + 1,
+                "#[ignore] without an `// ALLOW-IGNORE: <reason>` justification".to_string(),
+            ));
+        }
+        if path.starts_with("rust/src/")
+            && line.code.contains("#[allow(dead_code")
+            && !legacy_allowed(scanned, idx, "ALLOW-DEAD:")
+            && !lint_allowed(scanned, idx, "dead-code")
+        {
+            findings.push(Finding::new(
+                "dead-code",
+                path,
+                idx + 1,
+                "#[allow(dead_code)] without an `// ALLOW-DEAD: <reason>` justification"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// The wire-drift lint: fingerprint the tree and compare against the
+/// committed bless. Runs at tree level (it needs two files + the blessed
+/// file), so it lives outside [`lint_file`].
+pub(crate) fn lint_wire_drift(root: &Path, findings: &mut Vec<Finding>) {
+    let wire_rs = "rust/src/mapreduce/wire.rs";
+    let mut fail = |msg: String| {
+        findings.push(Finding::new("wire-drift", wire_rs, 1, msg));
+    };
+    let fp = match fingerprint::tree_fingerprint(root) {
+        Ok(fp) => fp,
+        Err(e) => return fail(e.to_string()),
+    };
+    let version = match fingerprint::tree_wire_version(root) {
+        Ok(v) => v,
+        Err(e) => return fail(e.to_string()),
+    };
+    let blessed = match fingerprint::read_blessed(root) {
+        Ok(b) => b,
+        Err(e) => return fail(e.to_string()),
+    };
+    match (fp == blessed.fingerprint, version == blessed.version) {
+        (true, true) => {}
+        (false, true) => fail(format!(
+            "wire definitions drifted (fingerprint {fp:#018x} != blessed \
+             {:#018x}) without a WIRE_VERSION bump; bump it in {wire_rs}, then \
+             `mrsub check-invariants --bless`",
+            blessed.fingerprint
+        )),
+        (false, false) => fail(format!(
+            "wire definitions drifted and WIRE_VERSION moved ({} -> {version}); \
+             re-record with `mrsub check-invariants --bless`",
+            blessed.version
+        )),
+        (true, false) => fail(format!(
+            "WIRE_VERSION moved ({} -> {version}) but the wire definitions did not; \
+             re-bless (or revert the bump)",
+            blessed.version
+        )),
+    }
+}

@@ -1,0 +1,176 @@
+//! Dependency-free static analysis: the `mrsub check-invariants` engine.
+//!
+//! The repo's bit-identity contract rests on invariants no compiler pass
+//! checks: wire-layout changes must move
+//! [`crate::mapreduce::wire::WIRE_VERSION`] and the committed fingerprint
+//! together, selection-critical code must stay deterministic, and the
+//! hand-declared FFI in [`crate::mapreduce::arena`] must keep its `unsafe`
+//! audited. This module grows the [`crate::util::check`] idiom — tiny,
+//! offline, hand-rolled verification substrates — into a lint engine:
+//!
+//! * [`scan`] — a line/token-level Rust scanner (comment/literal-aware)
+//!   shared by every lint;
+//! * [`lints`] — the registry ([`LINTS`]) and the per-lint passes;
+//! * [`fingerprint`] — the committed wire-layout fingerprint behind the
+//!   `wire-drift` lint (re-recorded via `mrsub check-invariants --bless`);
+//! * [`check_tree`] / [`Report`] — the driver plus human and JSON reports.
+//!
+//! The engine is exercised three ways: `cargo test` runs fixture trees
+//! with planted violations (`rust/tests/invariant_lints.rs`),
+//! `./verify.sh lint` (and its CI job) runs the full registry over the
+//! repo tree, and `mrsub check-invariants --json` feeds tooling.
+
+pub mod fingerprint;
+pub mod lints;
+pub mod scan;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use lints::{LintInfo, LINTS};
+
+use crate::util::json::Json;
+
+/// One lint violation, anchored to a file and 1-indexed line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Name of the lint that fired (a [`LINTS`] entry).
+    pub lint: &'static str,
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-indexed line the finding anchors to.
+    pub line: usize,
+    /// What is wrong and how to fix (or legitimately silence) it.
+    pub message: String,
+}
+
+impl Finding {
+    pub(crate) fn new(
+        lint: &'static str,
+        file: &str,
+        line: usize,
+        message: String,
+    ) -> Finding {
+        Finding { lint, file: file.to_string(), line, message }
+    }
+}
+
+/// Outcome of a [`check_tree`] run.
+#[derive(Debug)]
+pub struct Report {
+    /// Every finding, sorted by (file, line, lint).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// True when the tree is clean.
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report (multi-line, trailing newline).
+    pub fn render(&self) -> String {
+        if self.ok() {
+            return format!(
+                "check-invariants: OK ({} files scanned, {} lints)\n",
+                self.files_scanned,
+                LINTS.len()
+            );
+        }
+        let mut out = format!(
+            "check-invariants: {} finding(s) in {} files scanned\n",
+            self.findings.len(),
+            self.files_scanned
+        );
+        for f in &self.findings {
+            out.push_str(&format!("  [{}] {}:{}\n      {}\n", f.lint, f.file, f.line, f.message));
+        }
+        out
+    }
+
+    /// JSON form (schema 1) for `mrsub check-invariants --json`.
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj([
+                    ("lint", Json::Str(f.lint.to_string())),
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("message", Json::Str(f.message.clone())),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("schema", Json::Num(1.0)),
+            ("ok", Json::Bool(self.ok())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+}
+
+/// Run the full lint registry over the tree at `root` (a checkout with a
+/// `rust/src/` underneath). Missing subtrees (`examples/` in a test
+/// fixture) are skipped, not errors; unreadable files are.
+pub fn check_tree(root: &Path) -> io::Result<Report> {
+    let files = collect_rs_files(root)?;
+    let mut findings = Vec::new();
+    for rel in &files {
+        let src = fs::read_to_string(root.join(rel))?;
+        let scanned = scan::scan(&src);
+        lints::lint_file(rel, &scanned, &mut findings);
+    }
+    lints::lint_wire_drift(root, &mut findings);
+    findings.sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    Ok(Report { findings, files_scanned: files.len() })
+}
+
+/// Re-record the blessed wire fingerprint for the tree at `root` (see
+/// [`fingerprint::bless`] for the refusal rule). Returns a status line.
+pub fn bless(root: &Path) -> io::Result<String> {
+    fingerprint::bless(root)
+}
+
+/// Every `.rs` file under `root/rust/` and `root/examples/`, sorted, as
+/// repo-relative forward-slash paths.
+fn collect_rs_files(root: &Path) -> io::Result<Vec<String>> {
+    let mut abs = Vec::new();
+    for top in ["rust", "examples"] {
+        walk(&root.join(top), &mut abs)?;
+    }
+    let mut rel: Vec<String> = abs
+        .iter()
+        .map(|p| {
+            p.strip_prefix(root)
+                .expect("walked under root")
+                .to_string_lossy()
+                .replace('\\', "/")
+        })
+        .collect();
+    rel.sort();
+    Ok(rel)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()), // missing subtree: nothing to scan.
+    };
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

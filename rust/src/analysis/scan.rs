@@ -1,0 +1,496 @@
+//! Line/token-level Rust source scanner for the lint engine.
+//!
+//! This is deliberately not a parser. The lints need exactly three views
+//! of a source file: (a) per-line **code** with comments removed and
+//! string/char-literal *contents* blanked, so token searches can never
+//! false-positive inside either; (b) per-line **comment** text, so allow
+//! pragmas (`// LINT-ALLOW: …`, `// SAFETY: …`) can be read back out; and
+//! (c) the whole file **stripped** of comments but with literals intact,
+//! which is what the wire-fingerprint span extraction hashes. One
+//! hand-rolled state machine produces all three in a single pass.
+//!
+//! The lexical subset it understands — line comments, nested block
+//! comments, escape-aware string/char literals, raw strings, byte
+//! strings, and the lifetime-tick vs char-literal distinction — is
+//! exactly the subset the scanned sources use.
+//! `python/tools/wire_fingerprint.py` mirrors the same rules so the
+//! blessed fingerprint can be bootstrapped without a Rust toolchain;
+//! keep the two in lock-step.
+
+/// One scanned source line (1-indexed by position in [`Scanned::lines`]).
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code with comments removed and literal contents blanked (the
+    /// delimiters remain, so token boundaries survive).
+    pub code: String,
+    /// Concatenated comment text on the line (`//`, `///`, `/* … */`).
+    pub comment: String,
+}
+
+/// Scanner output: per-line views plus the whole-file stripped text.
+#[derive(Debug, Default)]
+pub struct Scanned {
+    /// Per-line code/comment split.
+    pub lines: Vec<Line>,
+    /// The whole file with comments removed but literal contents kept —
+    /// the input to fingerprint span extraction.
+    pub stripped: String,
+    /// Per-line flag: inside a `#[cfg(test)] mod` span (same index space
+    /// as [`Scanned::lines`]).
+    pub in_test: Vec<bool>,
+}
+
+/// Scan `src` in one pass (see the module docs for the three views).
+pub fn scan(src: &str) -> Scanned {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut i = 0usize;
+    let mut out = Scanned::default();
+    let mut cur = Line::default();
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            out.stripped.push('\n');
+            out.lines.push(std::mem::take(&mut cur));
+            i += 1;
+        } else if c == '/' && chars.get(i + 1) == Some(&'/') {
+            i += 2;
+            while i < n && chars[i] != '\n' {
+                cur.comment.push(chars[i]);
+                i += 1;
+            }
+        } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+            i = consume_block_comment(&chars, i + 2, &mut out, &mut cur);
+        } else if c == '"' {
+            i = consume_string(&chars, i, &mut out, &mut cur);
+        } else if c == 'r' && !prev_is_ident(&chars, i) && raw_string_hashes(&chars, i).is_some() {
+            i = consume_raw_string(&chars, i, &mut out, &mut cur);
+        } else if c == '\'' {
+            if tick_is_lifetime(&chars, i) {
+                out.stripped.push(c);
+                cur.code.push(c);
+                i += 1;
+            } else {
+                i = consume_char_literal(&chars, i, &mut out, &mut cur);
+            }
+        } else {
+            out.stripped.push(c);
+            cur.code.push(c);
+            i += 1;
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        out.lines.push(cur);
+    }
+    out.in_test = mark_test_lines(&out.lines);
+    out
+}
+
+/// `'` starts a lifetime (not a char literal) when followed by an
+/// identifier char that is *not* itself closed by a `'` one char later
+/// (so `'a>` is a lifetime but `'a'` — and `'_'` — are char literals).
+fn tick_is_lifetime(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some(&c) if c.is_alphabetic() || c == '_' => chars.get(i + 2) != Some(&'\''),
+        _ => false,
+    }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Number of `#`s in a raw-string opener `r#*"` at `i`, or `None` if the
+/// `r` does not open a raw string.
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then(|| j - (i + 1))
+}
+
+/// From just past `/*`, consume a (nested) block comment; returns the
+/// index past the closing `*/`. Comment text lands in the per-line view.
+fn consume_block_comment(chars: &[char], mut i: usize, out: &mut Scanned, cur: &mut Line) -> usize {
+    let mut depth = 1usize;
+    while i < chars.len() && depth > 0 {
+        if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+            depth += 1;
+            i += 2;
+        } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+            depth -= 1;
+            i += 2;
+        } else {
+            if chars[i] == '\n' {
+                out.stripped.push('\n');
+                out.lines.push(std::mem::take(cur));
+            } else {
+                cur.comment.push(chars[i]);
+            }
+            i += 1;
+        }
+    }
+    i
+}
+
+/// From an opening `"`, consume an escape-aware string literal; contents
+/// go to `stripped` only (the code view keeps just the delimiters).
+fn consume_string(chars: &[char], mut i: usize, out: &mut Scanned, cur: &mut Line) -> usize {
+    out.stripped.push('"');
+    cur.code.push('"');
+    i += 1;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\\' && i + 1 < chars.len() {
+            out.stripped.push(c);
+            out.stripped.push(chars[i + 1]);
+            i += 2;
+        } else if c == '"' {
+            out.stripped.push('"');
+            cur.code.push('"');
+            return i + 1;
+        } else if c == '\n' {
+            out.stripped.push('\n');
+            out.lines.push(std::mem::take(cur));
+            i += 1;
+        } else {
+            out.stripped.push(c);
+            i += 1;
+        }
+    }
+    i
+}
+
+/// From the `r` of `r#*"…"#*`, consume a raw string literal (delimiters to
+/// both views, contents to `stripped` only).
+fn consume_raw_string(chars: &[char], i: usize, out: &mut Scanned, cur: &mut Line) -> usize {
+    let hashes = raw_string_hashes(chars, i).unwrap_or(0);
+    let opener: String = chars[i..=i + hashes + 1].iter().collect();
+    out.stripped.push_str(&opener);
+    cur.code.push_str(&opener);
+    let mut j = i + hashes + 2;
+    while j < chars.len() {
+        if chars[j] == '"' && chars[j + 1..].iter().take(hashes).all(|&h| h == '#') {
+            let closer: String = chars[j..=j + hashes].iter().collect();
+            out.stripped.push_str(&closer);
+            cur.code.push_str(&closer);
+            return j + hashes + 1;
+        }
+        if chars[j] == '\n' {
+            out.stripped.push('\n');
+            out.lines.push(std::mem::take(cur));
+        } else {
+            out.stripped.push(chars[j]);
+        }
+        j += 1;
+    }
+    j
+}
+
+/// From an opening `'`, consume a char literal (delimiters to both views,
+/// contents to `stripped` only).
+fn consume_char_literal(chars: &[char], mut i: usize, out: &mut Scanned, cur: &mut Line) -> usize {
+    out.stripped.push('\'');
+    cur.code.push('\'');
+    i += 1;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\\' && i + 1 < chars.len() {
+            out.stripped.push(c);
+            out.stripped.push(chars[i + 1]);
+            i += 2;
+        } else if c == '\'' {
+            out.stripped.push('\'');
+            cur.code.push('\'');
+            return i + 1;
+        } else if c == '\n' {
+            // unterminated literal: bail rather than eat the file.
+            return i;
+        } else {
+            out.stripped.push(c);
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Mark the line spans of `#[cfg(test)] mod …` (and `#[cfg(all(test, …))]`
+/// variants) via brace depth, so test-only code can be exempted from
+/// production-scoped lints.
+fn mark_test_lines(lines: &[Line]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut depth: i32 = 0;
+    let mut pending_cfg = false;
+    let mut span_depth: Option<i32> = None;
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        if span_depth.is_none() && code.contains("#[cfg(") && code.contains("test") {
+            pending_cfg = true;
+        }
+        if pending_cfg && has_token(code, "mod") {
+            span_depth = Some(depth);
+            pending_cfg = false;
+        } else if pending_cfg
+            && (has_token(code, "fn") || has_token(code, "struct") || has_token(code, "impl"))
+        {
+            // the cfg attribute applied to a non-mod item; stop waiting.
+            pending_cfg = false;
+        }
+        if span_depth.is_some() {
+            in_test[idx] = true;
+        }
+        for ch in code.chars() {
+            match ch {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if span_depth.is_some_and(|d| depth <= d) {
+                        span_depth = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    in_test
+}
+
+/// Identifier-boundary token search over a code view (`tok` must be
+/// ASCII). `HashMap` matches `HashMap::new` but not `MyHashMapLike`.
+pub fn has_token(code: &str, tok: &str) -> bool {
+    count_token(code, tok) > 0
+}
+
+/// Count identifier-boundary occurrences of `tok` in a code view.
+pub fn count_token(code: &str, tok: &str) -> usize {
+    let mut count = 0usize;
+    let mut at = 0usize;
+    while let Some(pos) = code[at..].find(tok) {
+        let i = at + pos;
+        let end = i + tok.len();
+        let before_ok = !code[..i].ends_with(|c: char| c.is_alphanumeric() || c == '_');
+        let after_ok = !code[end..].starts_with(|c: char| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            count += 1;
+        }
+        at = end;
+    }
+    count
+}
+
+/// Find `anchor` in stripped text at an identifier boundary and return
+/// the item span it starts: through the matching close brace of the first
+/// top-level `{`, or through the first top-level `;` for brace-less
+/// items. Literals are skipped, so braces inside them never miscount.
+/// Mirrored by `python/tools/wire_fingerprint.py`.
+pub fn extract_item<'a>(stripped: &'a str, anchor: &str) -> Option<&'a str> {
+    let start = find_anchor(stripped, anchor)?;
+    let rest = &stripped[start..];
+    let bytes = rest.as_bytes();
+    let mut depth: i32 = 0;
+    // `[u8; 4]` and `(a; b)`-style positions must not terminate the item:
+    // `;` only ends a brace-less item outside every bracket/paren too.
+    let mut nest: i32 = 0;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'"' => {
+                i = skip_string_bytes(bytes, i);
+                continue;
+            }
+            b'r' if !byte_prev_is_ident(bytes, i) => {
+                if let Some(h) = byte_raw_hashes(bytes, i) {
+                    i = skip_raw_string_bytes(bytes, i, h);
+                    continue;
+                }
+            }
+            b'\'' => {
+                if !byte_tick_is_lifetime(bytes, i) {
+                    i = skip_char_bytes(bytes, i);
+                    continue;
+                }
+            }
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&rest[..=i]);
+                }
+            }
+            b'[' | b'(' => nest += 1,
+            b']' | b')' => nest -= 1,
+            b';' if depth == 0 && nest == 0 => return Some(&rest[..=i]),
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+fn find_anchor(stripped: &str, anchor: &str) -> Option<usize> {
+    for (pos, _) in stripped.match_indices(anchor) {
+        let end = pos + anchor.len();
+        let before_ok = !stripped[..pos].ends_with(|c: char| c.is_alphanumeric() || c == '_');
+        let after_ok = !stripped[end..].starts_with(|c: char| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+    }
+    None
+}
+
+fn byte_prev_is_ident(bytes: &[u8], i: usize) -> bool {
+    i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_')
+}
+
+fn byte_raw_hashes(bytes: &[u8], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    while bytes.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    (bytes.get(j) == Some(&b'"')).then(|| j - (i + 1))
+}
+
+fn byte_tick_is_lifetime(bytes: &[u8], i: usize) -> bool {
+    match bytes.get(i + 1) {
+        Some(&c) if c.is_ascii_alphabetic() || c == b'_' => bytes.get(i + 2) != Some(&b'\''),
+        _ => false,
+    }
+}
+
+fn skip_string_bytes(bytes: &[u8], mut i: usize) -> usize {
+    i += 1;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+fn skip_raw_string_bytes(bytes: &[u8], i: usize, hashes: usize) -> usize {
+    let mut j = i + hashes + 2;
+    while j < bytes.len() {
+        if bytes[j] == b'"' && bytes[j + 1..].iter().take(hashes).all(|&h| h == b'#') {
+            return j + hashes + 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+fn skip_char_bytes(bytes: &[u8], mut i: usize) -> usize {
+    i += 1;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_split_from_code() {
+        let s = scan("let x = 1; // trailing note\n/* block */ let y = 2;\n");
+        assert_eq!(s.lines[0].code, "let x = 1; ");
+        assert_eq!(s.lines[0].comment, " trailing note");
+        assert_eq!(s.lines[1].code, " let y = 2;");
+        assert_eq!(s.lines[1].comment, " block ");
+        assert!(!s.stripped.contains("note"));
+        assert!(s.stripped.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_doc_comments() {
+        let s = scan("/* outer /* inner */ still out */ code();\n/// SAFETY: doc\n");
+        assert_eq!(s.lines[0].code, " code();");
+        assert!(s.lines[0].comment.contains("inner"));
+        assert!(s.lines[1].comment.contains("SAFETY: doc"));
+        assert_eq!(s.lines[1].code, "");
+    }
+
+    #[test]
+    fn string_contents_blanked_in_code_kept_in_stripped() {
+        let s = scan("let u = \"// not a comment { HashMap }\";\n");
+        assert_eq!(s.lines[0].code, "let u = \"\";");
+        assert!(!has_token(&s.lines[0].code, "HashMap"));
+        assert!(s.stripped.contains("not a comment"));
+        assert!(s.lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn escaped_quotes_and_multiline_strings() {
+        let s = scan("let a = \"he said \\\"hi\\\"\";\nlet b = \"line1\nline2\"; done();\n");
+        assert_eq!(s.lines[0].code, "let a = \"\";");
+        assert_eq!(s.lines[1].code, "let b = \"");
+        assert_eq!(s.lines[2].code, "\"; done();");
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let s = scan("let r = r#\"raw \"quoted\" {brace}\"#; let b = b\"bytes\";\n");
+        assert_eq!(s.lines[0].code, "let r = r#\"\"#; let b = b\"\";");
+        assert!(s.stripped.contains("raw \"quoted\" {brace}"));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let s = scan("fn f<'a>(x: &'a str) { let c = 'x'; let u = '_'; let e = '\\''; }\n");
+        let code = &s.lines[0].code;
+        assert!(code.contains("<'a>"), "{code}");
+        assert!(code.contains("&'a str"), "{code}");
+        assert!(code.contains("let c = '';"), "{code}");
+        assert!(code.contains("let u = '';"), "{code}");
+        assert!(code.contains("let e = '';"), "{code}");
+    }
+
+    #[test]
+    fn cfg_test_mod_spans_marked() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let s = scan(src);
+        assert_eq!(s.in_test, vec![false, false, true, true, true, false]);
+        let gated = "#[cfg(all(test, target_os = \"linux\"))]\nmod t {\n    x();\n}\n";
+        let s = scan(gated);
+        assert_eq!(s.in_test, vec![false, true, true, true]);
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("use std::collections::HashMap;", "HashMap"));
+        assert!(has_token("HashMap::new()", "HashMap"));
+        assert!(!has_token("MyHashMapLike", "HashMap"));
+        assert!(!has_token("random_instance()", "random"));
+        assert!(!has_token("unsafe_op_in_unsafe_fn", "unsafe"));
+        assert_eq!(count_token("unsafe { unsafe_fn() }; unsafe {}", "unsafe"), 2);
+    }
+
+    #[test]
+    fn extract_item_spans() {
+        let text = "pub const N: usize = 4 + 2;\npub enum E {\n  A { s: String },\n  B,\n}\nfn x() {}";
+        assert_eq!(extract_item(text, "pub const N"), Some("pub const N: usize = 4 + 2;"));
+        // `;` inside brackets must not terminate the item early.
+        let magic = "pub const M: [u8; 4] = *b\"MRSB\";\nnext();";
+        assert_eq!(extract_item(magic, "pub const M"), Some("pub const M: [u8; 4] = *b\"MRSB\";"));
+        let e = extract_item(text, "pub enum E").unwrap();
+        assert!(e.starts_with("pub enum E {") && e.ends_with('}'));
+        assert!(e.contains("B,"));
+        assert!(!e.contains("fn x"));
+        assert_eq!(extract_item(text, "pub enum EX"), None);
+    }
+
+    #[test]
+    fn extract_item_skips_literal_braces() {
+        let text = "pub fn f() { let s = \"}{\"; let c = '}'; done() }";
+        let span = extract_item(text, "pub fn f").unwrap();
+        assert!(span.ends_with("done() }"), "{span}");
+    }
+}

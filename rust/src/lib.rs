@@ -37,6 +37,10 @@
 //! * [`coordinator`] — experiment driver: runs algorithms over workloads,
 //!   collects [`metrics`], writes JSON reports.
 //! * [`config`] — TOML-backed configuration for the `mrsub` launcher.
+//! * [`analysis`] — the `mrsub check-invariants` static-analysis engine:
+//!   wire-drift fingerprinting, determinism-hazard and unsafe-hygiene
+//!   lints over this very tree (see `docs/ARCHITECTURE.md`, "Enforced
+//!   invariants").
 //!
 //! ## Quickstart
 //!
@@ -53,8 +57,13 @@
 //! ```
 
 #![warn(missing_docs)]
+// Enforced by the `unsafe-safety` lint (`mrsub check-invariants`): every
+// `unsafe fn` body must spell out its interior unsafe blocks, so each one
+// can carry its own `// SAFETY:` proof.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod algorithms;
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod core;

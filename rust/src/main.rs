@@ -135,7 +135,7 @@ fn apply_cluster_flags(args: &Args, cfg: &mut ClusterConfig) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff|engine-check|worker> [--flag value]...
+const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff|check-invariants|engine-check|worker> [--flag value]...
   run           --config <file.toml>
   demo          [--k 20] [--n 20000] [--seed 7]
                 [--backend serial|rayon|process:N[@pipe|@uds|@uds+arena|@tcp[:addr]]]
@@ -156,6 +156,14 @@ const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff
                 bytes against the committed baseline; exits nonzero on a
                 regression beyond tolerance (report-only when the baseline
                 is marked \"provisional\": true)
+  check-invariants
+                [--root DIR] [--json report.json] [--bless]
+                static-analysis lint pass over the repo tree: wire-drift
+                fingerprint vs WIRE_VERSION, determinism hazards in
+                selection-critical code, unsafe hygiene + budgets, pragma
+                discipline. Exits nonzero on any finding. --bless
+                re-records the wire fingerprint (refused unless
+                WIRE_VERSION moved with it)
   engine-check  [--artifacts <dir>]   (xla feature builds only)
   worker        [--connect HOST:PORT] [--connect-uds PATH] [--id N]
                 shared-nothing process-backend worker. Normally spawned by
@@ -186,6 +194,13 @@ fn dispatch(argv: &[String]) -> Result<()> {
     // generic flag parser — the worker has its own tiny flag set.
     if cmd == "worker" {
         std::process::exit(mrsub::mapreduce::process::worker_main(&argv[1..]));
+    }
+    // check-invariants takes one bare flag (`--bless`); strip it before
+    // the `--key value` parser sees the argument list.
+    if cmd == "check-invariants" {
+        let bless = argv[1..].iter().any(|a| a == "--bless");
+        let rest: Vec<String> = argv[1..].iter().filter(|a| *a != "--bless").cloned().collect();
+        return cmd_check_invariants(&Args::parse(&rest)?, bless);
     }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
@@ -522,6 +537,40 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
             "bench-diff: {} regression(s) beyond {:.0}% tolerance",
             diff.regressions.len(),
             tolerance * 100.0
+        )));
+    }
+    Ok(())
+}
+
+/// `mrsub check-invariants`: run the static-analysis lint registry
+/// ([`mrsub::analysis`]) over a checkout. `--bless` re-records the wire
+/// fingerprint first (refused unless `WIRE_VERSION` moved with it); any
+/// remaining finding exits nonzero via the returned error.
+fn cmd_check_invariants(args: &Args, bless: bool) -> Result<()> {
+    let root = std::path::PathBuf::from(args.get_str("root").unwrap_or("."));
+    if !root.join("rust/src").is_dir() {
+        return Err(cli_err(format!(
+            "{} does not look like an mrsub checkout (no rust/src); run from the repo \
+             root or pass --root",
+            root.display()
+        )));
+    }
+    if bless {
+        let msg = mrsub::analysis::bless(&root).map_err(|e| Error::Runtime(e.to_string()))?;
+        println!("{msg}");
+    }
+    let report =
+        mrsub::analysis::check_tree(&root).map_err(|e| Error::Runtime(e.to_string()))?;
+    print!("{}", report.render());
+    if let Some(path) = args.get_str("json") {
+        std::fs::write(path, report.to_json().to_string_pretty())
+            .map_err(|e| Error::Runtime(format!("write {path}: {e}")))?;
+        println!("json report written to {path}");
+    }
+    if !report.ok() {
+        return Err(Error::Runtime(format!(
+            "check-invariants: {} finding(s)",
+            report.findings.len()
         )));
     }
     Ok(())

@@ -33,6 +33,15 @@
 //! The worker-side mapping is intentionally leaked (`&'static`): it lives
 //! exactly as long as the worker process, and unmapping would invalidate
 //! shard slices held by the interpreter.
+//!
+//! **Layering for Miri/sanitizers:** the word layout and [`ArenaMap`]'s
+//! validation are platform-independent (a mapping is just a
+//! `&'static [u32]`; [`ArenaMap::from_words`] builds a view over any
+//! leaked slice), while the memfd/mmap/`SCM_RIGHTS` FFI lives in a
+//! `cfg(all(target_os = "linux", not(miri)))` module. Under Miri — which
+//! cannot execute foreign functions — the FFI side degrades to the same
+//! `Unsupported` facade as non-Linux hosts, and the layout/validation
+//! tests still run (`./verify.sh miri`).
 
 use std::io;
 
@@ -73,8 +82,89 @@ fn layout_words(shards: &[Vec<ElementId>], sample: &[ElementId]) -> Vec<u32> {
     words
 }
 
-#[cfg(target_os = "linux")]
-mod imp {
+fn bad_arena(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("arena map: {msg}"))
+}
+
+/// A validated read-only view of a mapped arena. `Copy` because the
+/// backing words are leaked for the process lifetime — slices are
+/// `'static`. Construction goes through [`ArenaMap::from_fd`] (mmap an
+/// `SCM_RIGHTS`-received memfd; Linux, not Miri) or
+/// [`ArenaMap::from_words`] (any leaked slice; every platform, and the
+/// Miri-clean path the layout tests drive).
+#[derive(Clone, Copy, Debug)]
+pub struct ArenaMap {
+    words: &'static [u32],
+    n_machines: usize,
+}
+
+impl ArenaMap {
+    /// Build a view over an already-leaked word region and validate the
+    /// layout (magic, version, span bounds). The slice must live for the
+    /// process lifetime — callers leak it exactly once.
+    pub fn from_words(words: &'static [u32]) -> io::Result<ArenaMap> {
+        if words.len() < HEADER_WORDS {
+            return Err(bad_arena("region smaller than the arena header"));
+        }
+        let map = ArenaMap { words, n_machines: words[2] as usize };
+        map.validate()?;
+        Ok(map)
+    }
+
+    fn validate(&self) -> io::Result<()> {
+        let w = self.words;
+        if w[0] != ARENA_MAGIC {
+            return Err(bad_arena("bad arena magic"));
+        }
+        if w[1] != ARENA_VERSION {
+            return Err(bad_arena("arena layout version mismatch"));
+        }
+        let table_end = HEADER_WORDS + 2 * self.n_machines;
+        if table_end > w.len() {
+            return Err(bad_arena("machine table exceeds the region"));
+        }
+        let span = |off: u32, len: u32| {
+            let (off, len) = (off as usize, len as usize);
+            off >= table_end && off.checked_add(len).is_some_and(|end| end <= w.len())
+        };
+        if !span(w[3], w[4]) {
+            return Err(bad_arena("sample span exceeds the region"));
+        }
+        for m in 0..self.n_machines {
+            let at = HEADER_WORDS + 2 * m;
+            if !span(w[at], w[at + 1]) {
+                return Err(bad_arena("shard span exceeds the region"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Spawn-time shard of global machine `machine`; `None` when the
+    /// id is out of range (a coordinator bug surfaced structurally).
+    pub fn shard(&self, machine: u32) -> Option<&'static [ElementId]> {
+        let m = machine as usize;
+        if m >= self.n_machines {
+            return None;
+        }
+        let at = HEADER_WORDS + 2 * m;
+        let (off, len) = (self.words[at] as usize, self.words[at + 1] as usize);
+        Some(&self.words[off..off + len])
+    }
+
+    /// The broadcast sample `S`.
+    pub fn sample(&self) -> &'static [ElementId] {
+        let (off, len) = (self.words[3] as usize, self.words[4] as usize);
+        &self.words[off..off + len]
+    }
+
+    /// Number of machines the arena carries shards for.
+    pub fn machines(&self) -> usize {
+        self.n_machines
+    }
+}
+
+#[cfg(all(target_os = "linux", not(miri)))]
+mod fdimp {
     use super::*;
     use std::fs::File;
     use std::io::{Seek, SeekFrom, Write};
@@ -140,6 +230,8 @@ mod imp {
         /// Build the arena region. Any failure here is reported as a plain
         /// I/O error; callers fall back to the wire path.
         pub fn build(shards: &[Vec<ElementId>], sample: &[ElementId]) -> io::Result<Arena> {
+            // SAFETY: the name is a NUL-terminated literal that outlives
+            // the call; memfd_create touches no other memory of ours.
             let raw = unsafe { memfd_create(b"mrsub-arena\0".as_ptr(), MFD_CLOEXEC) };
             if raw < 0 {
                 return Err(io::Error::last_os_error());
@@ -240,23 +332,19 @@ mod imp {
         Ok(unsafe { OwnedFd::from_raw_fd(cmsg.fd) })
     }
 
-    /// A validated read-only view of a mapped arena. `Copy` because the
-    /// mapping is leaked for the process lifetime — slices are `'static`.
-    #[derive(Clone, Copy, Debug)]
-    pub struct ArenaMap {
-        words: &'static [u32],
-        n_machines: usize,
-    }
-
     impl ArenaMap {
-        /// `mmap` the received descriptor and validate the layout. The
-        /// mapping (and the descriptor's `File`) are leaked on success.
+        /// `mmap` the received descriptor, leak the mapping, and validate
+        /// the layout via [`ArenaMap::from_words`]. The mapping (and the
+        /// descriptor's `File`) are leaked on success.
         pub fn from_fd(fd: OwnedFd) -> io::Result<ArenaMap> {
             let mut file = File::from(fd);
             let bytes = file.seek(SeekFrom::End(0))? as usize;
             if bytes < HEADER_WORDS * 4 || bytes % 4 != 0 {
                 return Err(bad_arena("region smaller than the arena header"));
             }
+            // SAFETY: null addr + MAP_SHARED ask the kernel for a fresh
+            // read-only mapping of a descriptor we own; failure is checked
+            // below, no memory of ours is touched.
             let ptr = unsafe {
                 mmap(std::ptr::null_mut(), bytes, PROT_READ, MAP_SHARED, file.as_raw_fd(), 0)
             };
@@ -268,73 +356,19 @@ mod imp {
             let words: &'static [u32] =
                 unsafe { std::slice::from_raw_parts(ptr.cast::<u32>(), bytes / 4) };
             std::mem::forget(file); // keep the fd so the memfd outlives us
-            let map = ArenaMap { words, n_machines: words[2] as usize };
-            map.validate()?;
-            Ok(map)
+            ArenaMap::from_words(words)
         }
-
-        fn validate(&self) -> io::Result<()> {
-            let w = self.words;
-            if w[0] != ARENA_MAGIC {
-                return Err(bad_arena("bad arena magic"));
-            }
-            if w[1] != ARENA_VERSION {
-                return Err(bad_arena("arena layout version mismatch"));
-            }
-            let table_end = HEADER_WORDS + 2 * self.n_machines;
-            if table_end > w.len() {
-                return Err(bad_arena("machine table exceeds the region"));
-            }
-            let span = |off: u32, len: u32| {
-                let (off, len) = (off as usize, len as usize);
-                off >= table_end && off.checked_add(len).is_some_and(|end| end <= w.len())
-            };
-            if !span(w[3], w[4]) {
-                return Err(bad_arena("sample span exceeds the region"));
-            }
-            for m in 0..self.n_machines {
-                let at = HEADER_WORDS + 2 * m;
-                if !span(w[at], w[at + 1]) {
-                    return Err(bad_arena("shard span exceeds the region"));
-                }
-            }
-            Ok(())
-        }
-
-        /// Spawn-time shard of global machine `machine`; `None` when the
-        /// id is out of range (a coordinator bug surfaced structurally).
-        pub fn shard(&self, machine: u32) -> Option<&'static [ElementId]> {
-            let m = machine as usize;
-            if m >= self.n_machines {
-                return None;
-            }
-            let at = HEADER_WORDS + 2 * m;
-            let (off, len) = (self.words[at] as usize, self.words[at + 1] as usize);
-            Some(&self.words[off..off + len])
-        }
-
-        /// The broadcast sample `S`.
-        pub fn sample(&self) -> &'static [ElementId] {
-            let (off, len) = (self.words[3] as usize, self.words[4] as usize);
-            &self.words[off..off + len]
-        }
-
-        /// Number of machines the arena carries shards for.
-        pub fn machines(&self) -> usize {
-            self.n_machines
-        }
-    }
-
-    fn bad_arena(msg: &str) -> io::Error {
-        io::Error::new(io::ErrorKind::InvalidData, format!("arena map: {msg}"))
     }
 }
 
-#[cfg(not(target_os = "linux"))]
-mod imp {
-    //! Portable facade: every entry point reports `Unsupported`, so the
-    //! pool's transparent wire-path fallback engages and `@uds+arena`
-    //! degrades to plain `@uds` semantics off Linux.
+#[cfg(any(not(target_os = "linux"), miri))]
+mod fdimp {
+    //! Portable facade: every fd-based entry point reports `Unsupported`,
+    //! so the pool's transparent wire-path fallback engages and
+    //! `@uds+arena` degrades to plain `@uds` semantics off Linux — and
+    //! under Miri, which cannot execute the memfd/mmap/sendmsg FFI.
+    //! [`ArenaMap::from_words`] (defined platform-independently above)
+    //! still works here, which is what the Miri layout tests drive.
     use super::*;
     use std::os::fd::OwnedFd;
     use std::os::unix::net::UnixStream;
@@ -348,17 +382,17 @@ mod imp {
     pub struct Arena;
 
     impl Arena {
-        /// Always fails off Linux; the pool falls back to the wire path.
+        /// Always fails here; the pool falls back to the wire path.
         pub fn build(_shards: &[Vec<ElementId>], _sample: &[ElementId]) -> io::Result<Arena> {
             Err(unsupported())
         }
 
-        /// Unreachable off Linux (no `Arena` value can be built).
+        /// Unreachable here (no `Arena` value can be built).
         pub fn payload_words(&self) -> usize {
             0
         }
 
-        /// Unreachable off Linux (no `Arena` value can be built).
+        /// Unreachable here (no `Arena` value can be built).
         pub fn send_fd(&self, _stream: &UnixStream) -> io::Result<()> {
             Err(unsupported())
         }
@@ -369,37 +403,80 @@ mod imp {
         Err(unsupported())
     }
 
-    /// Mapped-arena view (unsupported on this platform).
-    #[derive(Clone, Copy, Debug)]
-    pub struct ArenaMap;
-
     impl ArenaMap {
-        /// Always fails off Linux.
+        /// Always fails here (no fd-passing / mmap without the FFI).
         pub fn from_fd(_fd: OwnedFd) -> io::Result<ArenaMap> {
             Err(unsupported())
-        }
-
-        /// Unreachable off Linux (no `ArenaMap` value can be built).
-        pub fn shard(&self, _machine: u32) -> Option<&'static [ElementId]> {
-            None
-        }
-
-        /// Unreachable off Linux (no `ArenaMap` value can be built).
-        pub fn sample(&self) -> &'static [ElementId] {
-            &[]
-        }
-
-        /// Unreachable off Linux (no `ArenaMap` value can be built).
-        pub fn machines(&self) -> usize {
-            0
         }
     }
 }
 
-pub use imp::{recv_fd, Arena, ArenaMap};
+pub use fdimp::{recv_fd, Arena};
 
-#[cfg(all(test, target_os = "linux"))]
-mod tests {
+/// Platform-independent layout + validation tests; these also run under
+/// Miri (`./verify.sh miri`), where the fd path is cfg'd out. The backing
+/// words are intentionally leaked — exactly like the real mapping — so
+/// the Miri job runs with `-Zmiri-ignore-leaks`.
+#[cfg(test)]
+mod layout_tests {
+    use super::*;
+
+    fn leak(words: Vec<u32>) -> &'static [u32] {
+        Box::leak(words.into_boxed_slice())
+    }
+
+    #[test]
+    fn layout_words_roundtrip_through_from_words() {
+        let shards = vec![vec![1u32, 5, 9], vec![], vec![2, 4, 6, 8]];
+        let sample = vec![3u32, 7];
+        let map = ArenaMap::from_words(leak(layout_words(&shards, &sample))).unwrap();
+        assert_eq!(map.machines(), 3);
+        assert_eq!(map.sample(), &sample[..]);
+        for (i, shard) in shards.iter().enumerate() {
+            assert_eq!(map.shard(i as u32), Some(&shard[..]), "machine {i}");
+        }
+        assert_eq!(map.shard(3), None, "out-of-range machine id");
+    }
+
+    #[test]
+    fn empty_arena_is_valid() {
+        let map = ArenaMap::from_words(leak(layout_words(&[], &[]))).unwrap();
+        assert_eq!(map.machines(), 0);
+        assert_eq!(map.sample(), &[] as &[u32]);
+        assert_eq!(map.shard(0), None);
+    }
+
+    #[test]
+    fn garbage_words_are_rejected_not_trusted() {
+        // too short for a header.
+        assert!(ArenaMap::from_words(leak(vec![0; 3])).is_err());
+        // wrong magic.
+        let mut words = layout_words(&[vec![1, 2]], &[9]);
+        words[0] ^= 1;
+        let err = ArenaMap::from_words(leak(words)).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        // wrong layout version.
+        let mut words = layout_words(&[vec![1, 2]], &[9]);
+        words[1] += 1;
+        let err = ArenaMap::from_words(leak(words)).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        // shard span far past the end of the region.
+        let words = vec![ARENA_MAGIC, ARENA_VERSION, 1, 7, 0, 1 << 20, 8];
+        let err = ArenaMap::from_words(leak(words)).unwrap_err();
+        assert!(err.to_string().contains("span"), "{err}");
+        // machine table itself exceeds the region.
+        let words = vec![ARENA_MAGIC, ARENA_VERSION, 1 << 24, 5, 0];
+        let err = ArenaMap::from_words(leak(words)).unwrap_err();
+        assert!(err.to_string().contains("table"), "{err}");
+        // spans may not point into the header/table.
+        let words = vec![ARENA_MAGIC, ARENA_VERSION, 0, 0, 2];
+        let err = ArenaMap::from_words(leak(words)).unwrap_err();
+        assert!(err.to_string().contains("sample"), "{err}");
+    }
+}
+
+#[cfg(all(test, target_os = "linux", not(miri)))]
+mod fd_tests {
     use super::*;
     use std::os::unix::net::UnixStream;
     use std::time::Duration;

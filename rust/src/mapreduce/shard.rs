@@ -20,6 +20,7 @@
 //! 3. [`apply`] — fold persistent effects (Algorithm 5's shrinking
 //!    per-guess shards) back into each machine's [`GuessStore`].
 
+// LINT-ALLOW: determinism keyed get/insert/remove only — no map is ever iterated.
 use std::collections::HashMap;
 
 use crate::algorithms::greedy::lazy_greedy_extend;
@@ -60,6 +61,7 @@ impl AsRef<[ElementId]> for ShardData {
 /// shard (absent ⇒ the machine's original shard).
 #[derive(Debug, Default, Clone)]
 pub struct GuessStore {
+    // LINT-ALLOW: determinism accessed by guess id only, never iterated.
     shards: HashMap<u32, Vec<ElementId>>,
     /// [`RoundTask::PruneSample`]'s machine-resident pruned shard; never
     /// shipped — only the sampled survivors cross the wire.
@@ -165,6 +167,7 @@ const TAG_PRUNE: u8 = 2;
 /// re-asserts it end to end.
 #[derive(Default)]
 pub struct StateCache {
+    // LINT-ALLOW: determinism keyed remove/insert only, never iterated.
     slots: HashMap<CacheKey, Box<dyn OracleState>>,
 }
 

@@ -1086,6 +1086,17 @@ mod tests {
     use super::*;
     use crate::util::check::{forall, Gen};
 
+    /// Property-test case budget: full depth natively, a handful under
+    /// Miri (each interpreted case is ~1000x slower; the coverage there
+    /// is the borrow/UB checking, not the case count).
+    fn cases(native: usize) -> usize {
+        if cfg!(miri) {
+            4
+        } else {
+            native
+        }
+    }
+
     fn arb_ids(g: &mut Gen, max_len: usize) -> Vec<ElementId> {
         let len = g.usize_in(0, max_len + 1);
         (0..len).map(|_| g.usize_in(0, 1 << 20) as ElementId).collect()
@@ -1182,9 +1193,45 @@ mod tests {
         assert_eq!(frame_roundtrip(b""), b"");
     }
 
+    /// Fixed-value codec exercise (no RNG, no depth): one coordinator→
+    /// worker Init + Round and one worker→coordinator RoundDone through
+    /// real checksummed frames. This is the wire path's Miri anchor —
+    /// `./verify.sh miri` interprets it even when the property tests
+    /// above run at their reduced case budget.
+    #[test]
+    fn codec_smoke_roundtrip_runs_under_miri() {
+        use crate::oracle::spec::OracleSpec;
+        let init = ToWorker::Init(WorkerInit {
+            spec: OracleSpec::Modular { weights: vec![0.25, 1.0, 2.5] },
+            machines: vec![0, 2],
+            shards: vec![vec![1, 4, 9], vec![2, 8]],
+            sample: vec![4, 9],
+            arena: false,
+        });
+        let framed = frame_roundtrip(&init.encode());
+        assert_eq!(ToWorker::decode(&framed).unwrap(), init);
+
+        let round = ToWorker::Round(RoundTask::Batch(vec![
+            RoundTask::Filter { base: vec![1, 4], tau: 0.5 },
+            RoundTask::LocalGreedy { k: 2 },
+        ]));
+        let framed = frame_roundtrip(&round.encode());
+        assert_eq!(ToWorker::decode(&framed).unwrap(), round);
+
+        let done = FromWorker::RoundDone {
+            replies: vec![TaskReply::Batch(vec![
+                TaskReply::Ids(vec![9]),
+                TaskReply::Ids(vec![1, 4]),
+            ])],
+            calls: (12, 3, 2),
+        };
+        let framed = frame_roundtrip(&done.encode());
+        assert_eq!(FromWorker::decode(&framed).unwrap(), done);
+    }
+
     #[test]
     fn prop_task_roundtrip() {
-        forall(0xA11, 60, |g| {
+        forall(0xA11, cases(60), |g| {
             let task = arb_task(g, 0);
             let mut enc = Enc::new();
             task.encode(&mut enc);
@@ -1197,7 +1244,7 @@ mod tests {
 
     #[test]
     fn prop_reply_roundtrip() {
-        forall(0xA12, 60, |g| {
+        forall(0xA12, cases(60), |g| {
             let reply = arb_reply(g, 0);
             let mut enc = Enc::new();
             reply.encode(&mut enc);
@@ -1210,7 +1257,7 @@ mod tests {
 
     #[test]
     fn prop_messages_roundtrip_through_frames() {
-        forall(0xA13, 40, |g| {
+        forall(0xA13, cases(40), |g| {
             let msg = ToWorker::Round(arb_task(g, 0));
             let payload = msg.encode();
             let framed = frame_roundtrip(&payload);
@@ -1227,7 +1274,7 @@ mod tests {
 
     #[test]
     fn prop_corrupted_frames_error_never_panic() {
-        forall(0xA14, 80, |g| {
+        forall(0xA14, cases(80), |g| {
             let task = arb_task(g, 0);
             let mut buf = Vec::new();
             write_frame(&mut buf, &ToWorker::Round(task).encode(), DEFAULT_MAX_FRAME).unwrap();

@@ -109,8 +109,9 @@ pub fn run_indexed(n: usize, chunk: usize, work: &(dyn Fn(usize) + Sync)) {
         return;
     }
     let state = pool();
-    // Erase the stack lifetime; validity is guaranteed by the spin-join
-    // below (no return until every helper released its slot).
+    // SAFETY: this erases the stack lifetime of `work`, which is sound
+    // because the spin-join below never returns until every helper has
+    // released its slot — no dereference can outlive the frame.
     let work_ptr: *const (dyn Fn(usize) + Sync + 'static) = unsafe {
         std::mem::transmute::<*const (dyn Fn(usize) + Sync + '_), *const (dyn Fn(usize) + Sync + 'static)>(
             work as *const (dyn Fn(usize) + Sync),
@@ -186,12 +187,17 @@ where
 /// Pointer wrapper asserting cross-thread transferability (see SAFETY in
 /// [`map_indexed_with`]).
 struct SendPtr<T>(*mut T);
+// SAFETY: sharing the wrapper only shares the raw pointer value; every
+// dereference goes through `write`, whose caller contract (exactly-once
+// per index) makes the concurrent writes unaliased.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
     /// SAFETY: caller guarantees `i` is in bounds and unaliased.
     unsafe fn write(&self, i: usize, val: T) {
-        *self.0.add(i) = val;
+        // SAFETY: bounds and exclusivity are the caller's obligation
+        // (documented on the fn); the pointee slot outlives the call.
+        unsafe { *self.0.add(i) = val };
     }
 }
 

@@ -1,0 +1,342 @@
+//! Fixture-tree tests for the `mrsub check-invariants` lint engine.
+//!
+//! Each test builds a minimal repo-shaped tree in a temp dir (wire.rs with
+//! every fingerprint anchor, spec.rs, lib.rs), plants one violation, and
+//! asserts the exact lint fires — plus the converse clean/pragma'd cases.
+//! Planted violations live in string literals here, never in committed
+//! source, so scanning this very file stays clean (literal contents are
+//! blanked in the scanner's code view).
+//!
+//! The final test runs the per-file lints over the real repo tree: the
+//! invariants hold on the seed, with no grandfathering. (The `wire-drift`
+//! lint is exercised on fixture trees only — the repo-tree comparison
+//! against the committed bless belongs to `./verify.sh lint` and its CI
+//! job, so `cargo test` never depends on the blessed file being current.)
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use mrsub::analysis::{self, Finding};
+
+const MINI_WIRE: &str = r#"
+pub const WIRE_VERSION: u16 = 1;
+pub const FRAME_MAGIC: [u8; 4] = *b"MRSB";
+const HEADER_LEN: usize = 4 + 2 + 4;
+pub struct GuessFilter { pub id: u32, pub tau: f64 }
+pub enum RoundTask { Filter { tau: f64 }, MaxSingleton }
+pub enum TaskReply { Ids(Vec<u32>), Scalar(f64) }
+pub struct WorkerInit { pub machines: Vec<u32>, pub arena: bool }
+pub enum ToWorker { Init, Round, Shutdown }
+pub enum FromWorker { Hello, Ready }
+"#;
+
+const MINI_SPEC: &str = "pub enum OracleSpec { Modular { weights: Vec<f64> } }\n";
+
+const MINI_LIB: &str = "#![deny(unsafe_op_in_unsafe_fn)]\npub mod mapreduce;\n";
+
+/// A throwaway repo-shaped tree under `$TMPDIR`, pre-populated with the
+/// minimal clean fixture files and removed on drop.
+struct Tree {
+    root: PathBuf,
+}
+
+impl Tree {
+    fn new(tag: &str) -> Tree {
+        let root =
+            std::env::temp_dir().join(format!("mrsub-lint-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(root.join("rust/src/analysis")).unwrap();
+        let tree = Tree { root };
+        tree.write("rust/src/mapreduce/wire.rs", MINI_WIRE);
+        tree.write("rust/src/oracle/spec.rs", MINI_SPEC);
+        tree.write("rust/src/lib.rs", MINI_LIB);
+        tree
+    }
+
+    fn write(&self, rel: &str, content: &str) -> &Tree {
+        let path = self.root.join(rel);
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(path, content).unwrap();
+        self
+    }
+
+    fn bless(&self) {
+        analysis::bless(&self.root).expect("bless fixture tree");
+    }
+
+    fn findings(&self) -> Vec<Finding> {
+        analysis::check_tree(&self.root).expect("check_tree").findings
+    }
+
+    /// Findings of one lint, as `file:line` strings for compact asserts.
+    fn fired(&self, lint: &str) -> Vec<String> {
+        self.findings()
+            .into_iter()
+            .filter(|f| f.lint == lint)
+            .map(|f| format!("{}:{}", f.file, f.line))
+            .collect()
+    }
+}
+
+impl Drop for Tree {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+// --- wire-drift --------------------------------------------------------------
+
+#[test]
+fn blessed_fixture_tree_is_clean() {
+    let tree = Tree::new("clean");
+    tree.bless();
+    let report = analysis::check_tree(&tree.root).unwrap();
+    assert!(report.ok(), "unexpected findings: {:?}", report.findings);
+    assert!(report.render().contains("OK"));
+    assert!(report.files_scanned >= 3);
+}
+
+#[test]
+fn wire_drift_without_version_bump_is_caught_and_bless_refuses() {
+    let tree = Tree::new("drift");
+    tree.bless();
+    // token-level layout change, version untouched.
+    tree.write(
+        "rust/src/mapreduce/wire.rs",
+        &MINI_WIRE.replace("Ids(Vec<u32>)", "Ids(Vec<u32>), Ack"),
+    );
+    let drift = tree.findings();
+    assert_eq!(drift.len(), 1, "{drift:?}");
+    assert_eq!(drift[0].lint, "wire-drift");
+    assert!(drift[0].message.contains("without a WIRE_VERSION bump"), "{}", drift[0].message);
+    // blessing must not be an escape hatch around the bump.
+    let err = analysis::bless(&tree.root).unwrap_err();
+    assert!(err.to_string().contains("refusing to bless"), "{err}");
+}
+
+#[test]
+fn drift_with_version_bump_wants_a_rebless_and_bless_clears_it() {
+    let tree = Tree::new("rebless");
+    tree.bless();
+    tree.write(
+        "rust/src/mapreduce/wire.rs",
+        &MINI_WIRE
+            .replace("Ids(Vec<u32>)", "Ids(Vec<u32>), Ack")
+            .replace("WIRE_VERSION: u16 = 1", "WIRE_VERSION: u16 = 2"),
+    );
+    let drift = tree.findings();
+    assert_eq!(drift.len(), 1, "{drift:?}");
+    assert!(drift[0].message.contains("re-record"), "{}", drift[0].message);
+    tree.bless();
+    assert!(tree.findings().is_empty());
+}
+
+#[test]
+fn version_bump_without_layout_change_is_flagged() {
+    let tree = Tree::new("bump-only");
+    tree.bless();
+    tree.write(
+        "rust/src/mapreduce/wire.rs",
+        &MINI_WIRE.replace("WIRE_VERSION: u16 = 1", "WIRE_VERSION: u16 = 2"),
+    );
+    let drift = tree.findings();
+    assert_eq!(drift.len(), 1, "{drift:?}");
+    assert!(drift[0].message.contains("did not"), "{}", drift[0].message);
+}
+
+#[test]
+fn comment_and_whitespace_churn_is_not_drift() {
+    let tree = Tree::new("churn");
+    tree.bless();
+    tree.write(
+        "rust/src/mapreduce/wire.rs",
+        &MINI_WIRE.replace(
+            "pub enum RoundTask { Filter { tau: f64 }, MaxSingleton }",
+            "// the round vocabulary\npub enum RoundTask {\n    /* threshold */ Filter { tau: f64 },\n    MaxSingleton, // argmax\n}",
+        ),
+    );
+    assert!(tree.findings().is_empty(), "{:?}", tree.findings());
+}
+
+#[test]
+fn missing_blessed_file_is_a_wire_drift_finding() {
+    let tree = Tree::new("no-bless");
+    let drift = tree.fired("wire-drift");
+    assert_eq!(drift.len(), 1);
+    let all = tree.findings();
+    assert!(all[0].message.contains("--bless"), "{}", all[0].message);
+}
+
+// --- determinism -------------------------------------------------------------
+
+#[test]
+fn hash_container_in_selection_critical_code_is_flagged() {
+    let tree = Tree::new("det");
+    tree.bless();
+    tree.write(
+        "rust/src/algorithms/greedy.rs",
+        "use std::collections::HashMap;\npub fn f() {}\n",
+    );
+    assert_eq!(tree.fired("determinism"), vec!["rust/src/algorithms/greedy.rs:1"]);
+
+    // a reasoned pragma on the line above silences exactly that line.
+    tree.write(
+        "rust/src/algorithms/greedy.rs",
+        "// LINT-ALLOW: determinism keyed access only, never iterated\n\
+         use std::collections::HashMap;\npub fn f() {}\n",
+    );
+    assert!(tree.fired("determinism").is_empty());
+
+    // a pragma without a reason does not count.
+    tree.write(
+        "rust/src/algorithms/greedy.rs",
+        "// LINT-ALLOW: determinism\nuse std::collections::HashMap;\npub fn f() {}\n",
+    );
+    assert_eq!(tree.fired("determinism").len(), 1);
+}
+
+#[test]
+fn determinism_lint_scope_and_test_code_exemptions() {
+    let tree = Tree::new("det-scope");
+    tree.bless();
+    // outside the selection-critical scope: no finding.
+    tree.write(
+        "rust/src/workload/gen.rs",
+        "use std::collections::HashMap;\npub fn g() {}\n",
+    );
+    assert!(tree.fired("determinism").is_empty());
+
+    // clock/entropy tokens in scope are findings...
+    tree.write(
+        "rust/src/oracle/cover.rs",
+        "pub fn t() { let _ = std::time::Instant::now(); }\n",
+    );
+    assert_eq!(tree.fired("determinism"), vec!["rust/src/oracle/cover.rs:1"]);
+
+    // ...but the same token inside a #[cfg(test)] mod is exempt.
+    tree.write(
+        "rust/src/oracle/cover.rs",
+        "pub fn t() {}\n#[cfg(test)]\nmod tests {\n    fn timed() { let _ = std::time::Instant::now(); }\n}\n",
+    );
+    assert!(tree.fired("determinism").is_empty());
+
+    // identifier boundaries: `random_instance` is not the token `random`.
+    tree.write("rust/src/oracle/cover.rs", "pub fn random_instance() {}\n");
+    assert!(tree.fired("determinism").is_empty());
+}
+
+// --- unsafe hygiene ----------------------------------------------------------
+
+#[test]
+fn unsafe_without_safety_comment_and_over_budget_are_flagged() {
+    let tree = Tree::new("unsafe");
+    tree.bless();
+    // one naked unsafe in a file with a zero budget: both lints fire.
+    tree.write(
+        "rust/src/mapreduce/zap.rs",
+        "pub fn z() { unsafe { core::hint::unreachable_unchecked() } }\n",
+    );
+    assert_eq!(tree.fired("unsafe-safety"), vec!["rust/src/mapreduce/zap.rs:1"]);
+    assert_eq!(tree.fired("unsafe-budget"), vec!["rust/src/mapreduce/zap.rs:1"]);
+
+    // a SAFETY comment within 3 lines clears the hygiene lint; the budget
+    // finding stays (unsafe outside the audited files is itself the bug).
+    tree.write(
+        "rust/src/mapreduce/zap.rs",
+        "pub fn z(p: *const u32) -> u32 {\n\
+         \x20   // SAFETY: caller contract per fixture.\n\
+         \x20   unsafe { *p }\n\
+         }\n",
+    );
+    assert!(tree.fired("unsafe-safety").is_empty());
+    assert_eq!(tree.fired("unsafe-budget").len(), 1);
+
+    // outside the unsafe scope entirely: no findings.
+    tree.write(
+        "rust/src/workload/zap.rs",
+        "pub fn z(p: *const u32) -> u32 { unsafe { *p } }\n",
+    );
+    assert!(tree.fired("unsafe-safety").iter().all(|f| !f.contains("workload")));
+    assert!(tree.fired("unsafe-budget").iter().all(|f| !f.contains("workload")));
+}
+
+#[test]
+fn crate_root_must_deny_unsafe_op_in_unsafe_fn() {
+    let tree = Tree::new("deny-attr");
+    tree.bless();
+    tree.write("rust/src/lib.rs", "pub mod mapreduce;\n");
+    assert_eq!(tree.fired("unsafe-safety"), vec!["rust/src/lib.rs:1"]);
+}
+
+// --- pragma discipline (ignored tests, dead code) ----------------------------
+
+#[test]
+fn ignored_tests_and_dead_code_need_reasons() {
+    let tree = Tree::new("pragmas");
+    tree.bless();
+    tree.write(
+        "rust/tests/slow.rs",
+        "#[test]\n#[ignore]\nfn s() {}\n",
+    );
+    assert_eq!(tree.fired("ignored-test"), vec!["rust/tests/slow.rs:2"]);
+    tree.write(
+        "rust/tests/slow.rs",
+        "#[test]\n#[ignore] // ALLOW-IGNORE: needs 8 cores, run explicitly\nfn s() {}\n",
+    );
+    assert!(tree.fired("ignored-test").is_empty());
+
+    tree.write(
+        "rust/src/mapreduce/stub.rs",
+        "#[allow(dead_code)]\nfn stranded() {}\n",
+    );
+    assert_eq!(tree.fired("dead-code"), vec!["rust/src/mapreduce/stub.rs:1"]);
+    tree.write(
+        "rust/src/mapreduce/stub.rs",
+        "#[allow(dead_code)] // ALLOW-DEAD: referenced by the next PR's backend\nfn stranded() {}\n",
+    );
+    assert!(tree.fired("dead-code").is_empty());
+
+    // dead-code is rust/src/-scoped: test support code may carry it.
+    tree.write("rust/tests/util.rs", "#[allow(dead_code)]\nfn helper() {}\n");
+    assert!(tree.fired("dead-code").is_empty());
+}
+
+// --- reports -----------------------------------------------------------------
+
+#[test]
+fn reports_render_findings_and_json_schema() {
+    let tree = Tree::new("report");
+    tree.bless();
+    tree.write(
+        "rust/src/algorithms/bad.rs",
+        "use std::collections::HashSet;\npub fn f() {}\n",
+    );
+    let report = analysis::check_tree(&tree.root).unwrap();
+    assert!(!report.ok());
+    let text = report.render();
+    assert!(text.contains("[determinism] rust/src/algorithms/bad.rs:1"), "{text}");
+    let json = report.to_json().to_string();
+    assert!(json.contains("\"ok\""), "{json}");
+    assert!(json.contains("determinism"), "{json}");
+    assert!(json.contains("\"findings\""), "{json}");
+}
+
+// --- the repo tree itself ----------------------------------------------------
+
+/// The per-file invariants hold on the committed tree — nothing is
+/// grandfathered. `wire-drift` is excluded here (see module docs): this
+/// test must not couple `cargo test` to the committed bless, which the
+/// lint CI job checks instead.
+#[test]
+fn repo_tree_passes_static_lints() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::check_tree(root).expect("scan repo tree");
+    let findings: Vec<&Finding> =
+        report.findings.iter().filter(|f| f.lint != "wire-drift").collect();
+    assert!(
+        findings.is_empty(),
+        "the committed tree violates its own invariants:\n{:#?}",
+        findings
+    );
+    assert!(report.files_scanned > 40, "suspiciously few files: {}", report.files_scanned);
+}

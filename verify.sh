@@ -16,6 +16,19 @@
 #                            throughput + per-round IPC bytes against it
 #                            (>15% regression fails unless the baseline is
 #                            provisional; diff lands in BENCH_diff.json)
+#   ./verify.sh lint         `mrsub check-invariants` over the repo tree:
+#                            wire-drift fingerprint vs WIRE_VERSION,
+#                            determinism hazards, unsafe hygiene + budgets,
+#                            pragma discipline (docs/ARCHITECTURE.md,
+#                            "Enforced invariants")
+#   ./verify.sh miri         nightly Miri over the arena layout and wire
+#                            codec tests (the cfg(miri)-clean subset)
+#   ./verify.sh asan         nightly AddressSanitizer over the arena
+#                            lifecycle, pool, and process-backend tests,
+#                            plus the arena conformance subset
+#   ./verify.sh tsan         nightly ThreadSanitizer over the pool and
+#                            the ProcessPool reader-thread/pipelined-join
+#                            paths
 #
 # The default build is offline-clean (no crates.io deps, `xla` feature off).
 set -euo pipefail
@@ -27,21 +40,26 @@ mode="${1:-full}"
 # disabled assertion, and disabling one must be a visible, justified act.
 # Annotate the same line with `// ALLOW-IGNORE: <reason>` to allow one.
 #
-# Same discipline for #[allow(dead_code)] in the mapreduce layer: the
-# elastic-recovery machinery is easy to strand during refactors, and a
-# dead-code allow is exactly how stranded code hides. Justify one with
-# `// ALLOW-DEAD: <reason>` on the same line.
+# Same discipline for #[allow(dead_code)] across all of rust/src/: a
+# dead-code allow is exactly how stranded code hides through refactors.
+# Justify one with `// ALLOW-DEAD: <reason>` on the same line.
+#
+# These greps are the fast pre-build approximation (the attribute at the
+# start of a line; occurrences inside string literals — e.g. the lint
+# engine's own fixtures — don't start lines). The comment/literal-aware
+# authority is the same pair of lints inside `mrsub check-invariants`
+# (./verify.sh lint), which also accepts `// LINT-ALLOW:` pragmas.
 check_ignores() {
     local found
-    found=$(grep -rn '#\[ignore' rust/ examples/ 2>/dev/null | grep -v 'ALLOW-IGNORE' || true)
+    found=$(grep -rnE '^[[:space:]]*#\[ignore' rust/ examples/ 2>/dev/null | grep -v 'ALLOW-IGNORE' || true)
     if [ -n "$found" ]; then
         echo "verify: FAIL — #[ignore]d tests without an ALLOW-IGNORE justification:"
         echo "$found"
         exit 1
     fi
-    found=$(grep -rn '#\[allow(dead_code' rust/src/mapreduce/ 2>/dev/null | grep -v 'ALLOW-DEAD' || true)
+    found=$(grep -rnE '^[[:space:]]*#\[allow\(dead_code' rust/src/ 2>/dev/null | grep -v 'ALLOW-DEAD' || true)
     if [ -n "$found" ]; then
-        echo "verify: FAIL — #[allow(dead_code)] in rust/src/mapreduce/ without an ALLOW-DEAD justification:"
+        echo "verify: FAIL — #[allow(dead_code)] in rust/src/ without an ALLOW-DEAD justification:"
         echo "$found"
         exit 1
     fi
@@ -68,11 +86,47 @@ case "$mode" in
         # (lib.rs carries #![warn(missing_docs)]) fail the build.
         RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
         ;;
+    lint)
+        check_ignores
+        cargo build --release
+        ./target/release/mrsub check-invariants
+        ;;
+    miri)
+        # Miri cannot execute the arena's memfd/mmap/sendmsg FFI, so those
+        # paths are cfg'd out (rust/src/mapreduce/arena.rs gates them on
+        # `not(miri)`); what runs is the platform-independent subset — the
+        # arena word-layout/validation tests and the wire codec suite (at
+        # its reduced interpreted case budget). Leak checking is off
+        # because arena mappings are deliberately process-lifetime.
+        MIRIFLAGS="-Zmiri-ignore-leaks" \
+            cargo +nightly miri test --lib -- mapreduce::arena mapreduce::wire
+        ;;
+    asan)
+        # AddressSanitizer needs a rebuilt std (-Zbuild-std, rust-src
+        # component). Covers the arena lifecycle (memfd build/map/leak),
+        # the thread-pool slot writer, the ProcessPool unit tests, and the
+        # arena conformance subset end to end.
+        RUSTFLAGS="-Zsanitizer=address" \
+            cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+            --lib -- mapreduce::arena util::pool mapreduce::process
+        RUSTFLAGS="-Zsanitizer=address" \
+            cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+            --test backend_conformance -- --test-threads=1 arena
+        ;;
+    tsan)
+        # ThreadSanitizer over the lock-free pool (work-stealing cursor,
+        # SendPtr slot writes, spin-join) and the ProcessPool
+        # reader-thread/pipelined-join paths.
+        RUSTFLAGS="-Zsanitizer=thread" \
+            cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+            --lib -- util::pool mapreduce::process
+        ;;
     ci)
         # `full` is a strict superset of `fast` (build + tests + lints),
-        # so ci = full + conformance + bench smoke.
+        # so ci = full + conformance + the invariant lints + bench smoke.
         "$0" full
         "$0" conformance
+        "$0" lint
         # Bench smoke: tiny sizes, one oracle family, serial vs the
         # shared-nothing process backend — enough to (a) keep the report
         # schema honest against the committed fixture and (b) seed the
@@ -100,7 +154,7 @@ case "$mode" in
             --tolerance 0.15 --output BENCH_diff.json
         ;;
     *)
-        echo "usage: ./verify.sh [fast|conformance|ci|bench-diff]" >&2
+        echo "usage: ./verify.sh [fast|conformance|ci|bench-diff|lint|miri|asan|tsan]" >&2
         exit 2
         ;;
 esac
