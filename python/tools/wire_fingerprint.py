@@ -35,6 +35,8 @@ ANCHORS = [
     ("rust/src/mapreduce/wire.rs", "pub struct WorkerInit"),
     ("rust/src/mapreduce/wire.rs", "pub enum ToWorker"),
     ("rust/src/mapreduce/wire.rs", "pub enum FromWorker"),
+    ("rust/src/mapreduce/wire.rs", "pub enum ClientRequest"),
+    ("rust/src/mapreduce/wire.rs", "pub enum ClientResponse"),
     ("rust/src/oracle/spec.rs", "pub enum OracleSpec"),
 ]
 

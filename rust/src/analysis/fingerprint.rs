@@ -40,6 +40,8 @@ pub const ANCHORS: &[(&str, &str)] = &[
     ("rust/src/mapreduce/wire.rs", "pub struct WorkerInit"),
     ("rust/src/mapreduce/wire.rs", "pub enum ToWorker"),
     ("rust/src/mapreduce/wire.rs", "pub enum FromWorker"),
+    ("rust/src/mapreduce/wire.rs", "pub enum ClientRequest"),
+    ("rust/src/mapreduce/wire.rs", "pub enum ClientResponse"),
     ("rust/src/oracle/spec.rs", "pub enum OracleSpec"),
 ];
 
@@ -223,7 +225,9 @@ mod tests {
                     pub enum TaskReply { Ids(Vec<u32>) }\n\
                     pub struct WorkerInit { pub arena: bool }\n\
                     pub enum ToWorker { Init }\n\
-                    pub enum FromWorker { Ready }\n";
+                    pub enum FromWorker { Ready }\n\
+                    pub enum ClientRequest { ListJobs }\n\
+                    pub enum ClientResponse { ShuttingDown }\n";
         write(base);
         let fp0 = tree_fingerprint(&dir).unwrap();
 

@@ -69,6 +69,9 @@ pub struct ExperimentRecord {
     pub mapped_bytes: u64,
     /// End-to-end wall time (ms).
     pub wall_ms: f64,
+    /// The selected elements themselves — the serving daemon returns
+    /// these to `mrsub submit` clients alongside the value.
+    pub selection: Vec<crate::core::ElementId>,
     /// Full per-round metrics.
     pub metrics: MrMetrics,
 }
@@ -106,6 +109,10 @@ impl ExperimentRecord {
             ("reshipped_bytes", Json::Num(self.reshipped_bytes as f64)),
             ("mapped_bytes", Json::Num(self.mapped_bytes as f64)),
             ("wall_ms", Json::Num(self.wall_ms)),
+            (
+                "selection",
+                Json::Arr(self.selection.iter().map(|&e| Json::Num(e as f64)).collect()),
+            ),
             ("metrics", self.metrics.to_json()),
         ])
     }
@@ -171,6 +178,7 @@ pub fn run_experiment(
         reshipped_bytes,
         mapped_bytes,
         wall_ms,
+        selection: result.solution.elements.clone(),
         metrics: result.metrics,
     })
 }

@@ -36,6 +36,11 @@
 //!   batched marginal evaluations to the Rust hot path.
 //! * [`coordinator`] — experiment driver: runs algorithms over workloads,
 //!   collects [`metrics`], writes JSON reports.
+//! * [`serve`] — the `mrsub serve` multi-tenant daemon: accepts jobs over
+//!   the wire codec's client frames and runs them through the same
+//!   coordinator path against **one warm worker pool** shared across jobs
+//!   (job-keyed attach instead of per-job spawn), so serving results stay
+//!   bit-identical to standalone runs.
 //! * [`config`] — TOML-backed configuration for the `mrsub` launcher.
 //! * [`analysis`] — the `mrsub check-invariants` static-analysis engine:
 //!   wire-drift fingerprinting, determinism-hazard and unsafe-hygiene
@@ -72,6 +77,7 @@ pub mod metrics;
 pub mod oracle;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod workload;
 

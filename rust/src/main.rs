@@ -20,6 +20,12 @@
 //! mrsub engine-check [--artifacts DIR]
 //!                                  PJRT artifacts + HLO-oracle cross-check
 //!                                  (requires the `xla` build feature)
+//! mrsub serve [--bind HOST:PORT] [--backend process:N[@transport]] [...]
+//!                                  multi-tenant serving daemon: one warm
+//!                                  worker pool shared across submitted jobs
+//! mrsub submit [--connect HOST:PORT] [--family coverage] [--n N] [--k K]
+//!              [--seed S] [--algorithm combined] [--machines M] [--shutdown]
+//!                                  submit one job to a running daemon
 //! ```
 //!
 //! (Arg parsing and error handling are hand-rolled — this workspace builds
@@ -43,10 +49,12 @@ use mrsub::coordinator::{
 use mrsub::core::{threshold_bound, ElementId, Error, Result};
 use mrsub::mapreduce::backend::BackendKind;
 use mrsub::mapreduce::process::RecoveryPolicy;
+use mrsub::mapreduce::wire::{ClientRequest, ClientResponse};
 use mrsub::mapreduce::ClusterConfig;
 use mrsub::oracle::modular::ModularOracle;
 use mrsub::oracle::spec::OracleSpec;
 use mrsub::oracle::{Oracle, OracleState};
+use mrsub::serve::{request as serve_request, Daemon, ServeOptions};
 use mrsub::util::bench::{throughput, time};
 use mrsub::util::json::Json;
 use mrsub::util::rng::Rng;
@@ -135,7 +143,7 @@ fn apply_cluster_flags(args: &Args, cfg: &mut ClusterConfig) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff|check-invariants|engine-check|worker> [--flag value]...
+const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff|check-invariants|engine-check|serve|submit|worker> [--flag value]...
   run           --config <file.toml>
   demo          [--k 20] [--n 20000] [--seed 7]
                 [--backend serial|rayon|process:N[@pipe|@uds|@uds+arena|@tcp[:addr]]]
@@ -165,6 +173,24 @@ const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff
                 re-records the wire fingerprint (refused unless
                 WIRE_VERSION moved with it)
   engine-check  [--artifacts <dir>]   (xla feature builds only)
+  serve         [--bind 127.0.0.1:7171]
+                [--backend serial|rayon|process:N[@pipe|@uds|@uds+arena|@tcp[:addr]]]
+                [--worker-timeout-ms 30000] [--connect-timeout-ms 30000]
+                [--recovery fail|requeue[:R]] [--max-frame-mb 64]
+                long-running daemon: accepts SubmitJob frames and runs each
+                through the standard experiment path. On a process backend
+                ONE warm worker pool is spawned on the first job and shared
+                by every later job (job-keyed attach, no per-job re-spawn);
+                results stay bit-identical to standalone runs. Stop it with
+                `mrsub submit --shutdown`
+  submit        [--connect 127.0.0.1:7171] [--family coverage|modular|concave]
+                [--n 4096] [--k 32] [--seed 7] [--machines 0 (auto)]
+                [--algorithm combined[:eps]|randgreedi|greedy]
+                [--output record.json] [--shutdown]
+                submit one job to a running `mrsub serve` daemon and print
+                the returned selection/value (--output saves the full
+                experiment record JSON); --shutdown asks the daemon to drain
+                and exit instead of submitting
   worker        [--connect HOST:PORT] [--connect-uds PATH] [--id N]
                 shared-nothing process-backend worker. Normally spawned by
                 the coordinator (pipes / MRSUB_CONNECT env); run it by hand
@@ -202,6 +228,13 @@ fn dispatch(argv: &[String]) -> Result<()> {
         let rest: Vec<String> = argv[1..].iter().filter(|a| *a != "--bless").cloned().collect();
         return cmd_check_invariants(&Args::parse(&rest)?, bless);
     }
+    // submit takes one bare flag (`--shutdown`); strip it likewise.
+    if cmd == "submit" {
+        let shutdown = argv[1..].iter().any(|a| a == "--shutdown");
+        let rest: Vec<String> =
+            argv[1..].iter().filter(|a| *a != "--shutdown").cloned().collect();
+        return cmd_submit(&Args::parse(&rest)?, shutdown);
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(args.get_str("config").ok_or_else(|| cli_err("run needs --config"))?),
@@ -211,6 +244,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "bench" => cmd_bench(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "engine-check" => cmd_engine_check(args.get_str("artifacts")),
+        "serve" => cmd_serve(&args),
         other => {
             eprintln!("{USAGE}");
             Err(cli_err(format!("unknown subcommand {other:?}")))
@@ -618,4 +652,87 @@ fn cmd_engine_check(_artifacts: Option<&str>) -> Result<()> {
         "engine-check requires the `xla` build feature (PJRT runtime); \
          rebuild with `cargo build --features xla` and a vendored xla crate",
     ))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let bind = args.get_str("bind").unwrap_or("127.0.0.1:7171").to_string();
+    let mut cfg = ClusterConfig::default();
+    if let Some(backend) = backend_flag(args)? {
+        cfg.backend = Some(backend);
+    }
+    apply_cluster_flags(args, &mut cfg)?;
+    let daemon = Daemon::start(ServeOptions { bind, cfg })?;
+    let addr = daemon.addr();
+    println!("mrsub serve: listening on {addr}");
+    println!(
+        "mrsub serve: submit with `mrsub submit --connect {addr}`, \
+         stop with `mrsub submit --connect {addr} --shutdown`"
+    );
+    daemon.wait();
+    println!("mrsub serve: drained and shut down");
+    Ok(())
+}
+
+fn cmd_submit(args: &Args, shutdown: bool) -> Result<()> {
+    let connect = args.get_str("connect").unwrap_or("127.0.0.1:7171");
+    let max_frame = ClusterConfig::default().max_frame_bytes;
+    if shutdown {
+        return match serve_request(connect, &ClientRequest::Shutdown, max_frame)? {
+            ClientResponse::ShuttingDown => {
+                println!("daemon at {connect} is draining and shutting down");
+                Ok(())
+            }
+            other => Err(cli_err(format!("unexpected response to Shutdown: {other:?}"))),
+        };
+    }
+    let family = args.get_str("family").unwrap_or("coverage");
+    let n: usize = args.get("n", 4096)?;
+    let k: usize = args.get("k", 32)?;
+    let seed: u64 = args.get("seed", 7)?;
+    let machines: usize = args.get("machines", 0)?;
+    let algorithm = args.get_str("algorithm").unwrap_or("combined").to_string();
+    let req = ClientRequest::SubmitJob {
+        algorithm,
+        k,
+        seed,
+        machines,
+        spec: submit_spec(family, n, seed)?,
+    };
+    match serve_request(connect, &req, max_frame)? {
+        ClientResponse::JobResult { id, selection, value, record_json } => {
+            println!("job {id}: f(S) = {value:.6}, |S| = {}", selection.len());
+            println!("selection: {selection:?}");
+            if let Some(out) = args.get_str("output") {
+                std::fs::write(out, record_json.as_bytes())
+                    .map_err(|e| cli_err(format!("cannot write {out}: {e}")))?;
+                println!("experiment record written to {out}");
+            }
+            Ok(())
+        }
+        ClientResponse::Error { message } => {
+            Err(cli_err(format!("daemon refused the job: {message}")))
+        }
+        other => Err(cli_err(format!("unexpected response to SubmitJob: {other:?}"))),
+    }
+}
+
+/// Build the serializable oracle spec for a `mrsub submit` family — the
+/// same constructions `mrsub bench` uses, so served results line up with
+/// the bench tables.
+fn submit_spec(family: &str, n: usize, seed: u64) -> Result<OracleSpec> {
+    Ok(match family {
+        "coverage" => {
+            OracleSpec::Coverage { n, universe: n / 2, avg_degree: 8, weighted: false, seed }
+        }
+        "modular" => {
+            let mut rng = Rng::seed_from_u64(seed);
+            OracleSpec::Modular {
+                weights: (0..n).map(|_| rng.gen_range_f64(0.0, 10.0)).collect(),
+            }
+        }
+        "concave" => OracleSpec::ConcaveBench { n, groups: 256, seed },
+        other => Err(cli_err(format!(
+            "unknown submit family {other:?} (expected coverage, modular, or concave)"
+        )))?,
+    })
 }

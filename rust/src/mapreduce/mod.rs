@@ -84,6 +84,11 @@ pub struct ClusterConfig {
     /// Extra environment for worker processes (the conformance suite's
     /// fault injection sets `MRSUB_FAULT` here). Not serialized.
     pub worker_env: Vec<(String, String)>,
+    /// Lease on a shared warm [`ProcessPool`] (`mrsub serve`): when set,
+    /// rounds attach to and run through this pool under the lease's job id
+    /// instead of spawning a pool of their own, so many jobs reuse one set
+    /// of worker processes. Requires `oracle_spec`. Not serialized.
+    pub shared_pool: Option<process::PoolLease>,
 }
 
 impl Default for ClusterConfig {
@@ -103,6 +108,7 @@ impl Default for ClusterConfig {
             max_frame_bytes: wire::DEFAULT_MAX_FRAME,
             worker_exe: None,
             worker_env: Vec::new(),
+            shared_pool: None,
         }
     }
 }
@@ -440,7 +446,32 @@ impl MrCluster {
         let mut ipc = (0u64, 0u64, 0u64);
         let mut recovery = (0u64, 0u64);
         let mut remote_calls = (0u64, 0u64, 0u64);
-        let replies = if self.cfg.backend_kind().process_workers().is_some() {
+        let replies = if let Some(lease) = self.cfg.shared_pool.clone() {
+            // warm serving pool (`mrsub serve`): attach on first round,
+            // then run job-keyed rounds against the shared worker set.
+            let spec = self.cfg.oracle_spec.clone().ok_or_else(|| {
+                Error::Config("shared warm pool requires an oracle spec".into())
+            })?;
+            let mut pool = lease
+                .pool
+                .lock()
+                .map_err(|_| Error::Runtime("warm pool lock poisoned".into()))?;
+            let map_before = pool.total_mapped_bytes();
+            if !pool.has_job(lease.job) {
+                pool.attach_job(lease.job, &spec, &self.shards, &self.sample)?;
+            }
+            // attach-time arena elisions land in the round that attached,
+            // mirroring the spawn_mapped attribution below.
+            let attach_mapped = pool.total_mapped_bytes() - map_before;
+            let (replies, stats) = pool.round_job(lease.job, task, on_reply)?;
+            ipc = (stats.bytes_out, stats.bytes_in, attach_mapped + stats.mapped_bytes);
+            recovery = (stats.recoveries, stats.reshipped_bytes);
+            match &self.call_counter {
+                Some(c) => c.add(stats.calls.0, stats.calls.1, stats.calls.2),
+                None => remote_calls = stats.calls,
+            }
+            replies
+        } else if self.cfg.backend_kind().process_workers().is_some() {
             let fresh_pool = self.pool.is_none();
             self.ensure_pool()?;
             let pool = self.pool.as_mut().expect("pool spawned above");

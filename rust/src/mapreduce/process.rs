@@ -96,7 +96,25 @@
 //! `kind[:nth][@worker]` (see [`FaultSpec`]): `die-mid-round`,
 //! `hang-round`, `truncate-frame`, `corrupt-checksum`, `bad-version`,
 //! `no-connect`, `die-on-prune`.
+//!
+//! ## Warm pool, job-keyed state (`mrsub serve`)
+//!
+//! The serving daemon keeps **one** pool alive across many optimization
+//! jobs. Instead of re-spawning workers per job, each job *attaches*:
+//! [`ProcessPool::attach_job`] round-robins the job's machines over the
+//! surviving workers and ships a job-keyed [`ToWorker::Attach`] (the same
+//! [`WorkerInit`] payload `Init` carries, prefixed with the job id);
+//! workers hold one independent runtime per job in a map, so concurrent
+//! jobs never share stores or caches. [`ProcessPool::round_job`] then runs
+//! rounds exactly like [`ProcessPool::round_with`] — same broadcast, same
+//! arrival-order join, same adoption-based recovery — against that job's
+//! machine assignment, and [`ProcessPool::detach_job`] frees the worker
+//! runtimes when the job completes. When an attaching job's dataset is
+//! byte-identical to the spawn dataset the arena already holds, the
+//! attach elides every shard/sample payload (the warm-pool *arena-cache
+//! hit*, metered via [`ProcessPool::arena_attach_stats`]).
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
@@ -279,6 +297,60 @@ pub struct ProcessPool {
     /// Lifetime arena-resolved payload bytes (the `Init`/adoption shard
     /// and sample bytes that never crossed a stream).
     mapped_bytes: u64,
+    /// Per-job state of the warm-pool serving path (`mrsub serve`):
+    /// machine assignments, reship shards, and replay history, keyed by
+    /// job id. Empty on one-shot pools, which use the legacy
+    /// pool-level assignment above.
+    jobs: BTreeMap<u64, JobState>,
+    /// The exact dataset the arena was laid out from at spawn. An
+    /// attaching job may elide its shard/sample payloads only when its
+    /// dataset is byte-identical to this one — the memfd cannot be
+    /// re-passed mid-stream, so "close enough" would read wrong shards.
+    arena_dataset: Option<(Vec<Vec<ElementId>>, Vec<ElementId>)>,
+    /// Warm-pool attaches whose payloads were elided via the arena.
+    arena_hits: u64,
+    /// Warm-pool attaches that had to ship shards over the wire.
+    arena_misses: u64,
+}
+
+/// One attached job's coordinator-side state on a warm pool — the
+/// job-keyed mirror of the pool-level `machines`/`shards`/`history`
+/// fields the one-shot path uses.
+struct JobState {
+    /// Machines of this job hosted by each worker slot (parallel to
+    /// `ProcessPool::workers`); machine ids are job-local `0..n_machines`.
+    assign: Vec<Vec<usize>>,
+    /// Attach-time shards, the reship source for this job's adoptions.
+    /// Empty under [`RecoveryPolicy::Fail`].
+    shards: Vec<Vec<ElementId>>,
+    /// Store-mutating tasks of this job's completed rounds, in order.
+    history: Vec<RoundTask>,
+    /// Machine count of this job.
+    n_machines: usize,
+    /// Whether this job's shards resolve from the arena mapping.
+    arena: bool,
+}
+
+/// A lease on a daemon-owned warm pool: the shared pool handle plus the
+/// job id this cluster's typed rounds run under. Carried (never
+/// serialized) in [`crate::mapreduce::ClusterConfig::shared_pool`].
+/// Rounds of concurrent jobs serialize on the pool mutex one round at a
+/// time, which keeps per-round accounting exact and replies bit-identical
+/// to a dedicated pool's — the interleaving happens *between* rounds.
+#[derive(Clone)]
+pub struct PoolLease {
+    /// The daemon's warm pool (one per `mrsub serve` process).
+    pub pool: std::sync::Arc<std::sync::Mutex<ProcessPool>>,
+    /// Job id in the pool's job-keyed state (and in every worker's
+    /// runtime map). Never 0 — job 0 is the workers' anonymous
+    /// legacy-`Init` slot.
+    pub job: u64,
+}
+
+impl std::fmt::Debug for PoolLease {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PoolLease {{ job: {} }}", self.job)
+    }
 }
 
 /// Mutable join state threaded through the pipelined reply loop.
@@ -658,8 +730,14 @@ impl ProcessPool {
             deaths_spent: 0,
             recoveries: 0,
             reshipped_bytes: 0,
+            arena_dataset: shared
+                .as_ref()
+                .map(|_| (shards.to_vec(), sample.to_vec())),
             arena: shared,
             mapped_bytes: 0,
+            jobs: BTreeMap::new(),
+            arena_hits: 0,
+            arena_misses: 0,
         };
         if matches!(opts.transport, Transport::Pipe) {
             // socket hellos were consumed during accept; pipe hellos are
@@ -760,6 +838,26 @@ impl ProcessPool {
         self.arena.is_some()
     }
 
+    /// Worker processes still alive. The pool never replaces a dead
+    /// worker with a new process, so this never grows — the serve smoke's
+    /// "zero re-spawned workers" check compares it against
+    /// [`ProcessPool::workers`].
+    pub fn alive_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// Whether `job` is currently attached to this pool.
+    pub fn has_job(&self, job: u64) -> bool {
+        self.jobs.contains_key(&job)
+    }
+
+    /// Lifetime warm-pool attach meters `(arena hits, misses)`: attaches
+    /// whose dataset matched the spawn arena exactly (every shard/sample
+    /// payload elided) vs attaches that shipped shards over the wire.
+    pub fn arena_attach_stats(&self) -> (u64, u64) {
+        (self.arena_hits, self.arena_misses)
+    }
+
     /// Execute one round on every worker; returns per-machine replies (in
     /// machine order) plus the round's IPC stats.
     ///
@@ -820,12 +918,12 @@ impl ProcessPool {
             }
             match self.send_payload(wi, &payload) {
                 Ok(()) => awaiting.push((wi, self.workers[wi].machines.clone())),
-                Err(e) => self.on_worker_death(wi, e, &mut progress.orphans)?,
+                Err(e) => self.on_worker_death(wi, e, &mut progress.orphans, None)?,
             }
         }
 
         // --- join replies (arrival order: the pipelined scheduler) -------
-        self.join_replies(awaiting, task, self.timeout, false, &mut progress, on_reply)?;
+        self.join_replies(awaiting, task, self.timeout, false, &mut progress, on_reply, None)?;
 
         // --- recovery: detect → re-queue → adopt → replay → re-run -------
         // The adopter must replay the whole store-mutating history before
@@ -834,7 +932,7 @@ impl ProcessPool {
         let adoption_timeout = self.timeout.saturating_mul(self.history.len() as u32 + 2);
         while !progress.orphans.is_empty() {
             let batch = std::mem::take(&mut progress.orphans);
-            let assignment = self.assign_orphans(&batch)?;
+            let assignment = self.assign_orphans(&batch, None)?;
             let mut adopting: Vec<(usize, Vec<usize>)> = Vec::new();
             for (wi, machines) in assignment {
                 let use_arena = self.arena.is_some();
@@ -883,11 +981,11 @@ impl ProcessPool {
                         // the adopter itself just died: the machines it was
                         // about to adopt rejoin the orphans next to its own.
                         progress.orphans.extend(machines);
-                        self.on_worker_death(wi, e, &mut progress.orphans)?;
+                        self.on_worker_death(wi, e, &mut progress.orphans, None)?;
                     }
                 }
             }
-            self.join_replies(adopting, task, adoption_timeout, true, &mut progress, on_reply)?;
+            self.join_replies(adopting, task, adoption_timeout, true, &mut progress, on_reply, None)?;
         }
 
         if matches!(self.recovery, RecoveryPolicy::Requeue { .. }) && task.mutates_store() {
@@ -912,6 +1010,269 @@ impl ProcessPool {
         Ok((replies, stats))
     }
 
+    /// Attach a job's dataset to the warm pool (`mrsub serve`): round-robin
+    /// its machines over the surviving workers and ship each one a
+    /// job-keyed [`ToWorker::Attach`], awaiting its `Ready`. When the
+    /// pool's arena already holds this exact dataset (byte-identical
+    /// shards and sample — the warm-pool **arena-cache hit**), every
+    /// shard/sample payload is elided from the attach frames and the
+    /// elided bytes land in the mapped meter instead. Returns whether the
+    /// attach was arena-elided. Attach failures are not recovered — the
+    /// caller surfaces them as a job failure.
+    pub fn attach_job(
+        &mut self,
+        job: u64,
+        spec: &OracleSpec,
+        shards: &[Vec<ElementId>],
+        sample: &[ElementId],
+    ) -> Result<bool> {
+        if self.jobs.contains_key(&job) {
+            return Err(Error::Config(format!("job {job} is already attached")));
+        }
+        let m = shards.len();
+        if m == 0 {
+            return Err(Error::Config("job needs at least one machine".into()));
+        }
+        let alive: Vec<usize> =
+            (0..self.workers.len()).filter(|&wi| self.workers[wi].alive).collect();
+        if alive.is_empty() {
+            return Err(worker_error(0, "no surviving workers to attach the job to"));
+        }
+        let mut assign: Vec<Vec<usize>> = vec![Vec::new(); self.workers.len()];
+        for i in 0..m {
+            assign[alive[i % alive.len()]].push(i);
+        }
+        let arena = self.arena.is_some()
+            && self
+                .arena_dataset
+                .as_ref()
+                .is_some_and(|(ds, dsample)| ds == shards && dsample == sample);
+        if arena {
+            self.arena_hits += 1;
+        } else {
+            self.arena_misses += 1;
+        }
+        for &wi in &alive {
+            let machines: Vec<u32> = assign[wi].iter().map(|&i| i as u32).collect();
+            let init = if arena {
+                let words: usize =
+                    assign[wi].iter().map(|&i| shards[i].len()).sum::<usize>() + sample.len();
+                self.mapped_bytes += 4 * words as u64;
+                WorkerInit {
+                    spec: spec.clone(),
+                    machines,
+                    shards: Vec::new(),
+                    sample: Vec::new(),
+                    arena: true,
+                }
+            } else {
+                WorkerInit {
+                    spec: spec.clone(),
+                    machines,
+                    shards: assign[wi].iter().map(|&i| shards[i].clone()).collect(),
+                    sample: sample.to_vec(),
+                    arena: false,
+                }
+            };
+            self.send(wi, &ToWorker::Attach { job, init })?;
+        }
+        for &wi in &alive {
+            match self.recv(wi)? {
+                FromWorker::Ready { version } if version == WIRE_VERSION => {}
+                FromWorker::Ready { version } => {
+                    return Err(self.mark_dead(wi, version_mismatch(version)))
+                }
+                FromWorker::Fail { message } => {
+                    return Err(self.mark_dead(wi, format!("attach failed: {message}")))
+                }
+                other => {
+                    return Err(
+                        self.mark_dead(wi, format!("unexpected attach reply: {other:?}"))
+                    )
+                }
+            }
+        }
+        self.jobs.insert(job, JobState {
+            assign,
+            shards: match self.recovery {
+                RecoveryPolicy::Requeue { .. } => shards.to_vec(),
+                RecoveryPolicy::Fail => Vec::new(),
+            },
+            history: Vec::new(),
+            n_machines: m,
+            arena,
+        });
+        Ok(arena)
+    }
+
+    /// One round of an attached job — [`ProcessPool::round_with`] against
+    /// the job's own machine assignment, shards, and replay history. Same
+    /// broadcast, same arrival-order join, same adoption-based recovery;
+    /// additionally, machines stranded on workers that died while *other*
+    /// jobs' rounds were in flight are re-queued here at round start
+    /// (their loss was charged to the death budget when the death was
+    /// detected, so the re-queue itself is free).
+    pub fn round_job(
+        &mut self,
+        job: u64,
+        task: &RoundTask,
+        on_reply: &mut dyn FnMut(usize, &TaskReply),
+    ) -> Result<(Vec<TaskReply>, RoundIpcStats)> {
+        if !self.jobs.contains_key(&job) {
+            return Err(Error::Config(format!("round for unattached job {job}")));
+        }
+        let (out0, in0) = (self.bytes_out, self.bytes_in);
+        let (rec0, reship0) = (self.recoveries, self.reshipped_bytes);
+        let map0 = self.mapped_bytes;
+        let n_machines = self.jobs[&job].n_machines;
+        let mut progress = RoundProgress {
+            out: (0..n_machines).map(|_| None).collect(),
+            calls: (0, 0, 0),
+            orphans: Vec::new(),
+        };
+
+        // --- round-start re-queue of machines on already-dead workers ----
+        let alive_flags: Vec<bool> = self.workers.iter().map(|h| h.alive).collect();
+        {
+            let js = self.jobs.get_mut(&job).expect("checked above");
+            for (wi, alive) in alive_flags.iter().enumerate() {
+                if !alive && !js.assign[wi].is_empty() {
+                    progress.orphans.extend(std::mem::take(&mut js.assign[wi]));
+                }
+            }
+        }
+        if !progress.orphans.is_empty() && matches!(self.recovery, RecoveryPolicy::Fail) {
+            let wi = self.workers.iter().position(|h| !h.alive).unwrap_or(0);
+            return Err(worker_error(wi, "worker is dead (earlier failure)"));
+        }
+
+        // --- broadcast to the workers hosting this job's machines --------
+        let payload = ToWorker::JobRound { job, task: task.clone() }.encode();
+        let mut awaiting: Vec<(usize, Vec<usize>)> = Vec::new();
+        for wi in 0..self.workers.len() {
+            let machines = self.jobs[&job].assign[wi].clone();
+            if machines.is_empty() || !self.workers[wi].alive {
+                continue;
+            }
+            match self.send_payload(wi, &payload) {
+                Ok(()) => awaiting.push((wi, machines)),
+                Err(e) => self.on_worker_death(wi, e, &mut progress.orphans, Some(job))?,
+            }
+        }
+        self.join_replies(
+            awaiting,
+            task,
+            self.timeout,
+            false,
+            &mut progress,
+            on_reply,
+            Some(job),
+        )?;
+
+        // --- recovery: re-queue → adopt → replay → re-run ----------------
+        let adoption_timeout =
+            self.timeout.saturating_mul(self.jobs[&job].history.len() as u32 + 2);
+        while !progress.orphans.is_empty() {
+            let batch = std::mem::take(&mut progress.orphans);
+            let assignment = self.assign_orphans(&batch, Some(job))?;
+            let mut adopting: Vec<(usize, Vec<usize>)> = Vec::new();
+            for (wi, machines) in assignment {
+                let (adopt_payload, arena_words) = {
+                    let js = &self.jobs[&job];
+                    let adopt = RoundTask::AdoptMachines {
+                        machines: machines.iter().map(|&m| m as u32).collect(),
+                        shards: if js.arena {
+                            Vec::new()
+                        } else {
+                            machines.iter().map(|&m| js.shards[m].clone()).collect()
+                        },
+                        arena: js.arena,
+                        replay: js.history.clone(),
+                        pending: Box::new(task.clone()),
+                    };
+                    let words: usize = if js.arena {
+                        machines.iter().map(|&m| js.shards[m].len()).sum()
+                    } else {
+                        0
+                    };
+                    (
+                        ToWorker::JobRound { job, task: adopt }.encode(),
+                        js.arena.then_some(words),
+                    )
+                };
+                if adopt_payload.len() > self.max_frame {
+                    return Err(worker_error(
+                        wi,
+                        format!(
+                            "adoption reship of {} machine(s) exceeds the max-frame \
+                             cap ({} > {} bytes) — raise max_frame_mb",
+                            machines.len(),
+                            adopt_payload.len(),
+                            self.max_frame
+                        ),
+                    ));
+                }
+                let frame = wire::frame_size(adopt_payload.len()) as u64;
+                match self.send_payload(wi, &adopt_payload) {
+                    Ok(()) => {
+                        self.reshipped_bytes += frame;
+                        if let Some(words) = arena_words {
+                            self.mapped_bytes += 4 * words as u64;
+                        }
+                        adopting.push((wi, machines));
+                    }
+                    Err(e) => {
+                        progress.orphans.extend(machines);
+                        self.on_worker_death(wi, e, &mut progress.orphans, Some(job))?;
+                    }
+                }
+            }
+            self.join_replies(
+                adopting,
+                task,
+                adoption_timeout,
+                true,
+                &mut progress,
+                on_reply,
+                Some(job),
+            )?;
+        }
+
+        if matches!(self.recovery, RecoveryPolicy::Requeue { .. }) && task.mutates_store() {
+            self.jobs.get_mut(&job).expect("attached").history.push(task.clone());
+        }
+        let replies: Vec<TaskReply> = progress
+            .out
+            .into_iter()
+            .map(|r| r.expect("every machine is assigned a worker"))
+            .collect();
+        let stats = RoundIpcStats {
+            bytes_out: self.bytes_out - out0,
+            bytes_in: self.bytes_in - in0,
+            calls: progress.calls,
+            recoveries: self.recoveries - rec0,
+            reshipped_bytes: self.reshipped_bytes - reship0,
+            mapped_bytes: self.mapped_bytes - map0,
+        };
+        Ok((replies, stats))
+    }
+
+    /// Detach a completed (or failed) job: drop its coordinator-side
+    /// state and tell surviving workers to free its runtime. A no-op for
+    /// unknown jobs; send failures are ignored — a dead worker has no
+    /// runtime left to free.
+    pub fn detach_job(&mut self, job: u64) {
+        if self.jobs.remove(&job).is_none() {
+            return;
+        }
+        let payload = ToWorker::Detach { job }.encode();
+        for wi in 0..self.workers.len() {
+            if self.workers[wi].alive {
+                let _ = self.send_payload(wi, &payload);
+            }
+        }
+    }
+
     /// Pipelined reply join: poll every listed worker and consume each
     /// `RoundDone` the moment it arrives (arrival order, not worker
     /// order), streaming per-machine replies into `progress.out` and the
@@ -929,6 +1290,7 @@ impl ProcessPool {
         adopting: bool,
         progress: &mut RoundProgress,
         on_reply: &mut dyn FnMut(usize, &TaskReply),
+        job: Option<u64>,
     ) -> Result<()> {
         let ms = timeout.as_millis();
         let mut last_arrival = Instant::now();
@@ -961,14 +1323,22 @@ impl ProcessPool {
                         }
                         merge_calls(&mut progress.calls, c);
                         if adopting {
-                            self.workers[wi].machines.extend(machines);
+                            match job {
+                                None => self.workers[wi].machines.extend(machines),
+                                Some(j) => self
+                                    .jobs
+                                    .get_mut(&j)
+                                    .expect("attached")
+                                    .assign[wi]
+                                    .extend(machines),
+                            }
                         }
                     }
                     Err(e) => {
                         if adopting {
                             progress.orphans.extend(machines);
                         }
-                        self.on_worker_death(wi, e, &mut progress.orphans)?;
+                        self.on_worker_death(wi, e, &mut progress.orphans, job)?;
                     }
                 }
             }
@@ -982,7 +1352,7 @@ impl ProcessPool {
                     if adopting {
                         progress.orphans.extend(machines);
                     }
-                    self.on_worker_death(wi, e, &mut progress.orphans)?;
+                    self.on_worker_death(wi, e, &mut progress.orphans, job)?;
                 }
             } else {
                 std::thread::sleep(Duration::from_millis(1));
@@ -1050,7 +1420,16 @@ impl ProcessPool {
     /// path). Under [`RecoveryPolicy::Fail`], propagate the structured
     /// error; under [`RecoveryPolicy::Requeue`] with budget left, consume
     /// one death and move the worker's machines onto the orphan list.
-    fn on_worker_death(&mut self, wi: usize, err: Error, orphans: &mut Vec<usize>) -> Result<()> {
+    /// `job` picks whose machines are orphaned: the legacy per-pool
+    /// assignment (`None`) or a warm-pool job's (`Some`). Either way the
+    /// death is charged to the shared budget exactly once, here.
+    fn on_worker_death(
+        &mut self,
+        wi: usize,
+        err: Error,
+        orphans: &mut Vec<usize>,
+        job: Option<u64>,
+    ) -> Result<()> {
         match self.recovery {
             RecoveryPolicy::Fail => Err(err),
             RecoveryPolicy::Requeue { budget } => {
@@ -1065,7 +1444,12 @@ impl ProcessPool {
                 }
                 self.deaths_spent += 1;
                 self.recoveries += 1;
-                let machines = std::mem::take(&mut self.workers[wi].machines);
+                let machines = match job {
+                    None => std::mem::take(&mut self.workers[wi].machines),
+                    Some(j) => {
+                        std::mem::take(&mut self.jobs.get_mut(&j).expect("attached").assign[wi])
+                    }
+                };
                 orphans.extend(machines);
                 Ok(())
             }
@@ -1076,13 +1460,20 @@ impl ProcessPool {
     /// each orphan goes to the currently least-loaded survivor (ties to
     /// the lowest worker index). Errs structurally when no survivor is
     /// left.
-    fn assign_orphans(&self, orphans: &[usize]) -> Result<Vec<(usize, Vec<usize>)>> {
+    fn assign_orphans(
+        &self,
+        orphans: &[usize],
+        job: Option<u64>,
+    ) -> Result<Vec<(usize, Vec<usize>)>> {
+        let job_assign = job.map(|j| &self.jobs[&j].assign);
         let mut load: Vec<(usize, usize)> = self
             .workers
             .iter()
             .enumerate()
             .filter(|(_, w)| w.alive)
-            .map(|(wi, w)| (wi, w.machines.len()))
+            .map(|(wi, w)| {
+                (wi, job_assign.map_or(w.machines.len(), |assign| assign[wi].len()))
+            })
             .collect();
         if load.is_empty() {
             return Err(worker_error(
@@ -1413,11 +1804,97 @@ fn adopt_machines(
     )
 }
 
+/// The job id the legacy single-tenant `Init` path lives under: `Init`
+/// installs its runtime in this anonymous slot and `Round` frames look it
+/// up there, so one worker loop serves both the one-shot pools and the
+/// warm serving pool ([`ToWorker::Attach`] jobs, ids allocated from 1).
+const LEGACY_JOB: u64 = 0;
+
+/// Build a per-job worker runtime from a [`WorkerInit`]: construct the
+/// oracle from its spec, then resolve shards from the wire payload or —
+/// when the init is arena-flagged — from the zero-copy arena mapping.
+/// `what` names the carrying frame (`Init`/`Attach`) in error messages.
+fn build_runtime(
+    init: WorkerInit,
+    arena_map: Option<&ArenaMap>,
+    what: &str,
+) -> std::result::Result<WorkerRuntime, String> {
+    let oracle =
+        init.spec.build().map_err(|e| format!("cannot build oracle: {e}"))?;
+    let shards = if init.arena {
+        match arena_map {
+            Some(map) => arena_shards(map, &init.machines)?,
+            None => {
+                return Err(format!(
+                    "arena-flagged {what} but no arena mapping \
+                     (transport without fd-passing?)"
+                ))
+            }
+        }
+    } else {
+        init.shards.into_iter().map(ShardData::Owned).collect()
+    };
+    let counting = CountingOracle::new(oracle);
+    let counters = counting.counter();
+    let n = shards.len();
+    Ok(WorkerRuntime {
+        oracle: counting,
+        counters,
+        machines: init.machines.iter().map(|&i| i as usize).collect(),
+        shards,
+        stores: vec![GuessStore::default(); n],
+        cache: StateCache::default(),
+    })
+}
+
+/// Run one round task against a job's runtime, resolving adoption shards
+/// from the arena when flagged. Returns the per-machine replies plus the
+/// oracle-call deltas the round incurred on this runtime's counters.
+fn run_round_task(
+    rt: &mut WorkerRuntime,
+    task: RoundTask,
+    arena_map: Option<&ArenaMap>,
+) -> std::result::Result<(Vec<TaskReply>, (u64, u64, u64)), String> {
+    let before = rt.counters.snapshot();
+    let replies = match task {
+        RoundTask::AdoptMachines { machines, shards, arena, replay, pending } => {
+            let data = if arena {
+                match arena_map {
+                    Some(map) => arena_shards(map, &machines)?,
+                    None => {
+                        return Err("arena-flagged adoption but no arena mapping".into())
+                    }
+                }
+            } else {
+                shards.into_iter().map(ShardData::Owned).collect()
+            };
+            adopt_machines(rt, machines, data, replay, &pending)
+        }
+        task => shard::run_task_all_cached(
+            &rt.oracle,
+            &rt.shards,
+            &mut rt.stores,
+            &rt.machines,
+            &task,
+            &crate::mapreduce::backend::Serial,
+            &mut rt.cache,
+        ),
+    };
+    let after = rt.counters.snapshot();
+    let calls = (
+        after.0.saturating_sub(before.0),
+        after.1.saturating_sub(before.1),
+        after.2.saturating_sub(before.2),
+    );
+    Ok((replies, calls))
+}
+
 /// The worker main loop over arbitrary streams (in-memory in unit tests,
 /// pipes or sockets in production). Sends the connect-time `Hello` (as
 /// worker slot `worker_id`), then serves frames — including
-/// [`RoundTask::AdoptMachines`] adoptions from the elastic pool — until
-/// shutdown. Returns the process exit code. Wire-path form of
+/// [`RoundTask::AdoptMachines`] adoptions from the elastic pool and the
+/// warm pool's job-keyed `Attach`/`JobRound`/`Detach` — until shutdown.
+/// Returns the process exit code. Wire-path form of
 /// [`run_worker_mapped`] (no arena).
 pub fn run_worker(
     r: &mut dyn Read,
@@ -1457,7 +1934,9 @@ pub fn run_worker_mapped(
     ) {
         return 3;
     }
-    let mut rt: Option<WorkerRuntime> = None;
+    // one independent runtime per job: the legacy `Init` path lives in the
+    // anonymous slot [`LEGACY_JOB`], serving-daemon jobs under their ids.
+    let mut jobs: BTreeMap<u64, WorkerRuntime> = BTreeMap::new();
     let mut rounds_seen = 0u32;
     let mut prunes_seen = 0u32;
     loop {
@@ -1482,54 +1961,47 @@ pub fn run_worker_mapped(
             }
         };
         match msg {
-            ToWorker::Init(init) => match init.spec.build() {
-                Ok(oracle) => {
-                    let shards = if init.arena {
-                        let resolved = match &arena_map {
-                            Some(map) => arena_shards(map, &init.machines),
-                            None => Err("arena-flagged Init but no arena mapping \
-                                         (transport without fd-passing?)"
-                                .into()),
+            ToWorker::Init(init) => {
+                match build_runtime(init, arena_map.as_ref(), "Init") {
+                    Ok(rt) => {
+                        jobs.insert(LEGACY_JOB, rt);
+                        let version = if faulted("bad-version") {
+                            WIRE_VERSION.wrapping_add(1)
+                        } else {
+                            WIRE_VERSION
                         };
-                        match resolved {
-                            Ok(s) => s,
-                            Err(message) => {
-                                send_reply(w, &FromWorker::Fail { message }, max_frame);
-                                return 3;
-                            }
+                        if !send_reply(w, &FromWorker::Ready { version }, max_frame) {
+                            return 3;
                         }
-                    } else {
-                        init.shards.into_iter().map(ShardData::Owned).collect()
-                    };
-                    let counting = CountingOracle::new(oracle);
-                    let counters = counting.counter();
-                    let n = shards.len();
-                    rt = Some(WorkerRuntime {
-                        oracle: counting,
-                        counters,
-                        machines: init.machines.iter().map(|&i| i as usize).collect(),
-                        shards,
-                        stores: vec![GuessStore::default(); n],
-                        cache: StateCache::default(),
-                    });
-                    let version = if faulted("bad-version") {
-                        WIRE_VERSION.wrapping_add(1)
-                    } else {
-                        WIRE_VERSION
-                    };
-                    if !send_reply(w, &FromWorker::Ready { version }, max_frame) {
+                    }
+                    Err(message) => {
+                        send_reply(w, &FromWorker::Fail { message }, max_frame);
                         return 3;
                     }
                 }
-                Err(e) => {
-                    send_reply(
-                        w,
-                        &FromWorker::Fail { message: format!("cannot build oracle: {e}") },
-                        max_frame,
-                    );
-                    return 3;
+            }
+            ToWorker::Attach { job, init } => {
+                match build_runtime(init, arena_map.as_ref(), "Attach") {
+                    Ok(rt) => {
+                        jobs.insert(job, rt);
+                        let version = if faulted("bad-version") {
+                            WIRE_VERSION.wrapping_add(1)
+                        } else {
+                            WIRE_VERSION
+                        };
+                        if !send_reply(w, &FromWorker::Ready { version }, max_frame) {
+                            return 3;
+                        }
+                    }
+                    // a failed attach poisons one job, not the worker: the
+                    // other tenants' runtimes keep serving.
+                    Err(message) => {
+                        if !send_reply(w, &FromWorker::Fail { message }, max_frame) {
+                            return 3;
+                        }
+                    }
                 }
-            },
+            }
             ToWorker::Round(task) => {
                 rounds_seen += 1;
                 if task.contains_prune() {
@@ -1541,7 +2013,7 @@ pub fn run_worker_mapped(
                         return code;
                     }
                 }
-                let Some(rt) = rt.as_mut() else {
+                let Some(rt) = jobs.get_mut(&LEGACY_JOB) else {
                     send_reply(
                         w,
                         &FromWorker::Fail { message: "round before init".into() },
@@ -1549,46 +2021,53 @@ pub fn run_worker_mapped(
                     );
                     return 3;
                 };
-                let before = rt.counters.snapshot();
-                let replies = match task {
-                    RoundTask::AdoptMachines { machines, shards, arena, replay, pending } => {
-                        let data = if arena {
-                            let resolved = match &arena_map {
-                                Some(map) => arena_shards(map, &machines),
-                                None => Err("arena-flagged adoption but no arena mapping"
-                                    .into()),
-                            };
-                            match resolved {
-                                Ok(s) => s,
-                                Err(message) => {
-                                    send_reply(w, &FromWorker::Fail { message }, max_frame);
-                                    return 3;
-                                }
-                            }
-                        } else {
-                            shards.into_iter().map(ShardData::Owned).collect()
-                        };
-                        adopt_machines(rt, machines, data, replay, &pending)
+                match run_round_task(rt, task, arena_map.as_ref()) {
+                    Ok((replies, calls)) => {
+                        if !send_reply(w, &FromWorker::RoundDone { replies, calls }, max_frame) {
+                            return 3;
+                        }
                     }
-                    task => shard::run_task_all_cached(
-                        &rt.oracle,
-                        &rt.shards,
-                        &mut rt.stores,
-                        &rt.machines,
-                        &task,
-                        &crate::mapreduce::backend::Serial,
-                        &mut rt.cache,
-                    ),
-                };
-                let after = rt.counters.snapshot();
-                let calls = (
-                    after.0.saturating_sub(before.0),
-                    after.1.saturating_sub(before.1),
-                    after.2.saturating_sub(before.2),
-                );
-                if !send_reply(w, &FromWorker::RoundDone { replies, calls }, max_frame) {
-                    return 3;
+                    Err(message) => {
+                        send_reply(w, &FromWorker::Fail { message }, max_frame);
+                        return 3;
+                    }
                 }
+            }
+            ToWorker::JobRound { job, task } => {
+                rounds_seen += 1;
+                if task.contains_prune() {
+                    prunes_seen += 1;
+                }
+                if let Some(f) = &fault {
+                    let fired = fire_round_fault(f, &task, rounds_seen, prunes_seen, w, max_frame);
+                    if let Some(code) = fired {
+                        return code;
+                    }
+                }
+                let Some(rt) = jobs.get_mut(&job) else {
+                    // a coordinator bug, but scoped to this job: Fail its
+                    // round and keep serving the other tenants.
+                    let message = format!("job round before attach (job {job})");
+                    if !send_reply(w, &FromWorker::Fail { message }, max_frame) {
+                        return 3;
+                    }
+                    continue;
+                };
+                match run_round_task(rt, task, arena_map.as_ref()) {
+                    Ok((replies, calls)) => {
+                        if !send_reply(w, &FromWorker::RoundDone { replies, calls }, max_frame) {
+                            return 3;
+                        }
+                    }
+                    Err(message) => {
+                        send_reply(w, &FromWorker::Fail { message }, max_frame);
+                        return 3;
+                    }
+                }
+            }
+            ToWorker::Detach { job } => {
+                // fire-and-forget: the coordinator does not await an ack.
+                jobs.remove(&job);
             }
             ToWorker::Shutdown => return 0,
         }

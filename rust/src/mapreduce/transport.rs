@@ -31,8 +31,17 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Process-wide listener sequence number, part of every UDS socket path.
+/// Combined with the pid it makes each path unique for the life of the
+/// filesystem: two listeners can never collide even when callers pass the
+/// same `tag` (concurrent pools in one daemon, tests, overlapping `serve`
+/// instances), and a path left behind by a crashed coordinator — whose pid
+/// is by definition not ours — is never silently unlinked and reused.
+static LISTENER_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Which byte-stream transport the process backend's coordinator and
 /// workers speak [`crate::mapreduce::wire`] over. Parsed from the
@@ -220,16 +229,18 @@ pub enum Listener {
 
 impl Listener {
     /// Bind a listener for `transport`; `None` for [`Transport::Pipe`].
-    /// The `tag` diversifies the UDS socket path so concurrent pools in
-    /// one process don't collide.
+    /// The UDS socket path is keyed by pid + a process-wide per-listener
+    /// counter (the caller's `tag` rides along for debuggability), so
+    /// concurrent pools never collide on a path and a stale socket from a
+    /// crashed run — a different pid — can never shadow a live bind. The
+    /// path is unlinked in [`Drop`].
     pub fn bind(transport: &Transport, tag: u64) -> std::io::Result<Option<Listener>> {
         match transport {
             Transport::Pipe => Ok(None),
             Transport::Uds | Transport::UdsArena => {
+                let seq = LISTENER_SEQ.fetch_add(1, Ordering::Relaxed);
                 let path = std::env::temp_dir()
-                    .join(format!("mrsub-{}-{tag:x}.sock", std::process::id()));
-                // a stale path from a crashed earlier run would fail the bind.
-                let _ = std::fs::remove_file(&path);
+                    .join(format!("mrsub-{}-{tag:x}-{seq:x}.sock", std::process::id()));
                 let listener = UnixListener::bind(&path)?;
                 listener.set_nonblocking(true)?;
                 Ok(Some(Listener::Uds { listener, path }))
@@ -444,6 +455,20 @@ mod tests {
     #[test]
     fn connect_rejects_bad_scheme() {
         assert!(connect("smoke:signals").is_err());
+    }
+
+    #[test]
+    fn uds_paths_unique_even_with_equal_tags() {
+        // two live listeners sharing a tag must get distinct paths — the
+        // per-listener counter, not the caller's tag, is what guarantees
+        // a daemon's concurrent pools (or overlapping tests) never collide.
+        let a = Listener::bind(&Transport::Uds, 0x5A5A).unwrap().unwrap();
+        let b = Listener::bind(&Transport::Uds, 0x5A5A).unwrap().unwrap();
+        assert_ne!(a.endpoint(), b.endpoint());
+        let pid = format!("mrsub-{}-", std::process::id());
+        for l in [&a, &b] {
+            assert!(l.endpoint().contains(&pid), "path keyed by pid: {}", l.endpoint());
+        }
     }
 
     #[test]

@@ -54,7 +54,17 @@ use crate::oracle::spec::OracleSpec;
 /// [`RoundTask::AdoptMachines`] carry an `arena` flag; when set, shard
 /// and sample payloads are *elided* from the frame — workers read them
 /// from the fd-passed memfd mapping by global machine id instead.
-pub const WIRE_VERSION: u16 = 4;
+///
+/// v5: multi-tenant serving (`mrsub serve`). Workers gain per-job state:
+/// [`ToWorker::Attach`] installs a job-keyed runtime next to the ones
+/// already held (where [`ToWorker::Init`] *replaces* the sole anonymous
+/// runtime), [`ToWorker::JobRound`] runs a round against one job, and
+/// [`ToWorker::Detach`] drops a finished job's state. The same codec also
+/// gains the client-facing [`ClientRequest`]/[`ClientResponse`] frames
+/// the daemon and `mrsub submit` speak over TCP — riding the versioned
+/// header means client/daemon version skew fails the first frame with a
+/// structured [`WireError::BadVersion`] instead of a decode mystery.
+pub const WIRE_VERSION: u16 = 5;
 
 /// Frame magic: "MRSB" (MapReduce-Submodular Backend).
 pub const FRAME_MAGIC: [u8; 4] = *b"MRSB";
@@ -910,6 +920,52 @@ pub struct WorkerInit {
     pub arena: bool,
 }
 
+impl WorkerInit {
+    /// Encode into `enc` (shared by [`ToWorker::Init`] and
+    /// [`ToWorker::Attach`], which must stay byte-compatible).
+    pub fn encode(&self, enc: &mut Enc) {
+        self.spec.encode(enc);
+        enc.ids(&self.machines);
+        enc.bool(self.arena);
+        if !self.arena {
+            enc.u32(self.shards.len() as u32);
+            for s in &self.shards {
+                enc.ids(s);
+            }
+            enc.ids(&self.sample);
+        } else {
+            debug_assert!(
+                self.shards.is_empty() && self.sample.is_empty(),
+                "arena inits elide shard/sample payloads"
+            );
+        }
+    }
+
+    /// Decode one init payload.
+    pub fn decode(dec: &mut Dec<'_>) -> Result<WorkerInit, WireError> {
+        let spec = OracleSpec::decode(dec)?;
+        let machines = dec.ids()?;
+        let arena = dec.bool()?;
+        let (shards, sample) = if arena {
+            (Vec::new(), Vec::new())
+        } else {
+            let n = dec.u32()? as usize;
+            if n != machines.len() {
+                return Err(WireError::Malformed(format!(
+                    "init: {n} shards for {} machines",
+                    machines.len()
+                )));
+            }
+            let mut shards = Vec::with_capacity(n);
+            for _ in 0..n {
+                shards.push(dec.ids()?);
+            }
+            (shards, dec.ids()?)
+        };
+        Ok(WorkerInit { spec, machines, shards, sample, arena })
+    }
+}
+
 /// Coordinator → worker messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ToWorker {
@@ -919,6 +975,30 @@ pub enum ToWorker {
     Round(RoundTask),
     /// Clean shutdown (worker exits 0).
     Shutdown,
+    /// Install a *job-keyed* runtime next to any the worker already
+    /// holds (the serving daemon's warm pool attaches one per submitted
+    /// job; one-shot runs keep using [`ToWorker::Init`], which is the
+    /// anonymous job slot). Worker replies [`FromWorker::Ready`].
+    Attach {
+        /// Daemon-assigned job id (nonzero; 0 is the anonymous slot).
+        job: u64,
+        /// The per-job shard + spec handoff.
+        init: WorkerInit,
+    },
+    /// Execute one round task against job `job`'s runtime.
+    JobRound {
+        /// Job whose machines run the task.
+        job: u64,
+        /// The round program.
+        task: RoundTask,
+    },
+    /// Drop job `job`'s runtime (shards, stores, caches). No reply; a
+    /// detach of an unknown job is a no-op, so the daemon can fire these
+    /// without tracking per-worker attach acknowledgements.
+    Detach {
+        /// Job to forget.
+        job: u64,
+    },
 }
 
 impl ToWorker {
@@ -928,27 +1008,27 @@ impl ToWorker {
         match self {
             ToWorker::Init(init) => {
                 enc.u8(1);
-                init.spec.encode(&mut enc);
-                enc.ids(&init.machines);
-                enc.bool(init.arena);
-                if !init.arena {
-                    enc.u32(init.shards.len() as u32);
-                    for s in &init.shards {
-                        enc.ids(s);
-                    }
-                    enc.ids(&init.sample);
-                } else {
-                    debug_assert!(
-                        init.shards.is_empty() && init.sample.is_empty(),
-                        "arena inits elide shard/sample payloads"
-                    );
-                }
+                init.encode(&mut enc);
             }
             ToWorker::Round(task) => {
                 enc.u8(2);
                 task.encode(&mut enc);
             }
             ToWorker::Shutdown => enc.u8(3),
+            ToWorker::Attach { job, init } => {
+                enc.u8(4);
+                enc.u64(*job);
+                init.encode(&mut enc);
+            }
+            ToWorker::JobRound { job, task } => {
+                enc.u8(5);
+                enc.u64(*job);
+                task.encode(&mut enc);
+            }
+            ToWorker::Detach { job } => {
+                enc.u8(6);
+                enc.u64(*job);
+            }
         }
         enc.buf
     }
@@ -957,30 +1037,15 @@ impl ToWorker {
     pub fn decode(payload: &[u8]) -> Result<ToWorker, WireError> {
         let mut dec = Dec::new(payload);
         let msg = match dec.u8()? {
-            1 => {
-                let spec = OracleSpec::decode(&mut dec)?;
-                let machines = dec.ids()?;
-                let arena = dec.bool()?;
-                let (shards, sample) = if arena {
-                    (Vec::new(), Vec::new())
-                } else {
-                    let n = dec.u32()? as usize;
-                    if n != machines.len() {
-                        return Err(WireError::Malformed(format!(
-                            "init: {n} shards for {} machines",
-                            machines.len()
-                        )));
-                    }
-                    let mut shards = Vec::with_capacity(n);
-                    for _ in 0..n {
-                        shards.push(dec.ids()?);
-                    }
-                    (shards, dec.ids()?)
-                };
-                ToWorker::Init(WorkerInit { spec, machines, shards, sample, arena })
-            }
+            1 => ToWorker::Init(WorkerInit::decode(&mut dec)?),
             2 => ToWorker::Round(RoundTask::decode(&mut dec)?),
             3 => ToWorker::Shutdown,
+            4 => {
+                let job = dec.u64()?;
+                ToWorker::Attach { job, init: WorkerInit::decode(&mut dec)? }
+            }
+            5 => ToWorker::JobRound { job: dec.u64()?, task: RoundTask::decode(&mut dec)? },
+            6 => ToWorker::Detach { job: dec.u64()? },
             t => return Err(WireError::Malformed(format!("unknown ToWorker tag {t}"))),
         };
         dec.finish()?;
@@ -1075,6 +1140,190 @@ impl FromWorker {
             3 => FromWorker::Fail { message: dec.str()? },
             4 => FromWorker::Hello { version: dec.u16()?, worker: dec.u32()? },
             t => return Err(WireError::Malformed(format!("unknown FromWorker tag {t}"))),
+        };
+        dec.finish()?;
+        Ok(msg)
+    }
+}
+
+// --- client <-> daemon messages (mrsub submit <-> mrsub serve) --------------
+
+/// Client → daemon requests, spoken by `mrsub submit` over TCP to a
+/// long-running `mrsub serve` daemon. Rides the same versioned,
+/// checksummed frame as the worker protocol, so a version-skewed client
+/// fails its very first frame with [`WireError::BadVersion`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientRequest {
+    /// Submit one optimization job; the daemon replies
+    /// [`ClientResponse::JobResult`] on this connection when it finishes
+    /// (or [`ClientResponse::Error`] if it can't run).
+    SubmitJob {
+        /// Algorithm name, the `mrsub run --algorithm` syntax
+        /// (e.g. `"two-round"`, `"combined:0.1"`).
+        algorithm: String,
+        /// Cardinality constraint.
+        k: usize,
+        /// Experiment seed (shard partition + algorithm randomness).
+        seed: u64,
+        /// Simulated machine count for the MapReduce layout.
+        machines: usize,
+        /// Oracle construction recipe; also the warm pool's dataset
+        /// cache key.
+        spec: OracleSpec,
+    },
+    /// Ask for one job's lifecycle state.
+    JobStatus {
+        /// Daemon-assigned job id (from [`ClientResponse::JobResult`] or
+        /// [`ClientResponse::Jobs`]).
+        id: u64,
+    },
+    /// List all jobs the daemon has seen, with their states.
+    ListJobs,
+    /// Ask the daemon to finish in-flight jobs, shut the warm pool down,
+    /// and exit (the serve-smoke harness's clean-exit path).
+    Shutdown,
+}
+
+impl ClientRequest {
+    /// Encode to a payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut enc = Enc::new();
+        match self {
+            ClientRequest::SubmitJob { algorithm, k, seed, machines, spec } => {
+                enc.u8(1);
+                enc.str(algorithm);
+                enc.usize(*k);
+                enc.u64(*seed);
+                enc.usize(*machines);
+                spec.encode(&mut enc);
+            }
+            ClientRequest::JobStatus { id } => {
+                enc.u8(2);
+                enc.u64(*id);
+            }
+            ClientRequest::ListJobs => enc.u8(3),
+            ClientRequest::Shutdown => enc.u8(4),
+        }
+        enc.buf
+    }
+
+    /// Decode from a payload.
+    pub fn decode(payload: &[u8]) -> Result<ClientRequest, WireError> {
+        let mut dec = Dec::new(payload);
+        let msg = match dec.u8()? {
+            1 => ClientRequest::SubmitJob {
+                algorithm: dec.str()?,
+                k: dec.usize()?,
+                seed: dec.u64()?,
+                machines: dec.usize()?,
+                spec: OracleSpec::decode(&mut dec)?,
+            },
+            2 => ClientRequest::JobStatus { id: dec.u64()? },
+            3 => ClientRequest::ListJobs,
+            4 => ClientRequest::Shutdown,
+            t => return Err(WireError::Malformed(format!("unknown ClientRequest tag {t}"))),
+        };
+        dec.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Daemon → client responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientResponse {
+    /// A finished job: the selection, its value, and the full
+    /// [`crate::coordinator::ExperimentRecord`] as a JSON document (the
+    /// client parses it back with the crate's own JSON parser).
+    JobResult {
+        /// Daemon-assigned job id.
+        id: u64,
+        /// Selected element ids, insertion order — bit-identical to the
+        /// same (algorithm, spec, k, seed, machines) run standalone.
+        selection: Vec<ElementId>,
+        /// Objective value of the selection.
+        value: f64,
+        /// Per-job experiment record, serialized JSON.
+        record_json: String,
+    },
+    /// One job's lifecycle state: `"queued"`, `"running"`, `"done"`, or
+    /// `"failed: <reason>"`.
+    Status {
+        /// Job id.
+        id: u64,
+        /// State label.
+        state: String,
+    },
+    /// All jobs the daemon has seen, `(id, state)` in id order.
+    Jobs {
+        /// `(job id, state label)` pairs.
+        jobs: Vec<(u64, String)>,
+    },
+    /// Structured failure (unknown algorithm, bad spec, pool death, …).
+    Error {
+        /// Human-readable reason.
+        message: String,
+    },
+    /// Acknowledges [`ClientRequest::Shutdown`]; the daemon exits after
+    /// draining in-flight jobs.
+    ShuttingDown,
+}
+
+impl ClientResponse {
+    /// Encode to a payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut enc = Enc::new();
+        match self {
+            ClientResponse::JobResult { id, selection, value, record_json } => {
+                enc.u8(1);
+                enc.u64(*id);
+                enc.ids(selection);
+                enc.f64(*value);
+                enc.str(record_json);
+            }
+            ClientResponse::Status { id, state } => {
+                enc.u8(2);
+                enc.u64(*id);
+                enc.str(state);
+            }
+            ClientResponse::Jobs { jobs } => {
+                enc.u8(3);
+                enc.u32(jobs.len() as u32);
+                for (id, state) in jobs {
+                    enc.u64(*id);
+                    enc.str(state);
+                }
+            }
+            ClientResponse::Error { message } => {
+                enc.u8(4);
+                enc.str(message);
+            }
+            ClientResponse::ShuttingDown => enc.u8(5),
+        }
+        enc.buf
+    }
+
+    /// Decode from a payload.
+    pub fn decode(payload: &[u8]) -> Result<ClientResponse, WireError> {
+        let mut dec = Dec::new(payload);
+        let msg = match dec.u8()? {
+            1 => ClientResponse::JobResult {
+                id: dec.u64()?,
+                selection: dec.ids()?,
+                value: dec.f64()?,
+                record_json: dec.str()?,
+            },
+            2 => ClientResponse::Status { id: dec.u64()?, state: dec.str()? },
+            3 => {
+                let n = dec.u32()? as usize;
+                let mut jobs = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    jobs.push((dec.u64()?, dec.str()?));
+                }
+                ClientResponse::Jobs { jobs }
+            }
+            4 => ClientResponse::Error { message: dec.str()? },
+            5 => ClientResponse::ShuttingDown,
+            t => return Err(WireError::Malformed(format!("unknown ClientResponse tag {t}"))),
         };
         dec.finish()?;
         Ok(msg)
@@ -1450,6 +1699,101 @@ mod tests {
         let mut dec = Dec::new(&enc.buf);
         assert_eq!(RoundTask::decode(&mut dec).unwrap(), arena_adopt);
         dec.finish().unwrap();
+    }
+
+    #[test]
+    fn job_keyed_worker_messages_roundtrip() {
+        use crate::oracle::spec::OracleSpec;
+        let init = WorkerInit {
+            spec: OracleSpec::Modular { weights: vec![1.0, 0.5] },
+            machines: vec![1, 5],
+            shards: vec![vec![3, 7], vec![2]],
+            sample: vec![7],
+            arena: false,
+        };
+        for msg in [
+            ToWorker::Attach { job: 9, init: init.clone() },
+            ToWorker::JobRound { job: 9, task: RoundTask::LocalGreedy { k: 3 } },
+            ToWorker::Detach { job: 9 },
+        ] {
+            let framed = frame_roundtrip(&msg.encode());
+            assert_eq!(ToWorker::decode(&framed).unwrap(), msg);
+        }
+        // Attach is byte-compatible with Init after the (tag, job) prefix:
+        // both encode through WorkerInit::encode.
+        let attach = ToWorker::Attach { job: 42, init: init.clone() }.encode();
+        let plain = ToWorker::Init(init).encode();
+        assert_eq!(&attach[1 + 8..], &plain[1..]);
+        // arena attaches elide shard payloads, exactly like arena inits.
+        let arena_attach = ToWorker::Attach {
+            job: 1,
+            init: WorkerInit {
+                spec: OracleSpec::Modular { weights: vec![1.0] },
+                machines: (0..64).collect(),
+                shards: Vec::new(),
+                sample: Vec::new(),
+                arena: true,
+            },
+        };
+        let payload = arena_attach.encode();
+        assert!(payload.len() < 512, "arena attach is O(1) framing: {} bytes", payload.len());
+        assert_eq!(ToWorker::decode(&payload).unwrap(), arena_attach);
+    }
+
+    #[test]
+    fn client_frames_roundtrip() {
+        use crate::oracle::spec::OracleSpec;
+        let reqs = [
+            ClientRequest::SubmitJob {
+                algorithm: "combined:0.1".into(),
+                k: 16,
+                seed: 7,
+                machines: 8,
+                spec: OracleSpec::Coverage {
+                    n: 512,
+                    universe: 256,
+                    avg_degree: 4,
+                    weighted: true,
+                    seed: 3,
+                },
+            },
+            ClientRequest::JobStatus { id: 12 },
+            ClientRequest::ListJobs,
+            ClientRequest::Shutdown,
+        ];
+        for req in reqs {
+            let framed = frame_roundtrip(&req.encode());
+            assert_eq!(ClientRequest::decode(&framed).unwrap(), req);
+        }
+        let resps = [
+            ClientResponse::JobResult {
+                id: 12,
+                selection: vec![4, 9, 1],
+                value: 37.5,
+                record_json: "{\"value\":37.5}".into(),
+            },
+            ClientResponse::Status { id: 12, state: "running".into() },
+            ClientResponse::Jobs {
+                jobs: vec![(1, "done".into()), (2, "failed: bad spec".into())],
+            },
+            ClientResponse::Error { message: "unknown algorithm".into() },
+            ClientResponse::ShuttingDown,
+        ];
+        for resp in resps {
+            let framed = frame_roundtrip(&resp.encode());
+            assert_eq!(ClientResponse::decode(&framed).unwrap(), resp);
+        }
+        // truncation errors structurally, never panics.
+        let full = ClientResponse::JobResult {
+            id: 1,
+            selection: vec![2, 3],
+            value: 1.0,
+            record_json: "{}".into(),
+        }
+        .encode();
+        for cut in 0..full.len() {
+            assert!(ClientResponse::decode(&full[..cut]).is_err(), "cut at {cut}");
+        }
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Minimal JSON: a value type, a pretty emitter, and a recursive-descent
-//! parser. Serves two needs: writing experiment reports and reading the
-//! AOT artifact manifest. Supports the full JSON grammar except `\uXXXX`
-//! surrogate pairs (unneeded here; lone escapes are decoded).
+//! parser. Serves three needs: writing experiment reports, reading the
+//! AOT artifact manifest, and decoding client-supplied job payloads on
+//! the serving path. Supports the full JSON grammar, including `\uXXXX`
+//! surrogate pairs (a high surrogate must be followed by a low one; a
+//! lone or mismatched surrogate is a structured parse error, never a
+//! silent U+FFFD).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -251,19 +254,7 @@ impl<'a> Parser<'a> {
                         b'r' => out.push('\r'),
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
-                        b'u' => {
-                            let hex = self
-                                .bytes
-                                .get(self.pos..self.pos + 4)
-                                .ok_or("bad \\u escape")?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|_| "bad \\u")?,
-                                16,
-                            )
-                            .map_err(|_| "bad \\u")?;
-                            self.pos += 4;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                        }
+                        b'u' => out.push(self.unicode_escape()?),
                         other => return Err(format!("bad escape \\{}", other as char)),
                     }
                 }
@@ -277,6 +268,53 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a `\uXXXX` escape (the `\u` is already consumed).
+    fn hex4(&mut self) -> Result<u32, String> {
+        let hex = self
+            .bytes
+            .get(self.pos..self.pos + 4)
+            .ok_or("bad \\u escape")?;
+        let code =
+            u32::from_str_radix(std::str::from_utf8(hex).map_err(|_| "bad \\u")?, 16)
+                .map_err(|_| "bad \\u")?;
+        self.pos += 4;
+        Ok(code)
+    }
+
+    /// Decode one `\uXXXX` escape into a character, pairing UTF-16
+    /// surrogates: a high surrogate must be immediately followed by a
+    /// `\uXXXX` low surrogate and the pair combines into one supplementary
+    /// code point. A lone or mismatched surrogate is a parse error — the
+    /// old behavior of emitting U+FFFD silently corrupted every non-BMP
+    /// character shipped as an escaped pair.
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let at = self.pos - 2; // byte offset of the `\`
+        let hi = self.hex4()?;
+        if (0xDC00..=0xDFFF).contains(&hi) {
+            return Err(format!("lone low surrogate \\u{hi:04x} at byte {at}"));
+        }
+        if (0xD800..=0xDBFF).contains(&hi) {
+            if self.peek() != Some(b'\\') || self.bytes.get(self.pos + 1) != Some(&b'u') {
+                return Err(format!(
+                    "high surrogate \\u{hi:04x} at byte {at} not followed by a \\u low surrogate"
+                ));
+            }
+            self.pos += 2;
+            let lo = self.hex4()?;
+            if !(0xDC00..=0xDFFF).contains(&lo) {
+                return Err(format!(
+                    "high surrogate \\u{hi:04x} at byte {at} followed by \\u{lo:04x}, \
+                     which is not a low surrogate"
+                ));
+            }
+            let code = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+            return char::from_u32(code)
+                .ok_or_else(|| format!("bad surrogate pair \\u{hi:04x}\\u{lo:04x} at byte {at}"));
+        }
+        // non-surrogate BMP scalar: always a valid char.
+        char::from_u32(hi).ok_or_else(|| format!("bad \\u{hi:04x} at byte {at}"))
     }
 
     fn array(&mut self) -> Result<Json, String> {
@@ -379,6 +417,51 @@ mod tests {
         let s = Json::Str("née\u{1}".into()).to_string_compact();
         assert!(s.contains("\\u0001"));
         assert_eq!(Json::parse(&s).unwrap().as_str(), Some("née\u{1}"));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_real_code_points() {
+        // U+1D11E MUSICAL SYMBOL G CLEF, escaped as a UTF-16 pair.
+        assert_eq!(Json::parse(r#""\ud834\udd1e""#).unwrap().as_str(), Some("𝄞"));
+        // U+1F680 ROCKET, upper- and lower-case hex digits both accepted.
+        assert_eq!(Json::parse(r#""\uD83D\uDE80""#).unwrap().as_str(), Some("🚀"));
+        // pairs mixed with surrounding text and other escapes.
+        assert_eq!(
+            Json::parse(r#""ok \ud834\udd1e\tend""#).unwrap().as_str(),
+            Some("ok 𝄞\tend")
+        );
+        // raw (unescaped) non-BMP characters still pass through.
+        assert_eq!(Json::parse("\"🚀\"").unwrap().as_str(), Some("🚀"));
+    }
+
+    #[test]
+    fn non_bmp_strings_roundtrip_emit_to_parse() {
+        for s in ["𝄞", "🚀 launch", "mix 𝄞 and café", "👩‍🔬"] {
+            let v = Json::obj([("s", Json::Str(s.into()))]);
+            for text in [v.to_string_pretty(), v.to_string_compact()] {
+                let back = Json::parse(&text).unwrap();
+                assert_eq!(back.get("s").unwrap().as_str(), Some(s), "roundtrip of {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lone_or_mismatched_surrogates_are_structured_errors() {
+        // lone high surrogate (end of string, plain char, or non-escape).
+        for text in [
+            r#""\ud834""#,
+            r#""\ud834x""#,
+            r#""\ud834\n""#,
+            // high followed by a non-surrogate escape.
+            r#""\ud834A""#,
+            // high followed by another high.
+            r#""\ud834\ud834""#,
+            // lone low surrogate.
+            r#""\udd1e""#,
+        ] {
+            let err = Json::parse(text).unwrap_err();
+            assert!(err.contains("surrogate"), "error for {text} must name the surrogate: {err}");
+        }
     }
 
     #[test]

@@ -54,13 +54,15 @@ use mrsub::algorithms::sparse::SparseTwoRound;
 use mrsub::algorithms::stochastic::StochasticGreedy;
 use mrsub::algorithms::two_round::TwoRoundKnownOpt;
 use mrsub::algorithms::MrAlgorithm;
+use mrsub::coordinator::run_experiment;
 use mrsub::core::Error;
 use mrsub::mapreduce::backend::BackendKind;
 use mrsub::mapreduce::process::{PoolOptions, ProcessPool, RecoveryPolicy};
 use mrsub::mapreduce::transport::Transport;
-use mrsub::mapreduce::wire::RoundTask;
+use mrsub::mapreduce::wire::{ClientRequest, ClientResponse, RoundTask, DEFAULT_MAX_FRAME};
 use mrsub::mapreduce::ClusterConfig;
 use mrsub::oracle::spec::OracleSpec;
+use mrsub::serve::{request as serve_request, Daemon, ServeOptions};
 use mrsub::workload::adversarial::AdversarialGen;
 use mrsub::workload::corpus::ZipfCorpusGen;
 use mrsub::workload::coverage::CoverageGen;
@@ -856,6 +858,195 @@ fn kill_during_arena_adoption_recovers_bit_identical() {
         assert_eq!(sa.mapped_bytes, 0);
         assert_eq!(sa.reshipped_bytes, sw.reshipped_bytes, "fallback adoption matches @uds");
     }
+}
+
+// --- serving daemon (mrsub serve) -------------------------------------------
+
+/// A serving daemon over the given backend, inheriting the conformance
+/// worker executable and generous timeouts. Port 0 picks a free port.
+fn serve_daemon(
+    backend: BackendKind,
+    recovery: RecoveryPolicy,
+    env: Vec<(String, String)>,
+) -> Daemon {
+    let mut c = cfg(0, backend);
+    c.recovery = recovery;
+    c.worker_env = env;
+    Daemon::start(ServeOptions { bind: "127.0.0.1:0".into(), cfg: c }).expect("daemon must bind")
+}
+
+/// The shared serving dataset family (parameterized by generator seed).
+fn serve_spec(seed: u64) -> OracleSpec {
+    OracleSpec::Coverage { n: 240, universe: 120, avg_degree: 4, weighted: false, seed }
+}
+
+/// Submit one job over the client wire path and unwrap its result.
+fn serve_submit(
+    addr: &str,
+    algorithm: &str,
+    k: usize,
+    seed: u64,
+    spec: &OracleSpec,
+) -> (Vec<u32>, f64) {
+    let req = ClientRequest::SubmitJob {
+        algorithm: algorithm.to_string(),
+        k,
+        seed,
+        machines: 0,
+        spec: spec.clone(),
+    };
+    match serve_request(addr, &req, DEFAULT_MAX_FRAME).expect("client request") {
+        ClientResponse::JobResult { selection, value, .. } => (selection, value),
+        other => panic!("expected JobResult, got {other:?}"),
+    }
+}
+
+/// Submit every job concurrently — one client connection per job, each
+/// served by its own daemon thread — and collect results in submission
+/// order.
+fn serve_submit_all(
+    addr: &str,
+    k: usize,
+    jobs: &[(&'static str, u64, OracleSpec)],
+) -> Vec<(Vec<u32>, f64)> {
+    let handles: Vec<_> = jobs
+        .iter()
+        .cloned()
+        .map(|(alg, seed, spec)| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || serve_submit(&addr, alg, k, seed, &spec))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("submit thread")).collect()
+}
+
+/// The standalone reference for a served job: the same experiment path on
+/// the `Serial` backend (what `run_job` would do with no pool at all).
+fn standalone_serial(
+    alg: &dyn MrAlgorithm,
+    k: usize,
+    seed: u64,
+    spec: &OracleSpec,
+) -> (Vec<u32>, f64) {
+    let inst = Instance::new("standalone", spec.build().unwrap()).with_spec(spec.clone());
+    let mut c = cfg(seed, BackendKind::Serial);
+    c.oracle_spec = Some(spec.clone());
+    let rec = run_experiment(&inst, alg, k, &c).expect("standalone reference run");
+    (rec.selection.clone(), rec.value)
+}
+
+/// Stop a daemon the way `mrsub submit --shutdown` does, and make sure the
+/// drain actually returns (a hung `wait` would wedge the test).
+fn shut_down(daemon: Daemon, addr: &str) {
+    let resp = serve_request(addr, &ClientRequest::Shutdown, DEFAULT_MAX_FRAME).unwrap();
+    assert!(matches!(resp, ClientResponse::ShuttingDown), "shutdown must be acked");
+    daemon.wait();
+}
+
+/// The serving tentpole contract: two jobs submitted **concurrently** to
+/// one daemon — different algorithms, different datasets, different seeds
+/// — come back bit-identical to the same runs standalone on `Serial`,
+/// while the warm pool spawns its workers exactly once and shares them
+/// across both jobs (rounds interleave at pool-mutex granularity).
+#[test]
+fn served_concurrent_jobs_are_bit_identical_to_standalone_serial() {
+    let k = 6;
+    let daemon = serve_daemon(process(2, Transport::Uds), RecoveryPolicy::Fail, Vec::new());
+    let addr = daemon.addr().to_string();
+    let jobs: Vec<(&'static str, u64, OracleSpec)> =
+        vec![("combined:0.15", 41, serve_spec(11)), ("randgreedi", 42, serve_spec(12))];
+    let served = serve_submit_all(&addr, k, &jobs);
+
+    let references = [
+        standalone_serial(&CombinedTwoRound::new(0.15), k, 41, &serve_spec(11)),
+        standalone_serial(&RandGreeDi, k, 42, &serve_spec(12)),
+    ];
+    for (i, ((sel, val), (rsel, rval))) in served.iter().zip(&references).enumerate() {
+        assert_eq!(sel, rsel, "job {i}: served selection diverged from standalone");
+        assert_eq!(val.to_bits(), rval.to_bits(), "job {i}: served value diverged");
+    }
+    let stats = daemon.stats();
+    assert_eq!(stats.jobs_completed, 2);
+    assert_eq!(stats.workers_spawned, 2, "one warm pool, spawned once, shared by both jobs");
+    assert_eq!(stats.workers_alive, 2);
+    shut_down(daemon, &addr);
+}
+
+/// A worker killed mid-job under `--recovery requeue:R` is absorbed by
+/// the serving pool **without disturbing the other in-flight job**: both
+/// jobs still answer bit-identically to standalone `Serial`, and the pool
+/// keeps running on the survivors — workers are never re-spawned, the
+/// orphaned machines are re-queued (job-keyed) onto the survivors.
+#[test]
+fn served_job_survives_worker_kill_without_disturbing_the_other() {
+    let k = 6;
+    // worker 1 dies on the first typed round it processes — whichever of
+    // the two concurrent jobs lands it; recovery must absorb either case,
+    // and the *other* job must cross the same dead worker unharmed.
+    let daemon = serve_daemon(
+        process(3, Transport::Uds),
+        RecoveryPolicy::Requeue { budget: 2 },
+        vec![("MRSUB_FAULT".to_string(), "die-mid-round@1".to_string())],
+    );
+    let addr = daemon.addr().to_string();
+    let jobs: Vec<(&'static str, u64, OracleSpec)> =
+        vec![("randgreedi", 21, serve_spec(31)), ("randgreedi", 22, serve_spec(32))];
+    let served = serve_submit_all(&addr, k, &jobs);
+
+    let references = [
+        standalone_serial(&RandGreeDi, k, 21, &serve_spec(31)),
+        standalone_serial(&RandGreeDi, k, 22, &serve_spec(32)),
+    ];
+    for (i, ((sel, val), (rsel, rval))) in served.iter().zip(&references).enumerate() {
+        assert_eq!(sel, rsel, "job {i}: selections must survive the kill bit for bit");
+        assert_eq!(val.to_bits(), rval.to_bits(), "job {i}: value diverged after recovery");
+    }
+    let stats = daemon.stats();
+    assert_eq!(stats.jobs_completed, 2);
+    assert_eq!(stats.workers_spawned, 3, "recovery re-queues machines, never re-spawns workers");
+    assert_eq!(stats.workers_alive, 2, "exactly the faulted worker is gone");
+    shut_down(daemon, &addr);
+}
+
+/// Warm-pool arena caching: the pool's spawn dataset is the first job's
+/// deterministic partition, so resubmitting the **same** `(spec, k, seed,
+/// machines)` re-derives a byte-identical dataset and attaches with every
+/// shard payload resolved from the zero-copy arena — no re-spawned
+/// workers, no re-shipped shards. Off Linux the arena build falls back to
+/// the wire path: the attach meters flip to misses, but the results and
+/// the no-respawn contract are unchanged.
+#[test]
+fn same_spec_resubmission_is_an_arena_cache_hit() {
+    let k = 6;
+    let seed = 33;
+    let spec = serve_spec(5);
+    let daemon = serve_daemon(process(2, Transport::UdsArena), RecoveryPolicy::Fail, Vec::new());
+    let addr = daemon.addr().to_string();
+
+    let first = serve_submit(&addr, "randgreedi", k, seed, &spec);
+    let s1 = daemon.stats();
+    assert_eq!(s1.workers_spawned, 2);
+    assert_eq!(s1.arena_hits + s1.arena_misses, 1, "one job, one attach");
+
+    let second = serve_submit(&addr, "randgreedi", k, seed, &spec);
+    let s2 = daemon.stats();
+    assert_eq!(second.0, first.0, "identical submissions must reproduce the selection");
+    assert_eq!(second.1.to_bits(), first.1.to_bits());
+    assert_eq!(s2.arena_hits + s2.arena_misses, 2, "two jobs, two attaches");
+    assert_eq!(s2.workers_spawned, s1.workers_spawned, "the warm pool must not re-spawn");
+    assert_eq!(s2.workers_alive, 2);
+    if s1.arena_hits == 1 {
+        // the arena engaged: the first job's dataset IS the spawn dataset,
+        // and the resubmission re-derives it byte for byte.
+        assert_eq!(s2.arena_hits, 2, "same-spec resubmission must attach arena-elided");
+    } else {
+        assert_eq!((s1.arena_misses, s2.arena_misses), (1, 2), "fallback attaches ship shards");
+    }
+
+    let reference = standalone_serial(&RandGreeDi, k, seed, &spec);
+    assert_eq!(first.0, reference.0, "served result must match standalone Serial");
+    assert_eq!(first.1.to_bits(), reference.1.to_bits());
+    shut_down(daemon, &addr);
 }
 
 /// The flip side of the frame-cap matrix: the cap guards *shipped* bytes,

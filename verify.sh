@@ -14,8 +14,16 @@
 #   ./verify.sh bench-diff   run a bench matching the committed
 #                            BENCH_baseline.json axes and gate batched
 #                            throughput + per-round IPC bytes against it
-#                            (>15% regression fails unless the baseline is
+#                            (>15% regression fails — the committed
+#                            baseline is armed, i.e. not marked
 #                            provisional; diff lands in BENCH_diff.json)
+#   ./verify.sh serve-smoke  end-to-end `mrsub serve` exercise: start a
+#                            daemon on a warm process pool, submit two
+#                            concurrent jobs plus a resubmission, compare
+#                            selections/values against a standalone-path
+#                            daemon (bit-identity at the CLI level), then
+#                            drain via `mrsub submit --shutdown` and fail
+#                            on leaked worker processes
 #   ./verify.sh lint         `mrsub check-invariants` over the repo tree:
 #                            wire-drift fingerprint vs WIRE_VERSION,
 #                            determinism hazards, unsafe hygiene + budgets,
@@ -153,8 +161,83 @@ case "$mode" in
             --baseline BENCH_baseline.json --current BENCH_current.json \
             --tolerance 0.15 --output BENCH_diff.json
         ;;
+    serve-smoke)
+        check_ignores
+        cargo build --release
+        echo "verify: serve smoke (daemon vs standalone bit-identity, clean shutdown)"
+        mrsub=./target/release/mrsub
+        tmp=$(mktemp -d)
+        # Two daemons on ephemeral ports: one with the warm shared-nothing
+        # pool under test, one on the in-process standalone path as the
+        # one-shot reference (its jobs run plain run_experiment, no pool).
+        "$mrsub" serve --bind 127.0.0.1:0 --backend process:2@uds >"$tmp/warm.log" 2>&1 &
+        warm_pid=$!
+        "$mrsub" serve --bind 127.0.0.1:0 --backend serial >"$tmp/solo.log" 2>&1 &
+        solo_pid=$!
+        trap 'kill "$warm_pid" "$solo_pid" 2>/dev/null || true; rm -rf "$tmp"' EXIT
+
+        wait_addr() { # $1: daemon log; prints the scraped bind address
+            local addr="" i
+            for i in $(seq 1 100); do
+                addr=$(sed -n 's/^mrsub serve: listening on //p' "$1" | head -n1)
+                if [ -n "$addr" ]; then echo "$addr"; return 0; fi
+                sleep 0.1
+            done
+            echo "verify: FAIL — daemon never bound ($1):" >&2
+            cat "$1" >&2
+            return 1
+        }
+        warm=$(wait_addr "$tmp/warm.log")
+        solo=$(wait_addr "$tmp/solo.log")
+
+        # two concurrent jobs share the warm pool (spawned on the first)...
+        "$mrsub" submit --connect "$warm" --family coverage --n 2000 --k 12 --seed 7 \
+            --algorithm combined:0.1 --output "$tmp/warm1.json" &
+        j1=$!
+        "$mrsub" submit --connect "$warm" --family modular --n 1024 --k 8 --seed 9 \
+            --algorithm randgreedi --output "$tmp/warm2.json" &
+        j2=$!
+        wait "$j1"
+        wait "$j2"
+        # ...and a resubmission attaches to the already-warm workers.
+        "$mrsub" submit --connect "$warm" --family coverage --n 2000 --k 12 --seed 7 \
+            --algorithm combined:0.1 --output "$tmp/warm1_again.json"
+        # one-shot equivalents on the standalone-path daemon.
+        "$mrsub" submit --connect "$solo" --family coverage --n 2000 --k 12 --seed 7 \
+            --algorithm combined:0.1 --output "$tmp/solo1.json"
+        "$mrsub" submit --connect "$solo" --family modular --n 1024 --k 8 --seed 9 \
+            --algorithm randgreedi --output "$tmp/solo2.json"
+
+        python3 - "$tmp" <<'PYEOF'
+import json, sys
+tmp = sys.argv[1]
+def result(name):
+    with open(f"{tmp}/{name}.json") as f:
+        rec = json.load(f)
+    return rec["selection"], rec["value"]
+for served, reference in [("warm1", "solo1"), ("warm2", "solo2"), ("warm1_again", "warm1")]:
+    s, r = result(served), result(reference)
+    assert s == r, f"{served} diverged from {reference}: {s} vs {r}"
+print("serve smoke: selections and values bit-identical")
+PYEOF
+
+        "$mrsub" submit --connect "$warm" --shutdown
+        "$mrsub" submit --connect "$solo" --shutdown
+        wait "$warm_pid"
+        wait "$solo_pid"
+        # the daemons are gone; the warm pool's workers must be too.
+        for i in $(seq 1 50); do
+            pgrep -f "release/mrsub worker" >/dev/null 2>&1 || break
+            sleep 0.1
+        done
+        if pgrep -f "release/mrsub worker" >/dev/null 2>&1; then
+            echo "verify: FAIL — leaked worker processes after daemon shutdown:" >&2
+            pgrep -af "release/mrsub worker" >&2 || true
+            exit 1
+        fi
+        ;;
     *)
-        echo "usage: ./verify.sh [fast|conformance|ci|bench-diff|lint|miri|asan|tsan]" >&2
+        echo "usage: ./verify.sh [fast|conformance|ci|bench-diff|serve-smoke|lint|miri|asan|tsan]" >&2
         exit 2
         ;;
 esac
