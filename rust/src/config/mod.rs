@@ -41,6 +41,10 @@
 //!                          # fail | requeue[:R] — requeue re-places a dead
 //!                          # worker's machines on survivors, tolerating R
 //!                          # worker deaths per run (default 1)
+//! elastic = false          # process backend under requeue: allow the pool
+//!                          # to grow past process:N (late joins / serve
+//!                          # load); dead-slot replacement is always on
+
 //! max_frame_mb = 64        # process backend: wire frame payload cap
 //! enforce_memory = false
 //! machines = 0             # 0 = paper default ceil(sqrt(n/k))
@@ -186,6 +190,7 @@ impl RunConfig {
                     ))
                 })?;
             }
+            cluster.elastic = opt_bool(t, "elastic", false);
             if let Some(v) = t.get("max_frame_mb") {
                 let mb = v.as_usize().ok_or_else(|| {
                     Error::Config("[cluster]: invalid integer \"max_frame_mb\"".into())
@@ -662,6 +667,9 @@ mod tests {
         assert_eq!(cfg.cluster.recovery, RecoveryPolicy::Requeue { budget: 1 });
         let cfg = RunConfig::parse(&text("recovery = \"requeue:4\"")).unwrap();
         assert_eq!(cfg.cluster.recovery, RecoveryPolicy::Requeue { budget: 4 });
+        assert!(!cfg.cluster.elastic, "elastic growth is opt-in");
+        let cfg = RunConfig::parse(&text("recovery = \"requeue\"\nelastic = true")).unwrap();
+        assert!(cfg.cluster.elastic);
         // bad policies are config errors, not silent defaults.
         assert!(RunConfig::parse(&text("recovery = \"requeue:0\"")).is_err());
         assert!(RunConfig::parse(&text("recovery = \"retry\"")).is_err());

@@ -64,6 +64,13 @@ pub struct ExperimentRecord {
     pub recoveries: u64,
     /// Frame bytes reshipped to surviving workers for machine adoption.
     pub reshipped_bytes: u64,
+    /// Replacement workers spawned into dead slots (or back-filled by
+    /// late joins) — together with `recoveries`, the closed elastic
+    /// loop: the pool returns to full size after every absorbed death.
+    pub respawns: u64,
+    /// Machines moved between workers by the deterministic rebalance
+    /// planner at round boundaries (elastic process backend).
+    pub rebalanced_machines: u64,
     /// Shard/sample payload bytes workers resolved from the mmap'd arena
     /// instead of wire frames (`@uds+arena` runs; 0 on every wire path).
     pub mapped_bytes: u64,
@@ -107,6 +114,8 @@ impl ExperimentRecord {
             ("ipc_bytes_in", Json::Num(self.ipc_bytes_in as f64)),
             ("recoveries", Json::Num(self.recoveries as f64)),
             ("reshipped_bytes", Json::Num(self.reshipped_bytes as f64)),
+            ("respawns", Json::Num(self.respawns as f64)),
+            ("rebalanced_machines", Json::Num(self.rebalanced_machines as f64)),
             ("mapped_bytes", Json::Num(self.mapped_bytes as f64)),
             ("wall_ms", Json::Num(self.wall_ms)),
             (
@@ -154,6 +163,8 @@ pub fn run_experiment(
     let (ipc_bytes_out, ipc_bytes_in) = result.metrics.total_ipc_bytes();
     let recoveries = result.metrics.total_recoveries();
     let reshipped_bytes = result.metrics.total_reshipped_bytes();
+    let respawns = result.metrics.total_respawns();
+    let rebalanced_machines = result.metrics.total_rebalanced_machines();
     let mapped_bytes = result.metrics.total_mapped_bytes();
 
     Ok(ExperimentRecord {
@@ -176,6 +187,8 @@ pub fn run_experiment(
         ipc_bytes_in,
         recoveries,
         reshipped_bytes,
+        respawns,
+        rebalanced_machines,
         mapped_bytes,
         wall_ms,
         selection: result.solution.elements.clone(),

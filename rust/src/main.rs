@@ -148,7 +148,10 @@ const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff
   demo          [--k 20] [--n 20000] [--seed 7]
                 [--backend serial|rayon|process:N[@pipe|@uds|@uds+arena|@tcp[:addr]]]
                 [--chunk 0 (auto)] [--worker-timeout-ms 30000] [--connect-timeout-ms 30000]
-                [--recovery fail|requeue[:R]] [--max-frame-mb 64]
+                [--recovery fail|requeue[:R]] [--max-frame-mb 64] [--elastic]
+                (--elastic lets a requeue-recovery pool grow past process:N
+                via late joins; dead-slot replacement is always on under
+                requeue)
                 (@uds+arena maps shards zero-copy via an fd-passed memfd;
                 falls back to the plain uds wire path off Linux or on
                 arena-build failure)
@@ -176,13 +179,15 @@ const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff
   serve         [--bind 127.0.0.1:7171]
                 [--backend serial|rayon|process:N[@pipe|@uds|@uds+arena|@tcp[:addr]]]
                 [--worker-timeout-ms 30000] [--connect-timeout-ms 30000]
-                [--recovery fail|requeue[:R]] [--max-frame-mb 64]
+                [--recovery fail|requeue[:R]] [--max-frame-mb 64] [--elastic]
                 long-running daemon: accepts SubmitJob frames and runs each
                 through the standard experiment path. On a process backend
                 ONE warm worker pool is spawned on the first job and shared
                 by every later job (job-keyed attach, no per-job re-spawn);
-                results stay bit-identical to standalone runs. Stop it with
-                `mrsub submit --shutdown`
+                under requeue a dead worker is replaced at the next round
+                boundary, and --elastic additionally grows the pool with
+                job load; results stay bit-identical to standalone runs.
+                Stop it with `mrsub submit --shutdown`
   submit        [--connect 127.0.0.1:7171] [--family coverage|modular|concave]
                 [--n 4096] [--k 32] [--seed 7] [--machines 0 (auto)]
                 [--algorithm combined[:eps]|randgreedi|greedy]
@@ -235,16 +240,20 @@ fn dispatch(argv: &[String]) -> Result<()> {
             argv[1..].iter().filter(|a| *a != "--shutdown").cloned().collect();
         return cmd_submit(&Args::parse(&rest)?, shutdown);
     }
-    let args = Args::parse(&argv[1..])?;
+    // demo and serve take one bare flag (`--elastic`); strip it likewise.
+    let elastic = matches!(cmd.as_str(), "demo" | "serve")
+        && argv[1..].iter().any(|a| a == "--elastic");
+    let rest: Vec<String> = argv[1..].iter().filter(|a| *a != "--elastic").cloned().collect();
+    let args = Args::parse(&rest)?;
     match cmd.as_str() {
         "run" => cmd_run(args.get_str("config").ok_or_else(|| cli_err("run needs --config"))?),
-        "demo" => cmd_demo(&args),
+        "demo" => cmd_demo(&args, elastic),
         "sweep-t" => cmd_sweep_t(args.get("t_max", 6)?, args.get("k", 20)?, args.get("seed", 7)?),
         "adversarial" => cmd_adversarial(args.get("t_max", 5)?, args.get("k", 60)?),
         "bench" => cmd_bench(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "engine-check" => cmd_engine_check(args.get_str("artifacts")),
-        "serve" => cmd_serve(&args),
+        "serve" => cmd_serve(&args, elastic),
         other => {
             eprintln!("{USAGE}");
             Err(cli_err(format!("unknown subcommand {other:?}")))
@@ -267,14 +276,14 @@ fn cmd_run(path: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_demo(args: &Args) -> Result<()> {
+fn cmd_demo(args: &Args, elastic: bool) -> Result<()> {
     let k: usize = args.get("k", 20)?;
     let n: usize = args.get("n", 20_000)?;
     let seed: u64 = args.get("seed", 7)?;
     let backend = backend_flag(args)?;
     let inst = PlantedCoverageGen::dense(k, n / 2, n).generate(seed);
     let opt = inst.known_opt.unwrap();
-    let mut cfg = ClusterConfig { seed, backend, ..ClusterConfig::default() };
+    let mut cfg = ClusterConfig { seed, backend, elastic, ..ClusterConfig::default() };
     apply_cluster_flags(args, &mut cfg)?;
     let algs: Vec<Box<dyn MrAlgorithm>> = vec![
         Box::new(GreedyAlg),
@@ -654,12 +663,13 @@ fn cmd_engine_check(_artifacts: Option<&str>) -> Result<()> {
     ))
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+fn cmd_serve(args: &Args, elastic: bool) -> Result<()> {
     let bind = args.get_str("bind").unwrap_or("127.0.0.1:7171").to_string();
     let mut cfg = ClusterConfig::default();
     if let Some(backend) = backend_flag(args)? {
         cfg.backend = Some(backend);
     }
+    cfg.elastic = elastic;
     apply_cluster_flags(args, &mut cfg)?;
     let daemon = Daemon::start(ServeOptions { bind, cfg })?;
     let addr = daemon.addr();

@@ -75,6 +75,11 @@ pub struct ClusterConfig {
     /// (default), or re-queue a dead worker's machines onto survivors
     /// within a bounded retry budget (`--recovery requeue:R`).
     pub recovery: RecoveryPolicy,
+    /// Elastic pool growth for the process backend (`--elastic`): allow
+    /// late worker joins with fresh ids (and serve-side `grow_to`) to
+    /// grow the pool past `process:N`. Dead-slot replacement/back-fill
+    /// under `requeue` is always on and not gated by this flag.
+    pub elastic: bool,
     /// Hard cap on a single wire frame's payload (process backend).
     pub max_frame_bytes: usize,
     /// Worker executable override; `None` re-executes the current binary.
@@ -105,6 +110,7 @@ impl Default for ClusterConfig {
             worker_timeout_ms: 30_000,
             connect_timeout_ms: None,
             recovery: RecoveryPolicy::Fail,
+            elastic: false,
             max_frame_bytes: wire::DEFAULT_MAX_FRAME,
             worker_exe: None,
             worker_env: Vec::new(),
@@ -293,7 +299,7 @@ impl MrCluster {
             sample_size,
             (0, 0, 0),
             (0, 0, 0),
-            (0, 0),
+            (0, 0, 0, 0),
             std::time::Duration::ZERO,
         )?;
         Ok(cluster)
@@ -381,7 +387,7 @@ impl MrCluster {
             total_sent,
             calls,
             (0, 0, 0),
-            (0, 0),
+            (0, 0, 0, 0),
             start.elapsed(),
         )?;
         Ok(outputs)
@@ -444,7 +450,7 @@ impl MrCluster {
         let start = Instant::now();
         let calls0 = self.calls_snapshot();
         let mut ipc = (0u64, 0u64, 0u64);
-        let mut recovery = (0u64, 0u64);
+        let mut recovery = (0u64, 0u64, 0u64, 0u64);
         let mut remote_calls = (0u64, 0u64, 0u64);
         let replies = if let Some(lease) = self.cfg.shared_pool.clone() {
             // warm serving pool (`mrsub serve`): attach on first round,
@@ -465,7 +471,8 @@ impl MrCluster {
             let attach_mapped = pool.total_mapped_bytes() - map_before;
             let (replies, stats) = pool.round_job(lease.job, task, on_reply)?;
             ipc = (stats.bytes_out, stats.bytes_in, attach_mapped + stats.mapped_bytes);
-            recovery = (stats.recoveries, stats.reshipped_bytes);
+            recovery =
+                (stats.recoveries, stats.reshipped_bytes, stats.respawns, stats.rebalanced_machines);
             match &self.call_counter {
                 Some(c) => c.add(stats.calls.0, stats.calls.1, stats.calls.2),
                 None => remote_calls = stats.calls,
@@ -481,7 +488,8 @@ impl MrCluster {
             let spawn_mapped = if fresh_pool { pool.total_mapped_bytes() } else { 0 };
             let (replies, stats) = pool.round_with(task, on_reply)?;
             ipc = (stats.bytes_out, stats.bytes_in, spawn_mapped + stats.mapped_bytes);
-            recovery = (stats.recoveries, stats.reshipped_bytes);
+            recovery =
+                (stats.recoveries, stats.reshipped_bytes, stats.respawns, stats.rebalanced_machines);
             // merge worker-side oracle traffic so MrMetrics stays coherent:
             // through the shared counter when one is wired (the snapshot
             // delta below then picks it up), directly into the round stat
@@ -554,6 +562,7 @@ impl MrCluster {
             exe: self.cfg.worker_exe.clone(),
             env: self.cfg.worker_env.clone(),
             recovery: self.cfg.recovery,
+            elastic: self.cfg.elastic,
         };
         self.pool = Some(ProcessPool::spawn(&spec, &self.shards, &self.sample, &opts)?);
         Ok(())
@@ -570,7 +579,7 @@ impl MrCluster {
         let calls0 = self.calls_snapshot();
         let out = f();
         let calls = delta(calls0, self.calls_snapshot());
-        self.record_round(name, 0, 0, 0, received, calls, (0, 0, 0), (0, 0), start.elapsed())?;
+        self.record_round(name, 0, 0, 0, received, calls, (0, 0, 0), (0, 0, 0, 0), start.elapsed())?;
         Ok(out)
     }
 
@@ -603,7 +612,7 @@ impl MrCluster {
             central_recv,
             calls,
             (0, 0, 0),
-            (0, 0),
+            (0, 0, 0, 0),
             start.elapsed(),
         )?;
         Ok(out)
@@ -632,7 +641,7 @@ impl MrCluster {
         central_recv: usize,
         calls: (u64, u64, u64),
         ipc: (u64, u64, u64),
-        recovery: (u64, u64),
+        recovery: (u64, u64, u64, u64),
         wall: std::time::Duration,
     ) -> Result<()> {
         let (oracle_calls, batched_calls, oracle_batches) = calls;
@@ -649,6 +658,8 @@ impl MrCluster {
             ipc_bytes_in: ipc.1,
             recoveries: recovery.0,
             reshipped_bytes: recovery.1,
+            respawns: recovery.2,
+            rebalanced_machines: recovery.3,
             mapped_bytes: ipc.2,
             wall,
         });

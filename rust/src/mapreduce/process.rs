@@ -73,16 +73,36 @@
 //! * [`RecoveryPolicy::Fail`] (default): the round surfaces a structured
 //!   [`Error::Worker`] and the algorithm's `run` returns `Err`.
 //! * [`RecoveryPolicy::Requeue`]: the dead worker's simulated machines
-//!   are **re-queued onto surviving workers** — the pool ships each
-//!   adopter a [`RoundTask::AdoptMachines`] carrying the orphaned
-//!   machines' spawn-time shards, the store-mutating task history to
-//!   replay (rebuilding pruned bases and persistent guess shards
-//!   deterministically), and the in-flight round task to re-run for just
-//!   those machines. The round then completes as if nothing happened,
-//!   with selections bit-identical to `Serial` (asserted per transport by
-//!   the conformance suite). A bounded budget of worker deaths is
-//!   tolerated per pool lifetime; exhausting it — or losing the last
-//!   worker — still fails with a structured [`Error::Worker`].
+//!   are **re-queued** — the pool first spawns a *replacement worker*
+//!   into the dead slot (same `Init` handshake, fault env stripped,
+//!   arena fd re-passed) so the orphans land on a fresh empty process
+//!   instead of piling onto busy survivors; if the respawn fails (or is
+//!   disabled via [`ProcessPool::set_respawn`]), survivors adopt
+//!   instead. Either way the adopter gets a [`RoundTask::AdoptMachines`]
+//!   carrying the orphaned machines' spawn-time shards, the
+//!   store-mutating task history to replay (rebuilding pruned bases and
+//!   persistent guess shards deterministically), and the in-flight round
+//!   task to re-run for just those machines. The round then completes as
+//!   if nothing happened, with selections bit-identical to `Serial`
+//!   (asserted per transport by the conformance suite and the seeded
+//!   chaos harness in `tests/elastic_chaos.rs`). A bounded budget of
+//!   worker deaths is tolerated per pool lifetime; exhausting it — or
+//!   losing the last worker with respawn unavailable — still fails with
+//!   a structured [`Error::Worker`].
+//!
+//! On the external topology (explicit TCP bind, hand-launched workers)
+//! the pool cannot spawn replacements; instead the listener stays open
+//! and late `mrsub worker --connect` joins **back-fill dead slots** at
+//! the next round boundary (never mid-round — a join during an in-flight
+//! adoption replay is parked until the round closes, so it is never
+//! handed a partial store). Under `--elastic`, joins with fresh ids (and,
+//! on spawned topologies, [`ProcessPool::grow_to`]) grow the pool past
+//! its spawn size. Whenever membership changes, the deterministic
+//! [`plan_rebalance`] planner levels machine placement at the round
+//! boundary by shipping [`ToWorker::Rebalance`] moves — placement is
+//! invisible to results because RNG streams and store replay key on
+//! *global* machine ids, which is the paper-level fact (partition
+//! obliviousness) the whole elastic loop rests on.
 //!
 //! Each worker gets a dedicated reader thread *and* writer thread, so the
 //! coordinator itself never blocks on a stream — a worker that stops
@@ -175,6 +195,81 @@ impl RecoveryPolicy {
     }
 }
 
+/// One planned machine move: global machine id `machine` leaves worker
+/// slot `from` for worker slot `to`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MachineMove {
+    /// Donor worker slot.
+    pub from: usize,
+    /// Receiving worker slot.
+    pub to: usize,
+    /// Global machine id being moved.
+    pub machine: usize,
+}
+
+/// The deterministic rebalance planner: given each live worker's hosted
+/// machine ids, produce the move list that levels the load to a
+/// `⌈M/W⌉`/`⌊M/W⌋` split. Pure — same loads, same moves — and keyed
+/// entirely on global machine ids, so executing a plan cannot perturb
+/// RNG streams or store replay (machine placement is invisible to
+/// results). Invariants, pinned by property tests:
+///
+/// * no machine appears in two moves of one plan;
+/// * a worker hosting machines is never drained below one machine;
+/// * the plan converges: re-planning the post-move loads is a no-op —
+///   in particular, a fresh round-robin pool and any least-loaded
+///   adoption layout (both max−min ≤ 1) plan zero moves.
+///
+/// Donors shed their highest machine ids first; receivers fill in the
+/// order their slots appear in `loads`. The `⌈M/W⌉` targets go to the
+/// currently most-loaded workers (ties to the lower slot), which is what
+/// makes any already-level layout a fixed point.
+pub fn plan_rebalance(loads: &[(usize, Vec<usize>)]) -> Vec<MachineMove> {
+    let w = loads.len();
+    let m: usize = loads.iter().map(|(_, ms)| ms.len()).sum();
+    if w == 0 || m == 0 {
+        return Vec::new();
+    }
+    let (q, r) = (m / w, m % w);
+    // rank by load descending (ties to the lower slot): the first `r`
+    // ranked workers carry the ⌈M/W⌉ target. A worker with machines
+    // always outranks an empty one, so every nonempty worker's target is
+    // ≥ 1 whenever q = 0 — the "never drained below one" floor below is
+    // defensive, not load-bearing.
+    let mut rank: Vec<usize> = (0..w).collect();
+    rank.sort_by_key(|&i| (std::cmp::Reverse(loads[i].1.len()), loads[i].0));
+    let mut target = vec![q; w];
+    for &i in rank.iter().take(r) {
+        target[i] += 1;
+    }
+    let mut shed: Vec<(usize, usize)> = Vec::new(); // (donor slot, machine)
+    let mut deficits: Vec<(usize, usize)> = Vec::new(); // (receiver slot, count)
+    for (i, (slot, machines)) in loads.iter().enumerate() {
+        let keep = target[i].max(1).min(machines.len());
+        if machines.len() > keep {
+            let mut sorted = machines.clone();
+            sorted.sort_unstable();
+            shed.extend(sorted[keep..].iter().map(|&machine| (*slot, machine)));
+        } else if machines.len() < target[i] {
+            deficits.push((*slot, target[i] - machines.len()));
+        }
+    }
+    let mut moves = Vec::new();
+    let mut next = shed.into_iter();
+    for (to, need) in deficits {
+        for _ in 0..need {
+            // sheds can undershoot deficits only if the ≥ 1 floor bound a
+            // donor (impossible per the ranking argument above, but the
+            // planner degrades to a partial level-up rather than panic).
+            let Some((from, machine)) = next.next() else {
+                return moves;
+            };
+            moves.push(MachineMove { from, to, machine });
+        }
+    }
+    moves
+}
+
 /// Pool construction knobs (derived from `ClusterConfig` by the cluster).
 #[derive(Debug, Clone)]
 pub struct PoolOptions {
@@ -200,6 +295,12 @@ pub struct PoolOptions {
     /// Worker-death handling: fail fast, or re-queue machines onto
     /// surviving workers within a bounded retry budget.
     pub recovery: RecoveryPolicy,
+    /// Allow the pool to grow past its spawn size: external joins with
+    /// fresh ids get new slots, and the serve daemon may
+    /// [`ProcessPool::grow_to`] the pool as concurrent jobs pile up.
+    /// Replacing *dead* slots is not gated on this — respawn and
+    /// back-fill restore the spawned size regardless.
+    pub elastic: bool,
 }
 
 impl Default for PoolOptions {
@@ -213,6 +314,7 @@ impl Default for PoolOptions {
             exe: None,
             env: Vec::new(),
             recovery: RecoveryPolicy::Fail,
+            elastic: false,
         }
     }
 }
@@ -236,6 +338,12 @@ pub struct RoundIpcStats {
     /// always `0` on the wire path. *Not* a subset of `bytes_out` — these
     /// bytes never crossed the stream.
     pub mapped_bytes: u64,
+    /// Replacement workers activated this round: in-round respawns after
+    /// a death, late-join back-fills, and elastic growth.
+    pub respawns: u64,
+    /// Machines moved between live workers by the rebalance planner at
+    /// this round's boundary.
+    pub rebalanced_machines: u64,
 }
 
 /// Frames from a reader thread: `(payload, frame_bytes)` or a wire error.
@@ -311,6 +419,50 @@ pub struct ProcessPool {
     arena_hits: u64,
     /// Warm-pool attaches that had to ship shards over the wire.
     arena_misses: u64,
+    /// Spawn-time oracle spec, retained so a replacement worker can be
+    /// re-`Init`ed with the exact handshake its predecessor got.
+    spec: OracleSpec,
+    /// Spawn-time transport (respawns bind a fresh ephemeral listener of
+    /// the same kind for their handshake).
+    transport: Transport,
+    /// Connection-establishment bound for replacement handshakes.
+    connect_timeout: Duration,
+    /// Worker executable for replacement spawns (`None` = current exe).
+    exe: Option<PathBuf>,
+    /// Spawn-time extra worker environment. Replacements inherit it with
+    /// `MRSUB_FAULT` stripped — a replacement must not re-fire the
+    /// injected fault that killed its predecessor.
+    env: Vec<(String, String)>,
+    /// Explicit-TCP-bind topology: workers are hand-launched, so dead
+    /// slots are back-filled by late joins instead of respawns.
+    external: bool,
+    /// Whether the pool may grow past its spawn size (late joins with
+    /// fresh ids, [`ProcessPool::grow_to`]).
+    elastic: bool,
+    /// Replacement spawning on/off ([`ProcessPool::set_respawn`] — test
+    /// hook; on by default).
+    respawn_enabled: bool,
+    /// Lifetime replacement-worker activations (respawns, back-fills,
+    /// growth); per-round deltas land in stats.
+    respawns: u64,
+    /// Lifetime machines moved by the rebalance planner.
+    rebalanced_machines: u64,
+    /// The spawn listener, retained on the external topology so late
+    /// `mrsub worker --connect` joins can back-fill dead slots at round
+    /// boundaries; `None` on spawned topologies (unlinked after spawn).
+    listener: Option<Listener>,
+    /// Handshaken late joins with nowhere to go yet (their `--id` names
+    /// a live slot and the pool is not elastic); re-examined at every
+    /// round boundary.
+    parked: Vec<(u32, Pending)>,
+    /// Legacy-assignment machines displaced by a cross-context respawn
+    /// (their worker died during a *job* round, then was replaced, so the
+    /// replacement does not host them); re-adopted — budget-free, the
+    /// death was already charged — at the next legacy round's start.
+    displaced_legacy: Vec<usize>,
+    /// Per-job machines displaced by a cross-context respawn; re-adopted
+    /// at that job's next round start.
+    displaced_jobs: BTreeMap<u64, Vec<usize>>,
 }
 
 /// One attached job's coordinator-side state on a warm pool — the
@@ -329,6 +481,9 @@ struct JobState {
     n_machines: usize,
     /// Whether this job's shards resolve from the arena mapping.
     arena: bool,
+    /// Attach-time oracle spec, retained so replacement workers can be
+    /// re-`Attach`ed to every active job.
+    spec: OracleSpec,
 }
 
 /// A lease on a daemon-owned warm pool: the shared pool handle plus the
@@ -692,7 +847,11 @@ impl ProcessPool {
                 }
             }
         }
-        drop(listener); // all workers joined; unlink the UDS path now.
+        // all workers joined: spawned topologies unlink the listener now;
+        // the external topology keeps it open so late `mrsub worker
+        // --connect` joins can back-fill dead slots (or grow an elastic
+        // pool) at round boundaries.
+        let listener = if external { listener } else { None };
 
         // --- assemble + pipe-mode Hello + Init/Ready ----------------------
         let mut children = children.into_iter().map(Some).collect::<Vec<_>>();
@@ -738,6 +897,20 @@ impl ProcessPool {
             jobs: BTreeMap::new(),
             arena_hits: 0,
             arena_misses: 0,
+            spec: spec.clone(),
+            transport: opts.transport.clone(),
+            connect_timeout: opts.connect_timeout,
+            exe: opts.exe.clone(),
+            env: opts.env.clone(),
+            external,
+            elastic: opts.elastic,
+            respawn_enabled: true,
+            respawns: 0,
+            rebalanced_machines: 0,
+            listener,
+            parked: Vec::new(),
+            displaced_legacy: Vec::new(),
+            displaced_jobs: BTreeMap::new(),
         };
         if matches!(opts.transport, Transport::Pipe) {
             // socket hellos were consumed during accept; pipe hellos are
@@ -838,12 +1011,39 @@ impl ProcessPool {
         self.arena.is_some()
     }
 
-    /// Worker processes still alive. The pool never replaces a dead
-    /// worker with a new process, so this never grows — the serve smoke's
-    /// "zero re-spawned workers" check compares it against
+    /// Worker processes currently alive. Under [`RecoveryPolicy::Requeue`]
+    /// a dead slot is respawned (spawned topologies) or back-filled by a
+    /// late join (external topologies) within one round, so a healthy
+    /// elastic pool returns to full size; only with respawn disabled
+    /// ([`ProcessPool::set_respawn`]), under the fail policy, or while an
+    /// external slot awaits a join does this stay below
     /// [`ProcessPool::workers`].
     pub fn alive_workers(&self) -> usize {
         self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// Lifetime replacement-worker activations: in-round respawns after a
+    /// death, late-join back-fills, and elastic growth. The serve daemon
+    /// surfaces this as `ServeStats::workers_respawned`.
+    pub fn respawns(&self) -> u64 {
+        self.respawns
+    }
+
+    /// Lifetime machines moved between live workers by the rebalance
+    /// planner.
+    pub fn rebalanced_machines(&self) -> u64 {
+        self.rebalanced_machines
+    }
+
+    /// Enable/disable replacement-worker spawning (on by default; a test
+    /// hook like [`ProcessPool::kill_worker`]). With respawn off, a death
+    /// under [`RecoveryPolicy::Requeue`] piles the orphaned machines onto
+    /// survivors (the pre-elastic behavior) and the dead slot stays dead
+    /// until re-enabled — the chaos harness uses exactly this to
+    /// manufacture the imbalance the rebalance planner then has to
+    /// correct.
+    pub fn set_respawn(&mut self, enabled: bool) {
+        self.respawn_enabled = enabled;
     }
 
     /// Whether `job` is currently attached to this pool.
@@ -892,13 +1092,18 @@ impl ProcessPool {
         // missing replies.
         let assigned: usize =
             self.workers.iter().filter(|w| w.alive).map(|w| w.machines.len()).sum();
-        if assigned != self.n_machines {
+        if assigned + self.displaced_legacy.len() != self.n_machines {
             let wi = self.workers.iter().position(|w| !w.alive).unwrap_or(0);
             return Err(worker_error(wi, "worker is dead (earlier failure)"));
         }
         let (out0, in0) = (self.bytes_out, self.bytes_in);
         let (rec0, reship0) = (self.recoveries, self.reshipped_bytes);
         let map0 = self.mapped_bytes;
+        let (resp0, reb0) = (self.respawns, self.rebalanced_machines);
+        // round-boundary elasticity: integrate parked late joins, respawn
+        // dead slots, rebalance placement — all no-ops on a healthy,
+        // balanced pool (and under the fail policy).
+        self.heal(None)?;
         // one encode; every worker receives byte-identical frames.
         let payload = ToWorker::Round(task.clone()).encode();
         let mut progress = RoundProgress {
@@ -909,6 +1114,9 @@ impl ProcessPool {
             // returns instead).
             orphans: Vec::new(),
         };
+        // machines displaced by cross-context respawns re-enter here; the
+        // death that displaced them was already charged to the budget.
+        progress.orphans.append(&mut self.displaced_legacy);
 
         // --- broadcast ---------------------------------------------------
         let mut awaiting: Vec<(usize, Vec<usize>)> = Vec::new();
@@ -932,6 +1140,10 @@ impl ProcessPool {
         let adoption_timeout = self.timeout.saturating_mul(self.history.len() as u32 + 2);
         while !progress.orphans.is_empty() {
             let batch = std::mem::take(&mut progress.orphans);
+            // replace the dead before re-placing the orphans: a fresh
+            // (empty) replacement is the least-loaded survivor, so the
+            // orphans land on it instead of piling onto busy survivors.
+            self.respawn_dead_slots();
             let assignment = self.assign_orphans(&batch, None)?;
             let mut adopting: Vec<(usize, Vec<usize>)> = Vec::new();
             for (wi, machines) in assignment {
@@ -1006,6 +1218,8 @@ impl ProcessPool {
             recoveries: self.recoveries - rec0,
             reshipped_bytes: self.reshipped_bytes - reship0,
             mapped_bytes: self.mapped_bytes - map0,
+            respawns: self.respawns - resp0,
+            rebalanced_machines: self.rebalanced_machines - reb0,
         };
         Ok((replies, stats))
     }
@@ -1101,6 +1315,7 @@ impl ProcessPool {
             history: Vec::new(),
             n_machines: m,
             arena,
+            spec: spec.clone(),
         });
         Ok(arena)
     }
@@ -1124,6 +1339,9 @@ impl ProcessPool {
         let (out0, in0) = (self.bytes_out, self.bytes_in);
         let (rec0, reship0) = (self.recoveries, self.reshipped_bytes);
         let map0 = self.mapped_bytes;
+        let (resp0, reb0) = (self.respawns, self.rebalanced_machines);
+        // round-boundary elasticity, against this job's assignment.
+        self.heal(Some(job))?;
         let n_machines = self.jobs[&job].n_machines;
         let mut progress = RoundProgress {
             out: (0..n_machines).map(|_| None).collect(),
@@ -1140,6 +1358,11 @@ impl ProcessPool {
                     progress.orphans.extend(std::mem::take(&mut js.assign[wi]));
                 }
             }
+        }
+        // machines displaced by cross-context respawns/rebalances re-enter
+        // here (their worker's death was charged when it was detected).
+        if let Some(displaced) = self.displaced_jobs.remove(&job) {
+            progress.orphans.extend(displaced);
         }
         if !progress.orphans.is_empty() && matches!(self.recovery, RecoveryPolicy::Fail) {
             let wi = self.workers.iter().position(|h| !h.alive).unwrap_or(0);
@@ -1174,6 +1397,8 @@ impl ProcessPool {
             self.timeout.saturating_mul(self.jobs[&job].history.len() as u32 + 2);
         while !progress.orphans.is_empty() {
             let batch = std::mem::take(&mut progress.orphans);
+            // as in `round_with`: a fresh replacement adopts the orphans.
+            self.respawn_dead_slots();
             let assignment = self.assign_orphans(&batch, Some(job))?;
             let mut adopting: Vec<(usize, Vec<usize>)> = Vec::new();
             for (wi, machines) in assignment {
@@ -1253,6 +1478,8 @@ impl ProcessPool {
             recoveries: self.recoveries - rec0,
             reshipped_bytes: self.reshipped_bytes - reship0,
             mapped_bytes: self.mapped_bytes - map0,
+            respawns: self.respawns - resp0,
+            rebalanced_machines: self.rebalanced_machines - reb0,
         };
         Ok((replies, stats))
     }
@@ -1262,6 +1489,7 @@ impl ProcessPool {
     /// unknown jobs; send failures are ignored — a dead worker has no
     /// runtime left to free.
     pub fn detach_job(&mut self, job: u64) {
+        self.displaced_jobs.remove(&job);
         if self.jobs.remove(&job).is_none() {
             return;
         }
@@ -1498,6 +1726,485 @@ impl ProcessPool {
         Ok(groups)
     }
 
+    /// Round-boundary elasticity sweep shared by [`ProcessPool::round_with`]
+    /// and [`ProcessPool::round_job`]: integrate parked late joins
+    /// (external topologies), respawn dead slots (spawned topologies),
+    /// then rebalance the context's machine placement via
+    /// [`plan_rebalance`]. Gated on [`RecoveryPolicy::Requeue`] — the
+    /// fail policy retains neither shards nor history, so a replacement
+    /// could never be fed.
+    fn heal(&mut self, job: Option<u64>) -> Result<()> {
+        if !matches!(self.recovery, RecoveryPolicy::Requeue { .. }) {
+            return Ok(());
+        }
+        self.integrate_joins();
+        self.respawn_dead_slots();
+        self.rebalance(job)
+    }
+
+    /// Best-effort replacement spawn for every dead slot (spawned
+    /// topologies only — external slots wait for a late join instead). A
+    /// slot whose respawn fails stays dead and its machines stay with
+    /// whoever adopted them, so failure here never fails a round.
+    fn respawn_dead_slots(&mut self) {
+        if !self.respawn_enabled
+            || self.external
+            || !matches!(self.recovery, RecoveryPolicy::Requeue { .. })
+        {
+            return;
+        }
+        for wi in 0..self.workers.len() {
+            if !self.workers[wi].alive {
+                let _ = self.respawn_worker(wi);
+            }
+        }
+    }
+
+    /// Spawn a replacement worker into dead slot `wi`: same spawn recipe
+    /// as the original (transport, max-frame, arena fd-pass) minus the
+    /// injected `MRSUB_FAULT`, connected through a fresh ephemeral
+    /// listener on socket transports, then handed to
+    /// [`ProcessPool::install_worker`] for the `Hello`/`Init`/`Attach`
+    /// handshakes.
+    fn respawn_worker(&mut self, wi: usize) -> std::result::Result<(), String> {
+        if self.external {
+            return Err("external pool: dead slots are back-filled by late joins".into());
+        }
+        let exe = match &self.exe {
+            Some(p) => p.clone(),
+            None => std::env::current_exe()
+                .map_err(|e| format!("cannot locate worker executable: {e}"))?,
+        };
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker")
+            .stderr(Stdio::inherit())
+            .env("MRSUB_MAX_FRAME", self.max_frame.to_string())
+            .env("MRSUB_WORKER_ID", wi.to_string())
+            // a replacement must not re-fire the injected fault that
+            // killed its predecessor (also stripped from `env` below).
+            .env_remove("MRSUB_FAULT");
+        if self.arena.is_some() {
+            cmd.env("MRSUB_ARENA", "1");
+        } else {
+            cmd.env_remove("MRSUB_ARENA");
+        }
+        for (key, val) in &self.env {
+            if key != "MRSUB_FAULT" {
+                cmd.env(key, val);
+            }
+        }
+        let deadline = Instant::now() + self.connect_timeout;
+        let reap = |mut c: Child| {
+            let _ = c.kill();
+            let _ = c.wait();
+        };
+        let (child, pending) = if matches!(self.transport, Transport::Pipe) {
+            cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).env_remove("MRSUB_CONNECT");
+            let mut c = cmd.spawn().map_err(|e| format!("respawn {}: {e}", exe.display()))?;
+            let stdin = c.stdin.take().expect("stdin piped");
+            let stdout = c.stdout.take().expect("stdout piped");
+            let (tx, rx, writer_done) =
+                start_io_threads(Box::new(stdout), Box::new(stdin), self.max_frame);
+            (c, Pending { tx, rx, control: LinkControl::Pipe, writer_done })
+        } else {
+            // a fresh ephemeral listener just for this handshake — the
+            // spawn-time one was unlinked once the original pool joined.
+            let l = Listener::bind(&self.transport, POOL_TAG.fetch_add(1, Ordering::Relaxed))
+                .map_err(|e| format!("bind respawn listener: {e}"))?
+                .expect("socket transports always bind a listener");
+            cmd.stdin(Stdio::null()).stdout(Stdio::inherit()).env("MRSUB_CONNECT", l.endpoint());
+            let c = cmd.spawn().map_err(|e| format!("respawn {}: {e}", exe.display()))?;
+            let link = match l.accept_until(deadline) {
+                Ok(Some(link)) => link,
+                Ok(None) => {
+                    reap(c);
+                    return Err(format!(
+                        "replacement worker never connected within {} ms",
+                        self.connect_timeout.as_millis()
+                    ));
+                }
+                Err(e) => {
+                    reap(c);
+                    return Err(format!("accept failed: {e}"));
+                }
+            };
+            let control = link.control.clone();
+            let (tx, rx, writer_done) =
+                start_io_threads(link.reader, link.writer, self.max_frame);
+            let pending = Pending { tx, rx, control, writer_done };
+            if let Some(a) = &self.arena {
+                let sent = match &pending.control {
+                    LinkControl::Uds(s) => a.send_fd(s),
+                    _ => Err(std::io::Error::new(
+                        std::io::ErrorKind::Unsupported,
+                        "arena needs a UDS stream",
+                    )),
+                };
+                if let Err(e) = sent {
+                    pending.control.force_close();
+                    reap(c);
+                    return Err(format!("arena fd-pass failed: {e}"));
+                }
+            }
+            (c, pending)
+        };
+        match expect_hello(&pending, deadline) {
+            Ok((version, _, _)) if version != WIRE_VERSION => {
+                pending.control.force_close();
+                reap(child);
+                Err(version_mismatch(version))
+            }
+            Ok((_, worker, _)) if worker as usize != wi => {
+                pending.control.force_close();
+                reap(child);
+                Err(format!("replacement spoke as worker {worker}, expected {wi}"))
+            }
+            Ok((_, _, nbytes)) => {
+                self.bytes_in += nbytes;
+                self.install_worker(wi, Some(child), pending)
+            }
+            Err(msg) => {
+                pending.control.force_close();
+                reap(child);
+                Err(msg)
+            }
+        }
+    }
+
+    /// Install a handshaken (post-`Hello`) worker stream into slot `wi`
+    /// and bring the replacement to parity: sweep the dead predecessor's
+    /// stale assignments into the displaced buffers (each owning context
+    /// re-adopts them at its next round — the death was already charged),
+    /// send an empty-machine `Init`, then an empty `Attach` per active
+    /// job, awaiting each `Ready`. On failure the slot is dead again and
+    /// the displaced machines still land with survivors.
+    fn install_worker(
+        &mut self,
+        wi: usize,
+        child: Option<Child>,
+        pending: Pending,
+    ) -> std::result::Result<(), String> {
+        let stale = std::mem::take(&mut self.workers[wi].machines);
+        self.displaced_legacy.extend(stale);
+        for (job, js) in self.jobs.iter_mut() {
+            let stale = std::mem::take(&mut js.assign[wi]);
+            if !stale.is_empty() {
+                self.displaced_jobs.entry(*job).or_default().extend(stale);
+            }
+        }
+        self.workers[wi] = WorkerHandle {
+            child,
+            tx: Some(pending.tx),
+            rx: pending.rx,
+            control: pending.control,
+            writer_done: pending.writer_done,
+            machines: Vec::new(),
+            alive: true,
+        };
+        // `WorkerInit::sample` is never read worker-side (tasks carry
+        // everything they need), so the parity handshakes ship no
+        // machines, no shards, and no sample — tiny frames; machines
+        // arrive via adoption or rebalance.
+        let arena = self.arena.is_some();
+        let init = ToWorker::Init(WorkerInit {
+            spec: self.spec.clone(),
+            machines: Vec::new(),
+            shards: Vec::new(),
+            sample: Vec::new(),
+            arena,
+        });
+        let attaches: Vec<Vec<u8>> = self
+            .jobs
+            .iter()
+            .map(|(job, js)| {
+                ToWorker::Attach {
+                    job: *job,
+                    init: WorkerInit {
+                        spec: js.spec.clone(),
+                        machines: Vec::new(),
+                        shards: Vec::new(),
+                        sample: Vec::new(),
+                        arena: js.arena,
+                    },
+                }
+                .encode()
+            })
+            .collect();
+        self.send(wi, &init).map_err(|e| e.to_string())?;
+        self.expect_ready(wi, "replacement init")?;
+        for payload in attaches {
+            self.send_payload(wi, &payload).map_err(|e| e.to_string())?;
+            self.expect_ready(wi, "replacement attach")?;
+        }
+        self.respawns += 1;
+        Ok(())
+    }
+
+    /// Await one `Ready` from `wi` (replacement init/attach handshakes),
+    /// folding version mismatches and `Fail`s into the error string and
+    /// marking the slot dead on the way out.
+    fn expect_ready(&mut self, wi: usize, what: &str) -> std::result::Result<(), String> {
+        match self.recv(wi) {
+            Ok(FromWorker::Ready { version }) if version == WIRE_VERSION => Ok(()),
+            Ok(FromWorker::Ready { version }) => {
+                Err(self.mark_dead(wi, version_mismatch(version)).to_string())
+            }
+            Ok(FromWorker::Fail { message }) => {
+                Err(self.mark_dead(wi, format!("{what} failed: {message}")).to_string())
+            }
+            Ok(other) => Err(self
+                .mark_dead(wi, format!("unexpected {what} reply: {other:?}"))
+                .to_string()),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+
+    /// Drain the retained listener's accept backlog (external topologies
+    /// only) and place each handshaken late join: back-fill a dead slot
+    /// whose `--id` matches, grow the pool under `--elastic`, or park the
+    /// stream until a slot opens. Called only at round boundaries — a
+    /// join arriving mid-round waits here (or in the TCP backlog) and is
+    /// never handed a partially replayed store.
+    fn integrate_joins(&mut self) {
+        if self.listener.is_none() && self.parked.is_empty() {
+            return;
+        }
+        let mut joins: Vec<(u32, Pending)> = std::mem::take(&mut self.parked);
+        if let Some(l) = &self.listener {
+            loop {
+                // a short poll: catch connections already queued without
+                // stalling the round on an empty backlog.
+                let link = match l.accept_until(Instant::now() + Duration::from_millis(20)) {
+                    Ok(Some(link)) => link,
+                    _ => break,
+                };
+                let control = link.control.clone();
+                let (tx, rx, writer_done) =
+                    start_io_threads(link.reader, link.writer, self.max_frame);
+                let pending = Pending { tx, rx, control, writer_done };
+                match expect_hello(&pending, Instant::now() + HELLO_BUDGET) {
+                    Ok((version, _, _)) if version != WIRE_VERSION => {
+                        pending.control.force_close();
+                    }
+                    Ok((_, worker, nbytes)) => {
+                        self.bytes_in += nbytes;
+                        joins.push((worker, pending));
+                    }
+                    // strays (scanners, garbled handshakes) are dropped,
+                    // exactly like the spawn-time external accept loop.
+                    Err(_) => pending.control.force_close(),
+                }
+            }
+        }
+        for (id, pending) in joins {
+            self.place_join(id, pending);
+        }
+    }
+
+    /// Place one handshaken late join: into dead slot `id` when its
+    /// advertised `--id` names one, into a fresh slot when the pool is
+    /// elastic, otherwise parked for a later boundary.
+    fn place_join(&mut self, id: u32, pending: Pending) {
+        let wi = id as usize;
+        if wi < self.workers.len() && !self.workers[wi].alive {
+            let _ = self.install_worker(wi, None, pending);
+            return;
+        }
+        if self.elastic {
+            let wi = self.workers.len();
+            self.push_empty_slot();
+            let _ = self.install_worker(wi, None, pending);
+            return;
+        }
+        self.parked.push((id, pending));
+    }
+
+    /// Append a dead placeholder slot (grown pools), keeping every job's
+    /// assignment vector parallel to the worker list.
+    fn push_empty_slot(&mut self) {
+        let (_, rx) = mpsc::channel();
+        let (_, writer_done) = mpsc::channel();
+        self.workers.push(WorkerHandle {
+            child: None,
+            tx: None,
+            rx,
+            control: LinkControl::Pipe,
+            writer_done,
+            machines: Vec::new(),
+            alive: false,
+        });
+        for js in self.jobs.values_mut() {
+            js.assign.push(Vec::new());
+        }
+    }
+
+    /// Grow the pool to `target` worker slots by spawning fresh workers
+    /// (elastic pools on spawned topologies only — external pools grow
+    /// through late joins). Grown workers start empty; the rebalance
+    /// planner sheds machines onto them at the next round boundary.
+    /// Returns the number of workers actually added (best-effort: a
+    /// failed spawn leaves a dead placeholder that
+    /// [`ProcessPool::set_respawn`]-enabled healing retries later).
+    pub fn grow_to(&mut self, target: usize) -> usize {
+        if !self.elastic || self.external {
+            return 0;
+        }
+        let mut added = 0;
+        while self.workers.len() < target {
+            let wi = self.workers.len();
+            self.push_empty_slot();
+            if self.respawn_worker(wi).is_err() {
+                break;
+            }
+            added += 1;
+        }
+        added
+    }
+
+    /// Execute the planner's verdict for one context: ship each affected
+    /// worker a single [`ToWorker::Rebalance`] frame carrying its drops
+    /// and its gains (shards arena-elided exactly like adoptions, replay
+    /// history attached), await the `Ready` acks, and mirror the moves in
+    /// the coordinator's assignment. Placement is invisible to results —
+    /// RNG streams and store replay key on global machine ids — so a
+    /// skipped plan (oversized frame) only costs balance, never
+    /// correctness; a worker dying mid-rebalance is charged to the
+    /// recovery budget and its machines are displaced for in-round
+    /// adoption.
+    fn rebalance(&mut self, job: Option<u64>) -> Result<()> {
+        let loads: Vec<(usize, Vec<usize>)> = match job {
+            None => self
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.alive)
+                .map(|(wi, w)| (wi, w.machines.clone()))
+                .collect(),
+            Some(j) => {
+                let js = &self.jobs[&j];
+                self.workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| w.alive)
+                    .map(|(wi, _)| (wi, js.assign[wi].clone()))
+                    .collect()
+            }
+        };
+        let moves = plan_rebalance(&loads);
+        if moves.is_empty() {
+            return Ok(());
+        }
+        let mut drops: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        let mut gains: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for mv in &moves {
+            drops.entry(mv.from).or_default().push(mv.machine as u32);
+            gains.entry(mv.to).or_default().push(mv.machine);
+        }
+        let (arena, wire_job) = match job {
+            None => (self.arena.is_some(), LEGACY_JOB),
+            Some(j) => (self.jobs[&j].arena, j),
+        };
+        // encode everything first: an oversized frame skips the whole
+        // plan atomically (balance is optional; a half-applied plan is
+        // corruption).
+        let affected: std::collections::BTreeSet<usize> =
+            drops.keys().chain(gains.keys()).copied().collect();
+        let mut frames: Vec<(usize, Vec<u8>)> = Vec::new();
+        for &wi in &affected {
+            let gained = gains.get(&wi).cloned().unwrap_or_default();
+            let (shards, replay) = match job {
+                None => (&self.shards, &self.history),
+                Some(j) => {
+                    let js = &self.jobs[&j];
+                    (&js.shards, &js.history)
+                }
+            };
+            let payload = ToWorker::Rebalance {
+                job: wire_job,
+                drop: drops.get(&wi).cloned().unwrap_or_default(),
+                machines: gained.iter().map(|&m| m as u32).collect(),
+                shards: if arena {
+                    Vec::new()
+                } else {
+                    gained.iter().map(|&m| shards[m].clone()).collect()
+                },
+                arena,
+                replay: replay.clone(),
+            }
+            .encode();
+            if payload.len() > self.max_frame {
+                return Ok(());
+            }
+            frames.push((wi, payload));
+        }
+        if arena {
+            let shards = match job {
+                None => &self.shards,
+                Some(j) => &self.jobs[&j].shards,
+            };
+            let words: usize = moves.iter().map(|mv| shards[mv.machine].len()).sum();
+            self.mapped_bytes += 4 * words as u64;
+        }
+        let history_len = match job {
+            None => self.history.len(),
+            Some(j) => self.jobs[&j].history.len(),
+        };
+        let ack_timeout = self.timeout.saturating_mul(history_len as u32 + 2);
+        let mut dead: Vec<(usize, Error)> = Vec::new();
+        let mut awaiting: Vec<usize> = Vec::new();
+        for (wi, payload) in &frames {
+            match self.send_payload(*wi, payload) {
+                Ok(()) => awaiting.push(*wi),
+                Err(e) => dead.push((*wi, e)),
+            }
+        }
+        for wi in awaiting {
+            match self.recv_within(wi, ack_timeout) {
+                Ok(FromWorker::Ready { version }) if version == WIRE_VERSION => {}
+                Ok(FromWorker::Ready { version }) => {
+                    dead.push((wi, self.mark_dead(wi, version_mismatch(version))));
+                }
+                Ok(FromWorker::Fail { message }) => {
+                    dead.push((wi, self.mark_dead(wi, format!("rebalance failed: {message}"))));
+                }
+                Ok(other) => {
+                    let msg = format!("unexpected rebalance reply: {other:?}");
+                    dead.push((wi, self.mark_dead(wi, msg)));
+                }
+                Err(e) => dead.push((wi, e)),
+            }
+        }
+        // mirror the plan: every frame was queued, so every surviving
+        // receiver applied it — the coordinator's assignment must match
+        // the survivors exactly (a dead worker's copy is moot).
+        for mv in &moves {
+            match job {
+                None => {
+                    self.workers[mv.from].machines.retain(|&m| m != mv.machine);
+                    self.workers[mv.to].machines.push(mv.machine);
+                }
+                Some(j) => {
+                    let js = self.jobs.get_mut(&j).expect("attached");
+                    js.assign[mv.from].retain(|&m| m != mv.machine);
+                    js.assign[mv.to].push(mv.machine);
+                }
+            }
+        }
+        self.rebalanced_machines += moves.len() as u64;
+        // a worker lost mid-rebalance is a normal death: charge the
+        // budget and displace its (post-plan) machines for in-round
+        // adoption.
+        for (wi, err) in dead {
+            let mut orphans = Vec::new();
+            self.on_worker_death(wi, err, &mut orphans, job)?;
+            match job {
+                None => self.displaced_legacy.extend(orphans),
+                Some(j) => self.displaced_jobs.entry(j).or_default().extend(orphans),
+            }
+        }
+        Ok(())
+    }
+
     /// Fault injection (tests): kill worker `wi`'s OS process *without*
     /// telling the pool — the next round must surface a structured error,
     /// exactly as if the process died on its own. External workers (no
@@ -1587,6 +2294,13 @@ impl ProcessPool {
     }
 
     fn shutdown_all(&mut self) {
+        // parked late joins hold live streams too: tell them to exit and
+        // close our end so nothing blocks on a half-open socket.
+        for (_, p) in self.parked.drain(..) {
+            let _ = p.tx.send(ToWorker::Shutdown.encode());
+            let _ = p.writer_done.recv_timeout(Duration::from_millis(250));
+            p.control.force_close();
+        }
         for w in &mut self.workers {
             if let Some(tx) = w.tx.take() {
                 let _ = tx.send(ToWorker::Shutdown.encode());
@@ -1774,15 +2488,37 @@ fn adopt_machines(
     replay: Vec<RoundTask>,
     pending: &RoundTask,
 ) -> Vec<TaskReply> {
+    let n0 = append_and_replay(rt, &machines, shards, &replay);
+    shard::run_task_all_cached(
+        &rt.oracle,
+        &rt.shards[n0..],
+        &mut rt.stores[n0..],
+        &rt.machines[n0..],
+        pending,
+        &crate::mapreduce::backend::Serial,
+        &mut rt.cache,
+    )
+}
+
+/// Shared gain half of adoption and rebalance: append `machines` (global
+/// ids) with their shards, then rebuild their machine-resident state by
+/// replaying the store-mutating history. Returns the index the appended
+/// block starts at.
+fn append_and_replay(
+    rt: &mut WorkerRuntime,
+    machines: &[u32],
+    shards: Vec<ShardData>,
+    replay: &[RoundTask],
+) -> usize {
     let n0 = rt.machines.len();
-    let adopted = machines.len();
+    let gained = machines.len();
     rt.machines.extend(machines.iter().map(|&i| i as usize));
     rt.shards.extend(shards);
-    rt.stores.extend(std::iter::repeat_with(GuessStore::default).take(adopted));
+    rt.stores.extend(std::iter::repeat_with(GuessStore::default).take(gained));
     // the replay's bases differ from the cached (current-round) states;
-    // checkout resets and replays as needed, then the pending re-run
+    // checkout resets and replays as needed, then the next live task
     // advances the cache right back — bit-identity is unaffected.
-    for t in &replay {
+    for t in replay {
         let _ = shard::run_task_all_cached(
             &rt.oracle,
             &rt.shards[n0..],
@@ -1793,15 +2529,35 @@ fn adopt_machines(
             &mut rt.cache,
         );
     }
-    shard::run_task_all_cached(
-        &rt.oracle,
-        &rt.shards[n0..],
-        &mut rt.stores[n0..],
-        &rt.machines[n0..],
-        pending,
-        &crate::mapreduce::backend::Serial,
-        &mut rt.cache,
-    )
+    n0
+}
+
+/// Worker-side rebalance ([`ToWorker::Rebalance`]): shed the dropped
+/// machines (preserving the relative order of the survivors, which the
+/// coordinator's `retain` mirrors — reply-slot mapping depends on it),
+/// then adopt the gained ones via the same append-and-replay path a
+/// mid-round adoption uses.
+fn rebalance_runtime(
+    rt: &mut WorkerRuntime,
+    drop: &[u32],
+    machines: Vec<u32>,
+    shards: Vec<ShardData>,
+    replay: &[RoundTask],
+) -> std::result::Result<(), String> {
+    for &id in drop {
+        let i = rt
+            .machines
+            .iter()
+            .position(|&m| m == id as usize)
+            .ok_or_else(|| {
+                format!("rebalance drops machine {id}, which this worker does not host")
+            })?;
+        rt.machines.remove(i);
+        rt.shards.remove(i);
+        rt.stores.remove(i);
+    }
+    append_and_replay(rt, &machines, shards, replay);
+    Ok(())
 }
 
 /// The job id the legacy single-tenant `Init` path lives under: `Init`
@@ -2068,6 +2824,44 @@ pub fn run_worker_mapped(
             ToWorker::Detach { job } => {
                 // fire-and-forget: the coordinator does not await an ack.
                 jobs.remove(&job);
+            }
+            ToWorker::Rebalance { job, drop, machines, shards, arena, replay } => {
+                let Some(rt) = jobs.get_mut(&job) else {
+                    let message = format!("rebalance before init/attach (job {job})");
+                    if !send_reply(w, &FromWorker::Fail { message }, max_frame) {
+                        return 3;
+                    }
+                    continue;
+                };
+                let data: std::result::Result<Vec<ShardData>, String> = if arena {
+                    match arena_map.as_ref() {
+                        Some(map) => arena_shards(map, &machines),
+                        None => Err(
+                            "arena-flagged rebalance but no arena mapping \
+                             (transport without fd-passing?)"
+                                .into(),
+                        ),
+                    }
+                } else {
+                    Ok(shards.into_iter().map(ShardData::Owned).collect())
+                };
+                match data
+                    .and_then(|data| rebalance_runtime(rt, &drop, machines, data, &replay))
+                {
+                    Ok(()) => {
+                        if !send_reply(w, &FromWorker::Ready { version: WIRE_VERSION }, max_frame)
+                        {
+                            return 3;
+                        }
+                    }
+                    Err(message) => {
+                        // the runtime may be partially mutated — unsafe to
+                        // keep serving; the coordinator treats the exit as
+                        // a death and re-queues.
+                        send_reply(w, &FromWorker::Fail { message }, max_frame);
+                        return 3;
+                    }
+                }
             }
             ToWorker::Shutdown => return 0,
         }
@@ -2521,6 +3315,277 @@ mod tests {
             adopt_replies[0], want_machine1,
             "adopted machine must reproduce the natively-hosted reply bit for bit"
         );
+    }
+
+    /// Apply a plan to a load layout (test mirror of the coordinator's
+    /// bookkeeping in `ProcessPool::rebalance`).
+    fn apply_plan(loads: &mut [(usize, Vec<usize>)], moves: &[MachineMove]) {
+        for mv in moves {
+            let from = loads.iter().position(|(s, _)| *s == mv.from).unwrap();
+            let to = loads.iter().position(|(s, _)| *s == mv.to).unwrap();
+            loads[from].1.retain(|&m| m != mv.machine);
+            loads[to].1.push(mv.machine);
+        }
+    }
+
+    #[test]
+    fn rebalance_planner_is_deterministic_sound_and_convergent() {
+        // The planner's whole contract, over arbitrary layouts: same
+        // loads → same moves; no machine moves twice; donors keep ≥ 1
+        // machine; the post-move layout is level (max−min ≤ 1) and a
+        // fixed point of the planner.
+        crate::util::check::forall(0xe1a5, 200, |g| {
+            let w = g.usize_in(1, 8);
+            let m = g.usize_in(0, 40);
+            let mut loads: Vec<(usize, Vec<usize>)> = (0..w).map(|s| (s, Vec::new())).collect();
+            for machine in 0..m {
+                let s = g.usize_in(0, w);
+                loads[s].1.push(machine);
+            }
+            let moves = plan_rebalance(&loads);
+            assert_eq!(moves, plan_rebalance(&loads), "planner must be pure");
+
+            let mut seen = std::collections::BTreeSet::new();
+            for mv in &moves {
+                assert!(seen.insert(mv.machine), "machine {} moved twice", mv.machine);
+                assert_ne!(mv.from, mv.to, "self-move");
+            }
+
+            let mut after = loads.clone();
+            apply_plan(&mut after, &moves);
+            for ((_, before), (_, now)) in loads.iter().zip(&after) {
+                assert!(
+                    before.is_empty() || !now.is_empty(),
+                    "a live worker was drained below 1 machine"
+                );
+            }
+            if m > 0 {
+                let max = after.iter().map(|(_, ms)| ms.len()).max().unwrap();
+                let min = after.iter().map(|(_, ms)| ms.len()).min().unwrap();
+                assert!(max - min <= 1, "not level: loads {:?}", after);
+            }
+            assert!(
+                plan_rebalance(&after).is_empty(),
+                "planner must converge: re-planning post-move loads moved again"
+            );
+        });
+    }
+
+    #[test]
+    fn rebalance_planner_fixed_points_and_fresh_worker() {
+        // A fresh round-robin split is already level — zero moves.
+        let rr: Vec<(usize, Vec<usize>)> = vec![(0, vec![0, 3, 6]), (1, vec![1, 4]), (2, vec![2, 5])];
+        assert!(plan_rebalance(&rr).is_empty());
+        // Degenerate shapes.
+        assert!(plan_rebalance(&[]).is_empty());
+        assert!(plan_rebalance(&[(0, vec![])]).is_empty());
+        assert!(plan_rebalance(&[(0, vec![1, 2, 3])]).is_empty());
+        // A newly-joined empty worker pulls the highest machine ids off
+        // the donors, receivers filling in `loads` order — the exact
+        // shape a post-respawn heal produces.
+        let loads: Vec<(usize, Vec<usize>)> =
+            vec![(0, vec![0, 2, 4]), (1, vec![1, 3, 5]), (2, vec![])];
+        assert_eq!(
+            plan_rebalance(&loads),
+            vec![
+                MachineMove { from: 0, to: 2, machine: 4 },
+                MachineMove { from: 1, to: 2, machine: 5 },
+            ]
+        );
+        // Slot ids need not be dense or ordered (dead slots are skipped
+        // by the caller): keyed on the slot ids given.
+        let sparse: Vec<(usize, Vec<usize>)> = vec![(4, vec![7, 8, 9, 10]), (1, vec![])];
+        assert_eq!(
+            plan_rebalance(&sparse),
+            vec![
+                MachineMove { from: 4, to: 1, machine: 9 },
+                MachineMove { from: 4, to: 1, machine: 10 },
+            ]
+        );
+    }
+
+    #[test]
+    fn rebalance_replay_matches_native_hosting() {
+        // Both halves of a worker-level rebalance — gaining a machine
+        // (with history replay) and shedding one — must leave the next
+        // round bit-identical to a worker that hosted the final layout
+        // from spawn. Mirrors `adoption_replay_matches_native_hosting`
+        // for the `ToWorker::Rebalance` frame.
+        let shard0: Vec<ElementId> = (0..30).collect();
+        let shard1: Vec<ElementId> = (30..60).collect();
+        let prune1 = RoundTask::PruneSample {
+            base: vec![],
+            floor: 0.1,
+            tau: 0.5,
+            per_share: 6,
+            seed: 17,
+            round: 1,
+        };
+        let prune2 = RoundTask::PruneSample {
+            base: vec![2, 40],
+            floor: 0.3,
+            tau: 0.9,
+            per_share: 4,
+            seed: 23,
+            round: 2,
+        };
+
+        // reference: both machines hosted from the start.
+        let input = framed(&[
+            ToWorker::Init(WorkerInit {
+                spec: spec(),
+                machines: vec![0, 1],
+                shards: vec![shard0.clone(), shard1.clone()],
+                sample: vec![],
+                arena: false,
+            }),
+            ToWorker::Round(prune1.clone()),
+            ToWorker::Round(prune2.clone()),
+            ToWorker::Shutdown,
+        ]);
+        let mut out = Vec::new();
+        assert_eq!(
+            run_worker(&mut std::io::Cursor::new(input), &mut out, DEFAULT_MAX_FRAME, 0, None),
+            0
+        );
+        let reference = read_replies(&out);
+        let FromWorker::RoundDone { replies: ref_round2, .. } = &reference[3] else {
+            panic!("expected the prune2 RoundDone, got {:?}", reference[3]);
+        };
+        let (want_machine0, want_machine1) = (ref_round2[0].clone(), ref_round2[1].clone());
+
+        // gainer: hosts machine 0, plays round 1, then machine 1 arrives
+        // by rebalance (round-1 history in the replay) before round 2.
+        let input = framed(&[
+            ToWorker::Init(WorkerInit {
+                spec: spec(),
+                machines: vec![0],
+                shards: vec![shard0.clone()],
+                sample: vec![],
+                arena: false,
+            }),
+            ToWorker::Round(prune1.clone()),
+            ToWorker::Rebalance {
+                job: LEGACY_JOB,
+                drop: vec![],
+                machines: vec![1],
+                shards: vec![shard1.clone()],
+                arena: false,
+                replay: vec![prune1.clone()],
+            },
+            ToWorker::Round(prune2.clone()),
+            ToWorker::Shutdown,
+        ]);
+        let mut out = Vec::new();
+        assert_eq!(
+            run_worker(&mut std::io::Cursor::new(input), &mut out, DEFAULT_MAX_FRAME, 0, None),
+            0
+        );
+        let gainer = read_replies(&out);
+        assert!(
+            matches!(gainer[3], FromWorker::Ready { version: WIRE_VERSION }),
+            "rebalance must be acked with Ready, got {:?}",
+            gainer[3]
+        );
+        let FromWorker::RoundDone { replies, .. } = &gainer[4] else {
+            panic!("expected the prune2 RoundDone, got {:?}", gainer[4]);
+        };
+        assert_eq!(replies.len(), 2);
+        assert_eq!(replies[0], want_machine0);
+        assert_eq!(
+            replies[1], want_machine1,
+            "rebalanced-in machine must reproduce the natively-hosted reply bit for bit"
+        );
+
+        // donor: hosts both machines, sheds machine 0 by rebalance; its
+        // round-2 reply for the surviving machine must match.
+        let input = framed(&[
+            ToWorker::Init(WorkerInit {
+                spec: spec(),
+                machines: vec![0, 1],
+                shards: vec![shard0, shard1],
+                sample: vec![],
+                arena: false,
+            }),
+            ToWorker::Round(prune1.clone()),
+            ToWorker::Rebalance {
+                job: LEGACY_JOB,
+                drop: vec![0],
+                machines: vec![],
+                shards: vec![],
+                arena: false,
+                replay: vec![prune1],
+            },
+            ToWorker::Round(prune2),
+            ToWorker::Shutdown,
+        ]);
+        let mut out = Vec::new();
+        assert_eq!(
+            run_worker(&mut std::io::Cursor::new(input), &mut out, DEFAULT_MAX_FRAME, 0, None),
+            0
+        );
+        let donor = read_replies(&out);
+        assert!(matches!(donor[3], FromWorker::Ready { version: WIRE_VERSION }));
+        let FromWorker::RoundDone { replies, .. } = &donor[4] else {
+            panic!("expected the prune2 RoundDone, got {:?}", donor[4]);
+        };
+        assert_eq!(replies.len(), 1, "dropped machine must not reply");
+        assert_eq!(replies[0], want_machine1);
+    }
+
+    #[test]
+    fn rebalance_before_init_fails_scoped_to_the_job() {
+        // An unknown job id Fails the frame but keeps the worker serving
+        // (same contract as JobRound-before-attach).
+        let input = framed(&[
+            ToWorker::Rebalance {
+                job: 9,
+                drop: vec![],
+                machines: vec![],
+                shards: vec![],
+                arena: false,
+                replay: vec![],
+            },
+            ToWorker::Shutdown,
+        ]);
+        let mut r = std::io::Cursor::new(input);
+        let mut out = Vec::new();
+        assert_eq!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, 0, None), 0);
+        match &read_replies(&out)[1] {
+            FromWorker::Fail { message } => {
+                assert!(message.contains("rebalance before"), "got: {message}")
+            }
+            other => panic!("expected Fail, got {other:?}"),
+        }
+
+        // dropping a machine the worker does not host is a hard error —
+        // the runtime may be inconsistent, so the worker exits.
+        let input = framed(&[
+            ToWorker::Init(WorkerInit {
+                spec: spec(),
+                machines: vec![0],
+                shards: vec![(0..30).collect()],
+                sample: vec![],
+                arena: false,
+            }),
+            ToWorker::Rebalance {
+                job: LEGACY_JOB,
+                drop: vec![5],
+                machines: vec![],
+                shards: vec![],
+                arena: false,
+                replay: vec![],
+            },
+        ]);
+        let mut r = std::io::Cursor::new(input);
+        let mut out = Vec::new();
+        assert_ne!(run_worker(&mut r, &mut out, DEFAULT_MAX_FRAME, 0, None), 0);
+        match &read_replies(&out)[2] {
+            FromWorker::Fail { message } => {
+                assert!(message.contains("does not host"), "got: {message}")
+            }
+            other => panic!("expected Fail, got {other:?}"),
+        }
     }
 
     #[test]

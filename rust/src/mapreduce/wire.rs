@@ -64,7 +64,17 @@ use crate::oracle::spec::OracleSpec;
 /// the daemon and `mrsub submit` speak over TCP — riding the versioned
 /// header means client/daemon version skew fails the first frame with a
 /// structured [`WireError::BadVersion`] instead of a decode mystery.
-pub const WIRE_VERSION: u16 = 5;
+///
+/// v6: true elasticity. [`ToWorker::Rebalance`] moves machines between
+/// *live* workers at round boundaries: the receiver drops the listed
+/// machine ids it hosts, adopts the listed ones (shards arena-elided
+/// exactly like v4 adoptions) by replaying the store-mutating history,
+/// and replies [`FromWorker::Ready`]. Combined with coordinator-side
+/// worker respawn and late `--connect` joins, pool membership can now
+/// change mid-experiment without touching selection semantics — RNG
+/// streams and store replay key on *global* machine ids, never on which
+/// worker hosts them.
+pub const WIRE_VERSION: u16 = 6;
 
 /// Frame magic: "MRSB" (MapReduce-Submodular Backend).
 pub const FRAME_MAGIC: [u8; 4] = *b"MRSB";
@@ -999,6 +1009,31 @@ pub enum ToWorker {
         /// Job to forget.
         job: u64,
     },
+    /// Between-round machine move (wire v6): the receiving *live* worker
+    /// first forgets the machines in `drop` (they moved to another
+    /// worker), then adopts the machines in `machines` — appending them
+    /// with their spawn-time shards and replaying the store-mutating
+    /// history, exactly like [`RoundTask::AdoptMachines`] but with no
+    /// in-flight `pending` task (rebalancing happens only at round
+    /// boundaries) — and replies [`FromWorker::Ready`]. `job` selects the
+    /// runtime (0 is the anonymous one-shot slot).
+    Rebalance {
+        /// Runtime to rebalance (0 = the anonymous [`ToWorker::Init`] slot).
+        job: u64,
+        /// Global ids of hosted machines this worker must forget.
+        drop: Vec<u32>,
+        /// Global ids of the machines to adopt, in adoption order.
+        machines: Vec<u32>,
+        /// One spawn-time shard per adopted machine (same order). Empty
+        /// when `arena` is set: shards are read from the fd-passed memfd
+        /// mapping by global machine id.
+        shards: Vec<Vec<ElementId>>,
+        /// Shards live in the arena mapping; `shards` is elided.
+        arena: bool,
+        /// Store-mutating task history to replay for the adopted
+        /// machines, in round order.
+        replay: Vec<RoundTask>,
+    },
 }
 
 impl ToWorker {
@@ -1029,6 +1064,25 @@ impl ToWorker {
                 enc.u8(6);
                 enc.u64(*job);
             }
+            ToWorker::Rebalance { job, drop, machines, shards, arena, replay } => {
+                enc.u8(7);
+                enc.u64(*job);
+                enc.ids(drop);
+                enc.ids(machines);
+                enc.bool(*arena);
+                if !*arena {
+                    enc.u32(shards.len() as u32);
+                    for s in shards {
+                        enc.ids(s);
+                    }
+                } else {
+                    debug_assert!(shards.is_empty(), "arena rebalances elide shard payloads");
+                }
+                enc.u32(replay.len() as u32);
+                for t in replay {
+                    t.encode(&mut enc);
+                }
+            }
         }
         enc.buf
     }
@@ -1046,6 +1100,34 @@ impl ToWorker {
             }
             5 => ToWorker::JobRound { job: dec.u64()?, task: RoundTask::decode(&mut dec)? },
             6 => ToWorker::Detach { job: dec.u64()? },
+            7 => {
+                let job = dec.u64()?;
+                let drop = dec.ids()?;
+                let machines = dec.ids()?;
+                let arena = dec.bool()?;
+                let shards = if arena {
+                    Vec::new()
+                } else {
+                    let n = dec.u32()? as usize;
+                    if n != machines.len() {
+                        return Err(WireError::Malformed(format!(
+                            "rebalance: {n} shards for {} machines",
+                            machines.len()
+                        )));
+                    }
+                    let mut shards = Vec::with_capacity(n.min(4096));
+                    for _ in 0..n {
+                        shards.push(dec.ids()?);
+                    }
+                    shards
+                };
+                let r = dec.u32()? as usize;
+                let mut replay = Vec::with_capacity(r.min(1024));
+                for _ in 0..r {
+                    replay.push(RoundTask::decode(&mut dec)?);
+                }
+                ToWorker::Rebalance { job, drop, machines, shards, arena, replay }
+            }
             t => return Err(WireError::Malformed(format!("unknown ToWorker tag {t}"))),
         };
         dec.finish()?;
@@ -1738,6 +1820,82 @@ mod tests {
         let payload = arena_attach.encode();
         assert!(payload.len() < 512, "arena attach is O(1) framing: {} bytes", payload.len());
         assert_eq!(ToWorker::decode(&payload).unwrap(), arena_attach);
+    }
+
+    #[test]
+    fn rebalance_frames_roundtrip_and_elide_arena_shards() {
+        let replay = vec![RoundTask::PruneSample {
+            base: vec![1, 2],
+            floor: 0.5,
+            tau: 1.0,
+            per_share: 4,
+            seed: 9,
+            round: 2,
+        }];
+        // wire form carries the adopted shards; drop-only moves are legal.
+        let msgs = [
+            ToWorker::Rebalance {
+                job: 0,
+                drop: vec![5],
+                machines: vec![3, 7],
+                shards: vec![vec![1, 2, 3], vec![4, 5]],
+                arena: false,
+                replay: replay.clone(),
+            },
+            ToWorker::Rebalance {
+                job: 42,
+                drop: vec![0, 1],
+                machines: vec![],
+                shards: vec![],
+                arena: false,
+                replay: vec![],
+            },
+        ];
+        for msg in msgs {
+            let framed = frame_roundtrip(&msg.encode());
+            assert_eq!(ToWorker::decode(&framed).unwrap(), msg);
+        }
+        // arena form is O(1): shard payloads never cross the wire.
+        let big: Vec<Vec<ElementId>> = (0..8).map(|m| vec![m as u32; 4096]).collect();
+        let wire = ToWorker::Rebalance {
+            job: 1,
+            drop: vec![],
+            machines: (0..8).collect(),
+            shards: big,
+            arena: false,
+            replay: vec![],
+        }
+        .encode();
+        let arena = ToWorker::Rebalance {
+            job: 1,
+            drop: vec![],
+            machines: (0..8).collect(),
+            shards: Vec::new(),
+            arena: true,
+            replay: vec![],
+        };
+        let payload = arena.encode();
+        assert!(
+            payload.len() < 128 && wire.len() > 100_000,
+            "arena rebalance {} bytes vs wire {} bytes",
+            payload.len(),
+            wire.len()
+        );
+        assert_eq!(ToWorker::decode(&payload).unwrap(), arena);
+        // a shard-count/machine-count mismatch is malformed, not a panic.
+        let bad = {
+            let mut enc = Enc::new();
+            enc.u8(7);
+            enc.u64(0);
+            enc.ids(&[]);
+            enc.ids(&[1, 2]); // two machines...
+            enc.bool(false);
+            enc.u32(1); // ...but one shard
+            enc.ids(&[9]);
+            enc.u32(0);
+            enc.buf
+        };
+        assert!(matches!(ToWorker::decode(&bad), Err(WireError::Malformed(_))));
     }
 
     #[test]

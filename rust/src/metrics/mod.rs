@@ -38,6 +38,14 @@ pub struct RoundStat {
     /// Frame bytes reshipped to surviving workers for machine adoption
     /// this round (a subset of `ipc_bytes_out`).
     pub reshipped_bytes: u64,
+    /// Replacement workers spawned into dead slots (or back-filled by
+    /// late joins) at this round's boundary — the elastic process
+    /// backend's closed recovery loop; 0 everywhere else.
+    pub respawns: u64,
+    /// Machines moved between workers by the deterministic rebalance
+    /// planner at this round's boundary (elastic process backend; 0
+    /// everywhere else).
+    pub rebalanced_machines: u64,
     /// Shard/sample payload bytes workers resolved from the mmap'd shard
     /// arena instead of receiving as frames this round (`@uds+arena`
     /// only; *not* a subset of `ipc_bytes_out` — these bytes never
@@ -63,6 +71,8 @@ impl RoundStat {
             ("ipc_bytes_in", Json::Num(self.ipc_bytes_in as f64)),
             ("recoveries", Json::Num(self.recoveries as f64)),
             ("reshipped_bytes", Json::Num(self.reshipped_bytes as f64)),
+            ("respawns", Json::Num(self.respawns as f64)),
+            ("rebalanced_machines", Json::Num(self.rebalanced_machines as f64)),
             ("mapped_bytes", Json::Num(self.mapped_bytes as f64)),
             ("wall_us", Json::Num(self.wall.as_micros() as f64)),
         ])
@@ -141,6 +151,19 @@ impl MrMetrics {
         self.rounds.iter().map(|r| r.reshipped_bytes).sum()
     }
 
+    /// Total replacement workers spawned (or back-filled) across rounds —
+    /// together with `total_recoveries`, the closed elastic loop: every
+    /// recovery should eventually be matched by a respawn returning the
+    /// pool to full size.
+    pub fn total_respawns(&self) -> u64 {
+        self.rounds.iter().map(|r| r.respawns).sum()
+    }
+
+    /// Total machines moved by the rebalance planner across rounds.
+    pub fn total_rebalanced_machines(&self) -> u64 {
+        self.rounds.iter().map(|r| r.rebalanced_machines).sum()
+    }
+
     /// Total payload bytes resolved from the shard arena across rounds
     /// (`@uds+arena` only; 0 on every wire path).
     pub fn total_mapped_bytes(&self) -> u64 {
@@ -198,6 +221,8 @@ mod tests {
             ipc_bytes_in: 50,
             recoveries: 1,
             reshipped_bytes: 40,
+            respawns: 1,
+            rebalanced_machines: 3,
             mapped_bytes: 16,
             wall: Duration::from_micros(100),
         }
@@ -222,6 +247,8 @@ mod tests {
         assert_eq!(m.total_ipc_bytes(), (200, 100));
         assert_eq!(m.total_recoveries(), 2);
         assert_eq!(m.total_reshipped_bytes(), 80);
+        assert_eq!(m.total_respawns(), 2);
+        assert_eq!(m.total_rebalanced_machines(), 6);
         assert_eq!(m.total_mapped_bytes(), 32);
         assert_eq!(m.total_wall(), Duration::from_micros(200));
         assert!(m.machine_budget() >= (1000f64 * 10.0).sqrt() as usize);

@@ -16,13 +16,27 @@
 //! [`crate::mapreduce::MrCluster::new`] computes it — and then shares it
 //! across all jobs via [`PoolLease`]s: each job *attaches* its dataset
 //! (job-keyed worker runtimes; see `ProcessPool::attach_job`) instead of
-//! paying a worker spawn, and detaches when it finishes. Workers are
-//! never re-spawned per job; a job whose dataset is byte-identical to the
+//! paying a worker spawn, and detaches when it finishes. Jobs never pay
+//! a per-job worker spawn; a job whose dataset is byte-identical to the
 //! pool's spawn dataset attaches with every shard payload elided through
 //! the zero-copy arena (the *arena-cache hit*, surfaced in
 //! [`ServeStats`]). Because one mutex guards the pool, concurrent jobs
 //! interleave at round granularity — worker streams never carry two
 //! jobs' frames at once, so replies cannot be misattributed.
+//!
+//! ## Elasticity
+//!
+//! Under `--recovery requeue[:R]` the shared pool is *self-healing*: a
+//! worker that dies mid-job is absorbed by the requeue path and replaced
+//! with a freshly spawned process at the next round boundary, so the pool
+//! returns to its `process:N` size instead of shrinking for the daemon's
+//! remaining lifetime ([`ServeStats::workers_respawned`] counts these).
+//! With `--elastic` the pool additionally *grows* past `N` (up to `2N`)
+//! while more jobs than workers are in flight, and the deterministic
+//! rebalance planner sheds machines onto the new workers between rounds.
+//! Neither mechanism touches selections: placement is invisible to
+//! results, so served jobs stay bit-identical to standalone runs even
+//! across deaths, respawns, and rebalances.
 //!
 //! On the in-process backends there is no pool: jobs run standalone.
 //! That path keeps the daemon fully testable without spawning worker
@@ -93,6 +107,10 @@ pub struct ServeStats {
     /// Workers still alive in the warm pool (0 before the first
     /// process-backend job).
     pub workers_alive: u64,
+    /// Replacement workers activated after the initial spawn: in-round
+    /// respawns after a death, late-join back-fills, and `--elastic`
+    /// growth (`ProcessPool::respawns`).
+    pub workers_respawned: u64,
 }
 
 struct DaemonState {
@@ -165,15 +183,15 @@ impl Daemon {
     /// Snapshot the serving counters.
     pub fn stats(&self) -> ServeStats {
         let st = lock_state(&self.shared);
-        let (arena_hits, arena_misses, workers_alive) = match &st.pool {
+        let (arena_hits, arena_misses, workers_alive, workers_respawned) = match &st.pool {
             Some(pool) => match pool.lock() {
                 Ok(p) => {
                     let (h, m) = p.arena_attach_stats();
-                    (h, m, p.alive_workers() as u64)
+                    (h, m, p.alive_workers() as u64, p.respawns())
                 }
-                Err(_) => (0, 0, 0),
+                Err(_) => (0, 0, 0, 0),
             },
-            None => (0, 0, 0),
+            None => (0, 0, 0, 0),
         };
         ServeStats {
             jobs_completed: st.jobs_completed,
@@ -181,6 +199,7 @@ impl Daemon {
             arena_misses,
             workers_spawned: st.workers_spawned,
             workers_alive,
+            workers_respawned,
         }
     }
 
@@ -331,8 +350,21 @@ fn run_job(
     cfg.seed = seed;
     cfg.machines = if machines == 0 { None } else { Some(machines) };
     cfg.oracle_spec = Some(spec.clone());
-    if let BackendKind::Process { .. } = cfg.backend_kind() {
+    if let BackendKind::Process { workers, .. } = cfg.backend_kind() {
         let pool = ensure_pool(shared, &inst, k, &cfg)?;
+        if cfg.elastic {
+            // pool size tracks job load: with more in-flight jobs than
+            // workers, grow (bounded at 2N — round-granularity interleaving
+            // caps the useful parallelism) and let the next rebalance shed
+            // machines onto the new workers.
+            let running =
+                lock_state(shared).jobs.values().filter(|s| s.as_str() == "running").count();
+            if running > workers {
+                if let Ok(mut p) = pool.lock() {
+                    p.grow_to(running.min(workers.saturating_mul(2)));
+                }
+            }
+        }
         cfg.shared_pool = Some(PoolLease { pool: Arc::clone(&pool), job: id });
         let out = run_experiment(&inst, alg.as_ref(), k, &cfg);
         if let Ok(mut p) = pool.lock() {
@@ -386,6 +418,7 @@ fn ensure_pool(
         exe: cfg.worker_exe.clone(),
         env: cfg.worker_env.clone(),
         recovery: cfg.recovery,
+        elastic: cfg.elastic,
     };
     let pool = Arc::new(Mutex::new(ProcessPool::spawn(&spec, &shards, &sample, &opts)?));
     let mut st = lock_state(shared);

@@ -379,6 +379,7 @@ fn recovery_pool(recovery: RecoveryPolicy, transport: Transport) -> ProcessPool 
         exe: Some(worker_exe()),
         env: Vec::new(),
         recovery,
+        elastic: false,
     })
     .expect("clean spawn")
 }
@@ -714,17 +715,164 @@ fn recovery_budget_exhaustion_is_a_structured_error() {
     }
 }
 
-/// Losing the last worker is unrecoverable regardless of budget: there is
-/// nobody left to adopt the machines.
+/// With replacement spawning disabled (the pre-elastic degraded mode),
+/// losing the last worker is unrecoverable regardless of budget: there is
+/// nobody left to adopt the machines. (With respawn on — the default —
+/// the same total loss is absorbed; see
+/// `total_worker_loss_recovers_when_respawn_closes_the_loop`.)
 #[test]
 fn last_worker_death_is_structured_even_under_requeue() {
     for transport in transports() {
         let mut pool = recovery_pool(RecoveryPolicy::Requeue { budget: 5 }, transport);
+        pool.set_respawn(false);
         for wi in 0..3 {
             pool.kill_worker(wi);
         }
         assert_worker_error(pool.round(&RoundTask::MaxSingleton), "surviving");
     }
+}
+
+/// Replacement spawning closes the recovery loop even under **total**
+/// worker loss: with budget >= N every dead slot is refilled by a fresh
+/// process within the same round, the re-queued machines land on the
+/// replacements (store state rebuilt by replay), and the replies stay
+/// bit-identical to an undisturbed pool — "last worker died" is no longer
+/// terminal when the pool may spawn its own survivors. The flip side
+/// stays bounded: a budget below the death count is still a structured
+/// budget error, never an infinite respawn loop.
+#[test]
+fn total_worker_loss_recovers_when_respawn_closes_the_loop() {
+    let prune = |round: u32| RoundTask::PruneSample {
+        base: vec![3, 50],
+        floor: 0.1,
+        tau: 0.4,
+        per_share: 8,
+        seed: 77,
+        round,
+    };
+    for transport in transports() {
+        let label = transport.to_string();
+        let mut elastic = recovery_pool(RecoveryPolicy::Requeue { budget: 5 }, transport.clone());
+        let mut reference = recovery_pool(RecoveryPolicy::Fail, transport);
+
+        let (r1e, _) = elastic.round(&prune(1)).unwrap();
+        let (r1r, _) = reference.round(&prune(1)).unwrap();
+        assert_eq!(r1e, r1r, "[{label}] clean round agrees");
+
+        for wi in 0..3 {
+            elastic.kill_worker(wi);
+        }
+        let (r2e, s2) = elastic
+            .round(&prune(2))
+            .unwrap_or_else(|e| panic!("[{label}] total loss must be absorbed: {e}"));
+        let (r2r, _) = reference.round(&prune(2)).unwrap();
+        assert_eq!(r2e, r2r, "[{label}] replies survive losing every worker");
+        assert_eq!(s2.recoveries, 3, "[{label}] every death is metered");
+        assert_eq!(s2.respawns, 3, "[{label}] every slot is replaced within the round");
+        assert_eq!(elastic.alive_workers(), 3, "[{label}] pool back to process:N size");
+    }
+    // under-provisioned: the 3rd death exceeds requeue:2 and stays a
+    // structured budget error.
+    let mut pool = recovery_pool(RecoveryPolicy::Requeue { budget: 2 }, Transport::Uds);
+    for wi in 0..3 {
+        pool.kill_worker(wi);
+    }
+    assert_worker_error(pool.round(&RoundTask::MaxSingleton), "budget");
+}
+
+/// Late-join elasticity on the external TCP topology, plus the parking
+/// regression: a `mrsub worker --connect` that dials in while a recovery
+/// round (and its `AdoptMachines` replay) is in flight must NOT be
+/// spliced into the running round — it is parked until the round closes,
+/// then back-fills the dead slot at the next boundary, where the
+/// rebalance planner sheds a machine (with full store replay) onto it.
+/// The replies of every round stay bit-identical to an undisturbed pool.
+#[test]
+fn late_join_is_parked_mid_round_then_backfills_the_dead_slot() {
+    let prune = |round: u32| RoundTask::PruneSample {
+        base: vec![3, 50],
+        floor: 0.1,
+        tau: 0.4,
+        per_share: 8,
+        seed: 77,
+        round,
+    };
+    // reserve a port, then release it for the pool to bind.
+    let port = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").expect("probe bind");
+        probe.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let spawn_worker = |id: usize| {
+        std::process::Command::new(worker_exe())
+            .args(["worker", "--connect", &addr, "--id", &id.to_string()])
+            .stdin(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn external worker")
+    };
+    // workers launched first; connect retries cover the bind window.
+    let mut w0 = spawn_worker(0);
+    let mut w1 = spawn_worker(1);
+
+    // same instance as `recovery_pool`, but 3 machines over 2 external
+    // workers (w0 hosts machines 0 and 2, w1 hosts machine 1) so the
+    // reference pool's per-machine replies are directly comparable.
+    let spec =
+        OracleSpec::Coverage { n: 120, universe: 80, avg_degree: 3, weighted: false, seed: 5 };
+    let shards: Vec<Vec<u32>> = vec![(0..40).collect(), (40..80).collect(), (80..120).collect()];
+    let sample: Vec<u32> = (0..120).step_by(7).collect();
+    let mut pool = ProcessPool::spawn(&spec, &shards, &sample, &PoolOptions {
+        workers: 2,
+        transport: Transport::Tcp { bind: Some(addr.clone()) },
+        timeout: std::time::Duration::from_secs(60),
+        connect_timeout: std::time::Duration::from_secs(60),
+        max_frame: 64 << 20,
+        exe: Some(worker_exe()),
+        env: Vec::new(),
+        recovery: RecoveryPolicy::Requeue { budget: 1 },
+        elastic: false,
+    })
+    .expect("external workers must join the pool");
+    let mut reference = recovery_pool(RecoveryPolicy::Fail, Transport::Uds);
+
+    let (r1, _) = pool.round(&prune(1)).unwrap();
+    let (r1r, _) = reference.round(&prune(1)).unwrap();
+    assert_eq!(r1, r1r, "external clean round agrees with the reference");
+
+    // kill worker 1 and immediately offer a replacement: the joiner dials
+    // in while round 2 — the recovery round, replay included — is in
+    // flight. Parked or still in the listener backlog, it must not be
+    // handed a mid-round partial store.
+    pool.kill_worker(1);
+    let mut joiner = spawn_worker(1);
+    let (r2, s2) = pool.round(&prune(2)).expect("death absorbed by the survivor");
+    let (r2r, _) = reference.round(&prune(2)).unwrap();
+    assert_eq!(r2, r2r, "recovery replies are joiner-independent (parked, not spliced)");
+    assert_eq!(s2.recoveries, 1, "the death is metered");
+    assert_eq!(s2.respawns, 0, "external slots are never respawned by the pool itself");
+    assert_eq!(pool.alive_workers(), 1, "mid-round the pool is still down a worker");
+
+    // let the joiner surely reach the listener, then cross a round
+    // boundary: the parked join back-fills slot 1 and the planner sheds
+    // the survivor's highest-id machine (with full replay) onto it.
+    std::thread::sleep(std::time::Duration::from_millis(500));
+    let (r3, s3) = pool.round(&prune(3)).unwrap();
+    let (r3r, _) = reference.round(&prune(3)).unwrap();
+    assert_eq!(r3, r3r, "back-fill + rebalance stay bit-identical");
+    assert_eq!(s3.respawns, 1, "the back-fill is metered as a respawn");
+    assert!(
+        s3.rebalanced_machines >= 1,
+        "the planner must shed load onto the joiner, got {}",
+        s3.rebalanced_machines
+    );
+    assert_eq!(pool.alive_workers(), 2, "pool back to full size");
+
+    drop(pool); // shutdown: surviving externals exit on their own.
+    for (name, child) in [("w0", &mut w0), ("joiner", &mut joiner)] {
+        let code = child.wait().expect("external worker reaped");
+        assert!(code.success(), "{name} must exit cleanly, got {code:?}");
+    }
+    let _ = w1.wait(); // killed out from under the pool; status is arbitrary.
 }
 
 /// A faulted run must not poison the coordinator: its metrics stay
@@ -868,10 +1016,12 @@ fn serve_daemon(
     backend: BackendKind,
     recovery: RecoveryPolicy,
     env: Vec<(String, String)>,
+    elastic: bool,
 ) -> Daemon {
     let mut c = cfg(0, backend);
     c.recovery = recovery;
     c.worker_env = env;
+    c.elastic = elastic;
     Daemon::start(ServeOptions { bind: "127.0.0.1:0".into(), cfg: c }).expect("daemon must bind")
 }
 
@@ -951,7 +1101,7 @@ fn shut_down(daemon: Daemon, addr: &str) {
 #[test]
 fn served_concurrent_jobs_are_bit_identical_to_standalone_serial() {
     let k = 6;
-    let daemon = serve_daemon(process(2, Transport::Uds), RecoveryPolicy::Fail, Vec::new());
+    let daemon = serve_daemon(process(2, Transport::Uds), RecoveryPolicy::Fail, Vec::new(), false);
     let addr = daemon.addr().to_string();
     let jobs: Vec<(&'static str, u64, OracleSpec)> =
         vec![("combined:0.15", 41, serve_spec(11)), ("randgreedi", 42, serve_spec(12))];
@@ -969,42 +1119,59 @@ fn served_concurrent_jobs_are_bit_identical_to_standalone_serial() {
     assert_eq!(stats.jobs_completed, 2);
     assert_eq!(stats.workers_spawned, 2, "one warm pool, spawned once, shared by both jobs");
     assert_eq!(stats.workers_alive, 2);
+    assert_eq!(stats.workers_respawned, 0, "no deaths, no growth: nothing to replace");
     shut_down(daemon, &addr);
 }
 
-/// A worker killed mid-job under `--recovery requeue:R` is absorbed by
-/// the serving pool **without disturbing the other in-flight job**: both
-/// jobs still answer bit-identically to standalone `Serial`, and the pool
-/// keeps running on the survivors — workers are never re-spawned, the
-/// orphaned machines are re-queued (job-keyed) onto the survivors.
+/// The serve-under-churn contract: concurrent jobs keep answering
+/// bit-identically to standalone `Serial` while the pool churns under
+/// them — a worker dies mid-job, a **replacement is spawned into its
+/// slot** (so the pool returns to full size instead of limping on the
+/// survivors), and under `--elastic` late workers join the pool as the
+/// job load exceeds the spawn size. [`ServeStats::workers_respawned`]
+/// counts every such activation.
 #[test]
-fn served_job_survives_worker_kill_without_disturbing_the_other() {
+fn served_jobs_survive_churn_with_replacement_and_elastic_growth() {
     let k = 6;
     // worker 1 dies on the first typed round it processes — whichever of
-    // the two concurrent jobs lands it; recovery must absorb either case,
-    // and the *other* job must cross the same dead worker unharmed.
+    // the concurrent jobs lands it; recovery must absorb either case, the
+    // other jobs must cross the same dead worker unharmed, and the
+    // replacement (fault stripped) must take the slot back.
     let daemon = serve_daemon(
-        process(3, Transport::Uds),
+        process(2, Transport::Uds),
         RecoveryPolicy::Requeue { budget: 2 },
         vec![("MRSUB_FAULT".to_string(), "die-mid-round@1".to_string())],
+        true,
     );
     let addr = daemon.addr().to_string();
-    let jobs: Vec<(&'static str, u64, OracleSpec)> =
-        vec![("randgreedi", 21, serve_spec(31)), ("randgreedi", 22, serve_spec(32))];
+    let jobs: Vec<(&'static str, u64, OracleSpec)> = vec![
+        ("randgreedi", 21, serve_spec(31)),
+        ("randgreedi", 22, serve_spec(32)),
+        ("combined:0.15", 23, serve_spec(33)),
+    ];
     let served = serve_submit_all(&addr, k, &jobs);
 
     let references = [
         standalone_serial(&RandGreeDi, k, 21, &serve_spec(31)),
         standalone_serial(&RandGreeDi, k, 22, &serve_spec(32)),
+        standalone_serial(&CombinedTwoRound::new(0.15), k, 23, &serve_spec(33)),
     ];
     for (i, ((sel, val), (rsel, rval))) in served.iter().zip(&references).enumerate() {
-        assert_eq!(sel, rsel, "job {i}: selections must survive the kill bit for bit");
-        assert_eq!(val.to_bits(), rval.to_bits(), "job {i}: value diverged after recovery");
+        assert_eq!(sel, rsel, "job {i}: selections must survive the churn bit for bit");
+        assert_eq!(val.to_bits(), rval.to_bits(), "job {i}: value diverged under churn");
     }
     let stats = daemon.stats();
-    assert_eq!(stats.jobs_completed, 2);
-    assert_eq!(stats.workers_spawned, 3, "recovery re-queues machines, never re-spawns workers");
-    assert_eq!(stats.workers_alive, 2, "exactly the faulted worker is gone");
+    assert_eq!(stats.jobs_completed, 3);
+    assert_eq!(stats.workers_spawned, 2, "the initial spawn happens exactly once");
+    assert!(
+        stats.workers_respawned >= 1,
+        "the killed worker's replacement must be counted (stats: {stats:?})"
+    );
+    assert!(
+        stats.workers_alive >= 2,
+        "the pool must return to at least its spawn size, got {}",
+        stats.workers_alive
+    );
     shut_down(daemon, &addr);
 }
 
@@ -1020,7 +1187,8 @@ fn same_spec_resubmission_is_an_arena_cache_hit() {
     let k = 6;
     let seed = 33;
     let spec = serve_spec(5);
-    let daemon = serve_daemon(process(2, Transport::UdsArena), RecoveryPolicy::Fail, Vec::new());
+    let daemon =
+        serve_daemon(process(2, Transport::UdsArena), RecoveryPolicy::Fail, Vec::new(), false);
     let addr = daemon.addr().to_string();
 
     let first = serve_submit(&addr, "randgreedi", k, seed, &spec);

@@ -1,0 +1,470 @@
+//! Seeded chaos harness for the elastic process backend.
+//!
+//! Each *schedule* is a deterministic program drawn from an LCG stream:
+//! a sequence of rounds, each pairing a typed [`RoundTask`] with a
+//! pre-round chaos event — kill a worker (the pool respawns a
+//! replacement in-round), disable respawn and kill (orphans pile onto
+//! survivors, manufacturing the imbalance the rebalance planner must
+//! later correct), or re-enable respawn (the next heal back-fills the
+//! dead slots and *steals* machines back onto them). Every schedule is
+//! run against a live [`ProcessPool`] on every transport and compared
+//! round-by-round against the `Serial` reference executed in-process
+//! over the same shards and stores: the replies must be **bit-identical
+//! regardless of what the chaos did**, and the pool must end the
+//! schedule back at full `process:N` size.
+//!
+//! A second matrix drives the external-TCP topology, where dead slots
+//! are never respawned by the pool — they are back-filled by late
+//! `mrsub worker --connect` joins launched mid-schedule.
+//!
+//! Reproducibility contract: every failure message carries the schedule
+//! seed and transport, failing seeds are appended to
+//! `target/chaos-failures.txt` (override with `MRSUB_CHAOS_ARTIFACT`)
+//! for CI artifact upload, and `MRSUB_CHAOS_SCHEDULES` narrows the run
+//! to a comma-separated seed list for replay, e.g.
+//! `MRSUB_CHAOS_SCHEDULES=11 cargo test --test elastic_chaos`.
+//!
+//! Run with `--test-threads=1` (the `./verify.sh chaos` mode) for
+//! deterministic worker-process lifecycles.
+
+use std::collections::BTreeSet;
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use mrsub::core::ElementId;
+use mrsub::mapreduce::backend::Serial;
+use mrsub::mapreduce::process::{PoolOptions, ProcessPool, RecoveryPolicy};
+use mrsub::mapreduce::shard::{run_task_all_cached, GuessStore, StateCache};
+use mrsub::mapreduce::transport::Transport;
+use mrsub::mapreduce::wire::RoundTask;
+use mrsub::oracle::spec::OracleSpec;
+
+/// The built `mrsub` binary — worker executable for pool spawns.
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_mrsub"))
+}
+
+// --- deterministic schedule generation ---------------------------------------
+
+/// Knuth MMIX LCG; the whole schedule derives from one u64 seed.
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Self {
+        // avoid the all-zeros fixpoint and decorrelate small seeds.
+        Lcg(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+    }
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 11
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// Pre-round chaos event. `Kill` relies on the in-round respawn to keep
+/// the pool whole; `StealKill` turns respawn off first so the orphans
+/// land on survivors and the dead slot lingers; `Reenable` turns respawn
+/// back on so the next heal back-fills the slots and the planner steals
+/// machines back onto the fresh (empty) workers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Chaos {
+    None,
+    Kill(usize),
+    StealKill(usize),
+    Reenable,
+}
+
+#[derive(Debug)]
+struct Step {
+    chaos: Chaos,
+    task: RoundTask,
+}
+
+/// Workers/machines in the chaos fixture (machine i ⇔ shard i at spawn).
+const POOL: usize = 3;
+/// Deaths allowed per schedule; the pool budget leaves headroom above it.
+const MAX_KILLS: u64 = 5;
+
+/// Draw one schedule: 5–7 rounds of (event, task), never killing the
+/// last survivor and never exceeding `MAX_KILLS` deaths.
+fn generate_schedule(seed: u64) -> Vec<Step> {
+    let mut rng = Lcg::new(seed);
+    let rounds = 5 + rng.below(3) as u32;
+    let mut steps = Vec::new();
+    let mut respawn_on = true;
+    // slots dead *right now* (only grows while respawn is off; a heal
+    // with respawn on refills every slot before the round runs).
+    let mut dead: BTreeSet<usize> = BTreeSet::new();
+    let mut kills = 0u64;
+
+    for round in 1..=rounds {
+        let alive: Vec<usize> = (0..POOL).filter(|w| !dead.contains(w)).collect();
+        let chaos = match rng.below(10) {
+            // kill with respawn on: replacement spawned in-round.
+            0 | 1 if respawn_on && kills < MAX_KILLS => {
+                let w = alive[rng.below(alive.len() as u64) as usize];
+                kills += 1;
+                Chaos::Kill(w)
+            }
+            // kill with respawn off: orphans pile onto survivors. Keep
+            // at least one survivor so the round stays recoverable.
+            2 | 3 if kills < MAX_KILLS && alive.len() >= 2 => {
+                let w = alive[rng.below(alive.len() as u64) as usize];
+                kills += 1;
+                dead.insert(w);
+                respawn_on = false;
+                Chaos::StealKill(w)
+            }
+            4 | 5 if !respawn_on => {
+                respawn_on = true;
+                dead.clear(); // the next heal back-fills every slot.
+                Chaos::Reenable
+            }
+            _ => Chaos::None,
+        };
+        let task = match rng.below(5) {
+            0 => RoundTask::MaxSingleton,
+            1 => RoundTask::LocalGreedy { k: 2 + rng.below(4) as usize },
+            2 => RoundTask::TopSingletons { k: 3, c: 2 },
+            3 => RoundTask::Filter {
+                base: distinct_pair(&mut rng),
+                tau: (1 + rng.below(3)) as f64,
+            },
+            _ => RoundTask::PruneSample {
+                base: distinct_pair(&mut rng),
+                floor: 0.5,
+                tau: 1.5,
+                per_share: 4 + rng.below(8) as usize,
+                seed: rng.next(),
+                round,
+            },
+        };
+        steps.push(Step { chaos, task });
+    }
+    // close the loop: whatever the chaos left behind, the final heal
+    // must return the pool to full size.
+    steps.push(Step { chaos: Chaos::Reenable, task: RoundTask::MaxSingleton });
+    steps
+}
+
+/// Two distinct element ids from the instance universe — a broadcast
+/// partial solution for `Filter`/`PruneSample` rounds.
+fn distinct_pair(rng: &mut Lcg) -> Vec<ElementId> {
+    let a = rng.below(120) as ElementId;
+    let mut b = rng.below(120) as ElementId;
+    if b == a {
+        b = (b + 1) % 120;
+    }
+    vec![a, b]
+}
+
+// --- fixture -----------------------------------------------------------------
+
+fn chaos_spec() -> OracleSpec {
+    OracleSpec::Coverage { n: 120, universe: 80, avg_degree: 3, weighted: false, seed: 5 }
+}
+
+fn chaos_shards() -> Vec<Vec<ElementId>> {
+    vec![(0..40).collect(), (40..80).collect(), (80..120).collect()]
+}
+
+fn chaos_sample() -> Vec<ElementId> {
+    (0..120).step_by(7).collect()
+}
+
+fn spawn_pool(transport: Transport) -> ProcessPool {
+    ProcessPool::spawn(&chaos_spec(), &chaos_shards(), &chaos_sample(), &PoolOptions {
+        workers: POOL,
+        transport,
+        timeout: std::time::Duration::from_secs(60),
+        connect_timeout: std::time::Duration::from_secs(60),
+        max_frame: 64 << 20,
+        exe: Some(worker_exe()),
+        env: Vec::new(),
+        recovery: RecoveryPolicy::Requeue { budget: (MAX_KILLS + 3) as usize },
+        elastic: false,
+    })
+    .expect("clean spawn")
+}
+
+/// The `Serial` reference: the same task sequence executed in-process
+/// over the same shards, with persistent per-machine stores and the
+/// coordinator-side state cache — the ground truth every chaotic pool
+/// run must match bit-for-bit.
+struct SerialRef {
+    oracle: std::sync::Arc<dyn mrsub::oracle::Oracle>,
+    shards: Vec<Vec<ElementId>>,
+    stores: Vec<GuessStore>,
+    cache: StateCache,
+}
+
+impl SerialRef {
+    fn new() -> Self {
+        SerialRef {
+            oracle: chaos_spec().build().expect("reference oracle"),
+            shards: chaos_shards(),
+            stores: vec![GuessStore::default(); POOL],
+            cache: StateCache::default(),
+        }
+    }
+    fn round(&mut self, task: &RoundTask) -> Vec<mrsub::mapreduce::wire::TaskReply> {
+        run_task_all_cached(
+            self.oracle.as_ref(),
+            &self.shards,
+            &mut self.stores,
+            &[0, 1, 2],
+            task,
+            &Serial,
+            &mut self.cache,
+        )
+    }
+}
+
+// --- harness plumbing --------------------------------------------------------
+
+/// Seeds to run: 1..=16 by default (× 4 transports = 64 schedules),
+/// overridable via `MRSUB_CHAOS_SCHEDULES` as a comma-separated list
+/// for replaying a failure.
+fn schedule_seeds() -> Vec<u64> {
+    match std::env::var("MRSUB_CHAOS_SCHEDULES") {
+        Ok(s) => s
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| t.trim().parse().expect("MRSUB_CHAOS_SCHEDULES: u64 seeds"))
+            .collect(),
+        Err(_) => (1..=16).collect(),
+    }
+}
+
+/// Append failing seeds to the CI artifact file (best-effort).
+fn record_failures(failures: &[String]) {
+    if failures.is_empty() {
+        return;
+    }
+    let path = std::env::var("MRSUB_CHAOS_ARTIFACT")
+        .unwrap_or_else(|_| "target/chaos-failures.txt".to_string());
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Ok(mut f) =
+        std::fs::OpenOptions::new().create(true).append(true).open(&path)
+    {
+        for line in failures {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+}
+
+/// Run one schedule against a live pool and the serial reference;
+/// `Err` carries a replayable description (seed, transport, round).
+fn run_schedule(seed: u64, transport: Transport) -> Result<(), String> {
+    let label = format!("seed={seed} transport={transport}");
+    let steps = generate_schedule(seed);
+    let mut pool = spawn_pool(transport);
+    let mut serial = SerialRef::new();
+    let mut kills = 0u64;
+    let mut respawns = 0u64;
+    let mut steals = 0u64;
+
+    for (i, step) in steps.iter().enumerate() {
+        match step.chaos {
+            Chaos::None => {}
+            Chaos::Kill(w) => {
+                pool.kill_worker(w);
+                kills += 1;
+            }
+            Chaos::StealKill(w) => {
+                pool.set_respawn(false);
+                pool.kill_worker(w);
+                kills += 1;
+                steals += 1;
+            }
+            Chaos::Reenable => pool.set_respawn(true),
+        }
+        let want = serial.round(&step.task);
+        let (got, stats) = pool.round(&step.task).map_err(|e| {
+            format!("{label}: round {i} ({:?} then {:?}) failed: {e}", step.chaos, step.task)
+        })?;
+        if got != want {
+            return Err(format!(
+                "{label}: round {i} ({:?} then {:?}) diverged from Serial",
+                step.chaos, step.task
+            ));
+        }
+        respawns += stats.respawns;
+    }
+    // acceptance: the loop is closed — every kill's slot was eventually
+    // refilled and the pool is back at `process:N` size.
+    if pool.alive_workers() != POOL {
+        return Err(format!(
+            "{label}: pool ended at {}/{POOL} workers",
+            pool.alive_workers()
+        ));
+    }
+    if respawns < kills {
+        return Err(format!(
+            "{label}: {kills} kills but only {respawns} respawns metered"
+        ));
+    }
+    if steals > 0 && pool.rebalanced_machines() == 0 {
+        return Err(format!(
+            "{label}: {steals} steal-kills but the planner never moved a machine"
+        ));
+    }
+    Ok(())
+}
+
+// --- the matrices ------------------------------------------------------------
+
+/// Kill / respawn / steal chaos × every pool-spawned transport. 16 seeds
+/// × 4 transports = 64 schedules by default, each bit-identical to
+/// `Serial` round-by-round.
+#[test]
+fn seeded_chaos_schedules_stay_bit_identical_on_every_transport() {
+    let seeds = schedule_seeds();
+    let mut failures = Vec::new();
+    for transport in
+        [Transport::Pipe, Transport::Uds, Transport::UdsArena, Transport::Tcp { bind: None }]
+    {
+        for &seed in &seeds {
+            if let Err(msg) = run_schedule(seed, transport.clone()) {
+                failures.push(msg);
+            }
+        }
+    }
+    record_failures(&failures);
+    assert!(
+        failures.is_empty(),
+        "{} chaos schedule(s) failed — replay with \
+         MRSUB_CHAOS_SCHEDULES=<seed> cargo test --test elastic_chaos:\n{}",
+        failures.len(),
+        failures.join("\n")
+    );
+}
+
+/// Late-join chaos on the external TCP topology: killed external workers
+/// are never respawned by the pool — a late `mrsub worker --connect`
+/// back-fills the dead slot at the next round boundary and the planner
+/// rebalances onto it. Replies stay bit-identical to `Serial` no matter
+/// when (relative to rounds) the joiner lands.
+#[test]
+fn seeded_late_join_schedules_stay_bit_identical_on_external_tcp() {
+    let seeds: Vec<u64> = schedule_seeds().into_iter().take(4).collect();
+    let mut failures = Vec::new();
+    for &seed in &seeds {
+        if let Err(msg) = run_late_join_schedule(seed) {
+            failures.push(msg);
+        }
+    }
+    record_failures(&failures);
+    assert!(
+        failures.is_empty(),
+        "{} late-join schedule(s) failed — replay with \
+         MRSUB_CHAOS_SCHEDULES=<seed> cargo test --test elastic_chaos:\n{}",
+        failures.len(),
+        failures.join("\n")
+    );
+}
+
+fn run_late_join_schedule(seed: u64) -> Result<(), String> {
+    let label = format!("seed={seed} transport=tcp(external)");
+    let mut rng = Lcg::new(seed ^ 0xC0FFEE);
+    // reserve a port, then release it for the pool to bind.
+    let port = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").expect("probe bind");
+        probe.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let spawn_worker = |id: usize| {
+        std::process::Command::new(worker_exe())
+            .args(["worker", "--connect", &addr, "--id", &id.to_string()])
+            .stdin(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn external worker")
+    };
+    const WORKERS: usize = 2;
+    let mut children = vec![spawn_worker(0), spawn_worker(1)];
+
+    let mut pool = ProcessPool::spawn(&chaos_spec(), &chaos_shards(), &chaos_sample(), &PoolOptions {
+        workers: WORKERS,
+        transport: Transport::Tcp { bind: Some(addr.clone()) },
+        timeout: std::time::Duration::from_secs(60),
+        connect_timeout: std::time::Duration::from_secs(60),
+        max_frame: 64 << 20,
+        exe: Some(worker_exe()),
+        env: Vec::new(),
+        recovery: RecoveryPolicy::Requeue { budget: 4 },
+        elastic: false,
+    })
+    .map_err(|e| format!("{label}: external spawn failed: {e}"))?;
+    let mut serial = SerialRef::new();
+
+    // one clean round, then two kill→late-join cycles at rng-chosen
+    // rounds; the joiner may land mid-round (parked) or between rounds
+    // (integrated at the heal) — replies must not depend on which.
+    let rounds = 6;
+    let mut kill_rounds: Vec<u32> = vec![2, 2 + 1 + rng.below(2) as u32 * 2];
+    kill_rounds.dedup();
+    let mut victim = 1usize;
+    for round in 1..=rounds {
+        if kill_rounds.contains(&round) {
+            pool.kill_worker(victim);
+            children.push(spawn_worker(victim));
+            victim = (victim + 1) % WORKERS;
+            if rng.below(2) == 0 {
+                // sometimes let the joiner settle into the listener
+                // backlog before the round; sometimes race it.
+                std::thread::sleep(std::time::Duration::from_millis(300));
+            }
+        }
+        let task = match rng.below(3) {
+            0 => RoundTask::MaxSingleton,
+            1 => RoundTask::LocalGreedy { k: 2 + rng.below(3) as usize },
+            _ => RoundTask::PruneSample {
+                base: distinct_pair(&mut rng),
+                floor: 0.5,
+                tau: 1.5,
+                per_share: 6,
+                seed: rng.next(),
+                round,
+            },
+        };
+        let want = serial.round(&task);
+        let (got, _) = pool
+            .round(&task)
+            .map_err(|e| format!("{label}: round {round} ({task:?}) failed: {e}"))?;
+        if got != want {
+            return Err(format!("{label}: round {round} ({task:?}) diverged from Serial"));
+        }
+    }
+    // the joins must have closed the loop by the final boundary: run one
+    // last quiet round so any still-parked joiner integrates, then check.
+    std::thread::sleep(std::time::Duration::from_millis(500));
+    let want = serial.round(&RoundTask::MaxSingleton);
+    let (got, _) = pool
+        .round(&RoundTask::MaxSingleton)
+        .map_err(|e| format!("{label}: settling round failed: {e}"))?;
+    if got != want {
+        return Err(format!("{label}: settling round diverged from Serial"));
+    }
+    if pool.alive_workers() != WORKERS {
+        return Err(format!(
+            "{label}: late joins never back-filled — {}/{WORKERS} workers alive",
+            pool.alive_workers()
+        ));
+    }
+    if pool.respawns() < kill_rounds.len() as u64 {
+        return Err(format!(
+            "{label}: {} kills but only {} back-fills metered",
+            kill_rounds.len(),
+            pool.respawns()
+        ));
+    }
+    drop(pool); // shutdown: surviving externals exit on their own.
+    for child in &mut children {
+        let _ = child.wait(); // killed workers exit nonzero; ignore.
+    }
+    Ok(())
+}

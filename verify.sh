@@ -6,6 +6,14 @@
 #   ./verify.sh conformance  backend-conformance matrix, single-threaded
 #                            (stable worker-process counts for the
 #                            shared-nothing process backend)
+#   ./verify.sh chaos        seeded elasticity chaos harness, single-
+#                            threaded: 64+ generated kill/respawn/
+#                            late-join/steal schedules across every
+#                            transport, each compared round-by-round
+#                            against the Serial reference; failing seeds
+#                            land in target/chaos-failures.txt (uploaded
+#                            as a CI artifact) and replay via
+#                            MRSUB_CHAOS_SCHEDULES=<seed>
 #   ./verify.sh ci           full (superset of fast) + conformance, then
 #                            an `mrsub bench` smoke whose JSON report is
 #                            validated against the committed bench-report
@@ -78,6 +86,13 @@ case "$mode" in
         check_ignores
         cargo build --release
         cargo test --test backend_conformance -- --test-threads=1
+        ;;
+    chaos)
+        check_ignores
+        cargo build --release
+        # stale failure artifacts would masquerade as this run's output.
+        rm -f rust/target/chaos-failures.txt target/chaos-failures.txt
+        cargo test --test elastic_chaos -- --test-threads=1
         ;;
     fast)
         check_ignores
@@ -237,7 +252,7 @@ PYEOF
         fi
         ;;
     *)
-        echo "usage: ./verify.sh [fast|conformance|ci|bench-diff|serve-smoke|lint|miri|asan|tsan]" >&2
+        echo "usage: ./verify.sh [fast|conformance|chaos|ci|bench-diff|serve-smoke|lint|miri|asan|tsan]" >&2
         exit 2
         ;;
 esac
