@@ -36,7 +36,7 @@ fn main() {
     let algs: Vec<(Box<dyn MrAlgorithm>, &str)> = vec![
         (Box::new(GreedyAlg), "1-1/e"),
         (Box::new(CombinedTwoRound::new(0.1)), "1/2-eps"),
-        (Box::new(RandGreeDi), "1/2 (dup)"),
+        (Box::new(RandGreeDi::default()), "1/2 (dup)"),
         (Box::new(MzCoreset), "0.27"),
         (Box::new(SamplePrune::new(0.2)), "1/2-eps"),
         (Box::new(StochasticGreedy::new(0.1)), "1-1/e-d"),

@@ -11,7 +11,7 @@ use std::collections::BinaryHeap;
 
 use super::finish;
 use super::threshold::block_marginals;
-use crate::core::{ElementId, Solution};
+use crate::core::{Constraint, ElementId, Solution};
 use crate::oracle::{Oracle, OracleState, StatePool};
 
 /// Max-heap entry: (cached marginal, element, stamp of last refresh).
@@ -101,6 +101,71 @@ pub fn lazy_greedy_extend(
         }
     }
     added
+}
+
+/// [`lazy_greedy_extend`] under an arbitrary independence system: the
+/// heap works exactly as in the unconstrained version, but a popped
+/// element the constraint no longer admits is discarded *permanently* —
+/// valid because matroid infeasibility is monotone in the selection (once
+/// `S + e` is infeasible it stays infeasible as `S` grows). The state's
+/// existing selection seeds the cursor, so the `k` bound and the
+/// constraint both count the total selection, not just the extension.
+/// Safe for non-monotone objectives: only strictly positive gains are
+/// ever inserted.
+pub fn constrained_greedy_extend(
+    state: &mut dyn OracleState,
+    candidates: &[ElementId],
+    k: usize,
+    constraint: &Constraint,
+) -> Vec<ElementId> {
+    let mut cursor = constraint.cursor();
+    for &e in state.selected() {
+        cursor.admit(e);
+    }
+    let mut heap = BinaryHeap::with_capacity(candidates.len());
+    let buf = block_marginals(state, candidates);
+    for (&e, &gain) in candidates.iter().zip(&buf) {
+        if gain > 0.0 {
+            heap.push(HeapItem { gain, e, stamp: 0 });
+        }
+    }
+    let mut added = Vec::new();
+    let mut stamp: u32 = 0;
+    while state.len() < k && !cursor.saturated() {
+        let Some(top) = heap.pop() else { break };
+        if !cursor.admits(top.e) {
+            continue;
+        }
+        if top.stamp == stamp {
+            if top.gain <= 0.0 {
+                break;
+            }
+            state.insert(top.e);
+            cursor.admit(top.e);
+            added.push(top.e);
+            stamp += 1;
+        } else {
+            let gain = state.marginal(top.e);
+            if gain > 0.0 {
+                heap.push(HeapItem { gain, e: top.e, stamp });
+            }
+        }
+    }
+    added
+}
+
+/// [`constrained_greedy_extend`] from a fresh state, packaged as a
+/// [`Solution`] — the central completion pass of the constrained
+/// distributed algorithms.
+pub fn constrained_greedy_over(
+    oracle: &dyn Oracle,
+    candidates: &[ElementId],
+    k: usize,
+    constraint: &Constraint,
+) -> Solution {
+    let mut state = oracle.state();
+    constrained_greedy_extend(state.as_mut(), candidates, k, constraint);
+    finish(oracle, state.selected().to_vec())
 }
 
 /// Lazy greedy over the full ground set.
@@ -215,6 +280,29 @@ mod tests {
         let added = lazy_greedy_extend(st.as_mut(), &(0..50).collect::<Vec<_>>(), 4);
         assert!(added.len() <= 2);
         assert!(st.len() <= 4);
+    }
+
+    #[test]
+    fn constrained_extend_with_cardinality_matches_unconstrained() {
+        let o = CoverageGen::new(80, 60, 4).build(6);
+        let all: Vec<ElementId> = (0..80).collect();
+        let mut a = o.state();
+        let mut b = o.state();
+        let got = constrained_greedy_extend(a.as_mut(), &all, 9, &Constraint::cardinality(9));
+        let want = lazy_greedy_extend(b.as_mut(), &all, 9);
+        assert_eq!(got, want, "cardinality cursor must not change the selection");
+    }
+
+    #[test]
+    fn constrained_extend_respects_partition_matroid() {
+        let o = CoverageGen::new(60, 40, 3).build(8);
+        // parts by e mod 4, one slot each: at most one element per residue.
+        let c = Constraint::partition_matroid((0..60).map(|e| e % 4).collect(), vec![1; 4]);
+        let all: Vec<ElementId> = (0..60).collect();
+        let mut st = o.state();
+        let added = constrained_greedy_extend(st.as_mut(), &all, 60, &c);
+        assert!(added.len() <= 4, "rank-4 matroid admits at most 4 elements");
+        assert!(c.is_feasible(&added), "selection must stay independent");
     }
 
     #[test]

@@ -10,11 +10,13 @@
 //! | [`combined`] | Theorem 8 (dense ∥ sparse) | 2 | 1/2 − ε |
 //! | [`greedy`] | sequential greedy / lazy / threshold greedy | — | 1 − 1/e |
 //! | [`stochastic`] | stochastic greedy | — | 1 − 1/e − ε (expectation) |
-//! | [`randgreedi`] | Barbosa et al. distributed greedy | 2 | 1/2 (w/ duplication caveats) |
+//! | [`randgreedi`] | Barbosa et al. distributed greedy (cardinality default; randomized-partition matroid/non-monotone form via `constrained`) | 2 (or rounds+1) | 1/2 (w/ duplication caveats) |
 //! | [`mz_coreset`] | Mirrokni–Zadimoghaddam core-sets | 2 | 0.27 |
 //! | [`sample_prune`] | Kumar et al. Sample&Prune | O(log(k)/ε) | 1/2 − ε |
+//! | [`dash`] | DASH low-adaptivity threshold sweep (cardinality or matroid) | O(log(k/ε)/ε) | 1/2 − ε |
 
 pub mod combined;
+pub mod dash;
 pub mod dense;
 pub mod greedy;
 pub mod multi_round;

@@ -9,23 +9,106 @@
 //! duplication caveats (the no-duplication form loses a constant factor —
 //! exactly the gap the paper's thresholding closes).
 
-use super::greedy::lazy_greedy_over;
+use super::greedy::{constrained_greedy_over, lazy_greedy_over};
 use super::{AlgResult, MrAlgorithm};
-use crate::core::{ElementId, Result, Solution};
+use crate::core::{derive_seed, Constraint, ElementId, Result, Solution};
 use crate::mapreduce::wire::{RoundTask, TaskReply};
 use crate::mapreduce::{ClusterConfig, MrCluster};
 use crate::oracle::Oracle;
 
 /// Barbosa et al.'s RandGreeDi (no duplication).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct RandGreeDi;
+///
+/// The default is the classic two-round cardinality form (physical shards,
+/// plain local greedy) — bit-identical to the historical behavior.
+/// [`RandGreeDi::constrained`] switches to the randomized-partition form of
+/// the non-monotone/matroid framework: each of `rounds` rounds draws a
+/// *fresh* random partition of the full ground set (derived machine-side
+/// from the round seed, no shuffle — see
+/// [`crate::mapreduce::shard::partition_of`]) and runs a constrained local
+/// greedy per part; the central machine completes over the pooled locals
+/// under the same constraint.
+#[derive(Debug, Clone)]
+pub struct RandGreeDi {
+    /// Independence system for the randomized-partition form; `None` =
+    /// the classic cardinality-only two-round algorithm.
+    pub constraint: Option<Constraint>,
+    /// Randomized-partition rounds (constrained form only; ≥ 1).
+    pub rounds: usize,
+}
+
+impl Default for RandGreeDi {
+    fn default() -> Self {
+        RandGreeDi { constraint: None, rounds: 1 }
+    }
+}
+
+impl RandGreeDi {
+    /// The randomized-partition constrained form (see type docs).
+    pub fn constrained(constraint: Constraint, rounds: usize) -> Self {
+        RandGreeDi { constraint: Some(constraint), rounds: rounds.max(1) }
+    }
+
+    fn run_constrained(
+        &self,
+        oracle: &dyn Oracle,
+        k: usize,
+        cfg: &ClusterConfig,
+        constraint: &Constraint,
+    ) -> Result<AlgResult> {
+        let n = oracle.ground_size();
+        constraint.validate(n)?;
+        let mut cluster = MrCluster::new(n, k, cfg)?;
+        let parts = cluster.machines() as u32;
+        let seed = derive_seed(cluster.seed(), 0x9B0_CAFE);
+
+        let mut best_local = Solution::empty();
+        let mut union: Vec<ElementId> = Vec::new();
+        for r in 0..self.rounds {
+            // machine m derives its logical part of the full ground set
+            // from (seed, r, m) — a true random re-partition per round
+            // with nothing shuffled over the wire.
+            let task = RoundTask::PartitionGreedy {
+                k,
+                parts,
+                constraint: constraint.clone(),
+                seed,
+                round: r as u32,
+            };
+            let locals: Vec<Vec<ElementId>> = cluster
+                .shard_round(&format!("r{}:partition-greedy", r + 1), 0, oracle, &task)?
+                .into_iter()
+                .map(TaskReply::into_ids)
+                .collect();
+            for t in &locals {
+                let v = oracle.value(t);
+                best_local = best_local.max(Solution { elements: t.clone(), value: v });
+            }
+            union.extend(locals.iter().flatten().copied());
+        }
+        union.sort_unstable();
+        union.dedup();
+
+        let received = union.len();
+        let central = cluster.central_round("rc:union-constrained-greedy", received, || {
+            constrained_greedy_over(oracle, &union, k, constraint)
+        })?;
+
+        Ok(AlgResult { solution: central.max(best_local), metrics: cluster.into_metrics() })
+    }
+}
 
 impl MrAlgorithm for RandGreeDi {
     fn name(&self) -> String {
-        "randgreedi".into()
+        match &self.constraint {
+            None => "randgreedi".into(),
+            Some(c) => format!("randgreedi({},r={})", c.label(), self.rounds),
+        }
     }
 
     fn run(&self, oracle: &dyn Oracle, k: usize, cfg: &ClusterConfig) -> Result<AlgResult> {
+        if let Some(constraint) = &self.constraint {
+            return self.run_constrained(oracle, k, cfg, constraint);
+        }
         let n = oracle.ground_size();
         let mut cluster = MrCluster::new(n, k, cfg)?;
 
@@ -79,7 +162,7 @@ mod tests {
     fn two_rounds_and_reasonable_quality() {
         let inst = PlantedCoverageGen::dense(10, 1000, 2000).generate(1);
         let opt = inst.known_opt.unwrap();
-        let res = RandGreeDi.run(inst.oracle.as_ref(), 10, &cfg(2)).unwrap();
+        let res = RandGreeDi::default().run(inst.oracle.as_ref(), 10, &cfg(2)).unwrap();
         assert_eq!(res.metrics.num_rounds(), 3);
         assert!(res.solution.value / opt >= 0.5, "randgreedi below 1/2 on easy instance");
     }
@@ -87,10 +170,35 @@ mod tests {
     #[test]
     fn never_worse_than_best_local() {
         let o = CoverageGen::new(400, 250, 4).build(3);
-        let res = RandGreeDi.run(&o, 10, &cfg(4)).unwrap();
+        let res = RandGreeDi::default().run(&o, 10, &cfg(4)).unwrap();
         // sanity: close to sequential greedy on random coverage.
         let g = lazy_greedy(&o, 10);
         assert!(res.solution.value >= 0.5 * g.value);
         assert!(res.solution.len() <= 10);
+    }
+
+    #[test]
+    fn constrained_form_is_feasible_and_competitive() {
+        let g = crate::workload::planted::PlantedMatroidGen::new(8, 400, 100, 1);
+        let inst = g.generate(11);
+        let c = g.constraint(inst.n);
+        let res = RandGreeDi::constrained(c.clone(), 2)
+            .run(inst.oracle.as_ref(), 8, &cfg(12))
+            .unwrap();
+        assert!(c.is_feasible(&res.solution.elements), "matroid violated");
+        let opt = inst.known_opt.unwrap();
+        assert!(res.solution.value / opt >= 0.4, "ratio {}", res.solution.value / opt);
+        // 2 partition rounds + 1 central round.
+        assert_eq!(res.metrics.num_rounds(), 3);
+    }
+
+    #[test]
+    fn constrained_form_handles_nonmonotone_dicut() {
+        let g = crate::workload::dicut::PlantedDicutGen::new(8, 60, 4);
+        let inst = g.generate(13);
+        let c = crate::core::Constraint::cardinality(8);
+        let res = RandGreeDi::constrained(c, 1).run(inst.oracle.as_ref(), 8, &cfg(14)).unwrap();
+        assert!(res.solution.value > 0.0, "dicut selection must cut something");
+        assert!(res.solution.len() <= 8);
     }
 }

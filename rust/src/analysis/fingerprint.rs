@@ -42,6 +42,7 @@ pub const ANCHORS: &[(&str, &str)] = &[
     ("rust/src/mapreduce/wire.rs", "pub enum FromWorker"),
     ("rust/src/mapreduce/wire.rs", "pub enum ClientRequest"),
     ("rust/src/mapreduce/wire.rs", "pub enum ClientResponse"),
+    ("rust/src/core/constraint.rs", "pub enum Constraint"),
     ("rust/src/oracle/spec.rs", "pub enum OracleSpec"),
 ];
 

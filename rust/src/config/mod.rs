@@ -19,8 +19,11 @@
 //! [algorithm]
 //! kind = "combined"        # two-round | multi-round | dense | sparse |
 //!                          # combined | greedy | stochastic | randgreedi |
-//!                          # mz-coreset | sample-prune
+//!                          # mz-coreset | sample-prune | dash
 //! eps = 0.1
+//! # randgreedi / dash accept `matroid-parts = p` to run under an
+//! # `e mod p` unit-capacity partition matroid (randgreedi additionally
+//! # takes `rounds = r` randomized-partition rounds)
 //!
 //! [cluster]
 //! sample_factor = 4.0
@@ -53,6 +56,7 @@
 use std::path::Path;
 
 use crate::algorithms::combined::CombinedTwoRound;
+use crate::algorithms::dash::Dash;
 use crate::algorithms::dense::DenseTwoRound;
 use crate::algorithms::greedy;
 use crate::algorithms::multi_round::MultiRound;
@@ -63,7 +67,7 @@ use crate::algorithms::sparse::SparseTwoRound;
 use crate::algorithms::stochastic::StochasticGreedy;
 use crate::algorithms::two_round::TwoRoundKnownOpt;
 use crate::algorithms::{AlgResult, MrAlgorithm};
-use crate::core::{Error, Result};
+use crate::core::{Constraint, Error, Result};
 use crate::mapreduce::backend::BackendKind;
 use crate::mapreduce::process::RecoveryPolicy;
 use crate::mapreduce::ClusterConfig;
@@ -407,8 +411,15 @@ pub enum AlgorithmConfig {
         /// Failure probability δ.
         delta: f64,
     },
-    /// Barbosa et al. RandGreeDi baseline.
-    Randgreedi,
+    /// Barbosa et al. RandGreeDi baseline; with `matroid_parts` set it
+    /// runs the randomized-partition constrained form under an `e mod p`
+    /// unit-capacity partition matroid.
+    Randgreedi {
+        /// `Some(p)` selects the constrained randomized-partition form.
+        matroid_parts: Option<usize>,
+        /// Randomized-partition rounds (constrained form only).
+        rounds: usize,
+    },
     /// Mirrokni–Zadimoghaddam core-set baseline.
     MzCoreset,
     /// Kumar et al. Sample&Prune baseline.
@@ -416,6 +427,40 @@ pub enum AlgorithmConfig {
         /// Threshold decay ε.
         eps: f64,
     },
+    /// DASH low-adaptivity threshold sweep (cardinality by default,
+    /// `e mod p` unit-cap partition matroid with `matroid_parts`).
+    Dash {
+        /// Threshold decay ε.
+        eps: f64,
+        /// `Some(p)` runs under a partition matroid instead of cardinality.
+        matroid_parts: Option<usize>,
+    },
+}
+
+/// The algorithm kinds [`AlgorithmConfig::from_table`] accepts, quoted in
+/// its unknown-kind error so a typo'd config names the valid set.
+pub const ALGORITHM_KINDS: &[&str] = &[
+    "two-round",
+    "multi-round",
+    "dense",
+    "sparse",
+    "combined",
+    "greedy",
+    "stochastic",
+    "randgreedi",
+    "mz-coreset",
+    "sample-prune",
+    "dash",
+];
+
+/// The `e mod p` unit-capacity partition matroid over `n` elements — the
+/// config-file spelling of a matroid constraint (matches
+/// [`crate::workload::planted::PlantedMatroidGen`]).
+fn modular_partition_matroid(n: usize, parts: usize) -> Constraint {
+    Constraint::partition_matroid((0..n).map(|e| (e % parts.max(1)) as u32).collect(), vec![
+        1;
+        parts.max(1)
+    ])
 }
 
 impl AlgorithmConfig {
@@ -434,10 +479,22 @@ impl AlgorithmConfig {
             "combined" => AlgorithmConfig::Combined { eps: req_f64(t, "eps", ctx)? },
             "greedy" => AlgorithmConfig::Greedy,
             "stochastic" => AlgorithmConfig::Stochastic { delta: req_f64(t, "delta", ctx)? },
-            "randgreedi" => AlgorithmConfig::Randgreedi,
+            "randgreedi" => AlgorithmConfig::Randgreedi {
+                matroid_parts: t.get("matroid-parts").and_then(|v| v.as_usize()),
+                rounds: opt_usize(t, "rounds", 1),
+            },
             "mz-coreset" => AlgorithmConfig::MzCoreset,
             "sample-prune" => AlgorithmConfig::SamplePrune { eps: req_f64(t, "eps", ctx)? },
-            other => return Err(Error::Config(format!("unknown algorithm kind {other:?}"))),
+            "dash" => AlgorithmConfig::Dash {
+                eps: req_f64(t, "eps", ctx)?,
+                matroid_parts: t.get("matroid-parts").and_then(|v| v.as_usize()),
+            },
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown algorithm kind {other:?} (valid kinds: {})",
+                    ALGORITHM_KINDS.join(", ")
+                )))
+            }
         })
     }
 
@@ -461,9 +518,22 @@ impl AlgorithmConfig {
             AlgorithmConfig::Combined { eps } => Box::new(CombinedTwoRound::new(*eps)),
             AlgorithmConfig::Greedy => Box::new(GreedyAlg),
             AlgorithmConfig::Stochastic { delta } => Box::new(StochasticGreedy::new(*delta)),
-            AlgorithmConfig::Randgreedi => Box::new(RandGreeDi),
+            AlgorithmConfig::Randgreedi { matroid_parts, rounds } => match matroid_parts {
+                None => Box::new(RandGreeDi::default()),
+                Some(p) => Box::new(RandGreeDi::constrained(
+                    modular_partition_matroid(instance.n, *p),
+                    *rounds,
+                )),
+            },
             AlgorithmConfig::MzCoreset => Box::new(MzCoreset),
             AlgorithmConfig::SamplePrune { eps } => Box::new(SamplePrune::new(*eps)),
+            AlgorithmConfig::Dash { eps, matroid_parts } => match matroid_parts {
+                None => Box::new(Dash::new(*eps)),
+                Some(p) => Box::new(Dash::constrained(
+                    *eps,
+                    modular_partition_matroid(instance.n, *p),
+                )),
+            },
         }
     }
 }
@@ -780,8 +850,11 @@ mod tests {
             "kind = \"greedy\"",
             "kind = \"stochastic\"\ndelta = 0.1",
             "kind = \"randgreedi\"",
+            "kind = \"randgreedi\"\nmatroid-parts = 5\nrounds = 2",
             "kind = \"mz-coreset\"",
             "kind = \"sample-prune\"\neps = 0.2",
+            "kind = \"dash\"\neps = 0.2",
+            "kind = \"dash\"\neps = 0.2\nmatroid-parts = 5",
         ];
         for text in kinds {
             let doc = Document::parse(text).unwrap();
@@ -795,6 +868,20 @@ mod tests {
                 )
                 .unwrap();
             assert!(res.solution.len() <= 5, "{text}");
+        }
+    }
+
+    #[test]
+    fn unknown_algorithm_kind_names_the_valid_set() {
+        let doc = Document::parse("kind = \"gredy\"").unwrap();
+        match AlgorithmConfig::from_table(&doc.root) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("gredy"), "{msg}");
+                for kind in ALGORITHM_KINDS {
+                    assert!(msg.contains(kind), "error must name {kind:?}: {msg}");
+                }
+            }
+            other => panic!("expected Config error, got {other:?}"),
         }
     }
 

@@ -19,7 +19,7 @@ use crate::workload::Instance;
 /// (`"schema_version"`). Bump whenever a report field is added, removed,
 /// or changes meaning; `tests/bench_report_schema.rs` pins the committed
 /// fixture against this so report consumers cannot break silently.
-pub const BENCH_SCHEMA_VERSION: u32 = 3;
+pub const BENCH_SCHEMA_VERSION: u32 = 4;
 
 /// One algorithm × instance execution, fully accounted.
 #[derive(Debug, Clone)]

@@ -1,0 +1,294 @@
+//! Feasibility constraints for the non-monotone / matroid algorithm family
+//! (Barbosa–Ene–Nguyen–Ward, arXiv 1502.02606; DASH, arXiv 2206.09563).
+//!
+//! The paper's two algorithms are cardinality-constrained; the randomized
+//! distributed framework and DASH both run against an abstract independence
+//! system. This module captures the two systems the repo supports —
+//! uniform (cardinality) and partition matroids — as a small, wire-encodable
+//! value type plus an incremental feasibility cursor that algorithms thread
+//! through their selection loops. Feasibility here is *monotone in the
+//! selection*: once `S + e` is infeasible it stays infeasible as `S` grows,
+//! which is exactly the property lazy greedy needs to discard an element
+//! permanently on its first rejection.
+
+use super::{ElementId, Error, Result};
+
+/// An independence system the algorithms select under.
+///
+/// Wire encoding lives in [`crate::mapreduce::wire`] (the enum is part of
+/// the fingerprinted wire surface — see `rust/src/analysis/fingerprint.rs`),
+/// so coordinators can ship constraint-carrying round tasks to workers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Constraint {
+    /// Uniform matroid: any set of at most `k` elements is feasible.
+    Cardinality {
+        /// Cardinality bound (rank of the uniform matroid).
+        k: usize,
+    },
+    /// Partition matroid: element `e` belongs to part `parts[e]`, and a
+    /// set is feasible iff it holds at most `capacities[p]` elements of
+    /// every part `p`.
+    PartitionMatroid {
+        /// Part id per ground-set element (`parts.len() == n`).
+        parts: Vec<u32>,
+        /// Per-part selection capacity (`parts[e] < capacities.len()`).
+        capacities: Vec<usize>,
+    },
+}
+
+impl Constraint {
+    /// Uniform matroid of rank `k`.
+    pub fn cardinality(k: usize) -> Self {
+        Constraint::Cardinality { k }
+    }
+
+    /// Partition matroid from a per-element part map and per-part caps.
+    pub fn partition_matroid(parts: Vec<u32>, capacities: Vec<usize>) -> Self {
+        Constraint::PartitionMatroid { parts, capacities }
+    }
+
+    /// Short display label for metrics and error messages.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Constraint::Cardinality { .. } => "cardinality",
+            Constraint::PartitionMatroid { .. } => "partition-matroid",
+        }
+    }
+
+    /// Check the constraint against a ground set of size `n`, rejecting
+    /// degenerate or mismatched instances with structured errors before
+    /// any round runs: a rank-zero system (`k = 0`, or all caps zero), a
+    /// part map whose length is not `n`, or a part id without a capacity
+    /// entry.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        match self {
+            Constraint::Cardinality { k } => {
+                if *k == 0 || *k > n {
+                    return Err(Error::InvalidK { k: *k, n });
+                }
+            }
+            Constraint::PartitionMatroid { parts, capacities } => {
+                if parts.len() != n {
+                    return Err(Error::Config(format!(
+                        "partition matroid covers {} elements but the ground set has {n}",
+                        parts.len()
+                    )));
+                }
+                if let Some((e, &p)) = parts
+                    .iter()
+                    .enumerate()
+                    .find(|(_, &p)| p as usize >= capacities.len())
+                {
+                    return Err(Error::Config(format!(
+                        "element {e} is in part {p} but only {} capacities are defined",
+                        capacities.len()
+                    )));
+                }
+                if self.rank() == 0 {
+                    return Err(Error::InvalidK { k: 0, n });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Rank of the system: the size of the largest feasible set. For a
+    /// partition matroid this accounts for parts smaller than their cap
+    /// (an absent element can't be selected), so it is exact, not the cap
+    /// sum.
+    pub fn rank(&self) -> usize {
+        match self {
+            Constraint::Cardinality { k } => *k,
+            Constraint::PartitionMatroid { parts, capacities } => {
+                let mut sizes = vec![0usize; capacities.len()];
+                for &p in parts {
+                    if let Some(s) = sizes.get_mut(p as usize) {
+                        *s += 1;
+                    }
+                }
+                sizes.iter().zip(capacities).map(|(&s, &c)| s.min(c)).sum()
+            }
+        }
+    }
+
+    /// Fresh incremental feasibility cursor (empty selection).
+    pub fn cursor(&self) -> ConstraintCursor<'_> {
+        let fills = match self {
+            Constraint::Cardinality { .. } => Vec::new(),
+            Constraint::PartitionMatroid { capacities, .. } => vec![0usize; capacities.len()],
+        };
+        ConstraintCursor { constraint: self, selected: 0, rank: self.rank(), fills }
+    }
+
+    /// True iff `set` is feasible (replays it through a cursor).
+    pub fn is_feasible(&self, set: &[ElementId]) -> bool {
+        let mut cur = self.cursor();
+        set.iter().all(|&e| cur.admit(e))
+    }
+}
+
+/// Incremental feasibility state for one growing selection — O(1) per
+/// admit/test, shared by the shard-side constrained greedy and the central
+/// completion passes so both enforce the identical membership rule.
+#[derive(Debug, Clone)]
+pub struct ConstraintCursor<'a> {
+    constraint: &'a Constraint,
+    selected: usize,
+    /// Cached [`Constraint::rank`] (O(n) to recompute for matroids).
+    rank: usize,
+    /// Per-part selection counts (partition matroid only).
+    fills: Vec<usize>,
+}
+
+impl ConstraintCursor<'_> {
+    /// Would `S + e` stay feasible?
+    pub fn admits(&self, e: ElementId) -> bool {
+        match self.constraint {
+            Constraint::Cardinality { k } => self.selected < *k,
+            Constraint::PartitionMatroid { parts, capacities } => {
+                match parts.get(e as usize).map(|&p| p as usize) {
+                    Some(p) => self.fills[p] < capacities[p],
+                    None => false, // out-of-range element: never feasible.
+                }
+            }
+        }
+    }
+
+    /// Record `e` as selected if feasible; returns whether it was admitted.
+    pub fn admit(&mut self, e: ElementId) -> bool {
+        if !self.admits(e) {
+            return false;
+        }
+        if let Constraint::PartitionMatroid { parts, .. } = self.constraint {
+            self.fills[parts[e as usize] as usize] += 1;
+        }
+        self.selected += 1;
+        true
+    }
+
+    /// Elements admitted so far.
+    pub fn len(&self) -> usize {
+        self.selected
+    }
+
+    /// True iff nothing has been admitted yet.
+    pub fn is_empty(&self) -> bool {
+        self.selected == 0
+    }
+
+    /// True iff no further element can ever be admitted.
+    pub fn saturated(&self) -> bool {
+        self.selected >= self.rank
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cardinality_cursor_counts() {
+        let c = Constraint::cardinality(2);
+        c.validate(5).unwrap();
+        assert_eq!(c.rank(), 2);
+        let mut cur = c.cursor();
+        assert!(cur.is_empty());
+        assert!(cur.admit(3));
+        assert!(cur.admit(0));
+        assert_eq!(cur.len(), 2);
+        assert!(!cur.admits(4), "rank reached");
+        assert!(!cur.admit(4));
+        assert!(cur.saturated());
+        assert!(c.is_feasible(&[1, 2]));
+        assert!(!c.is_feasible(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn zero_k_is_a_structured_error() {
+        match Constraint::cardinality(0).validate(10) {
+            Err(Error::InvalidK { k: 0, n: 10 }) => {}
+            other => panic!("expected InvalidK, got {other:?}"),
+        }
+        // and so is k past the ground set, matching MrCluster::new.
+        assert!(matches!(
+            Constraint::cardinality(11).validate(10),
+            Err(Error::InvalidK { k: 11, n: 10 })
+        ));
+    }
+
+    #[test]
+    fn partition_matroid_enforces_per_part_caps() {
+        // elements 0..6 in parts e % 3, one slot per part.
+        let c = Constraint::partition_matroid(vec![0, 1, 2, 0, 1, 2], vec![1, 1, 1]);
+        c.validate(6).unwrap();
+        assert_eq!(c.rank(), 3);
+        let mut cur = c.cursor();
+        assert!(cur.admit(0));
+        assert!(!cur.admits(3), "part 0 is full");
+        assert!(cur.admit(4));
+        assert!(cur.admit(2));
+        assert!(cur.saturated());
+        assert!(c.is_feasible(&[0, 1, 2]));
+        assert!(!c.is_feasible(&[0, 3]));
+    }
+
+    #[test]
+    fn single_partition_matroid_degenerates_to_cardinality() {
+        // one part holding everything, cap c: feasibility must agree with
+        // Cardinality { k: c } on every prefix of every insertion order.
+        let n = 12u32;
+        let cap = 4usize;
+        let matroid = Constraint::partition_matroid(vec![0; n as usize], vec![cap]);
+        let uniform = Constraint::cardinality(cap);
+        matroid.validate(n as usize).unwrap();
+        assert_eq!(matroid.rank(), uniform.rank());
+        let order: Vec<ElementId> = (0..n).rev().collect();
+        let mut mc = matroid.cursor();
+        let mut uc = uniform.cursor();
+        for &e in &order {
+            assert_eq!(mc.admits(e), uc.admits(e), "element {e}");
+            assert_eq!(mc.admit(e), uc.admit(e));
+            assert_eq!(mc.saturated(), uc.saturated());
+        }
+        assert_eq!(mc.len(), cap);
+    }
+
+    #[test]
+    fn infeasible_ground_sets_are_rejected_with_structured_errors() {
+        // part map shorter than the ground set.
+        match Constraint::partition_matroid(vec![0, 0], vec![1]).validate(5) {
+            Err(Error::Config(m)) => {
+                assert!(m.contains("covers 2") && m.contains("has 5"), "{m}")
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // part id without a capacity entry.
+        match Constraint::partition_matroid(vec![0, 7], vec![1]).validate(2) {
+            Err(Error::Config(m)) => {
+                assert!(m.contains("part 7") && m.contains("1 capacities"), "{m}")
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // all-zero capacities: a rank-zero system can select nothing.
+        assert!(matches!(
+            Constraint::partition_matroid(vec![0, 1], vec![0, 0]).validate(2),
+            Err(Error::InvalidK { k: 0, n: 2 })
+        ));
+    }
+
+    #[test]
+    fn rank_accounts_for_small_parts() {
+        // part 1 has cap 3 but only one element, so rank is 1 + 1, not 4.
+        let c = Constraint::partition_matroid(vec![0, 0, 1], vec![1, 3]);
+        assert_eq!(c.rank(), 2);
+    }
+
+    #[test]
+    fn out_of_range_element_is_never_admitted() {
+        let c = Constraint::partition_matroid(vec![0, 0], vec![2]);
+        let mut cur = c.cursor();
+        assert!(!cur.admits(9));
+        assert!(!cur.admit(9));
+        assert!(cur.is_empty());
+    }
+}

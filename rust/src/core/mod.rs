@@ -1,5 +1,10 @@
 //! Core types shared across the library: element identifiers, solutions,
-//! and small numeric helpers used by the algorithms and the metering code.
+//! feasibility constraints, and small numeric helpers used by the
+//! algorithms and the metering code.
+
+pub mod constraint;
+
+pub use constraint::{Constraint, ConstraintCursor};
 
 /// Ground-set element identifier. Instances index elements `0..n`.
 pub type ElementId = u32;

@@ -9,10 +9,11 @@
 //! mrsub adversarial [--t-max T] [--k K]
 //!                                  Theorem-4 tightness (E3 series)
 //! mrsub bench [--n N] [--k K] [--families a,b,..] [--backends serial,rayon]
-//!             [--sizes NxK,NxK,..] [--seed S] [--output report.json]
+//!             [--algorithms combined,dash,..] [--sizes NxK,NxK,..] [--seed S]
+//!             [--output report.json]
 //!                                  batched-vs-scalar hot path × families,
-//!                                  plus backend × family × (n,k) cluster
-//!                                  sweep; writes the JSON report
+//!                                  plus algorithm × backend × family × (n,k)
+//!                                  cluster sweep; writes the JSON report
 //! mrsub bench-diff --baseline B.json --current C.json [--tolerance 0.15]
 //!                  [--output diff.json]
 //!                                  regression gate against a committed
@@ -34,6 +35,7 @@
 use std::sync::Arc;
 
 use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::dash::Dash;
 use mrsub::algorithms::multi_round::MultiRound;
 use mrsub::algorithms::mz_coreset::MzCoreset;
 use mrsub::algorithms::randgreedi::RandGreeDi;
@@ -46,7 +48,7 @@ use mrsub::config::{GreedyAlg, RunConfig};
 use mrsub::coordinator::{
     bench_diff, render_table, run_experiment, write_json, BENCH_SCHEMA_VERSION,
 };
-use mrsub::core::{threshold_bound, ElementId, Error, Result};
+use mrsub::core::{threshold_bound, Constraint, ElementId, Error, Result};
 use mrsub::mapreduce::backend::BackendKind;
 use mrsub::mapreduce::process::RecoveryPolicy;
 use mrsub::mapreduce::wire::{ClientRequest, ClientResponse};
@@ -61,6 +63,7 @@ use mrsub::util::rng::Rng;
 use mrsub::workload::adversarial::AdversarialGen;
 use mrsub::workload::corpus::ZipfCorpusGen;
 use mrsub::workload::coverage::CoverageGen;
+use mrsub::workload::dicut::PlantedDicutGen;
 use mrsub::workload::facility::FacilityGen;
 use mrsub::workload::graph::GraphGen;
 use mrsub::workload::planted::PlantedCoverageGen;
@@ -158,9 +161,13 @@ const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff
   sweep-t       [--t-max 6] [--k 20] [--seed 7]
   adversarial   [--t-max 5] [--k 60]
   bench         [--n 4096] [--k 32] [--seed 11]
-                [--families coverage,zipf,facility,cut,concave,modular,adversarial]
+                [--families coverage,zipf,facility,cut,concave,modular,adversarial,dicut]
+                [--algorithms combined,greedy,randgreedi,randgreedi-matroid,dash,dash-matroid]
                 [--backends serial,rayon,process:4@uds] [--backend process:4]
                 [--sizes 8000x20,32000x40] [--output bench_report.json]
+                (matroid variants run under an e mod k unit-capacity
+                partition matroid; unknown --algorithms names are rejected
+                with the valid set)
   bench-diff    --baseline BENCH_baseline.json --current bench_report.json
                 [--tolerance 0.15] [--output bench_diff.json]
                 compares batched-marginal throughput and per-round IPC
@@ -190,7 +197,7 @@ const USAGE: &str = "usage: mrsub <run|demo|sweep-t|adversarial|bench|bench-diff
                 Stop it with `mrsub submit --shutdown`
   submit        [--connect 127.0.0.1:7171] [--family coverage|modular|concave]
                 [--n 4096] [--k 32] [--seed 7] [--machines 0 (auto)]
-                [--algorithm combined[:eps]|randgreedi|greedy]
+                [--algorithm combined[:eps]|randgreedi|greedy|dash[:eps]]
                 [--output record.json] [--shutdown]
                 submit one job to a running `mrsub serve` daemon and print
                 the returned selection/value (--output saves the full
@@ -291,7 +298,8 @@ fn cmd_demo(args: &Args, elastic: bool) -> Result<()> {
         Box::new(CombinedTwoRound::new(0.1)),
         Box::new(MultiRound::known(3, opt)),
         Box::new(MultiRound::guessing(3, 0.2)),
-        Box::new(RandGreeDi),
+        Box::new(RandGreeDi::default()),
+        Box::new(Dash::new(0.1)),
         Box::new(MzCoreset),
         Box::new(SamplePrune::new(0.2)),
         Box::new(StochasticGreedy::new(0.1)),
@@ -347,7 +355,40 @@ fn cmd_adversarial(t_max: usize, k: usize) -> Result<()> {
 // --- `mrsub bench`: batched-vs-scalar × backends × families × (n, k) -------
 
 const ALL_FAMILIES: &[&str] =
-    &["coverage", "zipf", "facility", "cut", "concave", "modular", "adversarial"];
+    &["coverage", "zipf", "facility", "cut", "concave", "modular", "adversarial", "dicut"];
+
+/// Algorithm axis accepted by `mrsub bench --algorithms`. Matroid variants
+/// run under an `e mod k` unit-capacity partition matroid (rank = k), so a
+/// row stays comparable with its cardinality sibling.
+const BENCH_ALGORITHMS: &[&str] =
+    &["combined", "greedy", "randgreedi", "randgreedi-matroid", "dash", "dash-matroid"];
+
+/// The `e mod parts` unit-capacity partition matroid used by the bench
+/// matroid variants (same shape the TOML `matroid-parts` key builds).
+fn bench_matroid(n: usize, parts: usize) -> Constraint {
+    let p = parts.max(1);
+    let ids: Vec<u32> = (0..n).map(|e| (e % p) as u32).collect();
+    Constraint::partition_matroid(ids, vec![1; p])
+}
+
+/// Build one bench algorithm by name for an instance of size `n` with
+/// cardinality bound `k`. Unknown names get a structured error naming the
+/// full valid set.
+fn bench_algorithm(name: &str, n: usize, k: usize) -> Result<Box<dyn MrAlgorithm>> {
+    Ok(match name {
+        "combined" => Box::new(CombinedTwoRound::new(0.1)),
+        "greedy" => Box::new(GreedyAlg),
+        "randgreedi" => Box::new(RandGreeDi::default()),
+        "randgreedi-matroid" => Box::new(RandGreeDi::constrained(bench_matroid(n, k), 2)),
+        "dash" => Box::new(Dash::new(0.1)),
+        "dash-matroid" => Box::new(Dash::constrained(0.1, bench_matroid(n, k))),
+        other => {
+            return Err(cli_err(format!(
+                "unknown algorithm {other:?} (expected one of {BENCH_ALGORITHMS:?})"
+            )))
+        }
+    })
+}
 
 /// Build a bench instance of family `name` with ~`n` elements. Facility is
 /// capped (dense n×d rows); adversarial derives its size from `n` alone.
@@ -371,6 +412,10 @@ fn bench_instance(name: &str, n: usize, seed: u64) -> Result<Instance> {
                 .with_spec(spec)
         }
         "adversarial" => AdversarialGen::new(4, (n / 2).max(8)).generate(seed),
+        "dicut" => {
+            let sources = (n / 8).max(4);
+            PlantedDicutGen::new(sources, n.saturating_sub(sources).max(4), 4).generate(seed)
+        }
         other => {
             return Err(cli_err(format!(
                 "unknown family {other:?} (expected one of {ALL_FAMILIES:?})"
@@ -451,6 +496,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
         eprintln!("(note: pass >= 2 --backends for a cross-backend comparison)");
     }
     let sizes = parse_sizes(args.get_str("sizes").unwrap_or("8000x20,32000x40"))?;
+    let algorithms: Vec<String> = args
+        .get_str("algorithms")
+        .unwrap_or("combined")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for a in &algorithms {
+        if !BENCH_ALGORITHMS.contains(&a.as_str()) {
+            return Err(cli_err(format!(
+                "unknown algorithm {a:?} (expected one of {BENCH_ALGORITHMS:?})"
+            )));
+        }
+    }
 
     // --- part 1: oracle hot path, batched vs scalar per family -----------
     println!("\n== bench 1/2: block-marginal hot path (full singleton sweep) ==");
@@ -480,57 +539,62 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ]));
     }
 
-    // --- part 2: cluster sweep, backends × families × (n, k) -------------
-    println!("\n== bench 2/2: combined(eps=0.1) end-to-end, backend sweep ==");
+    // --- part 2: cluster sweep, algorithms × backends × families × (n, k) -
+    println!("\n== bench 2/2: end-to-end cluster sweep ({}) ==", algorithms.join(","));
     println!(
-        "{:<12} {:<16} {:>9} {:>5} {:>9} {:>9} {:>11} {:>9}",
-        "family", "backend", "n", "k", "wall-ms", "batched%", "ipc-bytes", "value"
+        "{:<12} {:<18} {:<16} {:>9} {:>5} {:>9} {:>9} {:>11} {:>9}",
+        "family", "algorithm", "backend", "n", "k", "wall-ms", "batched%", "ipc-bytes", "value"
     );
     let mut cluster_rows = Vec::new();
     for fam in &families {
         for &(sz_n, sz_k) in &sizes {
             let inst = bench_instance(fam, sz_n, seed)?;
             let k_eff = sz_k.min(inst.n);
-            for backend in &backends {
-                let mut cfg = ClusterConfig {
-                    seed,
-                    backend: Some(backend.clone()),
-                    ..ClusterConfig::default()
-                };
-                apply_cluster_flags(args, &mut cfg)?;
-                let rec = run_experiment(&inst, &CombinedTwoRound::new(0.1), k_eff, &cfg)?;
-                let batched_pct = if rec.oracle_calls > 0 {
-                    100.0 * rec.batched_oracle_calls as f64 / rec.oracle_calls as f64
-                } else {
-                    0.0
-                };
-                let ipc_total = rec.ipc_bytes_out + rec.ipc_bytes_in;
-                println!(
-                    "{:<12} {:<16} {:>9} {:>5} {:>9.1} {:>8.1}% {:>11} {:>9.1}",
-                    fam,
-                    backend.label(),
-                    inst.n,
-                    k_eff,
-                    rec.wall_ms,
-                    batched_pct,
-                    ipc_total,
-                    rec.value
-                );
-                cluster_rows.push(Json::obj([
-                    ("family", Json::Str(fam.clone())),
-                    ("backend", Json::Str(backend.label())),
-                    ("n", Json::Num(inst.n as f64)),
-                    ("k", Json::Num(k_eff as f64)),
-                    ("wall_ms", Json::Num(rec.wall_ms)),
-                    ("value", Json::Num(rec.value)),
-                    ("oracle_calls", Json::Num(rec.oracle_calls as f64)),
-                    ("batched_oracle_calls", Json::Num(rec.batched_oracle_calls as f64)),
-                    ("oracle_batches", Json::Num(rec.oracle_batches as f64)),
-                    ("ipc_bytes_out", Json::Num(rec.ipc_bytes_out as f64)),
-                    ("ipc_bytes_in", Json::Num(rec.ipc_bytes_in as f64)),
-                    ("mapped_bytes", Json::Num(rec.mapped_bytes as f64)),
-                    ("rounds", Json::Num(rec.rounds as f64)),
-                ]));
+            for alg_name in &algorithms {
+                let alg = bench_algorithm(alg_name, inst.n, k_eff)?;
+                for backend in &backends {
+                    let mut cfg = ClusterConfig {
+                        seed,
+                        backend: Some(backend.clone()),
+                        ..ClusterConfig::default()
+                    };
+                    apply_cluster_flags(args, &mut cfg)?;
+                    let rec = run_experiment(&inst, alg.as_ref(), k_eff, &cfg)?;
+                    let batched_pct = if rec.oracle_calls > 0 {
+                        100.0 * rec.batched_oracle_calls as f64 / rec.oracle_calls as f64
+                    } else {
+                        0.0
+                    };
+                    let ipc_total = rec.ipc_bytes_out + rec.ipc_bytes_in;
+                    println!(
+                        "{:<12} {:<18} {:<16} {:>9} {:>5} {:>9.1} {:>8.1}% {:>11} {:>9.1}",
+                        fam,
+                        alg_name,
+                        backend.label(),
+                        inst.n,
+                        k_eff,
+                        rec.wall_ms,
+                        batched_pct,
+                        ipc_total,
+                        rec.value
+                    );
+                    cluster_rows.push(Json::obj([
+                        ("family", Json::Str(fam.clone())),
+                        ("algorithm", Json::Str(alg_name.clone())),
+                        ("backend", Json::Str(backend.label())),
+                        ("n", Json::Num(inst.n as f64)),
+                        ("k", Json::Num(k_eff as f64)),
+                        ("wall_ms", Json::Num(rec.wall_ms)),
+                        ("value", Json::Num(rec.value)),
+                        ("oracle_calls", Json::Num(rec.oracle_calls as f64)),
+                        ("batched_oracle_calls", Json::Num(rec.batched_oracle_calls as f64)),
+                        ("oracle_batches", Json::Num(rec.oracle_batches as f64)),
+                        ("ipc_bytes_out", Json::Num(rec.ipc_bytes_out as f64)),
+                        ("ipc_bytes_in", Json::Num(rec.ipc_bytes_in as f64)),
+                        ("mapped_bytes", Json::Num(rec.mapped_bytes as f64)),
+                        ("rounds", Json::Num(rec.rounds as f64)),
+                    ]));
+                }
             }
         }
     }

@@ -23,10 +23,10 @@
 // LINT-ALLOW: determinism keyed get/insert/remove only — no map is ever iterated.
 use std::collections::HashMap;
 
-use crate::algorithms::greedy::lazy_greedy_extend;
+use crate::algorithms::greedy::{constrained_greedy_extend, lazy_greedy_extend};
 use crate::algorithms::sparse::sparse_worker;
 use crate::algorithms::threshold::{block_max_marginal, threshold_filter};
-use crate::core::ElementId;
+use crate::core::{derive_seed, Constraint, ElementId};
 use crate::mapreduce::backend::{self, ExecBackend};
 use crate::mapreduce::machine_seed;
 use crate::mapreduce::wire::{RoundTask, TaskReply};
@@ -142,6 +142,31 @@ pub enum Prepared {
         /// Round index (RNG stream id component).
         round: u32,
     },
+    /// See [`RoundTask::PartitionGreedy`].
+    PartitionGreedy {
+        /// Cardinality bound for the local greedy.
+        k: usize,
+        /// Number of logical parts.
+        parts: u32,
+        /// Independence system the local greedy selects under.
+        constraint: Constraint,
+        /// Partition seed.
+        seed: u64,
+        /// Round index.
+        round: u32,
+        /// Ground-set size, captured at prepare time — the logical part
+        /// spans the *full* ground set, not the physical shard.
+        n: usize,
+    },
+    /// See [`RoundTask::ConstrainedFilter`].
+    ConstrainedFilter {
+        /// Rehydrated base state `G`.
+        state: Box<dyn OracleState>,
+        /// Threshold.
+        tau: f64,
+        /// Independence system feasibility is checked against.
+        constraint: Constraint,
+    },
 }
 
 /// Cache key: which broadcast state a slot rehydrates. Algorithm 5's
@@ -151,6 +176,18 @@ type CacheKey = (u8, u32);
 const TAG_FILTER: u8 = 0;
 const TAG_GUESS: u8 = 1;
 const TAG_PRUNE: u8 = 2;
+const TAG_CFILTER: u8 = 3;
+
+/// The logical part element `e` belongs to in round `round` of a
+/// randomized-partition algorithm: a keyed hash of `(seed, round, e)`
+/// reduced mod `parts`. Machine `m` owns part `m`. Every backend computes
+/// the same map from the same task fields, so the re-partition is
+/// bit-identical everywhere without any shuffle crossing the wire; a
+/// fresh `(seed, round)` pair re-randomizes the partition each round.
+pub fn partition_of(seed: u64, round: u32, e: ElementId, parts: u32) -> u32 {
+    debug_assert!(parts > 0, "partition_of needs at least one part");
+    (derive_seed(derive_seed(seed, round as u64), e as u64) % parts as u64) as u32
+}
 
 /// Cross-round rehydration cache for the broadcast oracle states.
 ///
@@ -210,12 +247,18 @@ impl StateCache {
             Prepared::PruneSample { state, .. } => {
                 self.slots.insert((TAG_PRUNE, 0), state);
             }
+            Prepared::ConstrainedFilter { state, .. } => {
+                self.slots.insert((TAG_CFILTER, 0), state);
+            }
             Prepared::Batch(parts) => {
                 for p in parts {
                     self.check_in(p);
                 }
             }
-            Prepared::LocalGreedy { .. } | Prepared::MaxSingleton | Prepared::TopSingletons { .. } => {}
+            Prepared::LocalGreedy { .. }
+            | Prepared::MaxSingleton
+            | Prepared::TopSingletons { .. }
+            | Prepared::PartitionGreedy { .. } => {}
         }
     }
 
@@ -275,6 +318,21 @@ pub fn prepare_with(oracle: &dyn Oracle, task: &RoundTask, cache: &mut StateCach
                 round: *round,
             }
         }
+        RoundTask::PartitionGreedy { k, parts, constraint, seed, round } => {
+            Prepared::PartitionGreedy {
+                k: *k,
+                parts: *parts,
+                constraint: constraint.clone(),
+                seed: *seed,
+                round: *round,
+                n: oracle.ground_size(),
+            }
+        }
+        RoundTask::ConstrainedFilter { base, tau, constraint } => Prepared::ConstrainedFilter {
+            state: cache.checkout(oracle, (TAG_CFILTER, 0), base),
+            tau: *tau,
+            constraint: constraint.clone(),
+        },
         RoundTask::AdoptMachines { pending, .. } => {
             // Adoption is a pool-level control message, consumed by the
             // process-backend worker loop before task dispatch; in-process
@@ -366,6 +424,39 @@ pub fn compute(
             };
             let resident = kept.len() as u64;
             Computed { reply: TaskReply::Pruned { shipped, fit, resident }, pruned: Some(kept) }
+        }
+        Prepared::PartitionGreedy { k, parts, constraint, seed, round, n } => {
+            // the physical shard is deliberately ignored: the machine's
+            // candidate set is its *logical* part of the full ground set,
+            // derived from the global machine id — the randomized
+            // re-partition of the Barbosa–Ene–Nguyen–Ward framework with
+            // no shuffle and backend-independent contents.
+            let part: Vec<ElementId> = (0..*n as ElementId)
+                .filter(|&e| partition_of(*seed, *round, e, *parts) == machine as u32)
+                .collect();
+            let mut st = states.acquire();
+            constrained_greedy_extend(&mut *st, &part, *k, constraint);
+            reply_only(TaskReply::Ids(st.selected().to_vec()))
+        }
+        Prepared::ConstrainedFilter { state, tau, constraint } => {
+            // survivors: marginal w.r.t. the broadcast base clears τ AND
+            // the constraint still admits the element on top of the base.
+            // Marginals ship alongside so the central sequencing step can
+            // order candidates without re-querying the oracle.
+            let mut cursor = constraint.cursor();
+            for &e in state.selected() {
+                cursor.admit(e);
+            }
+            let survivors = threshold_filter(state.as_ref(), shard, *tau);
+            let mut ids = Vec::with_capacity(survivors.len());
+            let mut values = Vec::with_capacity(survivors.len());
+            for e in survivors {
+                if cursor.admits(e) {
+                    ids.push(e);
+                    values.push(state.marginal(e));
+                }
+            }
+            reply_only(TaskReply::Valued { ids, values })
         }
     }
 }
@@ -667,6 +758,71 @@ mod tests {
         let a = run_task_all(&o, &shards, &mut stores_a, &[0, 1, 2], &task, &Serial);
         let b = run_task_all(&o, &mapped, &mut stores_b, &[0, 1, 2], &task, &Serial);
         assert_eq!(a, b, "shard representation must be invisible to the interpreter");
+    }
+
+    #[test]
+    fn partition_greedy_ignores_the_physical_shard() {
+        // the same machine id over two completely different physical
+        // shards must select identically: the candidate set is the
+        // logical part derived from (seed, round, machine), not the shard.
+        let o = CoverageGen::new(120, 80, 4).build(7);
+        let task = RoundTask::PartitionGreedy {
+            k: 6,
+            parts: 3,
+            constraint: Constraint::cardinality(6),
+            seed: 77,
+            round: 2,
+        };
+        let prep = prepare(&o, &task);
+        let states = StatePool::new(&o);
+        let store = GuessStore::default();
+        let shard_a: Vec<ElementId> = (0..40).collect();
+        let shard_b: Vec<ElementId> = (80..120).collect();
+        let a = compute(&states, &prep, &shard_a, &store, 1).reply;
+        let b = compute(&states, &prep, &shard_b, &store, 1).reply;
+        assert_eq!(a, b, "physical shard content must be invisible");
+        // distinct machines own disjoint parts that tile the ground set.
+        let mut owned = vec![false; 120];
+        for m in 0..3u32 {
+            for e in 0..120u32 {
+                if partition_of(77, 2, e, 3) == m {
+                    assert!(!owned[e as usize], "element {e} in two parts");
+                    owned[e as usize] = true;
+                }
+            }
+        }
+        assert!(owned.iter().all(|&x| x), "parts must tile the ground set");
+    }
+
+    #[test]
+    fn partition_reshuffles_across_rounds() {
+        let same: usize =
+            (0..1000u32).filter(|&e| partition_of(5, 0, e, 4) == partition_of(5, 1, e, 4)).count();
+        assert!(same < 500, "rounds must re-randomize the partition, {same}/1000 unchanged");
+    }
+
+    #[test]
+    fn constrained_filter_respects_matroid_and_attaches_marginals() {
+        let (o, shards, mut stores) = setup();
+        // one slot per residue class mod 2; base [4] occupies part 0.
+        let c = Constraint::partition_matroid((0..120).map(|e| e % 2).collect(), vec![1; 2]);
+        let task =
+            RoundTask::ConstrainedFilter { base: vec![4], tau: 0.5, constraint: c.clone() };
+        let replies = run_task_all(&o, &shards, &mut stores, &[0, 1, 2], &task, &Serial);
+        let mut st = o.state();
+        st.insert(4);
+        let mut total = 0;
+        for reply in replies {
+            let (ids, values) = reply.into_valued();
+            assert_eq!(ids.len(), values.len());
+            total += ids.len();
+            for (e, v) in ids.iter().zip(&values) {
+                assert_eq!(e % 2, 1, "part 0 is full (base holds 4), only odd ids admit");
+                assert!(*v >= 0.5, "survivor below tau");
+                assert_eq!(*v, st.marginal(*e), "shipped marginal must match the base state");
+            }
+        }
+        assert!(total > 0, "some odd element should clear tau");
     }
 
     #[test]

@@ -34,7 +34,7 @@
 use std::fmt;
 use std::io::{Read, Write};
 
-use crate::core::ElementId;
+use crate::core::{Constraint, ElementId};
 use crate::mapreduce::CommSize;
 use crate::oracle::spec::OracleSpec;
 
@@ -74,7 +74,17 @@ use crate::oracle::spec::OracleSpec;
 /// change mid-experiment without touching selection semantics — RNG
 /// streams and store replay key on *global* machine ids, never on which
 /// worker hosts them.
-pub const WIRE_VERSION: u16 = 6;
+///
+/// v7: constraints and the non-monotone/matroid algorithm family.
+/// [`crate::core::Constraint`] becomes wire-encodable, and two
+/// constraint-carrying tasks join the vocabulary:
+/// [`RoundTask::PartitionGreedy`] (one randomized-partition round of the
+/// Barbosa–Ene–Nguyen–Ward framework — the machine derives its *logical*
+/// part of the ground set from `(seed, round)` and runs a constrained
+/// greedy over it) and [`RoundTask::ConstrainedFilter`] (DASH's adaptive
+/// threshold filter, replying [`TaskReply::Valued`] — surviving ids plus
+/// their marginals, so the central sequencing step never re-queries).
+pub const WIRE_VERSION: u16 = 7;
 
 /// Frame magic: "MRSB" (MapReduce-Submodular Backend).
 pub const FRAME_MAGIC: [u8; 4] = *b"MRSB";
@@ -422,6 +432,50 @@ impl<'a> Dec<'a> {
     }
 }
 
+// --- constraint codec -------------------------------------------------------
+
+impl Constraint {
+    /// Encode into `enc` (tag 1 = cardinality, 2 = partition matroid).
+    /// Lives here rather than in `core` so the whole wire surface — and
+    /// the drift lint's fingerprint anchors — stay in one place.
+    pub fn encode(&self, enc: &mut Enc) {
+        match self {
+            Constraint::Cardinality { k } => {
+                enc.u8(1);
+                enc.usize(*k);
+            }
+            Constraint::PartitionMatroid { parts, capacities } => {
+                enc.u8(2);
+                enc.ids(parts);
+                enc.u32(capacities.len() as u32);
+                for &c in capacities {
+                    enc.usize(c);
+                }
+            }
+        }
+    }
+
+    /// Decode one constraint.
+    pub fn decode(dec: &mut Dec<'_>) -> Result<Constraint, WireError> {
+        Ok(match dec.u8()? {
+            1 => Constraint::Cardinality { k: dec.usize()? },
+            2 => {
+                let parts = dec.ids()?;
+                let len = dec.u32()? as usize;
+                if dec.remaining() < len * 8 {
+                    return Err(WireError::Truncated { needed: len * 8, got: dec.remaining() });
+                }
+                let mut capacities = Vec::with_capacity(len);
+                for _ in 0..len {
+                    capacities.push(dec.usize()?);
+                }
+                Constraint::PartitionMatroid { parts, capacities }
+            }
+            t => return Err(WireError::Malformed(format!("unknown Constraint tag {t}"))),
+        })
+    }
+}
+
 // --- round tasks ------------------------------------------------------------
 
 /// One OPT-guess filter instruction inside [`RoundTask::MultiFilter`].
@@ -533,6 +587,41 @@ pub enum RoundTask {
         /// The in-flight round task, re-run for the adopted machines.
         pending: Box<RoundTask>,
     },
+    /// One randomized-partition round of the Barbosa–Ene–Nguyen–Ward
+    /// framework (wire v7): the machine *ignores its physical shard* and
+    /// instead derives its logical part of the full ground set — element
+    /// `e` belongs to part [`crate::mapreduce::shard::partition_of`]`(seed,
+    /// round, e, parts)`, and machine `m` owns part `m` — then runs a
+    /// constrained lazy greedy over that part up to `k` elements. Because
+    /// the part derivation keys on the *global* machine id and the worker
+    /// rebuilds the full oracle from its spec, no shuffle crosses the wire
+    /// and every backend computes the identical re-partition.
+    PartitionGreedy {
+        /// Cardinality bound for the local greedy.
+        k: usize,
+        /// Number of logical parts (= machine count).
+        parts: u32,
+        /// The independence system the local greedy selects under.
+        constraint: Constraint,
+        /// Round-derived partition seed (coordinator-chosen).
+        seed: u64,
+        /// Round index — a fresh `(seed, round)` pair re-randomizes the
+        /// partition every round.
+        round: u32,
+    },
+    /// DASH's adaptive threshold filter (wire v7): ship the shard elements
+    /// whose marginal w.r.t. the rehydrated `base` is ≥ `tau` *and* that
+    /// the constraint still admits on top of `base`, replying
+    /// [`TaskReply::Valued`] with the marginals attached so the central
+    /// sequencing step orders candidates without re-querying the oracle.
+    ConstrainedFilter {
+        /// Broadcast partial solution, insertion order.
+        base: Vec<ElementId>,
+        /// Threshold.
+        tau: f64,
+        /// The independence system feasibility is checked against.
+        constraint: Constraint,
+    },
 }
 
 impl RoundTask {
@@ -598,6 +687,20 @@ impl RoundTask {
                     t.encode(enc);
                 }
                 pending.encode(enc);
+            }
+            RoundTask::PartitionGreedy { k, parts, constraint, seed, round } => {
+                enc.u8(9);
+                enc.usize(*k);
+                enc.u32(*parts);
+                constraint.encode(enc);
+                enc.u64(*seed);
+                enc.u32(*round);
+            }
+            RoundTask::ConstrainedFilter { base, tau, constraint } => {
+                enc.u8(10);
+                enc.ids(base);
+                enc.f64(*tau);
+                constraint.encode(enc);
             }
         }
     }
@@ -666,6 +769,18 @@ impl RoundTask {
                     pending: Box::new(RoundTask::decode(dec)?),
                 }
             }
+            9 => RoundTask::PartitionGreedy {
+                k: dec.usize()?,
+                parts: dec.u32()?,
+                constraint: Constraint::decode(dec)?,
+                seed: dec.u64()?,
+                round: dec.u32()?,
+            },
+            10 => RoundTask::ConstrainedFilter {
+                base: dec.ids()?,
+                tau: dec.f64()?,
+                constraint: Constraint::decode(dec)?,
+            },
             t => return Err(WireError::Malformed(format!("unknown RoundTask tag {t}"))),
         })
     }
@@ -681,6 +796,8 @@ impl RoundTask {
             RoundTask::Batch(_) => "batch",
             RoundTask::PruneSample { .. } => "prune-sample",
             RoundTask::AdoptMachines { .. } => "adopt-machines",
+            RoundTask::PartitionGreedy { .. } => "partition-greedy",
+            RoundTask::ConstrainedFilter { .. } => "constrained-filter",
         }
     }
 
@@ -727,6 +844,8 @@ pub fn reply_matches(task: &RoundTask, reply: &TaskReply) -> bool {
                 && tasks.iter().zip(replies).all(|(t, r)| reply_matches(t, r))
         }
         (RoundTask::PruneSample { .. }, TaskReply::Pruned { .. }) => true,
+        (RoundTask::PartitionGreedy { .. }, TaskReply::Ids(_)) => true,
+        (RoundTask::ConstrainedFilter { .. }, TaskReply::Valued { .. }) => true,
         // an adoption reply carries the re-run in-flight task's results,
         // one per adopted machine — each shaped like `pending`.
         (RoundTask::AdoptMachines { pending, .. }, reply) => reply_matches(pending, reply),
@@ -756,6 +875,16 @@ pub enum TaskReply {
         /// Size of the machine-resident pruned shard after this round
         /// (memory accounting only — the shard itself never ships).
         resident: u64,
+    },
+    /// A [`RoundTask::ConstrainedFilter`] result: the surviving elements
+    /// with their marginals attached, so the central sequencing step can
+    /// order candidates without re-querying the oracle. `ids` and `values`
+    /// are parallel arrays of equal length.
+    Valued {
+        /// Surviving element ids, ascending.
+        ids: Vec<ElementId>,
+        /// `values[i]` = marginal of `ids[i]` w.r.t. the broadcast base.
+        values: Vec<f64>,
     },
 }
 
@@ -792,6 +921,12 @@ impl TaskReply {
                 enc.bool(*fit);
                 enc.u64(*resident);
             }
+            TaskReply::Valued { ids, values } => {
+                debug_assert_eq!(ids.len(), values.len(), "Valued arrays must be parallel");
+                enc.u8(6);
+                enc.ids(ids);
+                enc.f64s(values);
+            }
         }
     }
 
@@ -821,6 +956,18 @@ impl TaskReply {
                 fit: dec.bool()?,
                 resident: dec.u64()?,
             },
+            6 => {
+                let ids = dec.ids()?;
+                let values = dec.f64s()?;
+                if ids.len() != values.len() {
+                    return Err(WireError::Malformed(format!(
+                        "Valued reply has {} ids but {} values",
+                        ids.len(),
+                        values.len()
+                    )));
+                }
+                TaskReply::Valued { ids, values }
+            }
             t => return Err(WireError::Malformed(format!("unknown TaskReply tag {t}"))),
         })
     }
@@ -894,6 +1041,17 @@ impl TaskReply {
             }
         }
     }
+
+    /// Extract `Valued`, defaulting to empty on shape mismatch.
+    pub fn into_valued(self) -> (Vec<ElementId>, Vec<f64>) {
+        match self {
+            TaskReply::Valued { ids, values } => (ids, values),
+            other => {
+                debug_assert!(false, "expected Valued reply, got {other:?}");
+                (Vec::new(), Vec::new())
+            }
+        }
+    }
 }
 
 impl CommSize for TaskReply {
@@ -904,6 +1062,7 @@ impl CommSize for TaskReply {
             TaskReply::Multi(parts) => parts.iter().map(|(_, ids)| ids.len()).sum(),
             TaskReply::Batch(replies) => replies.iter().map(|r| r.comm_size()).sum(),
             TaskReply::Pruned { shipped, .. } => shipped.len(),
+            TaskReply::Valued { ids, .. } => ids.len(),
         }
     }
 }
@@ -1433,10 +1592,23 @@ mod tests {
         (0..len).map(|_| g.usize_in(0, 1 << 20) as ElementId).collect()
     }
 
+    fn arb_constraint(g: &mut Gen) -> Constraint {
+        if g.bool_with(0.5) {
+            Constraint::cardinality(g.usize_in(1, 50))
+        } else {
+            let parts_n = g.usize_in(1, 6) as u32;
+            let n = g.usize_in(1, 30);
+            Constraint::partition_matroid(
+                (0..n).map(|e| e as u32 % parts_n).collect(),
+                (0..parts_n).map(|_| g.usize_in(1, 4)).collect(),
+            )
+        }
+    }
+
     fn arb_task(g: &mut Gen, depth: usize) -> RoundTask {
         // the two recursive variants (Batch, AdoptMachines) only at depth 0
         // so generation terminates.
-        let hi = if depth == 0 { 9 } else { 7 };
+        let hi = if depth == 0 { 11 } else { 9 };
         match g.usize_in(1, hi) {
             1 => RoundTask::Filter { base: arb_ids(g, 20), tau: g.f64_in(-3.0, 3.0) },
             2 => {
@@ -1464,7 +1636,19 @@ mod tests {
                 seed: g.u64_in(1 << 40),
                 round: g.usize_in(0, 64) as u32,
             },
-            7 => {
+            7 => RoundTask::PartitionGreedy {
+                k: g.usize_in(1, 60),
+                parts: g.usize_in(1, 16) as u32,
+                constraint: arb_constraint(g),
+                seed: g.u64_in(1 << 40),
+                round: g.usize_in(0, 32) as u32,
+            },
+            8 => RoundTask::ConstrainedFilter {
+                base: arb_ids(g, 15),
+                tau: g.f64_in(0.0, 5.0),
+                constraint: arb_constraint(g),
+            },
+            9 => {
                 let n = g.usize_in(0, 4);
                 RoundTask::Batch((0..n).map(|_| arb_task(g, depth + 1)).collect())
             }
@@ -1488,7 +1672,7 @@ mod tests {
     }
 
     fn arb_reply(g: &mut Gen, depth: usize) -> TaskReply {
-        let hi = if depth == 0 { 6 } else { 5 };
+        let hi = if depth == 0 { 7 } else { 6 };
         match g.usize_in(1, hi) {
             1 => TaskReply::Ids(arb_ids(g, 30)),
             2 => TaskReply::Scalar(g.f64_in(-1e9, 1e9)),
@@ -1501,6 +1685,11 @@ mod tests {
                 fit: g.bool_with(0.5),
                 resident: g.u64_in(1 << 20),
             },
+            5 => {
+                let ids = arb_ids(g, 20);
+                let values = ids.iter().map(|_| g.f64_in(-2.0, 10.0)).collect();
+                TaskReply::Valued { ids, values }
+            }
             _ => {
                 let n = g.usize_in(0, 4);
                 TaskReply::Batch((0..n).map(|_| arb_reply(g, depth + 1)).collect())

@@ -43,6 +43,7 @@ pub mod concave;
 pub mod counting;
 pub mod coverage;
 pub mod cut;
+pub mod dicut;
 pub mod facility;
 #[cfg(feature = "xla")]
 pub mod hlo;
@@ -378,6 +379,103 @@ pub(crate) mod axioms {
 
             // batch marginals are bit-identical to scalar marginals (the
             // block path shares the scalar per-element kernel).
+            let probes: Vec<ElementId> = rest.iter().take(8).copied().collect();
+            let mut batch = vec![0.0; probes.len()];
+            st_a.marginals(&probes, &mut batch);
+            for (i, &e) in probes.iter().enumerate() {
+                assert_eq!(
+                    batch[i].to_bits(),
+                    st_a.marginal(e).to_bits(),
+                    "batch marginal mismatch at {e} (trial {trial})"
+                );
+            }
+
+            // reset leaves the state indistinguishable from a fresh one.
+            let mut st_r = st_b.clone_state();
+            st_r.reset();
+            let fresh = oracle.state();
+            assert!(st_r.is_empty(), "reset state must be empty");
+            assert_eq!(st_r.value().to_bits(), fresh.value().to_bits(), "reset value");
+            for &e in b_set.iter().chain(rest.iter()).take(6) {
+                assert_eq!(
+                    st_r.marginal(e).to_bits(),
+                    fresh.marginal(e).to_bits(),
+                    "reset marginal mismatch at {e} (trial {trial})"
+                );
+            }
+        }
+    }
+
+    /// [`check_axioms`] minus monotonicity: for *non-monotone* families
+    /// (e.g. [`crate::oracle::dicut::DicutOracle`]) marginals may be
+    /// negative and `f(B)` may drop below `f(A)`, so only non-negativity
+    /// of `f`, submodularity, insert/marginal consistency, idempotence,
+    /// scratch/incremental agreement, batch bit-identity, and reset
+    /// freshness are asserted.
+    pub fn check_axioms_nonmono(oracle: &dyn Oracle, seed: u64, trials: usize) {
+        let n = oracle.ground_size();
+        assert!(n >= 3, "axiom check needs n >= 3");
+        let mut rng = Rng::seed_from_u64(seed);
+        let ids: Vec<ElementId> = (0..n as ElementId).collect();
+        for trial in 0..trials {
+            let mut perm = ids.clone();
+            rng.shuffle(&mut perm);
+            let b_len = rng.gen_range(1..n.min(24) + 1);
+            let a_len = rng.gen_range(0..b_len);
+            let (b_set, rest) = perm.split_at(b_len);
+            let a_set = &b_set[..a_len];
+
+            let mut st_a = oracle.state();
+            for &e in a_set {
+                st_a.insert(e);
+            }
+            let mut st_b = oracle.state();
+            for &e in b_set {
+                st_b.insert(e);
+            }
+
+            // non-negative value, but no chain monotonicity.
+            assert!(st_a.value() >= -1e-9, "f must be non-negative");
+            assert!(st_b.value() >= -1e-9, "f must be non-negative");
+
+            // probe elements outside B.
+            for &e in rest.iter().take(8) {
+                let ma = st_a.marginal(e);
+                let mb = st_b.marginal(e);
+                assert!(
+                    ma >= mb - 1e-6 * (1.0 + ma.abs()),
+                    "submodularity violated at e={e}: f_A(e)={ma} < f_B(e)={mb} (trial {trial})"
+                );
+                let mut st_a2 = st_a.clone_state();
+                st_a2.insert(e);
+                let err = (st_a2.value() - (st_a.value() + ma)).abs();
+                assert!(
+                    err <= 1e-6 * (1.0 + st_a2.value().abs()),
+                    "insert/marginal mismatch: {err}"
+                );
+            }
+
+            // idempotence: marginal of a member is 0, re-insert is a no-op.
+            if let Some(&e) = b_set.first() {
+                assert!(st_b.marginal(e).abs() <= 1e-9, "member marginal must be 0");
+                let v = st_b.value();
+                st_b.insert(e);
+                assert!((st_b.value() - v).abs() <= 1e-12, "re-insert changed value");
+            }
+
+            // scratch evaluation agrees with incremental state.
+            let direct = oracle.value(b_set);
+            let mut st = oracle.state();
+            for &e in b_set {
+                st.insert(e);
+            }
+            assert!(
+                (direct - st.value()).abs() <= 1e-6 * (1.0 + direct.abs()),
+                "value() vs state mismatch: {direct} vs {}",
+                st.value()
+            );
+
+            // batch marginals are bit-identical to scalar marginals.
             let probes: Vec<ElementId> = rest.iter().take(8).copied().collect();
             let mut batch = vec![0.0; probes.len()];
             st_a.marginals(&probes, &mut batch);

@@ -28,6 +28,7 @@ use crate::util::rng::Rng;
 use crate::workload::adversarial::AdversarialGen;
 use crate::workload::corpus::ZipfCorpusGen;
 use crate::workload::coverage::CoverageGen;
+use crate::workload::dicut::PlantedDicutGen;
 use crate::workload::facility::{FacilityGen, Kernel};
 use crate::workload::graph::GraphGen;
 use crate::workload::planted::PlantedCoverageGen;
@@ -132,6 +133,19 @@ pub enum OracleSpec {
         /// Generator seed.
         seed: u64,
     },
+    /// [`PlantedDicutGen`] — the *non-monotone* directed-cut workload
+    /// (sources `0..sources` fan weighted arcs into sinks; OPT is all
+    /// sources).
+    Dicut {
+        /// Source vertices (= planted optimal k).
+        sources: usize,
+        /// Sink vertices.
+        sinks: usize,
+        /// Out-arcs per source.
+        deg: usize,
+        /// Generator seed.
+        seed: u64,
+    },
 }
 
 impl OracleSpec {
@@ -184,6 +198,10 @@ impl OracleSpec {
             OracleSpec::ConcaveBench { n, groups, seed } => {
                 Arc::new(build_concave_bench(*n, *groups, *seed))
             }
+            OracleSpec::Dicut { sources, sinks, deg, seed } => {
+                let g = PlantedDicutGen { sources: *sources, sinks: *sinks, deg: *deg };
+                Arc::new(g.build(*seed))
+            }
         })
     }
 
@@ -199,6 +217,7 @@ impl OracleSpec {
             OracleSpec::Adversarial { .. } => "adversarial",
             OracleSpec::Modular { .. } => "modular",
             OracleSpec::ConcaveBench { .. } => "concave",
+            OracleSpec::Dicut { .. } => "dicut",
         }
     }
 
@@ -266,6 +285,13 @@ impl OracleSpec {
                 enc.usize(*groups);
                 enc.u64(*seed);
             }
+            OracleSpec::Dicut { sources, sinks, deg, seed } => {
+                enc.u8(10);
+                enc.usize(*sources);
+                enc.usize(*sinks);
+                enc.usize(*deg);
+                enc.u64(*seed);
+            }
         }
     }
 
@@ -315,6 +341,12 @@ impl OracleSpec {
                 groups: dec.usize()?,
                 seed: dec.u64()?,
             },
+            10 => OracleSpec::Dicut {
+                sources: dec.usize()?,
+                sinks: dec.usize()?,
+                deg: dec.usize()?,
+                seed: dec.u64()?,
+            },
             t => return Err(WireError::Malformed(format!("unknown OracleSpec tag {t}"))),
         })
     }
@@ -347,7 +379,7 @@ mod tests {
     use crate::util::check::forall;
 
     fn arb_spec(g: &mut crate::util::check::Gen) -> OracleSpec {
-        match g.usize_in(1, 10) {
+        match g.usize_in(1, 11) {
             1 => OracleSpec::Coverage {
                 n: g.usize_in(1, 200),
                 universe: g.usize_in(1, 100),
@@ -392,9 +424,15 @@ mod tests {
             8 => OracleSpec::Modular {
                 weights: (0..g.usize_in(0, 40)).map(|_| g.f64_in(0.0, 10.0)).collect(),
             },
-            _ => OracleSpec::ConcaveBench {
+            9 => OracleSpec::ConcaveBench {
                 n: g.usize_in(1, 80),
                 groups: g.usize_in(1, 32),
+                seed: g.u64_in(1 << 40),
+            },
+            _ => OracleSpec::Dicut {
+                sources: g.usize_in(1, 12),
+                sinks: g.usize_in(2, 60),
+                deg: g.usize_in(1, 6),
                 seed: g.u64_in(1 << 40),
             },
         }

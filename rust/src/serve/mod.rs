@@ -59,6 +59,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::algorithms::combined::CombinedTwoRound;
+use crate::algorithms::dash::Dash;
 use crate::algorithms::randgreedi::RandGreeDi;
 use crate::algorithms::MrAlgorithm;
 use crate::config::GreedyAlg;
@@ -454,7 +455,8 @@ fn cached_oracle(shared: &Shared, spec: &OracleSpec) -> Result<Arc<dyn Oracle>> 
 }
 
 /// The serving algorithm registry: `combined[:eps]` (default ε = 0.1,
-/// the paper's headline Theorem 8 algorithm), `randgreedi`, `greedy`.
+/// the paper's headline Theorem 8 algorithm), `randgreedi`, `greedy`,
+/// `dash[:eps]` (default ε = 0.1, the low-adaptivity threshold sweep).
 fn build_algorithm(name: &str) -> Result<Box<dyn MrAlgorithm>> {
     let (kind, param) = match name.split_once(':') {
         Some((k, p)) => (k, Some(p)),
@@ -471,12 +473,13 @@ fn build_algorithm(name: &str) -> Result<Box<dyn MrAlgorithm>> {
     };
     Ok(match kind {
         "combined" => Box::new(CombinedTwoRound::new(eps(0.1)?)),
-        "randgreedi" => Box::new(RandGreeDi),
+        "randgreedi" => Box::new(RandGreeDi::default()),
         "greedy" => Box::new(GreedyAlg),
+        "dash" => Box::new(Dash::new(eps(0.1)?)),
         other => {
             return Err(Error::Config(format!(
                 "unknown serve algorithm {other:?} \
-                 (expected combined[:eps], randgreedi, or greedy)"
+                 (expected combined[:eps], randgreedi, greedy, or dash[:eps])"
             )))
         }
     })

@@ -10,6 +10,7 @@
 pub mod adversarial;
 pub mod corpus;
 pub mod coverage;
+pub mod dicut;
 pub mod facility;
 pub mod graph;
 pub mod planted;

@@ -14,7 +14,7 @@
 //! regime).
 
 use super::{Instance, WorkloadGen};
-use crate::core::derive_seed;
+use crate::core::{derive_seed, Constraint};
 use crate::oracle::coverage::CoverageOracle;
 use crate::util::rng::Rng;
 
@@ -89,6 +89,45 @@ impl WorkloadGen for PlantedCoverageGen {
     }
 }
 
+/// Planted *partition-matroid* workload: the planted coverage instance
+/// with `part(e) = e mod k` and unit per-part capacities. The golden set
+/// `0..k` holds exactly one element of every part, so it stays feasible
+/// and the matroid-constrained optimum is still the full universe — which
+/// gives the matroid algorithms an instance with a known constrained OPT.
+///
+/// The oracle is byte-for-byte the [`PlantedCoverageGen`] one (same
+/// [`crate::oracle::spec::OracleSpec::Planted`] recipe, so workers rebuild
+/// it bit-identically); only the feasibility system differs.
+#[derive(Debug, Clone)]
+pub struct PlantedMatroidGen {
+    /// The underlying planted coverage construction.
+    pub inner: PlantedCoverageGen,
+}
+
+impl PlantedMatroidGen {
+    /// Sparse planted instance under an `e mod k` unit-cap partition
+    /// matroid.
+    pub fn new(k: usize, universe: usize, noise_n: usize, noise_deg: usize) -> Self {
+        PlantedMatroidGen { inner: PlantedCoverageGen { k, universe, noise_n, noise_deg } }
+    }
+
+    /// The partition matroid for a ground set of `n` elements: part
+    /// `e mod k`, capacity 1 per part (rank `k` once every part is
+    /// inhabited).
+    pub fn constraint(&self, n: usize) -> Constraint {
+        let k = self.inner.k;
+        Constraint::partition_matroid((0..n).map(|e| (e % k) as u32).collect(), vec![1; k])
+    }
+}
+
+impl WorkloadGen for PlantedMatroidGen {
+    fn generate(&self, seed: u64) -> Instance {
+        let mut inst = self.inner.generate(seed);
+        inst.name = format!("matroid-{}", inst.name);
+        inst
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +183,24 @@ mod tests {
         assert_eq!(inst.known_opt, Some(50.0));
         assert_eq!(inst.planted_k, Some(5));
         assert_eq!(inst.n, 25);
+    }
+
+    #[test]
+    fn matroid_golden_set_feasible_and_optimal() {
+        let g = PlantedMatroidGen::new(5, 100, 45, 1);
+        let inst = g.generate(7);
+        assert!(inst.name.starts_with("matroid-planted("));
+        assert_eq!(inst.n, 50);
+        let c = g.constraint(inst.n);
+        c.validate(inst.n).unwrap();
+        assert_eq!(c.rank(), 5);
+        let golden: Vec<ElementId> = (0..5).collect();
+        assert!(c.is_feasible(&golden), "one golden element per part");
+        assert_eq!(inst.oracle.value(&golden), 100.0);
+        // two elements sharing a part (0 and 5) are jointly infeasible.
+        assert!(!c.is_feasible(&[0, 5]));
+        // the spec rebuild stays bit-identical (same Planted recipe).
+        let rebuilt = g.generate(7).spec.unwrap().build().unwrap();
+        assert_eq!(rebuilt.value(&golden).to_bits(), inst.oracle.value(&golden).to_bits());
     }
 }

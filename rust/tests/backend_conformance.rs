@@ -44,6 +44,7 @@
 use std::path::PathBuf;
 
 use mrsub::algorithms::combined::CombinedTwoRound;
+use mrsub::algorithms::dash::Dash;
 use mrsub::algorithms::dense::DenseTwoRound;
 use mrsub::algorithms::greedy::lazy_greedy;
 use mrsub::algorithms::multi_round::MultiRound;
@@ -55,7 +56,7 @@ use mrsub::algorithms::stochastic::StochasticGreedy;
 use mrsub::algorithms::two_round::TwoRoundKnownOpt;
 use mrsub::algorithms::MrAlgorithm;
 use mrsub::coordinator::run_experiment;
-use mrsub::core::Error;
+use mrsub::core::{Constraint, Error};
 use mrsub::mapreduce::backend::BackendKind;
 use mrsub::mapreduce::process::{PoolOptions, ProcessPool, RecoveryPolicy};
 use mrsub::mapreduce::transport::Transport;
@@ -66,6 +67,7 @@ use mrsub::serve::{request as serve_request, Daemon, ServeOptions};
 use mrsub::workload::adversarial::AdversarialGen;
 use mrsub::workload::corpus::ZipfCorpusGen;
 use mrsub::workload::coverage::CoverageGen;
+use mrsub::workload::dicut::PlantedDicutGen;
 use mrsub::workload::facility::FacilityGen;
 use mrsub::workload::graph::GraphGen;
 use mrsub::workload::planted::PlantedCoverageGen;
@@ -81,21 +83,57 @@ fn process(workers: usize, transport: Transport) -> BackendKind {
     BackendKind::Process { workers, transport }
 }
 
+/// Canonical shard name of a transport — the value the CI matrix passes
+/// via `MRSUB_CONFORMANCE_TRANSPORT`.
+fn transport_key(t: &Transport) -> &'static str {
+    match t {
+        Transport::Pipe => "pipe",
+        Transport::Uds => "uds",
+        Transport::UdsArena => "uds+arena",
+        Transport::Tcp { .. } => "tcp",
+    }
+}
+
+/// CI sharding hook: `MRSUB_CONFORMANCE_TRANSPORT=pipe|uds|uds+arena|tcp`
+/// collapses every process-backend transport loop to that one transport,
+/// so `.github/workflows/ci.yml` can fan the conformance job out as a
+/// `strategy.matrix` over transports. Unset (or empty/whitespace) runs the
+/// full matrix; an unknown value fails loudly instead of silently running
+/// nothing. The in-process `Serial`/`Rayon` references are never filtered.
+fn transport_shard() -> Option<String> {
+    let v = std::env::var("MRSUB_CONFORMANCE_TRANSPORT").ok()?;
+    let v = v.trim().to_string();
+    if v.is_empty() {
+        return None;
+    }
+    assert!(
+        ["pipe", "uds", "uds+arena", "tcp"].contains(&v.as_str()),
+        "MRSUB_CONFORMANCE_TRANSPORT={v:?} is not one of pipe|uds|uds+arena|tcp"
+    );
+    Some(v)
+}
+
+fn shard_keeps(t: &Transport) -> bool {
+    transport_shard().map_or(true, |shard| shard == transport_key(t))
+}
+
 /// The wire-only transports: shard payloads always cross the stream, so
-/// their byte meters must agree with each other exactly.
+/// their byte meters must agree with each other exactly. Subject to the
+/// [`transport_shard`] CI filter.
 fn wire_transports() -> Vec<Transport> {
-    vec![Transport::Pipe, Transport::Uds, Transport::Tcp { bind: None }]
+    let all = vec![Transport::Pipe, Transport::Uds, Transport::Tcp { bind: None }];
+    all.into_iter().filter(shard_keeps).collect()
 }
 
 /// Every transport the pool itself can establish (the external-join TCP
 /// mode is exercised separately — it needs hand-launched workers),
 /// including the zero-copy `@uds+arena` variant, which transparently
 /// falls back to the plain `@uds` wire path off Linux — so this matrix
-/// stays portable.
+/// stays portable. Subject to the [`transport_shard`] CI filter.
 fn transports() -> Vec<Transport> {
-    let mut all = wire_transports();
-    all.push(Transport::UdsArena);
-    all
+    let all =
+        vec![Transport::Pipe, Transport::Uds, Transport::Tcp { bind: None }, Transport::UdsArena];
+    all.into_iter().filter(shard_keeps).collect()
 }
 
 fn cfg(seed: u64, backend: BackendKind) -> ClusterConfig {
@@ -123,7 +161,16 @@ fn families(seed: u64) -> Vec<Instance> {
     out.push(Instance::new("modular(test)", spec.build().unwrap()).with_spec(spec));
     let spec = OracleSpec::ConcaveBench { n: 140, groups: 24, seed };
     out.push(Instance::new("concave(test)", spec.build().unwrap()).with_spec(spec));
+    // the non-monotone family: workers rebuild the arc list from the spec.
+    out.push(PlantedDicutGen::new(6, 80, 3).generate(seed));
     out
+}
+
+/// The `e mod parts` unit-capacity partition matroid the constrained
+/// conformance cells run under (rank = `parts`).
+fn matroid(n: usize, parts: usize) -> Constraint {
+    let ids: Vec<u32> = (0..n).map(|e| (e % parts.max(1)) as u32).collect();
+    Constraint::partition_matroid(ids, vec![1; parts.max(1)])
 }
 
 fn algorithms(inst: &Instance, k: usize) -> Vec<Box<dyn MrAlgorithm>> {
@@ -138,7 +185,10 @@ fn algorithms(inst: &Instance, k: usize) -> Vec<Box<dyn MrAlgorithm>> {
         Box::new(DenseTwoRound::new(0.15)),
         Box::new(SparseTwoRound::new(0.2)),
         Box::new(CombinedTwoRound::new(0.15)),
-        Box::new(RandGreeDi),
+        Box::new(RandGreeDi::default()),
+        Box::new(RandGreeDi::constrained(matroid(inst.n, k), 2)),
+        Box::new(Dash::new(0.2)),
+        Box::new(Dash::constrained(0.2, matroid(inst.n, k))),
         Box::new(MzCoreset),
         Box::new(SamplePrune::new(0.25)),
         Box::new(StochasticGreedy::new(0.2)),
@@ -153,14 +203,10 @@ fn algorithms(inst: &Instance, k: usize) -> Vec<Box<dyn MrAlgorithm>> {
 fn every_algorithm_family_backend_triple_matches_serial() {
     let k = 6;
     let seed = 0xC0DE;
-    let backends = [
-        BackendKind::Serial,
-        BackendKind::Rayon { chunk: 2 },
-        process(2, Transport::Pipe),
-        process(2, Transport::Uds),
-        process(2, Transport::UdsArena),
-        process(2, Transport::Tcp { bind: None }),
-    ];
+    // Serial (the reference) and Rayon always run; the process backends
+    // honor the MRSUB_CONFORMANCE_TRANSPORT CI shard filter.
+    let mut backends = vec![BackendKind::Serial, BackendKind::Rayon { chunk: 2 }];
+    backends.extend(transports().into_iter().map(|t| process(2, t)));
     for inst in families(seed) {
         for alg in algorithms(&inst, k) {
             let run_on = |backend: &BackendKind| {
@@ -214,7 +260,7 @@ fn process_backend_selections_identical_and_ipc_metered_per_transport() {
     let inst = PlantedCoverageGen::dense(6, 300, 600).generate(seed);
     // RandGreeDi round 1 is unconditionally a typed shard round, so the
     // wire path is guaranteed to carry the greedy work.
-    let alg = RandGreeDi;
+    let alg = RandGreeDi::default();
     let serial = alg.run(inst.oracle.as_ref(), k, &cfg(seed, BackendKind::Serial)).unwrap();
     assert_eq!(serial.metrics.total_ipc_bytes(), (0, 0), "serial runs move no IPC bytes");
 
@@ -582,7 +628,7 @@ fn killed_worker_recovers_bit_identical_on_every_transport() {
     // multi-round guessing dies on its *second* typed round, after a
     // persistent MultiFilter landed in the replay history.
     let cases: Vec<(Box<dyn MrAlgorithm>, &str)> = vec![
-        (Box::new(RandGreeDi), "die-mid-round@1"),
+        (Box::new(RandGreeDi::default()), "die-mid-round@1"),
         (Box::new(MultiRound::guessing(2, 0.25)), "die-mid-round:2@1"),
     ];
     for (alg, fault) in cases {
@@ -883,7 +929,7 @@ fn fault_does_not_poison_subsequent_runs() {
     let inst = PlantedCoverageGen::dense(6, 200, 400).generate(seed);
     // RandGreeDi's round 1 is unconditionally a typed shard round, so the
     // injected fault is guaranteed to be exercised.
-    let alg = RandGreeDi;
+    let alg = RandGreeDi::default();
     for transport in transports() {
         let label = transport.to_string();
         let mut bad = cfg(seed, process(2, transport.clone()));
@@ -1109,7 +1155,7 @@ fn served_concurrent_jobs_are_bit_identical_to_standalone_serial() {
 
     let references = [
         standalone_serial(&CombinedTwoRound::new(0.15), k, 41, &serve_spec(11)),
-        standalone_serial(&RandGreeDi, k, 42, &serve_spec(12)),
+        standalone_serial(&RandGreeDi::default(), k, 42, &serve_spec(12)),
     ];
     for (i, ((sel, val), (rsel, rval))) in served.iter().zip(&references).enumerate() {
         assert_eq!(sel, rsel, "job {i}: served selection diverged from standalone");
@@ -1152,8 +1198,8 @@ fn served_jobs_survive_churn_with_replacement_and_elastic_growth() {
     let served = serve_submit_all(&addr, k, &jobs);
 
     let references = [
-        standalone_serial(&RandGreeDi, k, 21, &serve_spec(31)),
-        standalone_serial(&RandGreeDi, k, 22, &serve_spec(32)),
+        standalone_serial(&RandGreeDi::default(), k, 21, &serve_spec(31)),
+        standalone_serial(&RandGreeDi::default(), k, 22, &serve_spec(32)),
         standalone_serial(&CombinedTwoRound::new(0.15), k, 23, &serve_spec(33)),
     ];
     for (i, ((sel, val), (rsel, rval))) in served.iter().zip(&references).enumerate() {
@@ -1211,7 +1257,7 @@ fn same_spec_resubmission_is_an_arena_cache_hit() {
         assert_eq!((s1.arena_misses, s2.arena_misses), (1, 2), "fallback attaches ship shards");
     }
 
-    let reference = standalone_serial(&RandGreeDi, k, seed, &spec);
+    let reference = standalone_serial(&RandGreeDi::default(), k, seed, &spec);
     assert_eq!(first.0, reference.0, "served result must match standalone Serial");
     assert_eq!(first.1.to_bits(), reference.1.to_bits());
     shut_down(daemon, &addr);

@@ -117,7 +117,7 @@ fn all_algorithms(opt_hint: f64) -> Vec<Box<dyn MrAlgorithm>> {
         Box::new(DenseTwoRound::new(0.15)),
         Box::new(SparseTwoRound::new(0.15)),
         Box::new(CombinedTwoRound::new(0.15)),
-        Box::new(RandGreeDi),
+        Box::new(RandGreeDi::default()),
         Box::new(MzCoreset),
         Box::new(SamplePrune::new(0.25)),
         Box::new(StochasticGreedy::new(0.1)),

@@ -5,7 +5,7 @@
 //!
 //! 1. every report carries `"schema_version"` =
 //!    [`mrsub::coordinator::BENCH_SCHEMA_VERSION`];
-//! 2. the committed fixture `tests/fixtures/bench_report_v3.json` is a
+//! 2. the committed fixture `tests/fixtures/bench_report_v4.json` is a
 //!    frozen example of the current schema, and this test deserializes it
 //!    and checks every required key — so a schema change forces a
 //!    deliberate fixture + version bump in the same commit;
@@ -16,7 +16,7 @@
 use mrsub::coordinator::BENCH_SCHEMA_VERSION;
 use mrsub::util::json::Json;
 
-const FIXTURE: &str = include_str!("fixtures/bench_report_v3.json");
+const FIXTURE: &str = include_str!("fixtures/bench_report_v4.json");
 
 fn require<'a>(obj: &'a Json, key: &str) -> &'a Json {
     obj.get(key).unwrap_or_else(|| panic!("report missing required key {key:?}"))
@@ -55,7 +55,14 @@ fn validate_report(report: &Json) {
     };
     assert!(!cluster.is_empty());
     let mut saw_process_row = false;
+    let mut saw_dash = false;
+    let mut saw_matroid = false;
     for row in cluster {
+        assert!(require(row, "family").as_str().is_some(), "cluster.family");
+        let algorithm = require(row, "algorithm").as_str().expect("cluster.algorithm");
+        assert!(!algorithm.is_empty(), "cluster.algorithm must be nonempty");
+        saw_dash |= algorithm.starts_with("dash");
+        saw_matroid |= algorithm.ends_with("-matroid");
         for key in [
             "n",
             "k",
@@ -90,6 +97,15 @@ fn validate_report(report: &Json) {
     assert!(
         saw_process_row,
         "report must exemplify a process-backend row (IPC overhead vs rayon)"
+    );
+    assert!(
+        saw_dash,
+        "report must exemplify a dash row (bench smoke covers the low-adaptivity axis)"
+    );
+    assert!(
+        saw_matroid,
+        "report must exemplify a matroid-constrained row (bench smoke covers the \
+         constraint axis)"
     );
 }
 

@@ -229,12 +229,15 @@ impl SerialRef {
 /// for replaying a failure.
 fn schedule_seeds() -> Vec<u64> {
     match std::env::var("MRSUB_CHAOS_SCHEDULES") {
-        Ok(s) => s
+        // an empty/whitespace value (e.g. a CI matrix leg that leaves the
+        // variable unset-but-exported) means "default", not "no schedules" —
+        // zero schedules would green-light the suite without running it.
+        Ok(s) if !s.trim().is_empty() => s
             .split(',')
             .filter(|t| !t.trim().is_empty())
             .map(|t| t.trim().parse().expect("MRSUB_CHAOS_SCHEDULES: u64 seeds"))
             .collect(),
-        Err(_) => (1..=16).collect(),
+        _ => (1..=16).collect(),
     }
 }
 

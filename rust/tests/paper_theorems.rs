@@ -247,3 +247,101 @@ fn eps_does_not_change_round_count() {
     assert_eq!(rounds[1], rounds[2]);
     assert!(memory[2] >= memory[0], "smaller ε must cost (weakly) more memory");
 }
+
+// --- the related-work frameworks the repo now carries as first-class ---------
+// Barbosa–Ene–Nguyen–Ward (arXiv 1502.02606): randomized-partition
+// distributed greedy for non-monotone objectives and matroid constraints.
+// DASH (arXiv 2206.09563): low-adaptivity threshold sweeps.
+
+/// Barbosa et al., non-monotone case: the randomized-partition framework
+/// keeps a constant factor on a planted directed-cut instance (the clean
+/// non-monotone family — OPT is the full arc weight, achieved by the
+/// source set, and supersets only lose value).
+#[test]
+fn nonmonotone_randomized_partition_keeps_a_constant_factor() {
+    use mrsub::algorithms::randgreedi::RandGreeDi;
+    use mrsub::core::Constraint;
+    use mrsub::workload::dicut::PlantedDicutGen;
+
+    for seed in [5u64, 19, 42] {
+        let g = PlantedDicutGen::new(10, 120, 4);
+        let inst = g.generate(seed);
+        let opt = inst.known_opt.unwrap();
+        let res = RandGreeDi::constrained(Constraint::cardinality(10), 1)
+            .run(inst.oracle.as_ref(), 10, &cfg(seed))
+            .unwrap();
+        let ratio = res.solution.value / opt;
+        assert!(ratio >= 0.5, "seed {seed}: non-monotone ratio {ratio} below 1/2");
+        // non-monotonicity is real here: the full ground set cuts nothing,
+        // so the constant factor cannot come from monotone slack.
+        let everything: Vec<u32> = (0..inst.n as u32).collect();
+        assert_eq!(inst.oracle.value(&everything), 0.0);
+    }
+}
+
+/// Barbosa et al., matroid case: every round's local solutions and the
+/// final output are independent in the partition matroid — feasibility is
+/// an invariant of the whole pipeline, not a final clamp — and the
+/// planted-cover value stays competitive.
+#[test]
+fn matroid_feasibility_is_an_invariant_of_the_constrained_pipeline() {
+    use mrsub::algorithms::randgreedi::RandGreeDi;
+    use mrsub::workload::planted::PlantedMatroidGen;
+
+    let g = PlantedMatroidGen::new(8, 400, 100, 1);
+    let inst = g.generate(31);
+    let c = g.constraint(inst.n);
+    let res =
+        RandGreeDi::constrained(c.clone(), 2).run(inst.oracle.as_ref(), 8, &cfg(32)).unwrap();
+    assert!(c.is_feasible(&res.solution.elements), "output violates the partition matroid");
+    // every prefix of the greedy selection is feasible too (downward
+    // closure plus the cursor's admit-before-insert discipline).
+    for i in 0..=res.solution.elements.len() {
+        assert!(c.is_feasible(&res.solution.elements[..i]));
+    }
+    let ratio = res.solution.value / inst.known_opt.unwrap();
+    assert!(ratio >= 0.4, "matroid-constrained ratio {ratio} below the framework constant");
+}
+
+/// A single-partition matroid with capacity k IS the cardinality
+/// constraint: the constrained pipeline must produce the identical
+/// selection sequence under both spellings (bit-for-bit, same seeds).
+#[test]
+fn single_partition_matroid_degenerates_to_cardinality() {
+    use mrsub::algorithms::randgreedi::RandGreeDi;
+    use mrsub::core::Constraint;
+    use mrsub::workload::coverage::CoverageGen;
+
+    let inst = CoverageGen::new(300, 150, 4).generate(9);
+    let k = 8;
+    let single = Constraint::partition_matroid(vec![0u32; 300], vec![k]);
+    let card = Constraint::cardinality(k);
+    let a = RandGreeDi::constrained(single, 1).run(inst.oracle.as_ref(), k, &cfg(10)).unwrap();
+    let b = RandGreeDi::constrained(card, 1).run(inst.oracle.as_ref(), k, &cfg(10)).unwrap();
+    assert_eq!(a.solution.elements, b.solution.elements);
+    assert_eq!(a.solution.value.to_bits(), b.solution.value.to_bits());
+}
+
+/// DASH's defining property: adaptivity O(log(k/ε)/ε) — the executed MR
+/// round count obeys the closed-form bound and, for the k used here, is
+/// strictly below k (the adaptivity of sequential greedy).
+#[test]
+fn dash_round_count_is_low_adaptivity() {
+    use mrsub::algorithms::dash::{dash_round_bound, Dash};
+
+    let k = 32;
+    let eps = 0.3;
+    let inst = PlantedCoverageGen::dense(k, 2000, 4000).generate(41);
+    let res = Dash::new(eps).run(inst.oracle.as_ref(), k, &cfg(42)).unwrap();
+    let rounds = res.metrics.rounds.iter().filter(|r| !r.name.starts_with("r0:")).count();
+    assert!(
+        rounds <= dash_round_bound(k, eps),
+        "{rounds} rounds exceed the O(log(k/ε)/ε) bound {}",
+        dash_round_bound(k, eps)
+    );
+    assert!(rounds < k, "low adaptivity means fewer rounds ({rounds}) than greedy's k = {k}");
+    // and the sweep still clears the 1/2 − ε quality target on the
+    // planted cover.
+    let ratio = res.solution.value / inst.known_opt.unwrap();
+    assert!(ratio >= 0.5 - eps, "DASH ratio {ratio} below 1/2 − ε");
+}

@@ -5,7 +5,11 @@
 #   ./verify.sh fast         build + test only
 #   ./verify.sh conformance  backend-conformance matrix, single-threaded
 #                            (stable worker-process counts for the
-#                            shared-nothing process backend)
+#                            shared-nothing process backend). Set
+#                            MRSUB_CONFORMANCE_TRANSPORT=pipe|uds|uds+arena|tcp
+#                            to run one transport shard of the process-
+#                            backend matrix (the CI strategy.matrix does
+#                            this to parallelize; Serial/Rayon always run)
 #   ./verify.sh chaos        seeded elasticity chaos harness, single-
 #                            threaded: 64+ generated kill/respawn/
 #                            late-join/steal schedules across every
@@ -85,6 +89,9 @@ case "$mode" in
     conformance)
         check_ignores
         cargo build --release
+        if [ -n "${MRSUB_CONFORMANCE_TRANSPORT:-}" ]; then
+            echo "verify: conformance shard — transport ${MRSUB_CONFORMANCE_TRANSPORT}"
+        fi
         cargo test --test backend_conformance -- --test-threads=1
         ;;
     chaos)
@@ -154,9 +161,14 @@ case "$mode" in
         # shared-nothing process backend — enough to (a) keep the report
         # schema honest against the committed fixture and (b) seed the
         # BENCH_*.json perf trajectory as a per-commit CI artifact.
+        # the algorithm axis covers the low-adaptivity sweep (dash) and a
+        # matroid-constrained randomized-partition run alongside the
+        # classic combined algorithm, so the smoke exercises every report
+        # shape the v4 schema freezes.
         echo "verify: ci bench smoke"
         ./target/release/mrsub bench --n 256 --k 8 --iters 2 \
             --families coverage --backends serial,process:2 \
+            --algorithms combined,dash,randgreedi-matroid \
             --sizes 300x6 --output BENCH_smoke.json
         MRSUB_BENCH_REPORT="$PWD/BENCH_smoke.json" \
             cargo test --test bench_report_schema
